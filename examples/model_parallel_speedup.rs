@@ -1,0 +1,49 @@
+//! Model-parallel speedup demo (the paper\'s Fig. 3 mechanism, end to end):
+//! the same pdADMM-G epoch executed serially vs as the phase-barrier
+//! parallel schedule with one worker per layer.
+//!
+//!     cargo run --release --example model_parallel_speedup [layers] [hidden]
+//!
+//! Per-layer compute is measured on the native backend (single-threaded
+//! ops); the parallel epoch time is the critical-path makespan of
+//! Algorithm 1\'s schedule (on a host with >= layers cores the thread pool
+//! realizes it physically; this reference host has one core — DESIGN.md §2).
+
+use pdadmm_g::backend::NativeBackend;
+use pdadmm_g::config::{RootConfig, ScheduleMode, TrainConfig};
+use pdadmm_g::coordinator::trainer::{simulated_parallel_ms, Trainer};
+use pdadmm_g::graph::datasets;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let layers: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(12);
+    let hidden: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(128);
+    let cfg = RootConfig::load_default()?;
+    let ds = datasets::load(&cfg, "flickr")?;
+    println!("flickr |V|={} | GA-MLP L={layers} h={hidden}", ds.nodes);
+
+    let mut tc = TrainConfig::new("flickr", hidden, layers, 3);
+    tc.nu = 1e-3;
+    tc.rho = 1e-3;
+    tc.schedule = ScheduleMode::Serial;
+    let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc);
+    t.measure = false;
+    t.record_layer_times = true;
+    t.run_epoch(); // warmup
+    let reps = 3;
+    let (mut serial, mut par) = (0.0, 0.0);
+    for _ in 0..reps {
+        serial += t.run_epoch().epoch_ms;
+        par += simulated_parallel_ms(&t.last_layer_secs, layers);
+    }
+    serial /= reps as f64;
+    par /= reps as f64;
+    println!("serial:   {serial:.1} ms/epoch");
+    println!("parallel: {par:.1} ms/epoch  ({layers} layer workers)");
+    println!("speedup:  {:.2}x", serial / par);
+    for (l, s) in t.last_layer_secs.iter().enumerate() {
+        println!("  layer {l:>2} compute {:>8.1} ms", s * 1e3);
+    }
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! pdADMM-G-Q demo: how much communication does quantization save, and at
+//! what accuracy cost? (The paper's Fig. 5 mechanism on one dataset.)
+//!
+//!     cargo run --release --example quantized_communication
+
+use pdadmm_g::config::{BackendKind, QuantMode, RootConfig, ScheduleMode, TrainConfig};
+use pdadmm_g::coordinator::Trainer;
+use pdadmm_g::experiments::make_backend;
+use pdadmm_g::graph::datasets;
+use pdadmm_g::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RootConfig::load_default()?;
+    let ds = datasets::load(&cfg, "citeseer")?;
+    let cases = [
+        QuantMode::None,
+        QuantMode::P { bits: 16 },
+        QuantMode::P { bits: 8 },
+        QuantMode::PQ { bits: 16 },
+        QuantMode::PQ { bits: 8 },
+        QuantMode::IntDelta,
+    ];
+    println!("citeseer, 10-layer / 64-neuron GA-MLP, 40 epochs\n");
+    println!("{:<12} {:>14} {:>9} {:>10}", "quant", "p+q bytes", "saving", "test acc");
+    let mut base = 0u64;
+    for quant in cases {
+        let backend = make_backend(&cfg, BackendKind::Native)?;
+        let mut tc = TrainConfig::new("citeseer", 64, 10, 40);
+        tc.nu = 0.01;
+        tc.rho = 1.0;
+        tc.quant = quant;
+        tc.schedule = ScheduleMode::Parallel;
+        let mut trainer = Trainer::new(backend, ds.clone(), tc);
+        let log = trainer.run();
+        let bytes = log.total_comm_bytes();
+        if quant == QuantMode::None {
+            base = bytes;
+        }
+        let saving = 100.0 * (1.0 - bytes as f64 / base as f64);
+        let (_, test) = log.test_at_best_val();
+        println!(
+            "{:<12} {:>14} {:>8.1}% {:>10.3}",
+            quant.label(),
+            fmt_bytes(bytes),
+            saving,
+            test
+        );
+    }
+    Ok(())
+}

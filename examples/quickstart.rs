@@ -1,0 +1,61 @@
+//! Quickstart: train a 4-layer GA-MLP on the (synthetic) cora benchmark
+//! with pdADMM-G and report test accuracy vs an Adam baseline.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Uses the XLA backend (AOT HLO artifacts through PJRT) when artifacts
+//! are present, otherwise the native backend.
+
+use pdadmm_g::config::{BackendKind, RootConfig, ScheduleMode, TrainConfig};
+use pdadmm_g::coordinator::Trainer;
+use pdadmm_g::experiments::make_backend;
+use pdadmm_g::graph::datasets;
+use pdadmm_g::optim::{train_baseline, BaselineConfig, OptimizerKind};
+use pdadmm_g::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RootConfig::load_default()?;
+    let ds = datasets::load(&cfg, "cora")?;
+    println!(
+        "dataset cora: |V|={} classes={} input dim n0={} (K=4 hops)",
+        ds.nodes, ds.classes, ds.input_dim
+    );
+
+    // Prefer the AOT path (quickstart artifacts: hidden=64, L=4).
+    let backend_kind = if cfg.artifacts_dir().join("manifest.json").exists() {
+        BackendKind::Xla
+    } else {
+        eprintln!("artifacts/ missing -> native backend (run `make artifacts`)");
+        BackendKind::Native
+    };
+    let backend = make_backend(&cfg, backend_kind)?;
+
+    let mut tc = TrainConfig::new("cora", 64, 4, 60);
+    tc.nu = 0.01;
+    tc.rho = 1.0;
+    tc.schedule = ScheduleMode::Parallel;
+    let mut trainer = Trainer::new(backend, ds.clone(), tc);
+    println!("\ntraining pdADMM-G (backend={})...", trainer.backend.name());
+    let log = trainer.run();
+    for r in log.records.iter().step_by(10) {
+        println!(
+            "  epoch {:>3}  objective {:>11.4e}  residual {:>9.2e}  val acc {:.3}",
+            r.epoch, r.objective, r.residual, r.val_acc
+        );
+    }
+    let (val, test) = log.test_at_best_val();
+    println!(
+        "pdADMM-G:  best val {val:.3} -> TEST {test:.3}   (comm {} over {} epochs)",
+        fmt_bytes(log.total_comm_bytes()),
+        log.records.len()
+    );
+
+    // Adam baseline on the identical model.
+    let backend = make_backend(&cfg, BackendKind::Native)?;
+    let mut bc = BaselineConfig::new(OptimizerKind::Adam, 64, 4, 60);
+    bc.seed = 0;
+    let blog = train_baseline(backend, &ds, &bc);
+    let (bval, btest) = blog.test_at_best_val();
+    println!("Adam:      best val {bval:.3} -> TEST {btest:.3}");
+    Ok(())
+}

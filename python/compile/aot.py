@@ -1,0 +1,250 @@
+"""AOT lowering pipeline: JAX/Pallas (L2/L1) -> HLO text artifacts for rust.
+
+Usage (via ``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts \
+        --datasets ../configs/datasets.json [--variant flat|tiled|jnp] \
+        [--configs table3,quickstart]
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape-specialized and deduplicated across experiment configs:
+
+    artifacts/ops/<op>__i{in}_o{out}_v{V}.hlo.txt     matmul-bearing layer ops
+    artifacts/ops/<op>__o{out}_v{V}.hlo.txt           elementwise layer ops
+    artifacts/ops/<op>__c{C}_v{V}.hlo.txt             last-layer risk ops
+    artifacts/models/fwd__n{n0}_h{h}_L{L}_c{C}_v{V}.hlo.txt
+    artifacts/models/grad__n{n0}_h{h}_L{L}_c{C}_v{V}.hlo.txt
+    artifacts/manifest.json                           everything built
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+SCALAR = _f32(1)
+
+
+def to_hlo_text(fn, specs) -> str:
+    """Lower ``fn(*specs)`` to XLA HLO text via stablehlo.
+
+    ``return_tuple=True`` so the rust side always unpacks a tuple root,
+    regardless of the op's arity.
+    """
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Spec builders: op name -> (callable, [ShapeDtypeStruct...], n_outputs)
+# ---------------------------------------------------------------------------
+
+
+def layer_op_specs(ops, n_in: int, n_out: int, v: int):
+    """Matmul-bearing per-layer ops, keyed i{in}_o{out}_v{V}."""
+    w, b = _f32(n_out, n_in), _f32(n_out, 1)
+    p, z = _f32(n_in, v), _f32(n_out, v)
+    qp, up = _f32(n_in, v), _f32(n_in, v)  # q_{l-1}, u_{l-1} match p's shape
+    return {
+        "linear": (ops["linear"], [w, p, b], 1),
+        "p_update": (ops["p_update"], [p, w, b, z, qp, up, SCALAR, SCALAR, SCALAR], 1),
+        "p_update_quant": (
+            ops["p_update_quant"],
+            [p, w, b, z, qp, up, SCALAR, SCALAR, SCALAR, SCALAR, SCALAR, SCALAR],
+            1,
+        ),
+        "w_update": (ops["w_update"], [p, w, b, z, SCALAR, SCALAR], 1),
+        "b_update": (ops["b_update"], [w, p, z], 1),
+    }
+
+
+def elementwise_op_specs(ops, n_out: int, v: int):
+    """Elementwise per-layer ops, keyed o{out}_v{V}."""
+    m = _f32(n_out, v)
+    return {
+        "z_update_hidden": (ops["z_update_hidden"], [m, m, m], 1),
+        "q_update": (ops["q_update"], [m, m, m, SCALAR, SCALAR], 1),
+        "u_update": (ops["u_update"], [m, m, m, SCALAR], 1),
+    }
+
+
+def risk_op_specs(ops, c: int, v: int):
+    """Last-layer risk ops, keyed c{C}_v{V}."""
+    m = _f32(c, v)
+    maskn = _f32(1, v)
+    return {
+        "z_update_last": (ops["z_update_last"], [m, m, m, maskn, SCALAR, SCALAR], 1),
+        "risk_value": (ops["risk_value"], [m, m, maskn], 1),
+    }
+
+
+def model_specs(n0: int, h: int, n_layers: int, c: int, v: int, variant: str):
+    """Whole-model forward + loss/grad, keyed n{n0}_h{h}_L{L}_c{C}_v{V}."""
+    dims = [n0] + [h] * (n_layers - 1) + [c]
+    params = []
+    for l in range(n_layers):
+        params += [_f32(dims[l + 1], dims[l]), _f32(dims[l + 1], 1)]
+    x = _f32(n0, v)
+    y = _f32(c, v)
+    maskn = _f32(1, v)
+    return {
+        "fwd": (model.make_forward(n_layers, variant), params + [x], 1),
+        "grad": (
+            model.make_loss_and_grad(n_layers, variant),
+            params + [x, y, maskn],
+            1 + 2 * n_layers,
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Manifest assembly from configs/datasets.json
+# ---------------------------------------------------------------------------
+
+
+def collect_jobs(cfg: dict, variant: str, only: set[str] | None):
+    """Walk artifact_configs and produce a deduplicated name->job map."""
+    ops = model.make_ops(variant)
+    hops = cfg["hops"]
+    by_name = {ds["name"]: ds for ds in cfg["datasets"]}
+    jobs: dict[str, tuple] = {}  # artifact name -> (relpath, fn, specs, nout, meta)
+
+    def add(kind, name, fn, specs, nout, meta):
+        rel = f"{'models' if kind == 'model' else 'ops'}/{name}.hlo.txt"
+        if name not in jobs:
+            jobs[name] = (rel, fn, specs, nout, meta)
+
+    for ac in cfg["artifact_configs"]:
+        if only and ac["name"] not in only:
+            continue
+        names = (
+            [d["name"] for d in cfg["datasets"]]
+            if ac["datasets"] == "all"
+            else ac["datasets"]
+        )
+        h = ac["hidden"]
+        for ds_name in names:
+            ds = by_name[ds_name]
+            n0 = hops * ds["feat_dim"]
+            c, v = ds["classes"], ds["nodes"]
+            # Per-layer matmul ops at the three shapes of any depth-L model.
+            for (n_in, n_out) in [(n0, h), (h, h), (h, c), (n0, c)]:
+                # (n0, c) covers the 2-layer greedy stage's last layer when
+                # L=2 means shapes (n0,h),(h,c); (n0,c) is only needed for
+                # L=1 which we never build — skip it.
+                if (n_in, n_out) == (n0, c):
+                    continue
+                for op, (fn, specs, nout) in layer_op_specs(ops, n_in, n_out, v).items():
+                    add(
+                        "op",
+                        f"{op}__i{n_in}_o{n_out}_v{v}",
+                        fn,
+                        specs,
+                        nout,
+                        {"op": op, "n_in": n_in, "n_out": n_out, "v": v},
+                    )
+            for op, (fn, specs, nout) in elementwise_op_specs(ops, h, v).items():
+                add("op", f"{op}__o{h}_v{v}", fn, specs, nout, {"op": op, "n_out": h, "v": v})
+            for op, (fn, specs, nout) in risk_op_specs(ops, c, v).items():
+                add("op", f"{op}__c{c}_v{v}", fn, specs, nout, {"op": op, "c": c, "v": v})
+            for n_layers in ac.get("layer_counts", []):
+                fn, specs, nout = model_specs(n0, h, n_layers, c, v, variant)["fwd"]
+                add(
+                    "model",
+                    f"fwd__n{n0}_h{h}_L{n_layers}_c{c}_v{v}",
+                    fn,
+                    specs,
+                    nout,
+                    {"op": "fwd", "n0": n0, "h": h, "layers": n_layers, "c": c, "v": v},
+                )
+            for n_layers in ac.get("grad_layer_counts", []):
+                fn, specs, nout = model_specs(n0, h, n_layers, c, v, variant)["grad"]
+                add(
+                    "model",
+                    f"grad__n{n0}_h{h}_L{n_layers}_c{c}_v{v}",
+                    fn,
+                    specs,
+                    nout,
+                    {"op": "grad", "n0": n0, "h": h, "layers": n_layers, "c": c, "v": v},
+                )
+    return jobs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--datasets", default="../configs/datasets.json")
+    ap.add_argument("--variant", default="flat", choices=["flat", "tiled", "jnp"])
+    ap.add_argument(
+        "--configs",
+        default="",
+        help="comma-separated artifact_config names to build (default: all)",
+    )
+    args = ap.parse_args()
+
+    with open(args.datasets) as f:
+        cfg = json.load(f)
+    only = set(filter(None, args.configs.split(","))) or None
+    jobs = collect_jobs(cfg, args.variant, only)
+
+    os.makedirs(os.path.join(args.out, "ops"), exist_ok=True)
+    os.makedirs(os.path.join(args.out, "models"), exist_ok=True)
+
+    manifest = {"variant": args.variant, "entries": []}
+    t_start = time.time()
+    for i, (name, (rel, fn, specs, nout, meta)) in enumerate(sorted(jobs.items())):
+        path = os.path.join(args.out, rel)
+        entry = dict(
+            name=name,
+            file=rel,
+            n_inputs=len(specs),
+            n_outputs=nout,
+            input_shapes=[list(s.shape) for s in specs],
+            **meta,
+        )
+        manifest["entries"].append(entry)
+        if os.path.exists(path) and os.path.getmtime(path) > os.path.getmtime(__file__):
+            continue  # incremental: source unchanged since artifact was built
+        t0 = time.time()
+        text = to_hlo_text(fn, specs)
+        with open(path, "w") as f:
+            f.write(text)
+        if i % 25 == 0 or time.time() - t0 > 2:
+            print(
+                f"[aot {i + 1}/{len(jobs)}] {name} "
+                f"({len(text) / 1024:.0f} KiB, {time.time() - t0:.2f}s, "
+                f"total {time.time() - t_start:.0f}s)",
+                flush=True,
+            )
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"aot done: {len(jobs)} artifacts ({args.variant}) in "
+        f"{time.time() - t_start:.1f}s -> {args.out}"
+    )
+
+
+if __name__ == "__main__":
+    main()

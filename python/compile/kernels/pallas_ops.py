@@ -1,0 +1,311 @@
+"""Layer-1 Pallas kernels for the pdADMM-G hot path.
+
+The paper's per-layer subproblems are dominated by three matmul-shaped
+operations on each layer's ``(n_l, n_{l-1}, |V|)`` triple:
+
+  * the *fused residual / linear map*  ``m = W @ p + b``  (and ``r = z - m``),
+  * the W-gradient matmul              ``r @ p^T``,
+  * the p-gradient matmul              ``W^T @ r``,
+
+plus the purely elementwise *quantize-project* step of pdADMM-G-Q.
+
+Every kernel here exists in two forms:
+
+``*_flat``   one whole-array ``pallas_call`` (grid = ()), which lowers under
+             ``interpret=True`` to the same dot/add HLO XLA would emit — this
+             is what ships in the default AOT artifacts (CPU PJRT runtime);
+``*_tiled``  a BlockSpec-tiled variant shaped for the TPU MXU (128-lane
+             blocks, fused epilogue) — the TPU-faithful kernel structure per
+             DESIGN.md §9. Interpret-mode execution of the tiled grid is
+             ~4-5x slower on CPU (measured), so it is opt-in via
+             ``aot.py --tiled`` and is validated against ``ref.py`` in
+             pytest rather than used on the CPU hot path.
+
+All kernels are f32 and must be called under ``interpret=True`` (real-TPU
+lowering emits Mosaic custom-calls the CPU PJRT plugin cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes shaped for the MXU systolic array (128x128) with a VPU-friendly
+# lane width; see DESIGN.md §9 for the VMEM footprint estimate.
+TILE_M = 128
+TILE_N = 256
+TILE_K = 128
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+# ---------------------------------------------------------------------------
+# Fused linear map: m = W @ p + b        (W: (out,in), p: (in,V), b: (out,1))
+# ---------------------------------------------------------------------------
+
+
+def _linear_flat_kernel(w_ref, p_ref, b_ref, o_ref):
+    o_ref[...] = (
+        jnp.dot(w_ref[...], p_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+
+
+def linear_flat(w: jax.Array, p: jax.Array, b: jax.Array) -> jax.Array:
+    """``W @ p + b`` as a single whole-array pallas kernel."""
+    out, v = w.shape[0], p.shape[1]
+    return pl.pallas_call(
+        _linear_flat_kernel,
+        out_shape=jax.ShapeDtypeStruct((out, v), jnp.float32),
+        interpret=INTERPRET,
+    )(w, p, b)
+
+
+def _linear_tiled_kernel(w_ref, p_ref, b_ref, o_ref):
+    # One (TILE_M, TILE_N) output tile per grid cell; the full reduction
+    # dimension is resident in VMEM for the layer sizes in this suite
+    # (in <= 2048 -> W tile 128x2048 = 1 MiB, p tile 2048x256 = 2 MiB).
+    o_ref[...] = (
+        jnp.dot(w_ref[...], p_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+
+
+def linear_tiled(w: jax.Array, p: jax.Array, b: jax.Array) -> jax.Array:
+    """MXU-tiled ``W @ p + b``: grid over (out/TILE_M, V/TILE_N) tiles with a
+    fused bias epilogue (saves one HBM round-trip of ``m`` vs a separate
+    bias kernel)."""
+    out, k = w.shape
+    v = p.shape[1]
+    if out % TILE_M != 0 or v % TILE_N != 0:
+        # Ragged edges: fall back to the flat kernel (same numerics). The
+        # benchmark suite's canonical shapes are padded by the caller.
+        return linear_flat(w, p, b)
+    grid = (out // TILE_M, v // TILE_N)
+    return pl.pallas_call(
+        _linear_tiled_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, TILE_N), lambda i, j: (0, j)),
+            pl.BlockSpec((TILE_M, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((out, v), jnp.float32),
+        interpret=INTERPRET,
+    )(w, p, b)
+
+
+# ---------------------------------------------------------------------------
+# Fused residual: r = z - W @ p - b
+# ---------------------------------------------------------------------------
+
+
+def _residual_flat_kernel(w_ref, p_ref, b_ref, z_ref, o_ref):
+    o_ref[...] = z_ref[...] - (
+        jnp.dot(w_ref[...], p_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+
+
+def residual_flat(w, p, b, z) -> jax.Array:
+    """``r = z - W @ p - b`` in one kernel (matmul + bias + subtract fused)."""
+    out, v = w.shape[0], p.shape[1]
+    return pl.pallas_call(
+        _residual_flat_kernel,
+        out_shape=jax.ShapeDtypeStruct((out, v), jnp.float32),
+        interpret=INTERPRET,
+    )(w, p, b, z)
+
+
+def _residual_tiled_kernel(w_ref, p_ref, b_ref, z_ref, o_ref):
+    o_ref[...] = z_ref[...] - (
+        jnp.dot(w_ref[...], p_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+
+
+def residual_tiled(w, p, b, z) -> jax.Array:
+    out, k = w.shape
+    v = p.shape[1]
+    if out % TILE_M != 0 or v % TILE_N != 0:
+        return residual_flat(w, p, b, z)
+    grid = (out // TILE_M, v // TILE_N)
+    return pl.pallas_call(
+        _residual_tiled_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, TILE_N), lambda i, j: (0, j)),
+            pl.BlockSpec((TILE_M, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((out, v), jnp.float32),
+        interpret=INTERPRET,
+    )(w, p, b, z)
+
+
+# ---------------------------------------------------------------------------
+# Gradient matmuls: grad_w = r @ p^T      grad_p = W^T @ r
+# ---------------------------------------------------------------------------
+
+
+def _matmul_nt_kernel(a_ref, b_ref, o_ref):
+    # a @ b^T — contraction over the shared trailing axis.
+    o_ref[...] = jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul_nt_flat(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``a @ b^T`` for a:(M,K), b:(N,K) -> (M,N); used for r @ p^T."""
+    m, n = a.shape[0], b.shape[0]
+    return pl.pallas_call(
+        _matmul_nt_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def _matmul_tn_kernel(a_ref, b_ref, o_ref):
+    # a^T @ b — contraction over the shared leading axis.
+    o_ref[...] = jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul_tn_flat(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``a^T @ b`` for a:(K,M), b:(K,N) -> (M,N); used for W^T @ r."""
+    m, n = a.shape[1], b.shape[1]
+    return pl.pallas_call(
+        _matmul_tn_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def matmul_nt_tiled(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Tiled ``a @ b^T``: grid over (M,N) tiles, full-K resident blocks."""
+    m, k = a.shape
+    n = b.shape[0]
+    if m % TILE_M != 0 or n % TILE_M != 0:
+        return matmul_nt_flat(a, b)
+    grid = (m // TILE_M, n // TILE_M)
+    return pl.pallas_call(
+        _matmul_nt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_M, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_M), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def matmul_tn_tiled(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Tiled ``a^T @ b``: grid over (M,N) tiles, full-K resident blocks."""
+    k, m = a.shape
+    n = b.shape[1]
+    if m % TILE_M != 0 or n % TILE_N != 0:
+        return matmul_tn_flat(a, b)
+    grid = (m // TILE_M, n // TILE_N)
+    return pl.pallas_call(
+        _matmul_tn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, TILE_M), lambda i, j: (0, i)),
+            pl.BlockSpec((k, TILE_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Quantize-project: nearest element of the uniform grid
+#   Delta = { qmin + i*qstep : i = 0..levels-1 }
+# fused with nothing here — the p-update fuses the gradient step in model.py.
+# ---------------------------------------------------------------------------
+
+
+def _quantize_kernel(x_ref, qmin_ref, qstep_ref, qlev_ref, o_ref):
+    x = x_ref[...]
+    qmin = qmin_ref[0]
+    qstep = qstep_ref[0]
+    qlev = qlev_ref[0]
+    idx = jnp.clip(jnp.round((x - qmin) / qstep), 0.0, qlev - 1.0)
+    o_ref[...] = qmin + idx * qstep
+
+
+def quantize_project(x, qmin, qstep, qlevels) -> jax.Array:
+    """Project every element of ``x`` onto the uniform grid Delta.
+
+    ``qmin``/``qstep``/``qlevels`` are shape-(1,) f32 arrays so the same
+    compiled artifact serves the paper's integer set Delta={-1..20}
+    (qmin=-1, qstep=1, qlevels=22) and the 8/16-bit affine cases.
+    Purely elementwise → VPU work on TPU; see DESIGN.md §9.
+    """
+    return pl.pallas_call(
+        _quantize_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(x, qmin, qstep, qlevels)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch table used by model.py: 'flat' (default artifacts) vs 'tiled'.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def suite(variant: str = "flat"):
+    """Return the kernel suite for ``variant`` in {'flat','tiled','jnp'}.
+
+    'jnp' bypasses pallas entirely (pure XLA ops) and exists so the pytest
+    suite can measure pallas-vs-xla parity and the AOT pipeline can emit
+    reference artifacts for A/B benchmarking.
+    """
+    if variant == "flat":
+        return dict(
+            linear=linear_flat,
+            residual=residual_flat,
+            matmul_nt=matmul_nt_flat,
+            matmul_tn=matmul_tn_flat,
+            quantize=quantize_project,
+        )
+    if variant == "tiled":
+        return dict(
+            linear=linear_tiled,
+            residual=residual_tiled,
+            matmul_nt=matmul_nt_tiled,
+            matmul_tn=matmul_tn_tiled,
+            quantize=quantize_project,
+        )
+    if variant == "jnp":
+        from . import ref
+
+        return dict(
+            linear=ref.linear,
+            residual=ref.residual,
+            matmul_nt=ref.matmul_nt,
+            matmul_tn=ref.matmul_tn,
+            quantize=ref.quantize_project,
+        )
+    raise ValueError(f"unknown kernel variant: {variant!r}")

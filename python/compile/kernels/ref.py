@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracle for the Layer-1 pallas kernels.
+
+Every function here is the mathematically obvious implementation of the
+corresponding kernel in ``pallas_ops.py``; pytest asserts elementwise
+agreement (``assert_allclose``) across a hypothesis-driven sweep of shapes.
+These are also the bodies used by the 'jnp' kernel variant (A/B artifacts).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear(w: jax.Array, p: jax.Array, b: jax.Array) -> jax.Array:
+    """m = W @ p + b with b broadcast over nodes; b has shape (out, 1)."""
+    return w @ p + b
+
+
+def residual(w: jax.Array, p: jax.Array, b: jax.Array, z: jax.Array) -> jax.Array:
+    """r = z - W @ p - b."""
+    return z - (w @ p + b)
+
+
+def matmul_nt(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a @ b^T."""
+    return a @ b.T
+
+
+def matmul_tn(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a^T @ b."""
+    return a.T @ b
+
+
+def quantize_project(x, qmin, qstep, qlevels) -> jax.Array:
+    """Nearest element of the uniform grid {qmin + i*qstep, i<qlevels}."""
+    qmin = jnp.asarray(qmin).reshape(())
+    qstep = jnp.asarray(qstep).reshape(())
+    qlevels = jnp.asarray(qlevels).reshape(())
+    idx = jnp.clip(jnp.round((x - qmin) / qstep), 0.0, qlevels - 1.0)
+    return qmin + idx * qstep
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)

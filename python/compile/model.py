@@ -1,0 +1,253 @@
+"""Layer-2 JAX model: the pdADMM-G subproblem solvers and GA-MLP graphs.
+
+Everything in this module is *build-time only*. ``aot.py`` lowers each
+function to HLO text per concrete shape; the rust coordinator loads and
+executes the artifacts through PJRT. Python never runs on the request path.
+
+Shapes follow the paper's notation (Table I):
+
+    W_l : (n_l, n_{l-1})        weight of layer l
+    b_l : (n_l, 1)              intercept (broadcast over nodes)
+    p_l : (n_{l-1}, |V|)        layer input
+    z_l : (n_l, |V|)            pre-activation auxiliary
+    q_l : (n_l, |V|)            layer output (= p_{l+1} via the constraint)
+    u_l : (n_l, |V|)            dual variable
+
+Scalar hyperparameters (nu, rho, tau, theta, ...) are passed as shape-(1,)
+f32 operands so one compiled artifact serves every hyperparameter setting.
+
+Subproblem solutions are exactly Appendix A of the paper, with the two
+documented deviations (DESIGN.md §3): the b-update uses its closed-form
+minimizer (row mean), and the z_L prox uses a fixed unrolled gradient
+descent instead of FISTA.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pallas_ops
+from .kernels import ref as kref
+
+
+def _s(x):
+    """Read a shape-(1,) scalar operand."""
+    return x[0]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer ops (keyed by (n_in, n_out, V) in the artifact registry)
+# ---------------------------------------------------------------------------
+
+
+def make_ops(variant: str = "flat"):
+    """Build the L2 op suite on top of the chosen L1 kernel variant."""
+    k = pallas_ops.suite(variant)
+
+    def linear(w, p, b):
+        """m_l = W_l p_l + b_l (the forward linear map, reused for z/q phases
+        and for the epoch objective: r = z - m costs only a subtraction)."""
+        return (k["linear"](w, p, b),)
+
+    def p_update(p, w, b, z, q_prev, u_prev, tau, nu, rho):
+        """One quadratic-surrogate step on phi(p_l) (Appendix A.1).
+
+        grad phi = -nu W^T (z - W p - b) + u_{l-1} + rho (p - q_{l-1})
+        p  <-  p - grad/tau
+        """
+        r = k["residual"](w, p, b, z)
+        grad = -_s(nu) * k["matmul_tn"](w, r) + u_prev + _s(rho) * (p - q_prev)
+        return (p - grad / _s(tau),)
+
+    def p_update_quant(p, w, b, z, q_prev, u_prev, tau, nu, rho, qmin, qstep, qlev):
+        """pdADMM-G-Q p-subproblem (Appendix B, Eq. 10): the same gradient
+        step followed by nearest-neighbour projection onto Delta."""
+        r = k["residual"](w, p, b, z)
+        grad = -_s(nu) * k["matmul_tn"](w, r) + u_prev + _s(rho) * (p - q_prev)
+        raw = p - grad / _s(tau)
+        return (k["quantize"](raw, qmin, qstep, qlev),)
+
+    def w_update(p, w, b, z, theta, nu):
+        """grad phi_W = -nu (z - W p - b) p^T ; W <- W - grad/theta."""
+        r = k["residual"](w, p, b, z)
+        return (w + (_s(nu) / _s(theta)) * k["matmul_nt"](r, p),)
+
+    def b_update(w, p, z):
+        """Closed-form minimizer of phi over b: the row-mean of z - W p.
+
+        (The paper's single 1/nu gradient step is dominated by this exact
+        minimizer; see DESIGN.md §3 'faithfulness notes'.)
+        """
+        m = k["linear"](w, p, jnp.zeros((w.shape[0], 1), jnp.float32))
+        return (jnp.mean(z - m, axis=1, keepdims=True),)
+
+    def z_update_hidden(m, z_old, q):
+        """Closed-form ReLU z-update (Appendix A.4, Eq. 6).
+
+        Candidates:  z- = min((m + z_old)/2, 0)
+                     z+ = max((m + q + z_old)/3, 0)
+        Elementwise pick by the (nu/2)-weighted objective value (the nu
+        factor is common to all three terms so the choice is nu-free):
+            obj(z) = (z-m)^2 + (q - relu(z))^2 + (z - z_old)^2
+        """
+        zm = jnp.minimum((m + z_old) / 2.0, 0.0)
+        zp = jnp.maximum((m + q + z_old) / 3.0, 0.0)
+
+        def obj(zc):
+            return (
+                (zc - m) ** 2
+                + (q - jnp.maximum(zc, 0.0)) ** 2
+                + (zc - z_old) ** 2
+            )
+
+        return (jnp.where(obj(zm) <= obj(zp), zm, zp),)
+
+    def z_update_last(m, z_old, y, maskn, nu, lr, steps: int = 24):
+        """Prox of the risk (Appendix A.4, Eq. 7):
+
+            min_z  R(z; y) + (nu/2) ||z - m||^2
+
+        R is the masked softmax cross-entropy averaged over training nodes:
+        ``maskn`` is (1,V) with value 1/n_train on training columns else 0.
+        Solved by ``steps`` unrolled gradient iterations from z_old with the
+        caller-provided step size lr ≈ 1/(nu + Lip(grad R)) — the objective
+        is nu-strongly convex so this converges linearly.
+        """
+        lr_ = _s(lr)
+        nu_ = _s(nu)
+
+        def body(_, zc):
+            sm = jax.nn.softmax(zc, axis=0)
+            grad = (sm - y) * maskn + nu_ * (zc - m)
+            return zc - lr_ * grad
+
+        z = jax.lax.fori_loop(0, steps, body, z_old)
+        return (z,)
+
+    def q_update(p_next, u, z, nu, rho):
+        """q_l <- (rho p_{l+1} + u_l + nu f(z_l)) / (rho + nu)  (Appendix A.5)."""
+        return ((_s(rho) * p_next + u + _s(nu) * jnp.maximum(z, 0.0)) / (_s(rho) + _s(nu)),)
+
+    def u_update(u, p_next, q, rho):
+        """u_l <- u_l + rho (p_{l+1} - q_l)  (Appendix A.6)."""
+        return (u + _s(rho) * (p_next - q),)
+
+    def risk_value(z, y, maskn):
+        """R(z_L; y): masked mean softmax cross-entropy (scalar, shape (1,))."""
+        logp = jax.nn.log_softmax(z, axis=0)
+        ce = -jnp.sum(y * logp, axis=0, keepdims=True)  # (1, V)
+        return (jnp.sum(ce * maskn, axis=1),)
+
+    return dict(
+        linear=linear,
+        p_update=p_update,
+        p_update_quant=p_update_quant,
+        w_update=w_update,
+        b_update=b_update,
+        z_update_hidden=z_update_hidden,
+        z_update_last=z_update_last,
+        q_update=q_update,
+        u_update=u_update,
+        risk_value=risk_value,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Model-level ops (GA-MLP forward + loss/grad for the GD-family baselines)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, x, variant: str = "flat"):
+    """GA-MLP forward pass: relu(W_l p + b_l) for l < L, logits at layer L.
+
+    ``params`` is the flat list [W_1, b_1, ..., W_L, b_L]; returns z_L.
+    """
+    k = pallas_ops.suite(variant)
+    p = x
+    n_layers = len(params) // 2
+    for l in range(n_layers):
+        w, b = params[2 * l], params[2 * l + 1]
+        m = k["linear"](w, p, b)
+        p = jnp.maximum(m, 0.0) if l + 1 < n_layers else m
+    return p
+
+
+def make_forward(n_layers: int, variant: str = "flat"):
+    """Forward op with the flat-params calling convention used by rust."""
+
+    def fwd(*args):
+        params, x = list(args[:-1]), args[-1]
+        assert len(params) == 2 * n_layers
+        return (forward(params, x, variant),)
+
+    return fwd
+
+
+def make_loss_and_grad(n_layers: int, variant: str = "flat"):
+    """(loss, dW_1, db_1, ..., dW_L, db_L) for the GD/Adam/… baselines.
+
+    Full-batch masked cross-entropy — exactly the objective the paper's
+    comparison methods optimize. Lowered once per model config; the rust
+    side owns the optimizer state updates (Adam moments etc.).
+
+    Always uses the 'jnp' kernel suite: interpret-mode ``pallas_call`` does
+    not support reverse-mode autodiff, and the baselines are the *comparison
+    methods* — their compute graph is ordinary XLA by design.
+    """
+    del variant
+
+    def loss_fn(params, x, y, maskn):
+        z = forward(params, x, "jnp")
+        logp = jax.nn.log_softmax(z, axis=0)
+        ce = -jnp.sum(y * logp, axis=0, keepdims=True)
+        return jnp.sum(ce * maskn)
+
+    def loss_and_grad(*args):
+        params = list(args[: 2 * n_layers])
+        x, y, maskn = args[2 * n_layers], args[2 * n_layers + 1], args[2 * n_layers + 2]
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y, maskn)
+        return (loss.reshape((1,)), *grads)
+
+    return loss_and_grad
+
+
+# ---------------------------------------------------------------------------
+# Numpy-free reference used by python/tests to sanity-check the updates
+# against a literal transcription of the paper's formulas.
+# ---------------------------------------------------------------------------
+
+
+def reference_ops():
+    """Plain-jnp transcription of Appendix A/B (no pallas), for pytest."""
+
+    def p_update(p, w, b, z, q_prev, u_prev, tau, nu, rho):
+        r = z - (w @ p + b)
+        grad = -nu * (w.T @ r) + u_prev + rho * (p - q_prev)
+        return p - grad / tau
+
+    def p_update_quant(p, w, b, z, q_prev, u_prev, tau, nu, rho, qmin, qstep, qlev):
+        raw = p_update(p, w, b, z, q_prev, u_prev, tau, nu, rho)
+        return kref.quantize_project(raw, qmin, qstep, qlev)
+
+    def w_update(p, w, b, z, theta, nu):
+        r = z - (w @ p + b)
+        return w + (nu / theta) * (r @ p.T)
+
+    def b_update(w, p, z):
+        return jnp.mean(z - w @ p, axis=1, keepdims=True)
+
+    def q_update(p_next, u, z, nu, rho):
+        return (rho * p_next + u + nu * jnp.maximum(z, 0.0)) / (rho + nu)
+
+    def u_update(u, p_next, q, rho):
+        return u + rho * (p_next - q)
+
+    return dict(
+        p_update=p_update,
+        p_update_quant=p_update_quant,
+        w_update=w_update,
+        b_update=b_update,
+        q_update=q_update,
+        u_update=u_update,
+    )

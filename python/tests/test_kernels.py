@@ -1,0 +1,133 @@
+"""L1 correctness: every pallas kernel vs the pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes (and the quantization grids); assert_allclose is
+the core signal. Both the 'flat' (shipped) and 'tiled' (TPU-structured)
+variants are exercised.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pallas_ops, ref
+
+DIM = st.integers(min_value=1, max_value=33)
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(out=DIM, inner=DIM, v=DIM, seed=st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("variant", ["flat", "tiled"])
+def test_linear_matches_ref(variant, out, inner, v, seed):
+    rng = np.random.default_rng(seed)
+    w, p, b = rand(rng, out, inner), rand(rng, inner, v), rand(rng, out, 1)
+    got = pallas_ops.suite(variant)["linear"](w, p, b)
+    np.testing.assert_allclose(got, ref.linear(w, p, b), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(out=DIM, inner=DIM, v=DIM, seed=st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("variant", ["flat", "tiled"])
+def test_residual_matches_ref(variant, out, inner, v, seed):
+    rng = np.random.default_rng(seed)
+    w, p = rand(rng, out, inner), rand(rng, inner, v)
+    b, z = rand(rng, out, 1), rand(rng, out, v)
+    got = pallas_ops.suite(variant)["residual"](w, p, b, z)
+    np.testing.assert_allclose(got, ref.residual(w, p, b, z), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("variant", ["flat", "tiled"])
+def test_matmul_nt_matches_ref(variant, m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, n, k)
+    got = pallas_ops.suite(variant)["matmul_nt"](a, b)
+    np.testing.assert_allclose(got, ref.matmul_nt(a, b), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("variant", ["flat", "tiled"])
+def test_matmul_tn_matches_ref(variant, m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, k, m), rand(rng, k, n)
+    got = pallas_ops.suite(variant)["matmul_tn"](a, b)
+    np.testing.assert_allclose(got, ref.matmul_tn(a, b), rtol=1e-5, atol=1e-5)
+
+
+def test_tiled_variants_hit_tiled_path_on_aligned_shapes():
+    """MXU-aligned shapes must go down the BlockSpec grid (not the flat
+    fallback) and still agree with the oracle."""
+    rng = np.random.default_rng(0)
+    m, k, n = pallas_ops.TILE_M * 2, 96, pallas_ops.TILE_N
+    w, p = rand(rng, m, k), rand(rng, k, n)
+    b, z = rand(rng, m, 1), rand(rng, m, n)
+    np.testing.assert_allclose(
+        pallas_ops.linear_tiled(w, p, b), ref.linear(w, p, b), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        pallas_ops.residual_tiled(w, p, b, z), ref.residual(w, p, b, z), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=DIM,
+    cols=DIM,
+    qmin=st.floats(-8, 0, allow_nan=False, width=32),
+    qstep=st.floats(0.0625, 2.0, allow_nan=False, width=32),
+    qlev=st.integers(2, 256),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref_and_grid_membership(rows, cols, qmin, qstep, qlev, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((rows, cols)) * 10).astype(np.float32)
+    args = (
+        np.array([qmin], np.float32),
+        np.array([qstep], np.float32),
+        np.array([float(qlev)], np.float32),
+    )
+    got = np.asarray(pallas_ops.quantize_project(x, *args))
+    want = np.asarray(ref.quantize_project(x, *args))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # Every output must lie on the grid {qmin + i*qstep}.
+    idx = (got - qmin) / qstep
+    np.testing.assert_allclose(idx, np.round(idx), atol=1e-3)
+    assert idx.min() >= -1e-3 and idx.max() <= qlev - 1 + 1e-3
+
+
+def test_quantize_is_nearest_neighbour_projection():
+    """For in-range x the projection error is at most qstep/2 (Definition 4's
+    arg-min over Delta)."""
+    rng = np.random.default_rng(1)
+    qmin, qstep, qlev = -1.0, 1.0, 22  # the paper's Delta = {-1..20}
+    x = rng.uniform(-1, 20, size=(64, 64)).astype(np.float32)
+    got = np.asarray(
+        pallas_ops.quantize_project(
+            x,
+            np.array([qmin], np.float32),
+            np.array([qstep], np.float32),
+            np.array([float(qlev)], np.float32),
+        )
+    )
+    assert np.abs(got - x).max() <= qstep / 2 + 1e-6
+    assert set(np.unique(got)).issubset({float(i) for i in range(-1, 21)})
+
+
+def test_paper_integer_delta_clamps_out_of_range():
+    x = np.array([[-5.0, 25.0, 0.4, 19.6]], np.float32)
+    got = np.asarray(
+        pallas_ops.quantize_project(
+            x,
+            np.array([-1.0], np.float32),
+            np.array([1.0], np.float32),
+            np.array([22.0], np.float32),
+        )
+    )
+    np.testing.assert_allclose(got, [[-1.0, 20.0, 0.0, 20.0]])

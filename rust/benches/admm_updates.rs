@@ -1,0 +1,89 @@
+//! ADMM subproblem benchmarks on both backends at the fig2/fig5 layer
+//! shape — the per-phase costs that the epoch time decomposes into.
+
+use pdadmm_g::admm::updates;
+use pdadmm_g::backend::{ComputeBackend, NativeBackend, XlaBackend};
+use pdadmm_g::config::RootConfig;
+use pdadmm_g::runtime::XlaRuntime;
+use pdadmm_g::tensor::matrix::Mat;
+use pdadmm_g::tensor::rng::Pcg32;
+use pdadmm_g::util::bench::Bencher;
+use std::sync::Arc;
+
+fn main() {
+    let mut rng = Pcg32::seeded(2);
+    let (h, v) = (256usize, 2000usize); // pubmed @ fig2/fig5 scale
+    let w = Mat::randn(h, h, 0.1, &mut rng);
+    let p = Mat::randn(h, v, 1.0, &mut rng);
+    let b = Mat::randn(h, 1, 0.1, &mut rng);
+    let z = Mat::randn(h, v, 1.0, &mut rng);
+    let q = Mat::randn(h, v, 1.0, &mut rng);
+    let u = Mat::randn(h, v, 0.1, &mut rng);
+
+    let mut bench = Bencher::with_budget(700);
+
+    let native = NativeBackend::single_thread();
+    bench.group(&format!("native ADMM updates @ {h}x{h}x{v} (1 thread)"));
+    bench.bench("p_update", || {
+        std::hint::black_box(native.p_update(&p, &w, &b, &z, &q, &u, 3.0, 0.01, 1.0));
+    });
+    bench.bench("p_update_quant(Delta)", || {
+        std::hint::black_box(
+            native.p_update_quant(&p, &w, &b, &z, &q, &u, 3.0, 0.01, 1.0, -1.0, 1.0, 22.0),
+        );
+    });
+    bench.bench("w_update", || {
+        std::hint::black_box(native.w_update(&p, &w, &b, &z, 3.0, 0.01));
+    });
+    bench.bench("b_update", || {
+        std::hint::black_box(native.b_update(&w, &p, &z));
+    });
+    bench.bench("z_update_hidden", || {
+        std::hint::black_box(native.z_update_hidden(&z, &z, &q));
+    });
+    bench.bench("q_update + u_update", || {
+        let qn = native.q_update(&p, &u, &z, 0.01, 1.0);
+        std::hint::black_box(native.u_update(&u, &p, &qn, 1.0));
+    });
+    bench.bench("spectral_norm_est (tau refresh)", || {
+        let mut r2 = Pcg32::seeded(3);
+        std::hint::black_box(w.spectral_norm_est(12, &mut r2));
+    });
+
+    // XLA backend (AOT artifacts through PJRT), if built. Note: hidden=256
+    // artifacts exist for the fig2fig5 datasets; pubmed's V=2000 matches.
+    let cfg = RootConfig::load_default().unwrap();
+    if cfg.artifacts_dir().join("manifest.json").exists() {
+        let rt = Arc::new(XlaRuntime::open(&cfg.artifacts_dir()).unwrap());
+        let xla = XlaBackend::new(rt);
+        bench.group(&format!("xla (AOT pallas artifacts) @ {h}x{h}x{v}"));
+        // warmup = compile
+        let _ = xla.p_update(&p, &w, &b, &z, &q, &u, 3.0, 0.01, 1.0);
+        bench.bench("p_update", || {
+            std::hint::black_box(xla.p_update(&p, &w, &b, &z, &q, &u, 3.0, 0.01, 1.0));
+        });
+        let _ = xla.w_update(&p, &w, &b, &z, 3.0, 0.01);
+        bench.bench("w_update", || {
+            std::hint::black_box(xla.w_update(&p, &w, &b, &z, 3.0, 0.01));
+        });
+        let _ = xla.z_update_hidden(&z, &z, &q);
+        bench.bench("z_update_hidden", || {
+            std::hint::black_box(xla.z_update_hidden(&z, &z, &q));
+        });
+    } else {
+        println!("(xla artifacts not built; run `make artifacts` for the AOT half)");
+    }
+
+    // prox of the last layer at pubmed's (C=3, V=2000)
+    let c = 3;
+    let zl = Mat::randn(c, v, 1.0, &mut rng);
+    let mut y = Mat::zeros(c, v);
+    for j in 0..v {
+        *y.at_mut(j % c, j) = 1.0;
+    }
+    let maskn = Mat::filled(1, v, 1.0 / v as f32);
+    bench.group("last-layer risk prox (24 unrolled steps)");
+    bench.bench("z_update_last native", || {
+        std::hint::black_box(updates::z_update_last(&zl, &zl, &y, &maskn, 0.01, 1.0, 24));
+    });
+}

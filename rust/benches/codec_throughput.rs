@@ -1,0 +1,46 @@
+//! Wire-codec throughput: the pdADMM-G-Q communication path must not become
+//! the bottleneck it is meant to remove. (§Perf target: >= 1 GB/s.)
+
+use pdadmm_g::coordinator::quant::{self, Codec};
+use pdadmm_g::tensor::matrix::Mat;
+use pdadmm_g::tensor::rng::Pcg32;
+use pdadmm_g::util::bench::Bencher;
+
+fn main() {
+    let mut rng = Pcg32::seeded(3);
+    let mut b = Bencher::with_budget(700);
+
+    for (h, v) in [(100usize, 2000usize), (256, 2000), (512, 4000)] {
+        let m = Mat::randn(h, v, 2.0, &mut rng);
+        let raw_bytes = (m.len() * 4) as u64;
+        b.group(&format!("transfer (encode+decode) {h}x{v} = {} f32", m.len()));
+        for codec in [
+            Codec::None,
+            Codec::paper_int_delta(),
+            Codec::Uniform { bits: 16 },
+            Codec::Uniform { bits: 8 },
+        ] {
+            // int-delta requires on-grid values
+            let src = if matches!(codec, Codec::IntDelta { .. }) {
+                pdadmm_g::admm::updates::quantize(&m, -1.0, 1.0, 22.0)
+            } else {
+                m.clone()
+            };
+            b.bench(&codec.label(), || {
+                std::hint::black_box(quant::transfer(codec, &src));
+            });
+            b.note_throughput(raw_bytes);
+        }
+    }
+
+    // encode-only vs decode-only split for the 8-bit path
+    let m = Mat::randn(256, 4000, 2.0, &mut rng);
+    b.group("encode/decode split, uniform8, 256x4000");
+    b.bench("encode", || {
+        std::hint::black_box(quant::encode(Codec::Uniform { bits: 8 }, &m));
+    });
+    let enc = quant::encode(Codec::Uniform { bits: 8 }, &m);
+    b.bench("decode", || {
+        std::hint::black_box(quant::decode(&enc));
+    });
+}

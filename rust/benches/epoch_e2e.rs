@@ -1,0 +1,69 @@
+//! End-to-end epoch benchmark: full pdADMM-G iterations on real dataset
+//! shapes, serial vs parallel, plain vs quantized, native vs XLA — the
+//! numbers behind EXPERIMENTS.md §Perf's epoch table.
+
+use pdadmm_g::backend::NativeBackend;
+use pdadmm_g::config::{BackendKind, QuantMode, RootConfig, ScheduleMode, TrainConfig};
+use pdadmm_g::coordinator::Trainer;
+use pdadmm_g::experiments::make_backend;
+use pdadmm_g::graph::datasets;
+use pdadmm_g::util::bench::Bencher;
+use std::sync::Arc;
+
+fn main() {
+    let cfg = RootConfig::load_default().unwrap();
+    let ds = datasets::load(&cfg, "pubmed").unwrap();
+    let mut b = Bencher::with_budget(2500);
+
+    let mk = |quant: QuantMode, schedule: ScheduleMode| {
+        let mut tc = TrainConfig::new("pubmed", 256, 10, 1);
+        tc.nu = 0.01;
+        tc.rho = 1.0;
+        tc.quant = quant;
+        tc.schedule = schedule;
+        let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
+        t.measure = false;
+        t.run_epoch(); // warmup
+        t
+    };
+
+    b.group("pubmed 10x256 epoch (native, 1 thread/worker)");
+    let mut t = mk(QuantMode::None, ScheduleMode::Serial);
+    b.bench("serial", || {
+        std::hint::black_box(t.run_epoch());
+    });
+    let mut t = mk(QuantMode::None, ScheduleMode::Parallel);
+    b.bench("parallel (1 worker/layer)", || {
+        std::hint::black_box(t.run_epoch());
+    });
+    let mut t = mk(QuantMode::IntDelta, ScheduleMode::Parallel);
+    b.bench("parallel + int-delta quant", || {
+        std::hint::black_box(t.run_epoch());
+    });
+    let mut t = mk(QuantMode::PQ { bits: 8 }, ScheduleMode::Parallel);
+    b.bench("parallel + pq@8 quant", || {
+        std::hint::black_box(t.run_epoch());
+    });
+
+    if cfg.artifacts_dir().join("manifest.json").exists() {
+        b.group("pubmed 10x256 epoch (xla AOT artifacts)");
+        let backend = make_backend(&cfg, BackendKind::Xla).unwrap();
+        let mut tc = TrainConfig::new("pubmed", 256, 10, 1);
+        tc.nu = 0.01;
+        tc.rho = 1.0;
+        let mut t = Trainer::new(backend, ds.clone(), tc);
+        t.measure = false;
+        t.run_epoch(); // warmup = compile all ops
+        b.bench("parallel (serialized dispatch)", || {
+            std::hint::black_box(t.run_epoch());
+        });
+    }
+
+    // metrics overhead (objective + forward + accuracies)
+    b.group("measurement overhead");
+    let mut t = mk(QuantMode::None, ScheduleMode::Parallel);
+    t.measure = true;
+    b.bench("epoch with measure=on", || {
+        std::hint::black_box(t.run_epoch());
+    });
+}

@@ -1,0 +1,102 @@
+//! Paper-shaped micro-reproduction bench: one bench case per evaluation
+//! artifact, at reduced scale, printing the headline quantity next to the
+//! paper's expectation. `cargo bench` therefore regenerates a smoke-sized
+//! version of every table/figure; the full-scale versions come from
+//! `repro exp <id>` (see Makefile `experiments`).
+
+use pdadmm_g::backend::NativeBackend;
+use pdadmm_g::config::{QuantMode, RootConfig, ScheduleMode, TrainConfig};
+use pdadmm_g::coordinator::Trainer;
+use pdadmm_g::graph::datasets;
+use pdadmm_g::optim::{train_baseline, BaselineConfig, OptimizerKind};
+use pdadmm_g::util::fmt_bytes;
+use std::sync::Arc;
+
+fn main() {
+    let cfg = RootConfig::load_default().unwrap();
+
+    // --- fig2 (smoke): objective/residual decrease on cora ---
+    {
+        let ds = datasets::load(&cfg, "cora").unwrap();
+        let mut tc = TrainConfig::new("cora", 64, 10, 10);
+        tc.nu = 0.01;
+        tc.rho = 1.0;
+        tc.schedule = ScheduleMode::Parallel;
+        let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc);
+        let log = t.run();
+        println!(
+            "fig2-smoke  cora: objective {:.3e} -> {:.3e} | residual {:.2e} -> {:.2e}  (paper: both decrease)",
+            log.records[0].objective,
+            log.last().unwrap().objective,
+            log.records[0].residual,
+            log.last().unwrap().residual,
+        );
+    }
+
+    // --- fig3 (smoke): speedup grows with layers on flickr ---
+    {
+        use pdadmm_g::coordinator::trainer::simulated_parallel_ms;
+        let ds = datasets::load(&cfg, "flickr").unwrap();
+        let mut speeds = Vec::new();
+        for layers in [8usize, 14] {
+            let mut tc = TrainConfig::new("flickr", 96, layers, 1);
+            tc.nu = 1e-3;
+            tc.rho = 1e-3;
+            tc.schedule = ScheduleMode::Serial;
+            let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
+            t.measure = false;
+            t.record_layer_times = true;
+            t.run_epoch();
+            let rec = t.run_epoch();
+            let par = simulated_parallel_ms(&t.last_layer_secs, layers);
+            speeds.push((layers, rec.epoch_ms / par));
+        }
+        println!(
+            "fig3-smoke  flickr: speedup L=8 {:.2}x -> L=14 {:.2}x  (paper: grows with layers)",
+            speeds[0].1, speeds[1].1
+        );
+        assert!(speeds[1].1 > speeds[0].1, "speedup should grow with depth");
+    }
+
+    // --- fig5 (smoke): quantization cuts bytes at equal accuracy ---
+    {
+        let ds = datasets::load(&cfg, "citeseer").unwrap();
+        let mut bytes = Vec::new();
+        for quant in [QuantMode::None, QuantMode::PQ { bits: 8 }] {
+            let mut tc = TrainConfig::new("citeseer", 64, 10, 5);
+            tc.nu = 0.01;
+            tc.rho = 1.0;
+            tc.quant = quant;
+            let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
+            let log = t.run();
+            bytes.push(log.total_comm_bytes());
+        }
+        let saving = 100.0 * (1.0 - bytes[1] as f64 / bytes[0] as f64);
+        println!(
+            "fig5-smoke  citeseer: none {} -> pq@8 {}  saving {:.0}%  (paper: up to 45%)",
+            fmt_bytes(bytes[0]),
+            fmt_bytes(bytes[1]),
+            saving
+        );
+        assert!(saving > 45.0);
+    }
+
+    // --- table3 (smoke): pdADMM-G vs Adam on cora @ h=64 ---
+    {
+        let ds = datasets::load(&cfg, "cora").unwrap();
+        let mut tc = TrainConfig::new("cora", 64, 4, 30);
+        tc.nu = 0.01;
+        tc.rho = 1.0;
+        let mut t = Trainer::new(Arc::new(NativeBackend::default()), ds.clone(), tc);
+        let admm_acc = t.run().test_at_best_val().1;
+        let bc = BaselineConfig::new(OptimizerKind::Adam, 64, 4, 30);
+        let adam_acc = train_baseline(Arc::new(NativeBackend::default()), &ds, &bc)
+            .test_at_best_val()
+            .1;
+        println!(
+            "table3-smoke cora: pdADMM-G {admm_acc:.3} vs Adam {adam_acc:.3}  (paper: pdADMM-G >= baselines)"
+        );
+    }
+
+    println!("paper_tables bench done");
+}

@@ -1,0 +1,65 @@
+//! Matmul kernel benchmarks: the native backend's hot loops at the layer
+//! shapes of the experiment suite, plus thread-scaling of the blocked
+//! kernel. (§Perf L3 / native-roofline reference.)
+
+use pdadmm_g::tensor::matrix::Mat;
+use pdadmm_g::tensor::ops;
+use pdadmm_g::tensor::rng::Pcg32;
+use pdadmm_g::util::bench::Bencher;
+
+fn main() {
+    let mut rng = Pcg32::seeded(1);
+    let mut b = Bencher::with_budget(800);
+
+    b.group("matmul A(h,h) @ B(h,V) — the per-layer hot shape");
+    for (h, v) in [(100usize, 2000usize), (256, 2000), (512, 3600)] {
+        let a = Mat::randn(h, h, 1.0, &mut rng);
+        let x = Mat::randn(h, v, 1.0, &mut rng);
+        let flops = 2.0 * h as f64 * h as f64 * v as f64;
+        for t in [1usize, 4] {
+            b.bench(&format!("matmul {h}x{h}x{v} t{t}"), || {
+                std::hint::black_box(ops::matmul(&a, &x, t));
+            });
+            b.note_gflops(flops);
+        }
+    }
+
+    b.group("gradient matmuls (r p^T and W^T r)");
+    let h = 256;
+    let v = 2000;
+    let r = Mat::randn(h, v, 1.0, &mut rng);
+    let p = Mat::randn(h, v, 1.0, &mut rng);
+    let w = Mat::randn(h, h, 1.0, &mut rng);
+    b.bench("matmul_nt r@p^T 256x2000", || {
+        std::hint::black_box(ops::matmul_nt(&r, &p, 1));
+    });
+    b.note_gflops(2.0 * h as f64 * h as f64 * v as f64);
+    b.bench("matmul_tn W^T@r 256x2000", || {
+        std::hint::black_box(ops::matmul_tn(&w, &r, 1));
+    });
+    b.note_gflops(2.0 * h as f64 * h as f64 * v as f64);
+
+    b.group("fused epilogues (linear / residual vs unfused)");
+    let bb = Mat::randn(h, 1, 1.0, &mut rng);
+    let z = Mat::randn(h, v, 1.0, &mut rng);
+    b.bench("linear fused", || {
+        std::hint::black_box(ops::linear(&w, &p, &bb, 1));
+    });
+    b.bench("residual fused", || {
+        std::hint::black_box(ops::residual(&w, &p, &bb, &z, 1));
+    });
+    b.bench("residual unfused (matmul+bcast+sub)", || {
+        let m = ops::matmul(&w, &p, 1).add_col_broadcast(&bb);
+        std::hint::black_box(z.sub(&m));
+    });
+
+    b.group("thread scaling, 512x512x3600");
+    let a = Mat::randn(512, 512, 1.0, &mut rng);
+    let x = Mat::randn(512, 3600, 1.0, &mut rng);
+    for t in [1usize, 2, 4, 8, 16] {
+        b.bench(&format!("matmul t{t}"), || {
+            std::hint::black_box(ops::matmul(&a, &x, t));
+        });
+        b.note_gflops(2.0 * 512.0 * 512.0 * 3600.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Native ADMM subproblem math (substrate S11): the rust mirror of
+//! `python/compile/model.py`'s L2 ops. Serves as the NativeBackend's
+//! compute, the parity oracle for the XLA artifacts, and the objective /
+//! residual bookkeeping used by every experiment.
+
+pub mod objective;
+pub mod state;
+pub mod updates;
+
+pub use state::{LayerRole, LayerState};

@@ -1,0 +1,138 @@
+//! The augmented Lagrangian L_rho and primal residual (the quantities
+//! Fig. 2 plots and Lemmas 1/2 reason about).
+
+use crate::admm::state::{LayerRole, LayerState};
+use crate::admm::updates;
+use crate::tensor::matrix::Mat;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ObjectiveParts {
+    /// R(z_L; y).
+    pub risk: f64,
+    /// (nu/2) sum_l ||z_l - W_l p_l - b_l||^2.
+    pub recon: f64,
+    /// (nu/2) sum_{l<L} ||q_l - f(z_l)||^2.
+    pub act: f64,
+    /// sum_{l<L} u_l^T (p_{l+1} - q_l).
+    pub dual: f64,
+    /// (rho/2) sum_{l<L} ||p_{l+1} - q_l||^2.
+    pub aug: f64,
+}
+
+impl ObjectiveParts {
+    /// L_rho — the paper's Eq. for the augmented Lagrangian.
+    pub fn total(&self) -> f64 {
+        self.risk + self.recon + self.act + self.dual + self.aug
+    }
+
+    /// F (Problem 2's objective, no dual/aug terms).
+    pub fn f_value(&self) -> f64 {
+        self.risk + self.recon + self.act
+    }
+}
+
+/// Evaluate L_rho over the layer chain.
+pub fn evaluate(
+    layers: &[LayerState],
+    y: &Mat,
+    maskn: &Mat,
+    nu: f32,
+    rho: f32,
+    threads: usize,
+) -> ObjectiveParts {
+    let mut parts = ObjectiveParts::default();
+    let nu = nu as f64;
+    let rho = rho as f64;
+    for (l, layer) in layers.iter().enumerate() {
+        let r = updates::residual(&layer.w, &layer.p, &layer.b, &layer.z, threads);
+        parts.recon += (nu / 2.0) * r.frob_sq();
+        match layer.role {
+            LayerRole::Last => {
+                parts.risk += updates::risk_value(&layer.z, y, maskn);
+            }
+            LayerRole::Hidden => {
+                let q = layer.q.as_ref().expect("hidden layer has q");
+                let u = layer.u.as_ref().expect("hidden layer has u");
+                let fz = layer.z.relu();
+                parts.act += (nu / 2.0) * q.sub(&fz).frob_sq();
+                let p_next = &layers[l + 1].p;
+                let gap = p_next.sub(q);
+                parts.dual += u.zip(&gap, |a, b| a * b).sum();
+                parts.aug += (rho / 2.0) * gap.frob_sq();
+            }
+        }
+    }
+    parts
+}
+
+/// Primal residual sum_{l<L} ||p_{l+1} - q_l||^2 (Algorithm 1, line 10).
+pub fn residual_sq(layers: &[LayerState]) -> f64 {
+    let mut total = 0.0;
+    for l in 0..layers.len().saturating_sub(1) {
+        let q = layers[l].q.as_ref().expect("hidden layer has q");
+        total += layers[l + 1].p.sub(q).frob_sq();
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::state::init_chain;
+    use crate::tensor::rng::Pcg32;
+
+    fn fixture() -> (Vec<LayerState>, Mat, Mat) {
+        let mut rng = Pcg32::seeded(3);
+        let x = Mat::randn(6, 14, 1.0, &mut rng);
+        let layers = init_chain(&[6, 5, 4], &x, 9, 0.4, 1);
+        let mut y = Mat::zeros(4, 14);
+        for j in 0..14 {
+            *y.at_mut(j % 4, j) = 1.0;
+        }
+        let maskn = Mat::filled(1, 14, 1.0 / 14.0);
+        (layers, y, maskn)
+    }
+
+    #[test]
+    fn feasible_init_has_zero_gap_terms() {
+        let (layers, y, maskn) = fixture();
+        let parts = evaluate(&layers, &y, &maskn, 0.01, 1.0, 1);
+        assert!(parts.recon < 1e-8, "recon {}", parts.recon);
+        assert!(parts.act < 1e-8);
+        assert!(parts.dual.abs() < 1e-8);
+        assert!(parts.aug < 1e-8);
+        assert!(parts.risk > 0.0);
+        assert!((parts.total() - parts.risk).abs() < 1e-8);
+        assert!(residual_sq(&layers) < 1e-10);
+    }
+
+    #[test]
+    fn perturbing_q_raises_aug_and_residual() {
+        let (mut layers, y, maskn) = fixture();
+        if let Some(q) = layers[0].q.as_mut() {
+            for v in q.data.iter_mut() {
+                *v += 0.5;
+            }
+        }
+        let parts = evaluate(&layers, &y, &maskn, 0.01, 1.0, 1);
+        assert!(parts.aug > 0.0);
+        assert!(parts.act > 0.0);
+        let res = residual_sq(&layers);
+        let q = layers[0].q.as_ref().unwrap();
+        assert!((res - 0.25 * q.len() as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn f_value_excludes_dual_terms() {
+        let (mut layers, y, maskn) = fixture();
+        if let Some(u) = layers[0].u.as_mut() {
+            u.data.fill(3.0);
+        }
+        if let Some(q) = layers[0].q.as_mut() {
+            q.data[0] += 1.0; // nonzero gap so dual term is active
+        }
+        let parts = evaluate(&layers, &y, &maskn, 0.01, 1.0, 1);
+        assert!(parts.dual.abs() > 0.0);
+        assert!((parts.f_value() - (parts.risk + parts.recon + parts.act)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,170 @@
+//! Per-layer ADMM state and initialization (the variables of Problem 2).
+
+use crate::tensor::matrix::Mat;
+use crate::tensor::rng::Pcg32;
+
+/// Whether a layer carries the risk term (last) or an activation (hidden).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerRole {
+    Hidden,
+    Last,
+}
+
+/// All variables owned by layer `l`'s worker.
+///
+/// Ownership follows the paper's communication pattern: worker `l` owns
+/// `(p_l, W_l, b_l, z_l)` plus, for `l < L`, its *output*-side `(q_l, u_l)`.
+/// Worker `l` receives `p_{l+1}` from worker `l+1` (phase Q/U) and sends
+/// `(q_l, u_l)` forward (phase P of the next iteration).
+#[derive(Clone)]
+pub struct LayerState {
+    pub index: usize,
+    pub role: LayerRole,
+    pub w: Mat,          // (n_l, n_{l-1})
+    pub b: Mat,          // (n_l, 1)
+    pub z: Mat,          // (n_l, V)
+    pub p: Mat,          // (n_{l-1}, V); layer 1's p is the fixed input X
+    pub q: Option<Mat>,  // (n_l, V) for l < L
+    pub u: Option<Mat>,  // (n_l, V) for l < L
+    /// Step sizes (Lipschitz upper bounds), refreshed once per epoch.
+    pub tau: f32,
+    pub theta: f32,
+}
+
+impl LayerState {
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.w.cols, self.w.rows, self.z.cols)
+    }
+}
+
+/// Initialize the layer chain with a feed-forward warm start: z = W p + b,
+/// q = f(z) (feasible), u = 0. Matches the python test harness and the
+/// released pdADMM-G initialization.
+pub fn init_chain(
+    dims: &[usize],
+    x: &Mat,
+    seed: u64,
+    init_std: f32,
+    threads: usize,
+) -> Vec<LayerState> {
+    let n_layers = dims.len() - 1;
+    assert!(n_layers >= 2, "GA-MLP needs at least 2 layers");
+    assert_eq!(x.rows, dims[0], "input dim mismatch");
+    let mut rng = Pcg32::new(seed, 0x1a7e5);
+    let mut layers = Vec::with_capacity(n_layers);
+    let mut p = x.clone();
+    for l in 0..n_layers {
+        let w = Mat::randn(dims[l + 1], dims[l], init_std, &mut rng);
+        let b = Mat::zeros(dims[l + 1], 1);
+        let z = crate::tensor::ops::linear(&w, &p, &b, threads);
+        let role = if l + 1 == n_layers { LayerRole::Last } else { LayerRole::Hidden };
+        let (q, u, p_next) = if role == LayerRole::Hidden {
+            let q = z.relu();
+            let u = Mat::zeros(q.rows, q.cols);
+            let pn = q.clone();
+            (Some(q), Some(u), pn)
+        } else {
+            (None, None, Mat::zeros(0, 0))
+        };
+        layers.push(LayerState {
+            index: l,
+            role,
+            w,
+            b,
+            z,
+            p,
+            q,
+            u,
+            tau: 1.0,
+            theta: 1.0,
+        });
+        p = p_next;
+    }
+    layers
+}
+
+/// Extract (Ws, bs) for forward evaluation.
+pub fn params_of(layers: &[LayerState]) -> (Vec<Mat>, Vec<Mat>) {
+    (
+        layers.iter().map(|l| l.w.clone()).collect(),
+        layers.iter().map(|l| l.b.clone()).collect(),
+    )
+}
+
+/// Refresh the step sizes tau_l = nu ||W_l||^2 + rho + eps and
+/// theta_l = nu ||p_l||^2 + eps (power-iteration spectral estimates).
+pub fn refresh_step_sizes(layers: &mut [LayerState], nu: f32, rho: f32, seed: u64) {
+    let mut rng = Pcg32::new(seed, 0x7a0);
+    for l in layers.iter_mut() {
+        let wn = l.w.spectral_norm_est(12, &mut rng);
+        let pn = l.p.spectral_norm_est(12, &mut rng);
+        l.tau = nu * wn * wn + rho + 1e-3;
+        l.theta = nu * pn * pn + 1e-3;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> Vec<LayerState> {
+        let mut rng = Pcg32::seeded(1);
+        let x = Mat::randn(8, 20, 1.0, &mut rng);
+        init_chain(&[8, 6, 6, 3], &x, 42, 0.3, 1)
+    }
+
+    #[test]
+    fn chain_shapes_and_roles() {
+        let layers = chain();
+        assert_eq!(layers.len(), 3);
+        assert_eq!(layers[0].w.shape(), (6, 8));
+        assert_eq!(layers[1].w.shape(), (6, 6));
+        assert_eq!(layers[2].w.shape(), (3, 6));
+        assert_eq!(layers[0].role, LayerRole::Hidden);
+        assert_eq!(layers[2].role, LayerRole::Last);
+        assert!(layers[0].q.is_some() && layers[2].q.is_none());
+    }
+
+    #[test]
+    fn initialization_is_feasible() {
+        let layers = chain();
+        for l in 0..layers.len() - 1 {
+            // p_{l+1} == q_l == relu(z_l)
+            let q = layers[l].q.as_ref().unwrap();
+            assert_eq!(q.data, layers[l + 1].p.data);
+            assert_eq!(q.data, layers[l].z.relu().data);
+            assert!(layers[l].u.as_ref().unwrap().data.iter().all(|&v| v == 0.0));
+        }
+        // z = W p + b exactly at init
+        for l in &layers {
+            let m = crate::tensor::ops::linear(&l.w, &l.p, &l.b, 1);
+            assert!(l.z.max_abs_diff(&m) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn step_sizes_upper_bound_lipschitz() {
+        let mut layers = chain();
+        refresh_step_sizes(&mut layers, 0.5, 1.0, 0);
+        for l in &layers {
+            assert!(l.tau > 1.0); // >= rho
+            assert!(l.theta > 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2 layers")]
+    fn rejects_single_layer() {
+        let x = Mat::zeros(4, 5);
+        init_chain(&[4, 2], &x, 0, 0.1, 1);
+    }
+
+    #[test]
+    fn params_extraction_preserves_order() {
+        let layers = chain();
+        let (ws, bs) = params_of(&layers);
+        assert_eq!(ws.len(), 3);
+        assert_eq!(ws[1].data, layers[1].w.data);
+        assert_eq!(bs[2].rows, 3);
+    }
+}

@@ -1,0 +1,352 @@
+//! The pdADMM-G subproblem solvers (paper Appendix A/B), native edition.
+//!
+//! Each function matches the corresponding L2 jax op in
+//! `python/compile/model.py` elementwise (integration tests assert < 1e-4
+//! divergence against the compiled HLO artifacts). `threads` controls the
+//! matmul parallelism — layer workers pass 1.
+
+use crate::tensor::matrix::Mat;
+use crate::tensor::ops;
+
+/// m_l = W_l p_l + b_l.
+pub fn linear(w: &Mat, p: &Mat, b: &Mat, threads: usize) -> Mat {
+    ops::linear(w, p, b, threads)
+}
+
+/// r_l = z_l - W_l p_l - b_l.
+pub fn residual(w: &Mat, p: &Mat, b: &Mat, z: &Mat, threads: usize) -> Mat {
+    ops::residual(w, p, b, z, threads)
+}
+
+/// Appendix A.1: one quadratic-surrogate step on phi(p_l):
+/// grad = -nu W^T r + u_{l-1} + rho (p - q_{l-1});  p <- p - grad/tau.
+pub fn p_update(
+    p: &Mat,
+    w: &Mat,
+    b: &Mat,
+    z: &Mat,
+    q_prev: &Mat,
+    u_prev: &Mat,
+    tau: f32,
+    nu: f32,
+    rho: f32,
+    threads: usize,
+) -> Mat {
+    let r = residual(w, p, b, z, threads);
+    let wtr = ops::matmul_tn(w, &r, threads); // (n_in, V)
+    let inv_tau = 1.0 / tau;
+    let mut out = Mat::zeros(p.rows, p.cols);
+    for i in 0..p.len() {
+        let grad = -nu * wtr.data[i] + u_prev.data[i] + rho * (p.data[i] - q_prev.data[i]);
+        out.data[i] = p.data[i] - grad * inv_tau;
+    }
+    out
+}
+
+/// Nearest element of the uniform grid {qmin + i*qstep : 0 <= i < qlevels}.
+pub fn quantize(x: &Mat, qmin: f32, qstep: f32, qlevels: f32) -> Mat {
+    x.map(|v| {
+        let idx = ((v - qmin) / qstep).round().clamp(0.0, qlevels - 1.0);
+        qmin + idx * qstep
+    })
+}
+
+/// Appendix B (Eq. 10): the pdADMM-G-Q p-subproblem — gradient step then
+/// projection onto Delta.
+#[allow(clippy::too_many_arguments)]
+pub fn p_update_quant(
+    p: &Mat,
+    w: &Mat,
+    b: &Mat,
+    z: &Mat,
+    q_prev: &Mat,
+    u_prev: &Mat,
+    tau: f32,
+    nu: f32,
+    rho: f32,
+    qmin: f32,
+    qstep: f32,
+    qlevels: f32,
+    threads: usize,
+) -> Mat {
+    let raw = p_update(p, w, b, z, q_prev, u_prev, tau, nu, rho, threads);
+    quantize(&raw, qmin, qstep, qlevels)
+}
+
+/// Appendix A.2: W <- W + (nu/theta) r p^T.
+pub fn w_update(p: &Mat, w: &Mat, b: &Mat, z: &Mat, theta: f32, nu: f32, threads: usize) -> Mat {
+    let r = residual(w, p, b, z, threads);
+    let rpt = ops::matmul_nt(&r, p, threads); // (n_out, n_in)
+    let s = nu / theta;
+    let mut out = w.clone();
+    out.axpy(s, &rpt);
+    out
+}
+
+/// Closed-form b minimizer: row-mean of z - W p (DESIGN.md §3 deviation).
+pub fn b_update(w: &Mat, p: &Mat, z: &Mat, threads: usize) -> Mat {
+    let m = ops::matmul(w, p, threads);
+    z.sub(&m).mean_cols()
+}
+
+/// Appendix A.4 (Eq. 6), ReLU closed form with elementwise candidate pick.
+pub fn z_update_hidden(m: &Mat, z_old: &Mat, q: &Mat) -> Mat {
+    assert_eq!(m.shape(), z_old.shape());
+    assert_eq!(m.shape(), q.shape());
+    let mut out = Mat::zeros(m.rows, m.cols);
+    for i in 0..m.len() {
+        let (mv, zv, qv) = (m.data[i], z_old.data[i], q.data[i]);
+        let zm = ((mv + zv) / 2.0).min(0.0);
+        let zp = ((mv + qv + zv) / 3.0).max(0.0);
+        let obj = |zc: f32| -> f32 {
+            let relu = zc.max(0.0);
+            (zc - mv) * (zc - mv) + (qv - relu) * (qv - relu) + (zc - zv) * (zc - zv)
+        };
+        out.data[i] = if obj(zm) <= obj(zp) { zm } else { zp };
+    }
+    out
+}
+
+/// Appendix A.4 (Eq. 7): prox of the masked softmax-CE risk, solved by
+/// `steps` gradient iterations from z_old (matches the unrolled jax loop).
+pub fn z_update_last(
+    m: &Mat,
+    z_old: &Mat,
+    y: &Mat,
+    maskn: &Mat,
+    nu: f32,
+    lr: f32,
+    steps: usize,
+) -> Mat {
+    let mut z = z_old.clone();
+    for _ in 0..steps {
+        let sm = z.softmax_cols();
+        for j in 0..z.cols {
+            let mk = maskn.data[j];
+            for i in 0..z.rows {
+                let idx = i * z.cols + j;
+                let grad = (sm.data[idx] - y.data[idx]) * mk + nu * (z.data[idx] - m.data[idx]);
+                z.data[idx] -= lr * grad;
+            }
+        }
+    }
+    z
+}
+
+/// Appendix A.5: q <- (rho p_{l+1} + u + nu relu(z)) / (rho + nu).
+pub fn q_update(p_next: &Mat, u: &Mat, z: &Mat, nu: f32, rho: f32) -> Mat {
+    let inv = 1.0 / (rho + nu);
+    let mut out = Mat::zeros(u.rows, u.cols);
+    for i in 0..u.len() {
+        out.data[i] = (rho * p_next.data[i] + u.data[i] + nu * z.data[i].max(0.0)) * inv;
+    }
+    out
+}
+
+/// Appendix A.6: u <- u + rho (p_{l+1} - q).
+pub fn u_update(u: &Mat, p_next: &Mat, q: &Mat, rho: f32) -> Mat {
+    let mut out = Mat::zeros(u.rows, u.cols);
+    for i in 0..u.len() {
+        out.data[i] = u.data[i] + rho * (p_next.data[i] - q.data[i]);
+    }
+    out
+}
+
+/// R(z_L; y): masked mean cross-entropy (matches L2 `risk_value`).
+pub fn risk_value(z: &Mat, y: &Mat, maskn: &Mat) -> f64 {
+    let sm = z.softmax_cols();
+    let mut total = 0.0f64;
+    for j in 0..z.cols {
+        let mk = maskn.data[j] as f64;
+        if mk == 0.0 {
+            continue;
+        }
+        let mut ce = 0.0f64;
+        for i in 0..z.rows {
+            let yv = y.at(i, j) as f64;
+            if yv > 0.0 {
+                ce -= yv * (sm.at(i, j).max(1e-12) as f64).ln();
+            }
+        }
+        total += ce * mk;
+    }
+    total
+}
+
+/// Prox step size for z_L: 1 / (nu + Lip(grad R)) with Lip <= 1/(2 n_train)
+/// per masked column (softmax-CE Hessian norm <= 1/2).
+pub fn zlast_lr(nu: f32, n_train: usize) -> f32 {
+    1.0 / (nu + 0.5 / n_train.max(1) as f32)
+}
+
+/// GA-MLP forward: relu(W p + b) through hidden layers, logits at the last.
+pub fn forward(ws: &[Mat], bs: &[Mat], x: &Mat, threads: usize) -> Mat {
+    assert_eq!(ws.len(), bs.len());
+    let mut p = x.clone();
+    for (l, (w, b)) in ws.iter().zip(bs).enumerate() {
+        let m = linear(w, p_ref(&p, l), b, threads);
+        p = if l + 1 < ws.len() { m.relu() } else { m };
+    }
+    p
+}
+
+#[inline]
+fn p_ref<'a>(p: &'a Mat, _l: usize) -> &'a Mat {
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg32;
+
+    fn setup(n_in: usize, n_out: usize, v: usize, seed: u64) -> (Mat, Mat, Mat, Mat, Mat, Mat) {
+        let mut rng = Pcg32::seeded(seed);
+        (
+            Mat::randn(n_in, v, 1.0, &mut rng),  // p
+            Mat::randn(n_out, n_in, 1.0, &mut rng), // w
+            Mat::randn(n_out, 1, 1.0, &mut rng), // b
+            Mat::randn(n_out, v, 1.0, &mut rng), // z
+            Mat::randn(n_in, v, 1.0, &mut rng),  // q_prev
+            Mat::randn(n_in, v, 1.0, &mut rng),  // u_prev
+        )
+    }
+
+    #[test]
+    fn p_update_reduces_phi_for_large_tau() {
+        let (p, w, b, z, qp, up) = setup(6, 5, 12, 1);
+        let (nu, rho) = (0.1f32, 1.0f32);
+        let phi = |pp: &Mat| -> f64 {
+            let r = residual(&w, pp, &b, &z, 1);
+            let gap = pp.sub(&qp);
+            (nu as f64 / 2.0) * r.frob_sq()
+                + up.zip(&gap, |a, b| a * b).sum()
+                + (rho as f64 / 2.0) * gap.frob_sq()
+        };
+        let mut rng = Pcg32::seeded(2);
+        let tau = nu * w.spectral_norm_est(30, &mut rng).powi(2) + rho + 0.5;
+        let p1 = p_update(&p, &w, &b, &z, &qp, &up, tau, nu, rho, 1);
+        assert!(phi(&p1) < phi(&p), "phi {} -> {}", phi(&p), phi(&p1));
+    }
+
+    #[test]
+    fn w_update_reduces_phi() {
+        let (p, w, b, z, _, _) = setup(6, 5, 12, 3);
+        let nu = 0.1f32;
+        let phi = |ww: &Mat| -> f64 { residual(ww, &p, &b, &z, 1).frob_sq() };
+        let mut rng = Pcg32::seeded(4);
+        let theta = nu * p.spectral_norm_est(30, &mut rng).powi(2) + 0.5;
+        let w1 = w_update(&p, &w, &b, &z, theta, nu, 1);
+        assert!(phi(&w1) < phi(&w));
+    }
+
+    #[test]
+    fn b_update_is_stationary_point() {
+        let (p, w, _, z, _, _) = setup(4, 3, 20, 5);
+        let b = b_update(&w, &p, &z, 1);
+        // residual rows must have zero mean at the minimizer
+        let r = residual(&w, &p, &b, &z, 1);
+        for i in 0..r.rows {
+            let mean: f32 = r.row(i).iter().sum::<f32>() / r.cols as f32;
+            assert!(mean.abs() < 1e-5, "row {i} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn z_hidden_is_no_worse_than_both_candidates() {
+        let mut rng = Pcg32::seeded(6);
+        let m = Mat::randn(7, 9, 1.0, &mut rng);
+        let z_old = Mat::randn(7, 9, 1.0, &mut rng);
+        let q = Mat::randn(7, 9, 1.0, &mut rng);
+        let z = z_update_hidden(&m, &z_old, &q);
+        for i in 0..m.len() {
+            let obj = |zc: f32| {
+                let relu = zc.max(0.0);
+                (zc - m.data[i]).powi(2)
+                    + (q.data[i] - relu).powi(2)
+                    + (zc - z_old.data[i]).powi(2)
+            };
+            let zm = ((m.data[i] + z_old.data[i]) / 2.0).min(0.0);
+            let zp = ((m.data[i] + q.data[i] + z_old.data[i]) / 3.0).max(0.0);
+            assert!(obj(z.data[i]) <= obj(zm) + 1e-6);
+            assert!(obj(z.data[i]) <= obj(zp) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn z_last_decreases_prox_objective() {
+        let mut rng = Pcg32::seeded(7);
+        let (c, v) = (4, 15);
+        let m = Mat::randn(c, v, 1.0, &mut rng);
+        let z_old = Mat::randn(c, v, 1.0, &mut rng);
+        let mut y = Mat::zeros(c, v);
+        for j in 0..v {
+            *y.at_mut((j * 7) % c, j) = 1.0;
+        }
+        let maskn = Mat::filled(1, v, 1.0 / v as f32);
+        let nu = 0.01f32;
+        let lr = zlast_lr(nu, v);
+        let obj = |z: &Mat| -> f64 {
+            risk_value(z, &y, &maskn) + (nu as f64 / 2.0) * z.sub(&m).frob_sq()
+        };
+        let z1 = z_update_last(&m, &z_old, &y, &maskn, nu, lr, 24);
+        assert!(obj(&z1) < obj(&z_old));
+    }
+
+    #[test]
+    fn q_update_zeroes_subproblem_gradient_and_lemma4() {
+        let mut rng = Pcg32::seeded(8);
+        let (n, v) = (5, 9);
+        let p_next = Mat::randn(n, v, 1.0, &mut rng);
+        let u = Mat::randn(n, v, 1.0, &mut rng);
+        let z = Mat::randn(n, v, 1.0, &mut rng);
+        let (nu, rho) = (0.3f32, 1.7f32);
+        let q = q_update(&p_next, &u, &z, nu, rho);
+        for i in 0..q.len() {
+            let fz = z.data[i].max(0.0);
+            let grad = nu * (q.data[i] - fz) - u.data[i] - rho * (p_next.data[i] - q.data[i]);
+            assert!(grad.abs() < 1e-4, "grad {grad}");
+        }
+        // Lemma 4 identity after the dual ascent
+        let u1 = u_update(&u, &p_next, &q, rho);
+        for i in 0..q.len() {
+            let want = nu * (q.data[i] - z.data[i].max(0.0));
+            assert!((u1.data[i] - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn quantize_projects_onto_paper_delta() {
+        let x = Mat::from_vec(1, 4, vec![-5.0, 25.0, 0.4, 19.6]);
+        let q = quantize(&x, -1.0, 1.0, 22.0);
+        assert_eq!(q.data, vec![-1.0, 20.0, 0.0, 20.0]);
+    }
+
+    #[test]
+    fn risk_value_of_perfect_prediction_is_small() {
+        let mut y = Mat::zeros(3, 6);
+        for j in 0..6 {
+            *y.at_mut(j % 3, j) = 1.0;
+        }
+        let maskn = Mat::filled(1, 6, 1.0 / 6.0);
+        let logits = y.scale(20.0);
+        assert!(risk_value(&logits, &y, &maskn) < 1e-6);
+        let bad = y.scale(-20.0);
+        assert!(risk_value(&bad, &y, &maskn) > 5.0);
+    }
+
+    #[test]
+    fn forward_shapes_and_relu_behaviour() {
+        let mut rng = Pcg32::seeded(9);
+        let ws = vec![
+            Mat::randn(5, 8, 0.5, &mut rng),
+            Mat::randn(3, 5, 0.5, &mut rng),
+        ];
+        let bs = vec![Mat::zeros(5, 1), Mat::zeros(3, 1)];
+        let x = Mat::randn(8, 13, 1.0, &mut rng);
+        let out = forward(&ws, &bs, &x, 1);
+        assert_eq!(out.shape(), (3, 13));
+        // logits may be negative (no relu on the last layer)
+        assert!(out.data.iter().any(|&v| v < 0.0));
+    }
+}

@@ -1,0 +1,96 @@
+//! Compute backends (substrate S10): the single trait the coordinator
+//! programs against, with two implementations —
+//!
+//! * [`NativeBackend`] — pure-rust math on the tensor substrate; exact
+//!   thread control (the speedup experiments' engine) and the parity
+//!   oracle for the AOT artifacts.
+//! * [`XlaBackend`] — executes the HLO artifacts produced by
+//!   `python/compile/aot.py` through PJRT; the three-layer architecture's
+//!   default path. Falls back to native for shapes missing from the
+//!   manifest (strict mode disables the fallback for parity tests).
+
+mod native;
+mod xla_backend;
+
+pub use native::NativeBackend;
+pub use xla_backend::XlaBackend;
+
+use crate::tensor::matrix::Mat;
+
+/// Everything the ADMM coordinator and baseline optimizers need per step.
+///
+/// Scalar hyperparameters are plain `f32`s; shapes are implied by the
+/// matrices (the XLA implementation derives artifact keys from them).
+#[allow(clippy::too_many_arguments)]
+pub trait ComputeBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// m = W p + b.
+    fn linear(&self, w: &Mat, p: &Mat, b: &Mat) -> Mat;
+
+    /// ||z - W p - b||_F^2 — the reconstruction part of phi, used by the
+    /// backtracking line search on tau/theta (Appendix A's conditions
+    /// "tau must satisfy phi(p^{k+1}) <= U(p^{k+1}; tau)").
+    fn recon_sq(&self, w: &Mat, p: &Mat, b: &Mat, z: &Mat) -> f64 {
+        let m = self.linear(w, p, b);
+        z.sub(&m).frob_sq()
+    }
+
+    /// Appendix A.1 p-subproblem step.
+    fn p_update(
+        &self,
+        p: &Mat,
+        w: &Mat,
+        b: &Mat,
+        z: &Mat,
+        q_prev: &Mat,
+        u_prev: &Mat,
+        tau: f32,
+        nu: f32,
+        rho: f32,
+    ) -> Mat;
+
+    /// Appendix B quantized p-subproblem (projection onto Delta).
+    fn p_update_quant(
+        &self,
+        p: &Mat,
+        w: &Mat,
+        b: &Mat,
+        z: &Mat,
+        q_prev: &Mat,
+        u_prev: &Mat,
+        tau: f32,
+        nu: f32,
+        rho: f32,
+        qmin: f32,
+        qstep: f32,
+        qlevels: f32,
+    ) -> Mat;
+
+    fn w_update(&self, p: &Mat, w: &Mat, b: &Mat, z: &Mat, theta: f32, nu: f32) -> Mat;
+
+    fn b_update(&self, w: &Mat, p: &Mat, z: &Mat) -> Mat;
+
+    fn z_update_hidden(&self, m: &Mat, z_old: &Mat, q: &Mat) -> Mat;
+
+    fn z_update_last(&self, m: &Mat, z_old: &Mat, y: &Mat, maskn: &Mat, nu: f32, lr: f32) -> Mat;
+
+    fn q_update(&self, p_next: &Mat, u: &Mat, z: &Mat, nu: f32, rho: f32) -> Mat;
+
+    fn u_update(&self, u: &Mat, p_next: &Mat, q: &Mat, rho: f32) -> Mat;
+
+    fn risk_value(&self, z: &Mat, y: &Mat, maskn: &Mat) -> f64;
+
+    /// GA-MLP forward to logits (evaluation path).
+    fn forward(&self, ws: &[Mat], bs: &[Mat], x: &Mat) -> Mat;
+
+    /// Full-batch masked-CE loss and parameter gradients (baseline path).
+    fn loss_and_grad(
+        &self,
+        ws: &[Mat],
+        bs: &[Mat],
+        x: &Mat,
+        y: &Mat,
+        maskn: &Mat,
+    ) -> (f64, Vec<Mat>, Vec<Mat>);
+}

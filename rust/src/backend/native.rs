@@ -1,0 +1,269 @@
+//! Pure-rust backend: delegates to `admm::updates` and implements the
+//! GA-MLP forward/backward natively. `threads` is explicit so layer workers
+//! can pin themselves to one core (speedup experiments measure model
+//! parallelism, not nested intra-op parallelism).
+
+use super::ComputeBackend;
+use crate::admm::updates as u;
+use crate::tensor::matrix::Mat;
+use crate::tensor::ops;
+
+#[derive(Clone, Debug)]
+pub struct NativeBackend {
+    pub threads: usize,
+    /// Unrolled gradient steps for the z_L prox (must match the constant
+    /// baked into the HLO artifacts: aot lowers with 24).
+    pub zlast_steps: usize,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend { threads: ops::default_threads(), zlast_steps: 24 }
+    }
+}
+
+impl NativeBackend {
+    pub fn single_thread() -> Self {
+        NativeBackend { threads: 1, zlast_steps: 24 }
+    }
+
+    pub fn with_threads(threads: usize) -> Self {
+        NativeBackend { threads, zlast_steps: 24 }
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn linear(&self, w: &Mat, p: &Mat, b: &Mat) -> Mat {
+        u::linear(w, p, b, self.threads)
+    }
+
+    fn p_update(
+        &self,
+        p: &Mat,
+        w: &Mat,
+        b: &Mat,
+        z: &Mat,
+        q_prev: &Mat,
+        u_prev: &Mat,
+        tau: f32,
+        nu: f32,
+        rho: f32,
+    ) -> Mat {
+        u::p_update(p, w, b, z, q_prev, u_prev, tau, nu, rho, self.threads)
+    }
+
+    fn p_update_quant(
+        &self,
+        p: &Mat,
+        w: &Mat,
+        b: &Mat,
+        z: &Mat,
+        q_prev: &Mat,
+        u_prev: &Mat,
+        tau: f32,
+        nu: f32,
+        rho: f32,
+        qmin: f32,
+        qstep: f32,
+        qlevels: f32,
+    ) -> Mat {
+        u::p_update_quant(
+            p, w, b, z, q_prev, u_prev, tau, nu, rho, qmin, qstep, qlevels, self.threads,
+        )
+    }
+
+    fn w_update(&self, p: &Mat, w: &Mat, b: &Mat, z: &Mat, theta: f32, nu: f32) -> Mat {
+        u::w_update(p, w, b, z, theta, nu, self.threads)
+    }
+
+    fn b_update(&self, w: &Mat, p: &Mat, z: &Mat) -> Mat {
+        u::b_update(w, p, z, self.threads)
+    }
+
+    fn z_update_hidden(&self, m: &Mat, z_old: &Mat, q: &Mat) -> Mat {
+        u::z_update_hidden(m, z_old, q)
+    }
+
+    fn z_update_last(&self, m: &Mat, z_old: &Mat, y: &Mat, maskn: &Mat, nu: f32, lr: f32) -> Mat {
+        u::z_update_last(m, z_old, y, maskn, nu, lr, self.zlast_steps)
+    }
+
+    fn q_update(&self, p_next: &Mat, u_: &Mat, z: &Mat, nu: f32, rho: f32) -> Mat {
+        u::q_update(p_next, u_, z, nu, rho)
+    }
+
+    fn u_update(&self, u_: &Mat, p_next: &Mat, q: &Mat, rho: f32) -> Mat {
+        u::u_update(u_, p_next, q, rho)
+    }
+
+    fn risk_value(&self, z: &Mat, y: &Mat, maskn: &Mat) -> f64 {
+        u::risk_value(z, y, maskn)
+    }
+
+    fn forward(&self, ws: &[Mat], bs: &[Mat], x: &Mat) -> Mat {
+        u::forward(ws, bs, x, self.threads)
+    }
+
+    /// Manual backprop of the masked softmax-CE through the ReLU MLP —
+    /// exactly the gradient jax computes in `make_loss_and_grad` (parity is
+    /// asserted in the integration tests).
+    fn loss_and_grad(
+        &self,
+        ws: &[Mat],
+        bs: &[Mat],
+        x: &Mat,
+        y: &Mat,
+        maskn: &Mat,
+    ) -> (f64, Vec<Mat>, Vec<Mat>) {
+        let n_layers = ws.len();
+        assert_eq!(bs.len(), n_layers);
+        // forward, caching pre-activations m_l and activations a_l
+        let mut acts: Vec<Mat> = Vec::with_capacity(n_layers + 1); // a_0..a_{L-1}
+        let mut pre: Vec<Mat> = Vec::with_capacity(n_layers); // m_1..m_L
+        acts.push(x.clone());
+        for l in 0..n_layers {
+            let m = u::linear(&ws[l], &acts[l], &bs[l], self.threads);
+            if l + 1 < n_layers {
+                acts.push(m.relu());
+            }
+            pre.push(m);
+        }
+        let logits = &pre[n_layers - 1];
+        let loss = u::risk_value(logits, y, maskn);
+
+        // dL/dlogits = (softmax - y) * maskn (column-broadcast)
+        let sm = logits.softmax_cols();
+        let mut g = Mat::zeros(logits.rows, logits.cols);
+        for j in 0..logits.cols {
+            let mk = maskn.data[j];
+            for i in 0..logits.rows {
+                let idx = i * logits.cols + j;
+                g.data[idx] = (sm.data[idx] - y.data[idx]) * mk;
+            }
+        }
+
+        let mut dws: Vec<Mat> = (0..n_layers).map(|_| Mat::zeros(0, 0)).collect();
+        let mut dbs: Vec<Mat> = (0..n_layers).map(|_| Mat::zeros(0, 0)).collect();
+        for l in (0..n_layers).rev() {
+            // dW_l = g a_{l-1}^T ; db_l = row-sum(g)
+            dws[l] = ops::matmul_nt(&g, &acts[l], self.threads);
+            let mut db = Mat::zeros(g.rows, 1);
+            for i in 0..g.rows {
+                db.data[i] = g.row(i).iter().sum();
+            }
+            dbs[l] = db;
+            if l > 0 {
+                // g_prev = (W_l^T g) ⊙ relu'(m_{l-1})
+                let mut gp = ops::matmul_tn(&ws[l], &g, self.threads);
+                let m_prev = &pre[l - 1];
+                for i in 0..gp.len() {
+                    if m_prev.data[i] <= 0.0 {
+                        gp.data[i] = 0.0;
+                    }
+                }
+                g = gp;
+            }
+        }
+        (loss, dws, dbs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg32;
+
+    fn fixture() -> (Vec<Mat>, Vec<Mat>, Mat, Mat, Mat) {
+        let mut rng = Pcg32::seeded(17);
+        let (n0, h, c, v) = (6, 5, 3, 12);
+        let ws = vec![
+            Mat::randn(h, n0, 0.6, &mut rng),
+            Mat::randn(h, h, 0.6, &mut rng),
+            Mat::randn(c, h, 0.6, &mut rng),
+        ];
+        let bs = vec![
+            Mat::randn(h, 1, 0.1, &mut rng),
+            Mat::randn(h, 1, 0.1, &mut rng),
+            Mat::randn(c, 1, 0.1, &mut rng),
+        ];
+        let x = Mat::randn(n0, v, 1.0, &mut rng);
+        let mut y = Mat::zeros(c, v);
+        for j in 0..v {
+            *y.at_mut(j % c, j) = 1.0;
+        }
+        let maskn = Mat::filled(1, v, 1.0 / v as f32);
+        (ws, bs, x, y, maskn)
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let (mut ws, bs, x, y, maskn) = fixture();
+        let be = NativeBackend::single_thread();
+        let (loss, dws, dbs) = be.loss_and_grad(&ws, &bs, &x, &y, &maskn);
+        assert!(loss > 0.0);
+        let eps = 1e-3f32;
+        // check a handful of W entries across layers, plus a b entry
+        for (l, i, j) in [(0usize, 1usize, 2usize), (1, 3, 0), (2, 0, 4)] {
+            let orig = ws[l].at(i, j);
+            *ws[l].at_mut(i, j) = orig + eps;
+            let (lp, _, _) = be.loss_and_grad(&ws, &bs, &x, &y, &maskn);
+            *ws[l].at_mut(i, j) = orig - eps;
+            let (lm, _, _) = be.loss_and_grad(&ws, &bs, &x, &y, &maskn);
+            *ws[l].at_mut(i, j) = orig;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let an = dws[l].at(i, j) as f64;
+            assert!(
+                (fd - an).abs() < 5e-3 * (1.0 + fd.abs()),
+                "layer {l} ({i},{j}): fd {fd} vs {an}"
+            );
+        }
+        let _ = dbs;
+    }
+
+    #[test]
+    fn db_matches_finite_differences() {
+        let (ws, mut bs, x, y, maskn) = fixture();
+        let be = NativeBackend::single_thread();
+        let (_, _, dbs) = be.loss_and_grad(&ws, &bs, &x, &y, &maskn);
+        let eps = 1e-3f32;
+        let orig = bs[1].data[2];
+        bs[1].data[2] = orig + eps;
+        let (lp, _, _) = be.loss_and_grad(&ws, &bs, &x, &y, &maskn);
+        bs[1].data[2] = orig - eps;
+        let (lm, _, _) = be.loss_and_grad(&ws, &bs, &x, &y, &maskn);
+        bs[1].data[2] = orig;
+        let fd = (lp - lm) / (2.0 * eps as f64);
+        assert!((fd - dbs[1].data[2] as f64).abs() < 5e-3);
+    }
+
+    #[test]
+    fn gradient_descent_on_native_grads_reduces_loss() {
+        let (mut ws, mut bs, x, y, maskn) = fixture();
+        let be = NativeBackend::single_thread();
+        let (l0, _, _) = be.loss_and_grad(&ws, &bs, &x, &y, &maskn);
+        for _ in 0..40 {
+            let (_, dws, dbs) = be.loss_and_grad(&ws, &bs, &x, &y, &maskn);
+            for l in 0..ws.len() {
+                ws[l].axpy(-0.5, &dws[l]);
+                bs[l].axpy(-0.5, &dbs[l]);
+            }
+        }
+        let (l1, _, _) = be.loss_and_grad(&ws, &bs, &x, &y, &maskn);
+        assert!(l1 < l0 * 0.8, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn threads_do_not_change_grads() {
+        let (ws, bs, x, y, maskn) = fixture();
+        let a = NativeBackend::single_thread().loss_and_grad(&ws, &bs, &x, &y, &maskn);
+        let b = NativeBackend::with_threads(4).loss_and_grad(&ws, &bs, &x, &y, &maskn);
+        assert!((a.0 - b.0).abs() < 1e-9);
+        for l in 0..ws.len() {
+            assert_eq!(a.1[l].data, b.1[l].data);
+        }
+    }
+}

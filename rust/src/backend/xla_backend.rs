@@ -1,0 +1,292 @@
+//! XLA backend: routes every op through the AOT HLO artifacts (L2/L1 lowered
+//! jax+pallas) via the PJRT runtime. This is the three-layer architecture's
+//! default compute path.
+//!
+//! Shapes not present in the manifest fall back to the native backend
+//! (logged once per key) unless `strict` is set — the backend-parity
+//! integration tests run strict to guarantee the artifacts themselves are
+//! what is being measured.
+
+use super::{ComputeBackend, NativeBackend};
+use crate::runtime::{self, Arg, XlaRuntime};
+use crate::tensor::matrix::Mat;
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+
+pub struct XlaBackend {
+    pub rt: Arc<XlaRuntime>,
+    pub fallback: NativeBackend,
+    pub strict: bool,
+    warned: Mutex<HashSet<String>>,
+}
+
+impl XlaBackend {
+    pub fn new(rt: Arc<XlaRuntime>) -> Self {
+        XlaBackend {
+            rt,
+            fallback: NativeBackend::default(),
+            strict: false,
+            warned: Mutex::new(HashSet::new()),
+        }
+    }
+
+    pub fn strict(rt: Arc<XlaRuntime>) -> Self {
+        XlaBackend { strict: true, ..Self::new(rt) }
+    }
+
+    /// Run `key` if present; otherwise fall back to `native()` (or panic in
+    /// strict mode). Artifact executions that *fail* always panic — a broken
+    /// artifact must never silently degrade to native.
+    fn run_or(&self, key: &str, args: &[Arg<'_>], native: impl FnOnce() -> Mat) -> Mat {
+        if self.rt.has(key) {
+            let mut out = self
+                .rt
+                .exec(key, args)
+                .unwrap_or_else(|e| panic!("artifact {key} failed: {e:#}"));
+            return out.remove(0);
+        }
+        if self.strict {
+            panic!("strict xla backend: missing artifact {key}");
+        }
+        let mut warned = self.warned.lock().unwrap();
+        if warned.insert(key.to_string()) {
+            eprintln!("[xla-backend] falling back to native for missing artifact {key}");
+        }
+        native()
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    /// Step-size line-search probes don't need to round-trip through PJRT
+    /// literals (2 artifact executions per layer-phase otherwise — §Perf
+    /// iteration 1); the *updates* themselves still run in the artifacts.
+    fn recon_sq(&self, w: &Mat, p: &Mat, b: &Mat, z: &Mat) -> f64 {
+        let m = self.fallback.linear(w, p, b);
+        z.sub(&m).frob_sq()
+    }
+
+    fn linear(&self, w: &Mat, p: &Mat, b: &Mat) -> Mat {
+        let key = runtime::layer_op_key("linear", w.cols, w.rows, p.cols);
+        self.run_or(&key, &[Arg::M(w), Arg::M(p), Arg::M(b)], || {
+            self.fallback.linear(w, p, b)
+        })
+    }
+
+    fn p_update(
+        &self,
+        p: &Mat,
+        w: &Mat,
+        b: &Mat,
+        z: &Mat,
+        q_prev: &Mat,
+        u_prev: &Mat,
+        tau: f32,
+        nu: f32,
+        rho: f32,
+    ) -> Mat {
+        let key = runtime::layer_op_key("p_update", w.cols, w.rows, p.cols);
+        self.run_or(
+            &key,
+            &[
+                Arg::M(p),
+                Arg::M(w),
+                Arg::M(b),
+                Arg::M(z),
+                Arg::M(q_prev),
+                Arg::M(u_prev),
+                Arg::S(tau),
+                Arg::S(nu),
+                Arg::S(rho),
+            ],
+            || self.fallback.p_update(p, w, b, z, q_prev, u_prev, tau, nu, rho),
+        )
+    }
+
+    fn p_update_quant(
+        &self,
+        p: &Mat,
+        w: &Mat,
+        b: &Mat,
+        z: &Mat,
+        q_prev: &Mat,
+        u_prev: &Mat,
+        tau: f32,
+        nu: f32,
+        rho: f32,
+        qmin: f32,
+        qstep: f32,
+        qlevels: f32,
+    ) -> Mat {
+        let key = runtime::layer_op_key("p_update_quant", w.cols, w.rows, p.cols);
+        self.run_or(
+            &key,
+            &[
+                Arg::M(p),
+                Arg::M(w),
+                Arg::M(b),
+                Arg::M(z),
+                Arg::M(q_prev),
+                Arg::M(u_prev),
+                Arg::S(tau),
+                Arg::S(nu),
+                Arg::S(rho),
+                Arg::S(qmin),
+                Arg::S(qstep),
+                Arg::S(qlevels),
+            ],
+            || {
+                self.fallback
+                    .p_update_quant(p, w, b, z, q_prev, u_prev, tau, nu, rho, qmin, qstep, qlevels)
+            },
+        )
+    }
+
+    fn w_update(&self, p: &Mat, w: &Mat, b: &Mat, z: &Mat, theta: f32, nu: f32) -> Mat {
+        let key = runtime::layer_op_key("w_update", w.cols, w.rows, p.cols);
+        self.run_or(
+            &key,
+            &[Arg::M(p), Arg::M(w), Arg::M(b), Arg::M(z), Arg::S(theta), Arg::S(nu)],
+            || self.fallback.w_update(p, w, b, z, theta, nu),
+        )
+    }
+
+    fn b_update(&self, w: &Mat, p: &Mat, z: &Mat) -> Mat {
+        let key = runtime::layer_op_key("b_update", w.cols, w.rows, p.cols);
+        self.run_or(&key, &[Arg::M(w), Arg::M(p), Arg::M(z)], || {
+            self.fallback.b_update(w, p, z)
+        })
+    }
+
+    fn z_update_hidden(&self, m: &Mat, z_old: &Mat, q: &Mat) -> Mat {
+        let key = runtime::elementwise_op_key("z_update_hidden", m.rows, m.cols);
+        self.run_or(&key, &[Arg::M(m), Arg::M(z_old), Arg::M(q)], || {
+            self.fallback.z_update_hidden(m, z_old, q)
+        })
+    }
+
+    fn z_update_last(&self, m: &Mat, z_old: &Mat, y: &Mat, maskn: &Mat, nu: f32, lr: f32) -> Mat {
+        let key = runtime::risk_op_key("z_update_last", m.rows, m.cols);
+        self.run_or(
+            &key,
+            &[Arg::M(m), Arg::M(z_old), Arg::M(y), Arg::M(maskn), Arg::S(nu), Arg::S(lr)],
+            || self.fallback.z_update_last(m, z_old, y, maskn, nu, lr),
+        )
+    }
+
+    fn q_update(&self, p_next: &Mat, u: &Mat, z: &Mat, nu: f32, rho: f32) -> Mat {
+        let key = runtime::elementwise_op_key("q_update", u.rows, u.cols);
+        self.run_or(
+            &key,
+            &[Arg::M(p_next), Arg::M(u), Arg::M(z), Arg::S(nu), Arg::S(rho)],
+            || self.fallback.q_update(p_next, u, z, nu, rho),
+        )
+    }
+
+    fn u_update(&self, u: &Mat, p_next: &Mat, q: &Mat, rho: f32) -> Mat {
+        let key = runtime::elementwise_op_key("u_update", u.rows, u.cols);
+        self.run_or(&key, &[Arg::M(u), Arg::M(p_next), Arg::M(q), Arg::S(rho)], || {
+            self.fallback.u_update(u, p_next, q, rho)
+        })
+    }
+
+    fn risk_value(&self, z: &Mat, y: &Mat, maskn: &Mat) -> f64 {
+        let key = runtime::risk_op_key("risk_value", z.rows, z.cols);
+        if self.rt.has(&key) {
+            let out = self
+                .rt
+                .exec(&key, &[Arg::M(z), Arg::M(y), Arg::M(maskn)])
+                .unwrap_or_else(|e| panic!("artifact {key} failed: {e:#}"));
+            return out[0].data[0] as f64;
+        }
+        if self.strict {
+            panic!("strict xla backend: missing artifact {key}");
+        }
+        self.fallback.risk_value(z, y, maskn)
+    }
+
+    fn forward(&self, ws: &[Mat], bs: &[Mat], x: &Mat) -> Mat {
+        let l = ws.len();
+        let (n0, h, c, v) = (
+            x.rows,
+            if l > 1 { ws[0].rows } else { x.rows },
+            ws[l - 1].rows,
+            x.cols,
+        );
+        let key = runtime::model_key("fwd", n0, h, l, c, v);
+        if self.rt.has(&key) {
+            let mut args: Vec<Arg<'_>> = Vec::with_capacity(2 * l + 1);
+            for i in 0..l {
+                args.push(Arg::M(&ws[i]));
+                args.push(Arg::M(&bs[i]));
+            }
+            args.push(Arg::M(x));
+            let mut out = self
+                .rt
+                .exec(&key, &args)
+                .unwrap_or_else(|e| panic!("artifact {key} failed: {e:#}"));
+            return out.remove(0);
+        }
+        if self.strict {
+            panic!("strict xla backend: missing artifact {key}");
+        }
+        let mut warned = self.warned.lock().unwrap();
+        if warned.insert(key.clone()) {
+            eprintln!("[xla-backend] falling back to native for missing artifact {key}");
+        }
+        drop(warned);
+        self.fallback.forward(ws, bs, x)
+    }
+
+    fn loss_and_grad(
+        &self,
+        ws: &[Mat],
+        bs: &[Mat],
+        x: &Mat,
+        y: &Mat,
+        maskn: &Mat,
+    ) -> (f64, Vec<Mat>, Vec<Mat>) {
+        let l = ws.len();
+        let (n0, h, c, v) = (
+            x.rows,
+            if l > 1 { ws[0].rows } else { x.rows },
+            ws[l - 1].rows,
+            x.cols,
+        );
+        let key = runtime::model_key("grad", n0, h, l, c, v);
+        if self.rt.has(&key) {
+            let mut args: Vec<Arg<'_>> = Vec::with_capacity(2 * l + 3);
+            for i in 0..l {
+                args.push(Arg::M(&ws[i]));
+                args.push(Arg::M(&bs[i]));
+            }
+            args.push(Arg::M(x));
+            args.push(Arg::M(y));
+            args.push(Arg::M(maskn));
+            let mut out = self
+                .rt
+                .exec(&key, &args)
+                .unwrap_or_else(|e| panic!("artifact {key} failed: {e:#}"));
+            let loss = out.remove(0).data[0] as f64;
+            let mut dws = Vec::with_capacity(l);
+            let mut dbs = Vec::with_capacity(l);
+            for _ in 0..l {
+                dws.push(out.remove(0));
+                dbs.push(out.remove(0));
+            }
+            return (loss, dws, dbs);
+        }
+        if self.strict {
+            panic!("strict xla backend: missing artifact {key}");
+        }
+        let mut warned = self.warned.lock().unwrap();
+        if warned.insert(key.clone()) {
+            eprintln!("[xla-backend] falling back to native for missing artifact {key}");
+        }
+        drop(warned);
+        self.fallback.loss_and_grad(ws, bs, x, y, maskn)
+    }
+}

@@ -1,0 +1,133 @@
+//! Flag parsing: `repro <subcommand> [positional...] [--flag value] [--switch]`.
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct ParsedFlags {
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl ParsedFlags {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub flags: ParsedFlags,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the binary name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut it = argv.iter().peekable();
+        let subcommand = it
+            .next()
+            .cloned()
+            .ok_or_else(|| anyhow!("missing subcommand; try `repro help`"))?;
+        let mut positional = Vec::new();
+        let mut flags = ParsedFlags::default();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--name value` or bare `--switch` (next token is a flag
+                // or there is no next token)
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.flags.insert(name.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => flags.switches.push(name.to_string()),
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+        }
+        Ok(Args { subcommand, positional, flags })
+    }
+}
+
+pub const USAGE: &str = "\
+pdADMM-G reproduction launcher
+
+USAGE:
+  repro train   --dataset <name> [--hidden N] [--layers N] [--epochs N]
+                [--nu F] [--rho F] [--seed N] [--backend native|xla]
+                [--quant none|int-delta|p8|p16|pq8|pq16]
+                [--schedule serial|parallel] [--workers N]
+                [--greedy 2,5,10] [--out results/run.csv]
+  repro baseline --dataset <name> --optimizer gd|adadelta|adagrad|adam
+                [--hidden N] [--layers N] [--epochs N] [--lr F] [--seed N]
+                [--workers N] [--backend native|xla]
+  repro exp     fig2|fig3|fig4|fig5|table3|table4|perf|all
+                [--quick] [--backend native|xla] [--epochs N] [--seeds N]
+  repro datasets            # list the benchmark suite with statistics
+  repro artifacts           # show the AOT artifact manifest summary
+  repro help
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(str::to_string).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_positional_flags_switches() {
+        let a = parse("exp fig2 --backend xla --quick --epochs 5");
+        assert_eq!(a.subcommand, "exp");
+        assert_eq!(a.positional, vec!["fig2"]);
+        assert_eq!(a.flags.get("backend"), Some("xla"));
+        assert!(a.flags.has("quick"));
+        assert_eq!(a.flags.get_or("epochs", 0usize).unwrap(), 5);
+    }
+
+    #[test]
+    fn trailing_switch_without_value() {
+        let a = parse("train --dataset cora --quick");
+        assert_eq!(a.flags.get("dataset"), Some("cora"));
+        assert!(a.flags.has("quick"));
+    }
+
+    #[test]
+    fn typed_parse_errors_are_helpful() {
+        let a = parse("train --epochs banana");
+        let err = a.flags.get_or("epochs", 1usize).unwrap_err().to_string();
+        assert!(err.contains("epochs"), "{err}");
+    }
+
+    #[test]
+    fn missing_subcommand_errors() {
+        assert!(Args::parse(&[]).is_err());
+    }
+}

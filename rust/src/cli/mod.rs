@@ -1,0 +1,6 @@
+//! CLI (substrate S7; clap is unavailable offline): a small subcommand +
+//! flag parser for the `repro` launcher.
+
+pub mod args;
+
+pub use args::{Args, ParsedFlags};

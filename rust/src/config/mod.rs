@@ -1,0 +1,365 @@
+//! Configuration system (substrate S8): the typed view over
+//! `configs/datasets.json` (shared with `python/compile/aot.py`) plus the
+//! training/run configs assembled by the CLI.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One synthetic benchmark dataset (paper Table II, scaled per DESIGN.md §2).
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub nodes: usize,
+    pub avg_degree: f64,
+    pub classes: usize,
+    pub feat_dim: usize,
+    pub train: usize,
+    pub val: usize,
+    pub test: usize,
+    pub homophily_ratio: f64,
+    pub feature_signal: f32,
+    /// Bayes label-noise floor of the benchmark (DESIGN.md §2).
+    pub label_noise: f32,
+    pub seed: u64,
+}
+
+/// An AOT artifact build config (mirrors aot.py's artifact_configs).
+#[derive(Clone, Debug)]
+pub struct ArtifactConfig {
+    pub name: String,
+    pub datasets: Vec<String>, // resolved ("all" expanded)
+    pub hidden: usize,
+    pub layer_counts: Vec<usize>,
+    pub grad_layer_counts: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct AdmmDefaults {
+    pub nu: f32,
+    pub rho: f32,
+    pub zlast_prox_steps: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct QuantDefaults {
+    pub delta_min: f32,
+    pub delta_max: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct RootConfig {
+    pub hops: usize,
+    pub datasets: Vec<DatasetSpec>,
+    pub artifact_configs: Vec<ArtifactConfig>,
+    pub admm: AdmmDefaults,
+    pub quant: QuantDefaults,
+    /// Repo root the config was loaded from (for locating artifacts/).
+    pub root: PathBuf,
+}
+
+impl RootConfig {
+    /// Load `configs/datasets.json`, searching upward from the current
+    /// directory and from `CARGO_MANIFEST_DIR` (tests/benches).
+    pub fn load_default() -> Result<Self> {
+        let mut candidates: Vec<PathBuf> = Vec::new();
+        if let Ok(cwd) = std::env::current_dir() {
+            let mut d: &Path = &cwd;
+            loop {
+                candidates.push(d.join("configs/datasets.json"));
+                match d.parent() {
+                    Some(p) => d = p,
+                    None => break,
+                }
+            }
+        }
+        candidates.push(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/datasets.json"));
+        for c in &candidates {
+            if c.exists() {
+                return Self::load(c);
+            }
+        }
+        Err(anyhow!("configs/datasets.json not found from cwd or manifest dir"))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let v = json::parse_file(path)?;
+        Self::from_json(&v, path.parent().and_then(|p| p.parent()).unwrap_or(Path::new(".")))
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_json(v: &Json, root: &Path) -> Result<Self> {
+        let hops = v.req("hops")?.as_usize().ok_or_else(|| anyhow!("hops must be a number"))?;
+        let mut datasets = Vec::new();
+        for d in v.req("datasets")?.as_arr().ok_or_else(|| anyhow!("datasets must be an array"))? {
+            datasets.push(DatasetSpec {
+                name: d.req("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string(),
+                nodes: d.req("nodes")?.as_usize().ok_or_else(|| anyhow!("nodes"))?,
+                avg_degree: d.req("avg_degree")?.as_f64().ok_or_else(|| anyhow!("avg_degree"))?,
+                classes: d.req("classes")?.as_usize().ok_or_else(|| anyhow!("classes"))?,
+                feat_dim: d.req("feat_dim")?.as_usize().ok_or_else(|| anyhow!("feat_dim"))?,
+                train: d.req("train")?.as_usize().ok_or_else(|| anyhow!("train"))?,
+                val: d.req("val")?.as_usize().ok_or_else(|| anyhow!("val"))?,
+                test: d.req("test")?.as_usize().ok_or_else(|| anyhow!("test"))?,
+                homophily_ratio: d
+                    .req("p_in_over_p_out")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("p_in_over_p_out"))?,
+                feature_signal: d
+                    .req("feature_signal")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("feature_signal"))? as f32,
+                label_noise: d
+                    .get("label_noise")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0) as f32,
+                seed: d.req("seed")?.as_f64().ok_or_else(|| anyhow!("seed"))? as u64,
+            });
+        }
+        let all_names: Vec<String> = datasets.iter().map(|d| d.name.clone()).collect();
+        let mut artifact_configs = Vec::new();
+        for a in v
+            .req("artifact_configs")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifact_configs must be an array"))?
+        {
+            let ds = match a.req("datasets")? {
+                Json::Str(s) if s == "all" => all_names.clone(),
+                Json::Arr(items) => items
+                    .iter()
+                    .map(|x| x.as_str().map(str::to_string).ok_or_else(|| anyhow!("dataset name")))
+                    .collect::<Result<Vec<_>>>()?,
+                other => return Err(anyhow!("bad datasets field: {other:?}")),
+            };
+            let nums = |key: &str| -> Result<Vec<usize>> {
+                Ok(a.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|xs| xs.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default())
+            };
+            artifact_configs.push(ArtifactConfig {
+                name: a.req("name")?.as_str().unwrap_or_default().to_string(),
+                datasets: ds,
+                hidden: a.req("hidden")?.as_usize().ok_or_else(|| anyhow!("hidden"))?,
+                layer_counts: nums("layer_counts")?,
+                grad_layer_counts: nums("grad_layer_counts")?,
+            });
+        }
+        let admm_v = v.req("admm_defaults")?;
+        let quant_v = v.req("quant_defaults")?;
+        Ok(RootConfig {
+            hops,
+            datasets,
+            artifact_configs,
+            admm: AdmmDefaults {
+                nu: admm_v.req("nu")?.as_f64().unwrap_or(1e-3) as f32,
+                rho: admm_v.req("rho")?.as_f64().unwrap_or(1e-3) as f32,
+                zlast_prox_steps: admm_v.req("zlast_prox_steps")?.as_usize().unwrap_or(24),
+            },
+            quant: QuantDefaults {
+                delta_min: quant_v.req("delta_min")?.as_f64().unwrap_or(-1.0) as f32,
+                delta_max: quant_v.req("delta_max")?.as_f64().unwrap_or(20.0) as f32,
+            },
+            root: root.to_path_buf(),
+        })
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetSpec> {
+        self.datasets
+            .iter()
+            .find(|d| d.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown dataset {name:?}; available: {}",
+                    self.datasets.iter().map(|d| d.name.as_str()).collect::<Vec<_>>().join(", ")
+                )
+            })
+    }
+
+    pub fn artifacts_dir(&self) -> PathBuf {
+        self.root.join("artifacts")
+    }
+
+    pub fn results_dir(&self) -> PathBuf {
+        self.root.join("results")
+    }
+
+    /// Model input dimension for a dataset: n0 = K * d.
+    pub fn input_dim(&self, ds: &DatasetSpec) -> usize {
+        self.hops * ds.feat_dim
+    }
+}
+
+/// Per-run training configuration assembled by the CLI / experiments.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub dataset: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub epochs: usize,
+    pub nu: f32,
+    pub rho: f32,
+    pub seed: u64,
+    pub backend: BackendKind,
+    pub quant: QuantMode,
+    /// Worker threads for the parallel schedule (0 = one per layer).
+    pub workers: usize,
+    pub schedule: ScheduleMode,
+    /// Greedy layerwise stage plan; empty = train all layers at once.
+    pub greedy_stages: Vec<usize>,
+    pub zlast_prox_steps: usize,
+}
+
+impl TrainConfig {
+    pub fn new(dataset: &str, hidden: usize, layers: usize, epochs: usize) -> Self {
+        TrainConfig {
+            dataset: dataset.to_string(),
+            hidden,
+            layers,
+            epochs,
+            nu: 1e-3,
+            rho: 1e-3,
+            seed: 0,
+            backend: BackendKind::Native,
+            quant: QuantMode::None,
+            workers: 0,
+            schedule: ScheduleMode::Parallel,
+            greedy_stages: vec![],
+            zlast_prox_steps: 24,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust ops (substrate S11) — exact-thread-control path.
+    Native,
+    /// AOT artifacts through PJRT (the three-layer architecture's default).
+    Xla,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            _ => Err(anyhow!("backend must be native|xla, got {s:?}")),
+        }
+    }
+}
+
+/// pdADMM-G-Q communication quantization mode (Fig. 5's cases).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QuantMode {
+    /// pdADMM-G: full-precision p and q.
+    None,
+    /// The paper's integer set Delta = {-1, 0, ..., 20}.
+    IntDelta,
+    /// Uniform affine quantization of p at the given bit width.
+    P { bits: u8 },
+    /// Uniform affine quantization of both p and q.
+    PQ { bits: u8 },
+}
+
+impl QuantMode {
+    pub fn label(&self) -> String {
+        match self {
+            QuantMode::None => "none".into(),
+            QuantMode::IntDelta => "int-delta".into(),
+            QuantMode::P { bits } => format!("p@{bits}"),
+            QuantMode::PQ { bits } => format!("pq@{bits}"),
+        }
+    }
+
+    pub fn quantizes_p(&self) -> bool {
+        !matches!(self, QuantMode::None)
+    }
+
+    pub fn quantizes_q(&self) -> bool {
+        matches!(self, QuantMode::PQ { .. })
+    }
+}
+
+impl std::str::FromStr for QuantMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "none" => Ok(QuantMode::None),
+            "int-delta" => Ok(QuantMode::IntDelta),
+            "p8" => Ok(QuantMode::P { bits: 8 }),
+            "p16" => Ok(QuantMode::P { bits: 16 }),
+            "pq8" => Ok(QuantMode::PQ { bits: 8 }),
+            "pq16" => Ok(QuantMode::PQ { bits: 16 }),
+            _ => Err(anyhow!("quant must be none|int-delta|p8|p16|pq8|pq16, got {s:?}")),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// All layer updates on the caller thread (speedup baseline).
+    Serial,
+    /// One worker per layer (or `workers` pooled workers).
+    Parallel,
+}
+
+impl std::str::FromStr for ScheduleMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "serial" => Ok(ScheduleMode::Serial),
+            "parallel" => Ok(ScheduleMode::Parallel),
+            _ => Err(anyhow!("schedule must be serial|parallel, got {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_repo_config() {
+        let cfg = RootConfig::load_default().unwrap();
+        assert_eq!(cfg.hops, 4);
+        assert_eq!(cfg.datasets.len(), 9);
+        let cora = cfg.dataset("cora").unwrap();
+        assert_eq!(cora.nodes, 1000);
+        assert_eq!(cfg.input_dim(cora), 1024);
+        assert!(cfg.artifact_configs.iter().any(|a| a.name == "quickstart"));
+    }
+
+    #[test]
+    fn all_expands_to_every_dataset() {
+        let cfg = RootConfig::load_default().unwrap();
+        let t3 = cfg.artifact_configs.iter().find(|a| a.name == "table3").unwrap();
+        assert_eq!(t3.datasets.len(), 9);
+        assert_eq!(t3.hidden, 100);
+        assert_eq!(t3.layer_counts, vec![2, 5, 10]);
+    }
+
+    #[test]
+    fn unknown_dataset_errors_helpfully() {
+        let cfg = RootConfig::load_default().unwrap();
+        let err = cfg.dataset("nope").unwrap_err().to_string();
+        assert!(err.contains("cora"), "{err}");
+    }
+
+    #[test]
+    fn quant_mode_parsing() {
+        assert_eq!("p8".parse::<QuantMode>().unwrap(), QuantMode::P { bits: 8 });
+        assert_eq!("pq16".parse::<QuantMode>().unwrap(), QuantMode::PQ { bits: 16 });
+        assert_eq!("int-delta".parse::<QuantMode>().unwrap(), QuantMode::IntDelta);
+        assert!("p7".parse::<QuantMode>().is_err());
+        assert!(QuantMode::PQ { bits: 8 }.quantizes_q());
+        assert!(!QuantMode::P { bits: 8 }.quantizes_q());
+    }
+
+    #[test]
+    fn backend_and_schedule_parsing() {
+        assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
+        assert_eq!("serial".parse::<ScheduleMode>().unwrap(), ScheduleMode::Serial);
+        assert!("gpu".parse::<BackendKind>().is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Byte-accounted inter-layer communication (substrate S13).
+//!
+//! Every tensor that crosses a layer boundary — `p_{l+1}` flowing backward
+//! to worker `l`, `(q_l, u_l)` flowing forward to worker `l+1` — goes
+//! through [`CommMeter::transfer`]: it is physically encoded in the
+//! configured wire format, its exact byte count recorded by tensor kind,
+//! and the *decoded* tensor returned (so quantized variables are consistent
+//! across all consumers). Fig. 5's byte totals come straight from here.
+
+use crate::coordinator::quant::{self, Codec};
+use crate::tensor::matrix::Mat;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Which ADMM variable a transfer carries (accounting dimension).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    P,
+    Q,
+    U,
+}
+
+#[derive(Debug, Default)]
+pub struct CommMeter {
+    p_bytes: AtomicU64,
+    q_bytes: AtomicU64,
+    u_bytes: AtomicU64,
+    transfers: AtomicU64,
+}
+
+impl CommMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Encode + count + decode. Thread-safe (called concurrently by layer
+    /// workers inside a phase).
+    pub fn transfer(&self, kind: Kind, codec: Codec, m: &Mat) -> Mat {
+        let (decoded, bytes) = quant::transfer(codec, m);
+        let ctr = match kind {
+            Kind::P => &self.p_bytes,
+            Kind::Q => &self.q_bytes,
+            Kind::U => &self.u_bytes,
+        };
+        ctr.fetch_add(bytes, Ordering::Relaxed);
+        self.transfers.fetch_add(1, Ordering::Relaxed);
+        decoded
+    }
+
+    pub fn p_bytes(&self) -> u64 {
+        self.p_bytes.load(Ordering::Relaxed)
+    }
+    pub fn q_bytes(&self) -> u64 {
+        self.q_bytes.load(Ordering::Relaxed)
+    }
+    pub fn u_bytes(&self) -> u64 {
+        self.u_bytes.load(Ordering::Relaxed)
+    }
+
+    /// The paper's Fig.-5 accounting: p and q volume (u is reconstructible
+    /// from Lemma 4 and excluded, matching the paper's p/q discussion).
+    pub fn paper_bytes(&self) -> u64 {
+        self.p_bytes() + self.q_bytes()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.paper_bytes() + self.u_bytes()
+    }
+
+    pub fn transfers(&self) -> u64 {
+        self.transfers.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot-and-reset (per-epoch accounting).
+    pub fn take(&self) -> CommSnapshot {
+        CommSnapshot {
+            p_bytes: self.p_bytes.swap(0, Ordering::Relaxed),
+            q_bytes: self.q_bytes.swap(0, Ordering::Relaxed),
+            u_bytes: self.u_bytes.swap(0, Ordering::Relaxed),
+            transfers: self.transfers.swap(0, Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommSnapshot {
+    pub p_bytes: u64,
+    pub q_bytes: u64,
+    pub u_bytes: u64,
+    pub transfers: u64,
+}
+
+impl CommSnapshot {
+    pub fn paper_bytes(&self) -> u64 {
+        self.p_bytes + self.q_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg32;
+
+    #[test]
+    fn accounting_by_kind_and_reset() {
+        let meter = CommMeter::new();
+        let m = Mat::zeros(10, 10);
+        meter.transfer(Kind::P, Codec::None, &m);
+        meter.transfer(Kind::Q, Codec::Uniform { bits: 8 }, &m);
+        meter.transfer(Kind::U, Codec::None, &m);
+        assert_eq!(meter.p_bytes(), 412);
+        assert_eq!(meter.q_bytes(), 112);
+        assert_eq!(meter.u_bytes(), 412);
+        assert_eq!(meter.paper_bytes(), 524);
+        assert_eq!(meter.total_bytes(), 936);
+        assert_eq!(meter.transfers(), 3);
+        let snap = meter.take();
+        assert_eq!(snap.paper_bytes(), 524);
+        assert_eq!(meter.paper_bytes(), 0);
+    }
+
+    #[test]
+    fn transfer_returns_decoded_tensor() {
+        let meter = CommMeter::new();
+        let mut rng = Pcg32::seeded(7);
+        let m = Mat::randn(6, 6, 1.0, &mut rng);
+        let exact = meter.transfer(Kind::P, Codec::None, &m);
+        assert_eq!(exact.data, m.data);
+        let lossy = meter.transfer(Kind::P, Codec::Uniform { bits: 8 }, &m);
+        assert!(lossy.max_abs_diff(&m) > 0.0);
+        assert!(lossy.max_abs_diff(&m) < 0.1);
+    }
+
+    #[test]
+    fn concurrent_transfers_are_counted_exactly() {
+        let meter = CommMeter::new();
+        let m = Mat::zeros(4, 4);
+        crate::util::threads::parallel_map(8, 64, |_| {
+            meter.transfer(Kind::Q, Codec::None, &m);
+        });
+        assert_eq!(meter.transfers(), 64);
+        assert_eq!(meter.q_bytes(), 64 * (16 * 4 + 12));
+    }
+}

@@ -1,0 +1,206 @@
+//! Greedy layerwise training (substrate S14; Bengio et al. 2006, the
+//! protocol of the paper's §V-F): train a shallow GA-MLP, then insert more
+//! hidden layers before the output layer and continue, until the full
+//! depth is reached. Trained weights of existing layers carry over; new
+//! layers are warm-started by a forward pass.
+
+use crate::admm::state::{LayerRole, LayerState};
+use crate::backend::ComputeBackend;
+use crate::config::TrainConfig;
+use crate::coordinator::trainer::Trainer;
+use crate::graph::datasets::Dataset;
+use crate::metrics::TrainLog;
+use crate::tensor::matrix::Mat;
+use crate::tensor::rng::Pcg32;
+use std::sync::Arc;
+
+/// Expand an L-layer chain to `new_total` layers by inserting freshly
+/// initialized hidden layers just before the output layer, then rebuild the
+/// feasible warm start (z = Wp + b, q = f(z), u = 0) through the new chain.
+pub fn expand_chain(
+    layers: &[LayerState],
+    new_total: usize,
+    hidden: usize,
+    x: &Mat,
+    seed: u64,
+    threads: usize,
+) -> Vec<LayerState> {
+    let old_total = layers.len();
+    assert!(new_total > old_total, "expand must add layers");
+    let mut rng = Pcg32::new(seed, 0x6eed); // greedy-stage stream
+    let mut ws: Vec<Mat> = Vec::with_capacity(new_total);
+    let mut bs: Vec<Mat> = Vec::with_capacity(new_total);
+    // keep layers 0..old_total-1, insert new hidden, keep the old output.
+    for l in 0..old_total - 1 {
+        ws.push(layers[l].w.clone());
+        bs.push(layers[l].b.clone());
+    }
+    for _ in 0..new_total - old_total {
+        let std = (2.0 / hidden as f32).sqrt();
+        ws.push(Mat::randn(hidden, hidden, std, &mut rng));
+        bs.push(Mat::zeros(hidden, 1));
+    }
+    ws.push(layers[old_total - 1].w.clone());
+    bs.push(layers[old_total - 1].b.clone());
+
+    rebuild_feasible(&ws, &bs, x, threads)
+}
+
+fn rebuild_feasible(ws: &[Mat], bs: &[Mat], x: &Mat, threads: usize) -> Vec<LayerState> {
+    let n_layers = ws.len();
+    let mut out = Vec::with_capacity(n_layers);
+    let mut p = x.clone();
+    for l in 0..n_layers {
+        let z = crate::tensor::ops::linear(&ws[l], &p, &bs[l], threads);
+        let role = if l + 1 == n_layers { LayerRole::Last } else { LayerRole::Hidden };
+        let (q, u, p_next) = if role == LayerRole::Hidden {
+            let q = z.relu();
+            (Some(q.clone()), Some(Mat::zeros(z.rows, z.cols)), q)
+        } else {
+            (None, None, Mat::zeros(0, 0))
+        };
+        out.push(LayerState {
+            index: l,
+            role,
+            w: ws[l].clone(),
+            b: bs[l].clone(),
+            z,
+            p,
+            q,
+            u,
+            tau: 1.0,
+            theta: 1.0,
+        });
+        p = p_next;
+    }
+    out
+}
+
+/// Run the full greedy protocol: stage depths like [2, 5, 10], splitting
+/// the epoch budget evenly across stages. Returns the concatenated log
+/// (epoch numbering continues across stages) with the final-depth metadata.
+pub fn train_greedy(
+    backend: Arc<dyn ComputeBackend>,
+    ds: Dataset,
+    mut cfg: TrainConfig,
+) -> TrainLog {
+    let stages = if cfg.greedy_stages.is_empty() {
+        vec![cfg.layers]
+    } else {
+        cfg.greedy_stages.clone()
+    };
+    assert!(
+        stages.windows(2).all(|w| w[0] < w[1]),
+        "greedy stages must be strictly increasing"
+    );
+    let epochs_total = cfg.epochs;
+    let per_stage = (epochs_total / stages.len()).max(1);
+
+    cfg.layers = stages[0];
+    cfg.epochs = per_stage;
+    let mut trainer = Trainer::new(backend, ds, cfg.clone());
+    let mut log = trainer.run();
+
+    for (si, &depth) in stages.iter().enumerate().skip(1) {
+        let threads = crate::tensor::ops::default_threads();
+        let expanded = expand_chain(
+            &trainer.layers,
+            depth,
+            cfg.hidden,
+            &trainer.ds.x,
+            cfg.seed ^ (si as u64) << 17,
+            threads,
+        );
+        trainer.set_layers(expanded);
+        trainer.cfg.epochs = per_stage;
+        let stage_log = trainer.run();
+        let offset = log.records.len();
+        for (i, mut r) in stage_log.records.into_iter().enumerate() {
+            r.epoch = offset + i;
+            log.push(r);
+        }
+    }
+    log.layers = *stages.last().unwrap();
+    log.method = format!("{}+greedy", log.method);
+    log
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::state;
+    use crate::backend::NativeBackend;
+    use crate::config::{DatasetSpec, QuantMode};
+    use crate::graph::datasets;
+
+    fn tiny_ds() -> Dataset {
+        datasets::build(
+            &DatasetSpec {
+                name: "tiny".into(),
+                nodes: 80,
+                avg_degree: 6.0,
+                classes: 3,
+                feat_dim: 8,
+                train: 40,
+                val: 20,
+                test: 20,
+                homophily_ratio: 8.0,
+                feature_signal: 1.5,
+                label_noise: 0.0,
+                seed: 23,
+            },
+            2,
+            1,
+        )
+    }
+
+    #[test]
+    fn expand_preserves_trained_edges_and_feasibility() {
+        let ds = tiny_ds();
+        let dims = vec![ds.input_dim, 6, 3];
+        let layers = state::init_chain(&dims, &ds.x, 1, 0.3, 1);
+        let w0 = layers[0].w.clone();
+        let w_last = layers[1].w.clone();
+        let expanded = expand_chain(&layers, 4, 6, &ds.x, 2, 1);
+        assert_eq!(expanded.len(), 4);
+        assert_eq!(expanded[0].w.data, w0.data);
+        assert_eq!(expanded[3].w.data, w_last.data);
+        assert_eq!(expanded[1].w.shape(), (6, 6));
+        assert_eq!(expanded[2].w.shape(), (6, 6));
+        // feasible: p_{l+1} = q_l = relu(z_l), z = Wp + b
+        for l in 0..3 {
+            let q = expanded[l].q.as_ref().unwrap();
+            assert_eq!(q.data, expanded[l + 1].p.data);
+        }
+    }
+
+    #[test]
+    fn greedy_runs_all_stages_and_learns() {
+        let ds = tiny_ds();
+        let mut cfg = TrainConfig::new("tiny", 8, 4, 60);
+        cfg.nu = 0.01;
+        cfg.rho = 1.0;
+        cfg.quant = QuantMode::None;
+        cfg.greedy_stages = vec![2, 3, 4];
+        cfg.seed = 5;
+        let log = train_greedy(Arc::new(NativeBackend::single_thread()), ds, cfg);
+        assert_eq!(log.records.len(), 60);
+        assert_eq!(log.layers, 4);
+        assert!(log.method.contains("greedy"));
+        let last = log.last().unwrap();
+        assert!(last.train_acc > 0.5, "train acc {}", last.train_acc);
+        // epochs renumbered contiguously
+        for (i, r) in log.records.iter().enumerate() {
+            assert!(r.epoch == i || r.epoch == i + 1, "epoch {} at {i}", r.epoch);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn rejects_non_increasing_stages() {
+        let ds = tiny_ds();
+        let mut cfg = TrainConfig::new("tiny", 8, 4, 10);
+        cfg.greedy_stages = vec![4, 2];
+        train_greedy(Arc::new(NativeBackend::single_thread()), ds, cfg);
+    }
+}

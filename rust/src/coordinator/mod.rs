@@ -1,0 +1,12 @@
+//! L3 coordinator (the paper's system contribution): phase-barrier
+//! model-parallel ADMM over layer workers, byte-accounted quantized
+//! communication, and the greedy layerwise protocol.
+
+pub mod channel;
+pub mod greedy;
+pub mod quant;
+pub mod trainer;
+
+pub use channel::{CommMeter, CommSnapshot};
+pub use quant::Codec;
+pub use trainer::Trainer;

@@ -1,0 +1,517 @@
+//! The pdADMM-G coordinator (substrate S12): Algorithm 1 as a phase-barrier
+//! schedule over layer workers.
+//!
+//! One epoch = the six phases of DESIGN.md §7 (P, W, B, Z, Q, U). Within a
+//! phase every layer's subproblem is independent — `ScheduleMode::Parallel`
+//! fans them out over a worker pool (one OS thread per worker, compute
+//! pinned to one thread each so Figs. 3/4 measure *model* parallelism);
+//! `ScheduleMode::Serial` runs the identical updates on the caller thread.
+//! The two schedules are numerically identical (asserted by property
+//! tests): parallelism changes wall-clock only.
+//!
+//! All cross-layer tensor movement goes through the byte-accounted
+//! [`CommMeter`] with the configured quantization codecs (pdADMM-G-Q).
+
+use crate::admm::objective;
+use crate::admm::state::{self, LayerRole, LayerState};
+use crate::admm::updates::zlast_lr;
+use crate::backend::ComputeBackend;
+use crate::config::{QuantMode, ScheduleMode, TrainConfig};
+use crate::coordinator::channel::{CommMeter, Kind};
+use crate::coordinator::quant::Codec;
+use crate::graph::datasets::Dataset;
+use crate::metrics::{EpochRecord, TrainLog};
+use crate::util::threads::parallel_map;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub struct Trainer {
+    pub backend: Arc<dyn ComputeBackend>,
+    pub ds: Dataset,
+    pub cfg: TrainConfig,
+    pub layers: Vec<LayerState>,
+    pub meter: CommMeter,
+    pub epoch: usize,
+    /// Evaluate objective/accuracy every epoch (disable for pure timing).
+    pub measure: bool,
+    /// When set, per-layer compute seconds are recorded each epoch for the
+    /// critical-path schedule simulator (speedup experiments on hosts with
+    /// fewer cores than workers — DESIGN.md §2).
+    pub record_layer_times: bool,
+    /// layer -> accumulated compute seconds in the last epoch.
+    pub last_layer_secs: Vec<f64>,
+}
+
+/// Simulated parallel epoch time: layers are assigned round-robin to
+/// `workers`; within each of the six phases all workers run concurrently,
+/// so the phase's makespan is the maximum worker bin. (Phase barriers are
+/// exactly Algorithm 1's semantics.) Here per-layer times are aggregated
+/// over the whole epoch, which upper-bounds the phase-wise makespan when
+/// layer costs are balanced — they are, except the first layer (bigger n0).
+pub fn simulated_parallel_ms(layer_secs: &[f64], workers: usize) -> f64 {
+    let workers = workers.max(1);
+    let mut bins = vec![0.0f64; workers];
+    for (l, &t) in layer_secs.iter().enumerate() {
+        bins[l % workers] += t;
+    }
+    bins.iter().cloned().fold(0.0, f64::max) * 1e3
+}
+
+impl Trainer {
+    /// Build a trainer with `layers` layers of width `hidden` on `ds`.
+    pub fn new(backend: Arc<dyn ComputeBackend>, ds: Dataset, cfg: TrainConfig) -> Trainer {
+        let mut dims = vec![ds.input_dim];
+        for _ in 0..cfg.layers - 1 {
+            dims.push(cfg.hidden);
+        }
+        dims.push(ds.classes);
+        let threads = crate::tensor::ops::default_threads();
+        let layers = state::init_chain(&dims, &ds.x, cfg.seed, init_std(ds.input_dim), threads);
+        Trainer {
+            backend,
+            ds,
+            cfg,
+            layers,
+            meter: CommMeter::new(),
+            epoch: 0,
+            measure: true,
+            record_layer_times: false,
+            last_layer_secs: Vec::new(),
+        }
+    }
+
+    /// Replace the layer chain (greedy layerwise stacking).
+    pub fn set_layers(&mut self, layers: Vec<LayerState>) {
+        self.layers = layers;
+        self.cfg.layers = self.layers.len();
+    }
+
+    fn n_workers(&self) -> usize {
+        match self.cfg.schedule {
+            ScheduleMode::Serial => 1,
+            ScheduleMode::Parallel => {
+                if self.cfg.workers == 0 {
+                    self.layers.len()
+                } else {
+                    self.cfg.workers
+                }
+            }
+        }
+    }
+
+    /// Wire codec for p transfers.
+    fn p_codec(&self) -> Codec {
+        match self.cfg.quant {
+            QuantMode::None => Codec::None,
+            // p is already projected onto Delta by the quantized subproblem:
+            // the wire carries lossless 1-byte indices.
+            QuantMode::IntDelta => Codec::paper_int_delta(),
+            QuantMode::P { bits } | QuantMode::PQ { bits } => Codec::Uniform { bits },
+        }
+    }
+
+    /// Wire codec for q transfers.
+    fn q_codec(&self) -> Codec {
+        match self.cfg.quant {
+            QuantMode::PQ { bits } => Codec::Uniform { bits },
+            _ => Codec::None,
+        }
+    }
+
+    /// One full Algorithm-1 iteration. Returns the epoch record.
+    pub fn run_epoch(&mut self) -> EpochRecord {
+        let t0 = Instant::now();
+        let workers = self.n_workers();
+        let n_layers = self.layers.len();
+        let (nu, rho) = (self.cfg.nu, self.cfg.rho);
+        use std::sync::atomic::{AtomicU64, Ordering as AtOrd};
+        let layer_ns: Vec<AtomicU64> = (0..n_layers).map(|_| AtomicU64::new(0)).collect();
+        let record = self.record_layer_times;
+        let clock = |l: usize, t0: Instant, layer_ns: &Vec<AtomicU64>| {
+            if record {
+                layer_ns[l].fetch_add(t0.elapsed().as_nanos() as u64, AtOrd::Relaxed);
+            }
+        };
+
+        // Step sizes tau/theta: initialized from the Lipschitz upper bound
+        // once, then adapted by backtracking every epoch (the Appendix-A
+        // conditions phi(p^{k+1}) <= U(p^{k+1}; tau) checked explicitly,
+        // exactly like dlADMM's line search). Backtracking lets the step
+        // sizes track the local curvature instead of the worst case, which
+        // is what makes the gradient-free updates competitive.
+        if self.epoch == 0 {
+            state::refresh_step_sizes(&mut self.layers, nu, rho, self.cfg.seed);
+        }
+
+        // ---- phase P: p_l^{k+1} for l >= 2, in parallel ----
+        let backend = &self.backend;
+        let layers = &self.layers;
+        let quant = self.cfg.quant;
+        let new_ps: Vec<Option<(crate::Mat, f32)>> = parallel_map(workers, n_layers, |l| {
+            if l == 0 {
+                return None; // p_1 = X is fixed
+            }
+            let t0 = Instant::now();
+            let cur = &layers[l];
+            let prev = &layers[l - 1];
+            let q_prev = prev.q.as_ref().expect("prev layer has q");
+            let u_prev = prev.u.as_ref().expect("prev layer has u");
+            // phi(p) = (nu/2)||z - Wp - b||^2 + u^T(p - q) + (rho/2)||p - q||^2
+            let phi = |pp: &crate::Mat| -> f64 {
+                let gap = pp.sub(q_prev);
+                (nu as f64 / 2.0) * backend.recon_sq(&cur.w, pp, &cur.b, &cur.z)
+                    + u_prev.zip(&gap, |a, b| a * b).sum()
+                    + (rho as f64 / 2.0) * gap.frob_sq()
+            };
+            let phi0 = phi(&cur.p);
+            let mut tau = (cur.tau * 0.5).max(rho + 1e-4);
+            let mut cand;
+            loop {
+                cand = backend.p_update(
+                    &cur.p, &cur.w, &cur.b, &cur.z, q_prev, u_prev, tau, nu, rho,
+                );
+                let dp2 = cand.sub(&cur.p).frob_sq();
+                // U-condition <=> phi(p') <= phi0 - (tau/2)||dp||^2
+                if phi(&cand) <= phi0 - (tau as f64 / 2.0) * dp2 + 1e-9 * (1.0 + phi0.abs())
+                    || tau > 1e8
+                {
+                    break;
+                }
+                tau *= 2.0;
+            }
+            if quant == QuantMode::IntDelta {
+                // re-run the accepted step with the projection onto Delta
+                cand = backend.p_update_quant(
+                    &cur.p, &cur.w, &cur.b, &cur.z, q_prev, u_prev, tau, nu, rho,
+                    -1.0, 1.0, 22.0,
+                );
+            }
+            clock(l, t0, &layer_ns);
+            Some((cand, tau))
+        });
+        // p_l travels to worker l-1 (it is needed there for q/u updates):
+        // route through the meter; all consumers adopt the decoded tensor.
+        let p_codec = self.p_codec();
+        for (l, out) in new_ps.into_iter().enumerate() {
+            if let Some((p, tau)) = out {
+                self.layers[l].p = self.meter.transfer(Kind::P, p_codec, &p);
+                self.layers[l].tau = tau;
+            }
+        }
+
+        // ---- phase W (local, backtracked like phase P) ----
+        let layers = &self.layers;
+        let new_ws: Vec<(crate::Mat, f32)> = parallel_map(workers, n_layers, |l| {
+            let t0 = Instant::now();
+            let c = &layers[l];
+            let phi0 = backend.recon_sq(&c.w, &c.p, &c.b, &c.z);
+            let mut theta = (c.theta * 0.5).max(1e-4);
+            let mut cand;
+            loop {
+                cand = backend.w_update(&c.p, &c.w, &c.b, &c.z, theta, nu);
+                let dw2 = cand.sub(&c.w).frob_sq();
+                let phi1 = backend.recon_sq(&cand, &c.p, &c.b, &c.z);
+                // phi here is (nu/2)||r||^2; same U-condition algebra
+                if (nu as f64 / 2.0) * phi1
+                    <= (nu as f64 / 2.0) * phi0 - (theta as f64 / 2.0) * dw2
+                        + 1e-9 * (1.0 + phi0.abs())
+                    || theta > 1e8
+                {
+                    break;
+                }
+                theta *= 2.0;
+            }
+            clock(l, t0, &layer_ns);
+            (cand, theta)
+        });
+        for (l, (w, theta)) in new_ws.into_iter().enumerate() {
+            self.layers[l].w = w;
+            self.layers[l].theta = theta;
+        }
+
+        // ---- phase B (local) ----
+        let layers = &self.layers;
+        let new_bs: Vec<crate::Mat> = parallel_map(workers, n_layers, |l| {
+            let t0 = Instant::now();
+            let c = &layers[l];
+            let out = backend.b_update(&c.w, &c.p, &c.z);
+            clock(l, t0, &layer_ns);
+            out
+        });
+        for (l, b) in new_bs.into_iter().enumerate() {
+            self.layers[l].b = b;
+        }
+
+        // ---- phase Z (local) ----
+        let layers = &self.layers;
+        let ds = &self.ds;
+        let prox_lr = zlast_lr(nu, ds.train_idx.len());
+        let new_zs: Vec<crate::Mat> = parallel_map(workers, n_layers, |l| {
+            let t0 = Instant::now();
+            let c = &layers[l];
+            let m = backend.linear(&c.w, &c.p, &c.b);
+            let out = match c.role {
+                LayerRole::Hidden => {
+                    backend.z_update_hidden(&m, &c.z, c.q.as_ref().expect("hidden q"))
+                }
+                LayerRole::Last => backend.z_update_last(
+                    &m,
+                    &c.z,
+                    &ds.y_onehot,
+                    &ds.maskn_train,
+                    nu,
+                    prox_lr,
+                ),
+            };
+            clock(l, t0, &layer_ns);
+            out
+        });
+        for (l, z) in new_zs.into_iter().enumerate() {
+            self.layers[l].z = z;
+        }
+
+        // ---- phase Q: q_l from the received p_{l+1} (l < L) ----
+        let layers = &self.layers;
+        let new_qs: Vec<Option<crate::Mat>> = parallel_map(workers, n_layers, |l| {
+            if l + 1 == n_layers {
+                return None;
+            }
+            let t0 = Instant::now();
+            let c = &layers[l];
+            let p_next = &layers[l + 1].p;
+            let out = backend.q_update(p_next, c.u.as_ref().unwrap(), &c.z, nu, rho);
+            clock(l, t0, &layer_ns);
+            Some(out)
+        });
+        let q_codec = self.q_codec();
+        for (l, q) in new_qs.into_iter().enumerate() {
+            if let Some(q) = q {
+                // q_l travels forward to worker l+1; with PQ quantization
+                // every consumer (including the owner) adopts the decoded
+                // grid value, which is exactly the paper's q-quantized
+                // variant (Appendix B).
+                self.layers[l].q = Some(self.meter.transfer(Kind::Q, q_codec, &q));
+            }
+        }
+
+        // ---- phase U: duals + residuals (l < L) ----
+        let layers = &self.layers;
+        let new_us: Vec<Option<crate::Mat>> = parallel_map(workers, n_layers, |l| {
+            if l + 1 == n_layers {
+                return None;
+            }
+            let t0 = Instant::now();
+            let c = &layers[l];
+            let out = backend.u_update(
+                c.u.as_ref().unwrap(),
+                &layers[l + 1].p,
+                c.q.as_ref().unwrap(),
+                rho,
+            );
+            clock(l, t0, &layer_ns);
+            Some(out)
+        });
+        for (l, u) in new_us.into_iter().enumerate() {
+            if let Some(u) = u {
+                // u_l accompanies q_l to worker l+1 (not part of the
+                // paper's p/q byte accounting; metered separately).
+                self.layers[l].u = Some(self.meter.transfer(Kind::U, Codec::None, &u));
+            }
+        }
+
+        if record {
+            self.last_layer_secs = layer_ns
+                .iter()
+                .map(|a| a.load(AtOrd::Relaxed) as f64 * 1e-9)
+                .collect();
+        }
+        let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.epoch += 1;
+
+        let comm = self.meter.take();
+        let mut rec = EpochRecord {
+            epoch: self.epoch,
+            epoch_ms: elapsed_ms,
+            comm_bytes: comm.paper_bytes(),
+            ..Default::default()
+        };
+        if self.measure {
+            let threads = crate::tensor::ops::default_threads();
+            let parts = objective::evaluate(
+                &self.layers,
+                &self.ds.y_onehot,
+                &self.ds.maskn_train,
+                nu,
+                rho,
+                threads,
+            );
+            rec.objective = parts.total();
+            rec.risk = parts.risk;
+            rec.residual = objective::residual_sq(&self.layers);
+            let (ws, bs) = state::params_of(&self.layers);
+            let logits = self.backend.forward(&ws, &bs, &self.ds.x);
+            rec.train_acc = self.ds.train_accuracy(&logits);
+            rec.val_acc = self.ds.val_accuracy(&logits);
+            rec.test_acc = self.ds.test_accuracy(&logits);
+        }
+        rec
+    }
+
+    /// Train for the configured number of epochs, producing the run log.
+    pub fn run(&mut self) -> TrainLog {
+        let mut log = TrainLog {
+            method: match self.cfg.quant {
+                QuantMode::None => "pdADMM-G".into(),
+                _ => "pdADMM-G-Q".into(),
+            },
+            dataset: self.ds.name.clone(),
+            backend: self.backend.name().into(),
+            quant: self.cfg.quant.label(),
+            layers: self.cfg.layers,
+            hidden: self.cfg.hidden,
+            seed: self.cfg.seed,
+            records: Vec::with_capacity(self.cfg.epochs),
+        };
+        for _ in 0..self.cfg.epochs {
+            let rec = self.run_epoch();
+            log.push(rec);
+        }
+        log
+    }
+
+    /// Current logits (evaluation).
+    pub fn logits(&self) -> crate::Mat {
+        let (ws, bs) = state::params_of(&self.layers);
+        self.backend.forward(&ws, &bs, &self.ds.x)
+    }
+}
+
+/// He-style init scale for the warm-start weights.
+fn init_std(fan_in: usize) -> f32 {
+    (2.0 / fan_in as f32).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::config::{DatasetSpec, TrainConfig};
+    use crate::graph::datasets;
+
+    fn tiny_ds() -> Dataset {
+        datasets::build(
+            &DatasetSpec {
+                name: "tiny".into(),
+                nodes: 90,
+                avg_degree: 6.0,
+                classes: 3,
+                feat_dim: 8,
+                train: 45,
+                val: 20,
+                test: 25,
+                homophily_ratio: 8.0,
+                feature_signal: 1.5,
+                label_noise: 0.0,
+                seed: 13,
+            },
+            2,
+            1,
+        )
+    }
+
+    fn trainer(quant: QuantMode, schedule: ScheduleMode) -> Trainer {
+        let ds = tiny_ds();
+        let mut cfg = TrainConfig::new("tiny", 10, 3, 15);
+        cfg.nu = 0.01;
+        cfg.rho = 1.0;
+        cfg.quant = quant;
+        cfg.schedule = schedule;
+        cfg.seed = 3;
+        Trainer::new(Arc::new(NativeBackend::single_thread()), ds, cfg)
+    }
+
+    #[test]
+    fn objective_decreases_and_residual_small() {
+        let mut t = trainer(QuantMode::None, ScheduleMode::Serial);
+        let log = t.run();
+        let first = &log.records[1]; // skip the warm-start epoch
+        let last = log.last().unwrap();
+        assert!(last.objective < first.objective, "{} -> {}", first.objective, last.objective);
+        assert!(last.residual < 1e-2, "residual {}", last.residual);
+    }
+
+    #[test]
+    fn parallel_equals_serial_exactly() {
+        let mut a = trainer(QuantMode::None, ScheduleMode::Serial);
+        let mut b = trainer(QuantMode::None, ScheduleMode::Parallel);
+        for _ in 0..4 {
+            a.run_epoch();
+            b.run_epoch();
+        }
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.w.data, lb.w.data);
+            assert_eq!(la.z.data, lb.z.data);
+        }
+    }
+
+    #[test]
+    fn int_delta_keeps_p_on_grid() {
+        let mut t = trainer(QuantMode::IntDelta, ScheduleMode::Serial);
+        for _ in 0..3 {
+            t.run_epoch();
+        }
+        for l in 1..t.layers.len() {
+            for &v in &t.layers[l].p.data {
+                let idx = v + 1.0;
+                assert!(
+                    (idx - idx.round()).abs() < 1e-5 && (-1.0..=20.0).contains(&v),
+                    "p not on Delta: {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_comm_is_smaller() {
+        let mut full = trainer(QuantMode::None, ScheduleMode::Serial);
+        let mut q8 = trainer(QuantMode::PQ { bits: 8 }, ScheduleMode::Serial);
+        let fl = full.run_epoch();
+        let ql = q8.run_epoch();
+        assert!(
+            (ql.comm_bytes as f64) < 0.3 * fl.comm_bytes as f64,
+            "pq8 {} vs none {}",
+            ql.comm_bytes,
+            fl.comm_bytes
+        );
+    }
+
+    #[test]
+    fn learns_above_chance() {
+        let mut t = trainer(QuantMode::None, ScheduleMode::Serial);
+        t.cfg.epochs = 40;
+        let log = t.run();
+        let last = log.last().unwrap();
+        assert!(last.train_acc > 0.5, "train acc {}", last.train_acc);
+        assert!(last.test_acc > 0.4, "test acc {}", last.test_acc);
+    }
+
+    #[test]
+    fn lemma4_invariant_after_epochs() {
+        let mut t = trainer(QuantMode::None, ScheduleMode::Serial);
+        for _ in 0..3 {
+            t.run_epoch();
+        }
+        let nu = t.cfg.nu;
+        for l in 0..t.layers.len() - 1 {
+            let c = &t.layers[l];
+            let u = c.u.as_ref().unwrap();
+            let q = c.q.as_ref().unwrap();
+            let want = q.sub(&c.z.relu()).scale(nu);
+            assert!(
+                u.max_abs_diff(&want) < 1e-4,
+                "layer {l}: lemma4 violated by {}",
+                u.max_abs_diff(&want)
+            );
+        }
+    }
+}

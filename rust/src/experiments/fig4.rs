@@ -1,0 +1,165 @@
+//! Fig. 4 reproduction: speedup vs number of workers ("GPUs"), pdADMM-G
+//! against the GD-family baselines.
+//!
+//! Paper setting: 16-layer GA-MLP, 4000 neurons (scaled), flickr and
+//! ogbn-arxiv. pdADMM-G: layers round-robin over w workers, epoch time =
+//! phase-barrier makespan over *measured* per-layer compute (DESIGN.md §2:
+//! single-core host, so the schedule is simulated from measurements exactly
+//! as the multi-GPU testbed would realize it). Baselines: node-sharded data
+//! parallelism — per-shard grad compute is measured, epoch time =
+//! max(shard) + measured gradient all-reduce time (the serial aggregation
+//! that full-parameter synchronous data parallelism cannot avoid).
+//!
+//! Expected shape: pdADMM-G scales near-linearly; baselines flatten.
+
+use super::ExpOptions;
+use crate::backend::{ComputeBackend, NativeBackend};
+use crate::config::{RootConfig, ScheduleMode, TrainConfig};
+use crate::coordinator::trainer::{simulated_parallel_ms, Trainer};
+use crate::graph::datasets::{self, Dataset};
+use crate::metrics::write_csv_table;
+use crate::optim::{Optimizer, OptimizerKind};
+use crate::tensor::matrix::Mat;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub const DATASETS: [&str; 2] = ["flickr", "ogbn-arxiv"];
+
+/// Measured per-layer times once, then the makespan for every worker count.
+fn admm_curve(ds: &Dataset, hidden: usize, layers: usize, reps: usize, workers: &[usize]) -> Vec<f64> {
+    let mut tc = TrainConfig::new(&ds.name, hidden, layers, reps);
+    tc.nu = 1e-3;
+    tc.rho = 1e-3;
+    tc.schedule = ScheduleMode::Serial;
+    let mut trainer = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
+    trainer.measure = false;
+    trainer.record_layer_times = true;
+    trainer.run_epoch();
+    let mut acc = vec![0.0f64; workers.len()];
+    for _ in 0..reps {
+        trainer.run_epoch();
+        for (i, &w) in workers.iter().enumerate() {
+            acc[i] += simulated_parallel_ms(&trainer.last_layer_secs, w);
+        }
+    }
+    acc.iter().map(|t| t / reps as f64).collect()
+}
+
+/// Baseline: shard grads measured individually; epoch(w) = max shard time +
+/// measured all-reduce aggregation + optimizer step.
+fn baseline_curve(
+    ds: &Dataset,
+    kind: OptimizerKind,
+    hidden: usize,
+    layers: usize,
+    workers: &[usize],
+) -> Vec<f64> {
+    let be = NativeBackend::single_thread();
+    // init params like optim::baseline
+    let mut dims = vec![ds.input_dim];
+    for _ in 0..layers - 1 {
+        dims.push(hidden);
+    }
+    dims.push(ds.classes);
+    let mut rng = crate::tensor::rng::Pcg32::new(1, 0xba5e);
+    let mut ws = Vec::new();
+    let mut bs = Vec::new();
+    for l in 0..layers {
+        ws.push(Mat::randn(dims[l + 1], dims[l], 0.05, &mut rng));
+        bs.push(Mat::zeros(dims[l + 1], 1));
+    }
+    let mut out = Vec::new();
+    for &w in workers {
+        // shard columns
+        let shard = |m: &Mat, s: usize| -> Mat {
+            let base = m.cols / w;
+            let extra = m.cols % w;
+            let start: usize = (0..s).map(|i| base + usize::from(i < extra)).sum();
+            let width = base + usize::from(s < extra);
+            let mut piece = Mat::zeros(m.rows, width);
+            for i in 0..m.rows {
+                piece.row_mut(i).copy_from_slice(&m.row(i)[start..start + width]);
+            }
+            piece
+        };
+        let mut max_shard = 0.0f64;
+        let mut partials = Vec::new();
+        for s in 0..w {
+            let xs = shard(&ds.x, s);
+            let ys = shard(&ds.y_onehot, s);
+            let ms = shard(&ds.maskn_train, s);
+            let t0 = Instant::now();
+            let g = be.loss_and_grad(&ws, &bs, &xs, &ys, &ms);
+            max_shard = max_shard.max(t0.elapsed().as_secs_f64());
+            partials.push(g);
+        }
+        // measured all-reduce + step (serial at the coordinator)
+        let t0 = Instant::now();
+        let mut dws: Vec<Mat> = ws.iter().map(|x| Mat::zeros(x.rows, x.cols)).collect();
+        let mut dbs: Vec<Mat> = bs.iter().map(|x| Mat::zeros(x.rows, x.cols)).collect();
+        for (_, pws, pbs) in &partials {
+            for l in 0..dws.len() {
+                dws[l].axpy(1.0, &pws[l]);
+                dbs[l].axpy(1.0, &pbs[l]);
+            }
+        }
+        let mut opt = Optimizer::new(kind, Optimizer::default_lr(kind), 2 * layers);
+        {
+            let mut prefs: Vec<&mut Mat> = Vec::new();
+            let mut grefs: Vec<&Mat> = Vec::new();
+            for (x, dx) in ws.iter_mut().zip(&dws) {
+                prefs.push(x);
+                grefs.push(dx);
+            }
+            for (x, dx) in bs.iter_mut().zip(&dbs) {
+                prefs.push(x);
+                grefs.push(dx);
+            }
+            opt.apply(&mut prefs, &grefs);
+        }
+        let reduce = t0.elapsed().as_secs_f64();
+        out.push((max_shard + reduce) * 1e3);
+    }
+    out
+}
+
+pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
+    let hidden = if opts.quick { 64 } else { 192 };
+    let layers = 16;
+    let reps = if opts.quick { 1 } else { 2 };
+    let worker_counts: Vec<usize> = vec![1, 2, 4, 8, 16];
+
+    let mut rows = Vec::new();
+    for ds_name in DATASETS {
+        let ds = datasets::load(cfg, ds_name)?;
+        let admm = admm_curve(&ds, hidden, layers, reps, &worker_counts);
+        for (i, &w) in worker_counts.iter().enumerate() {
+            let speedup = admm[0] / admm[i];
+            println!(
+                "[fig4] {ds_name:<12} pdADMM-G   w={w:<3} {:>9.1} ms  speedup {speedup:>5.2}x",
+                admm[i]
+            );
+            rows.push(format!("{ds_name},pdADMM-G,{w},{:.3},{speedup:.4}", admm[i]));
+        }
+        for kind in OptimizerKind::all() {
+            let curve = baseline_curve(&ds, kind, hidden, layers, &worker_counts);
+            for (i, &w) in worker_counts.iter().enumerate() {
+                let speedup = curve[0] / curve[i];
+                println!(
+                    "[fig4] {ds_name:<12} {:<10} w={w:<3} {:>9.1} ms  speedup {speedup:>5.2}x",
+                    kind.label(),
+                    curve[i]
+                );
+                rows.push(format!(
+                    "{ds_name},{},{w},{:.3},{speedup:.4}",
+                    kind.label(),
+                    curve[i]
+                ));
+            }
+        }
+    }
+    let out = cfg.results_dir().join("fig4_speedup_workers.csv");
+    write_csv_table(&out, "dataset,method,workers,epoch_ms,speedup", &rows)?;
+    println!("[fig4] wrote {}", out.display());
+    Ok(())
+}

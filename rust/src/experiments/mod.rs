@@ -1,0 +1,78 @@
+//! Experiment harnesses (substrate S17): one runner per paper artifact.
+//!
+//! | id     | paper artifact                                   |
+//! |--------|--------------------------------------------------|
+//! | fig2   | convergence curves (objective + residual)        |
+//! | fig3   | speedup vs #layers                               |
+//! | fig4   | speedup vs #workers vs GD-family baselines       |
+//! | fig5   | communication bytes vs accuracy per quant case   |
+//! | table3 | test accuracy, 9 datasets, 100 neurons           |
+//! | table4 | test accuracy, 9 datasets, 500 neurons           |
+//! | perf   | hot-path timing breakdown (EXPERIMENTS.md §Perf) |
+//!
+//! Every runner writes CSV(s) under `results/` and prints the paper-shaped
+//! summary to stdout. `--quick` shrinks epochs/seeds for smoke runs.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod perf;
+pub mod tables;
+
+use crate::backend::{ComputeBackend, NativeBackend, XlaBackend};
+use crate::config::{BackendKind, RootConfig};
+use crate::runtime::XlaRuntime;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Options shared by all runners.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    pub backend: BackendKind,
+    /// Shrink epochs/seeds for a fast smoke pass.
+    pub quick: bool,
+    pub epochs: Option<usize>,
+    pub seeds: Option<usize>,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions { backend: BackendKind::Native, quick: false, epochs: None, seeds: None }
+    }
+}
+
+/// Build the requested backend; XLA falls back to native per-op for shapes
+/// missing from the artifact manifest (logged).
+pub fn make_backend(cfg: &RootConfig, kind: BackendKind) -> Result<Arc<dyn ComputeBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Arc::new(NativeBackend::default())),
+        BackendKind::Xla => {
+            let rt = Arc::new(XlaRuntime::open(&cfg.artifacts_dir())?);
+            Ok(Arc::new(XlaBackend::new(rt)))
+        }
+    }
+}
+
+/// Dispatch by experiment id.
+pub fn run(cfg: &RootConfig, name: &str, opts: &ExpOptions) -> Result<()> {
+    match name {
+        "fig2" => fig2::run(cfg, opts),
+        "fig3" => fig3::run(cfg, opts),
+        "fig4" => fig4::run(cfg, opts),
+        "fig5" => fig5::run(cfg, opts),
+        "table3" => tables::run(cfg, opts, 100, "table3"),
+        "table4" => tables::run(cfg, opts, 500, "table4"),
+        "perf" => perf::run(cfg, opts),
+        "all" => {
+            for id in ["fig2", "fig3", "fig4", "fig5", "table3", "table4", "perf"] {
+                println!("\n================ {id} ================");
+                run(cfg, id, opts)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!(
+            "unknown experiment {other:?} (fig2|fig3|fig4|fig5|table3|table4|perf|all)"
+        )),
+    }
+}

@@ -1,0 +1,115 @@
+//! §Perf harness: hot-path timing breakdown for EXPERIMENTS.md.
+//!
+//! Times each ADMM phase and each backend op at a representative shape
+//! (10-layer / 256-hidden on pubmed), on both backends when artifacts are
+//! available, and reports the codec throughput. This is the measurement
+//! loop behind the optimize→re-measure iterations logged in
+//! EXPERIMENTS.md §Perf.
+
+use super::{make_backend, ExpOptions};
+use crate::backend::NativeBackend;
+use crate::config::{BackendKind, RootConfig, ScheduleMode, TrainConfig};
+use crate::coordinator::quant::{self, Codec};
+use crate::coordinator::Trainer;
+use crate::graph::datasets;
+use crate::metrics::write_csv_table;
+use crate::tensor::matrix::Mat;
+use crate::tensor::rng::Pcg32;
+use crate::util::bench::Bencher;
+use std::time::Instant;
+
+pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
+    let hidden = if opts.quick { 64 } else { 256 };
+    let ds = datasets::load(cfg, "pubmed")?;
+    let mut rows = Vec::new();
+
+    // --- end-to-end epoch on each backend ---
+    for kind in [BackendKind::Native, BackendKind::Xla] {
+        let backend = match make_backend(cfg, kind) {
+            Ok(b) => b,
+            Err(e) => {
+                println!("[perf] skipping {kind:?}: {e:#}");
+                continue;
+            }
+        };
+        let mut tc = TrainConfig::new("pubmed", hidden, 10, 4);
+        tc.nu = 0.01;
+        tc.rho = 1.0;
+        tc.schedule = ScheduleMode::Parallel;
+        let mut trainer = Trainer::new(backend, ds.clone(), tc);
+        trainer.measure = false;
+        trainer.run_epoch(); // warmup / compile
+        let reps = if opts.quick { 2 } else { 6 };
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            trainer.run_epoch();
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        println!("[perf] epoch ({kind:?}, parallel, measure=off): {ms:.1} ms");
+        rows.push(format!("epoch_{kind:?},{ms:.3}"));
+    }
+
+    // --- native op breakdown at the layer shape (h x h x V) ---
+    let mut rng = Pcg32::seeded(1);
+    let v = ds.nodes;
+    let w = Mat::randn(hidden, hidden, 0.1, &mut rng);
+    let p = Mat::randn(hidden, v, 1.0, &mut rng);
+    let b = Mat::randn(hidden, 1, 0.1, &mut rng);
+    let z = Mat::randn(hidden, v, 1.0, &mut rng);
+    let q = Mat::randn(hidden, v, 1.0, &mut rng);
+    let u = Mat::randn(hidden, v, 1.0, &mut rng);
+    let be = NativeBackend::single_thread();
+    let mut bench = Bencher::with_budget(if opts.quick { 150 } else { 600 });
+    bench.group(&format!("native ops @ {hidden}x{hidden}x{v} (1 thread)"));
+    use crate::backend::ComputeBackend;
+    bench.bench("p_update", || {
+        std::hint::black_box(be.p_update(&p, &w, &b, &z, &q, &u, 2.0, 0.01, 1.0));
+    });
+    bench.bench("w_update", || {
+        std::hint::black_box(be.w_update(&p, &w, &b, &z, 2.0, 0.01));
+    });
+    bench.bench("b_update", || {
+        std::hint::black_box(be.b_update(&w, &p, &z));
+    });
+    bench.bench("z_update_hidden", || {
+        std::hint::black_box(be.z_update_hidden(&z, &z, &q));
+    });
+    bench.bench("q_update", || {
+        std::hint::black_box(be.q_update(&p, &u, &z, 0.01, 1.0));
+    });
+    for r in &bench.results {
+        rows.push(format!("native_{},{:.6}", r.name, r.p50.as_secs_f64() * 1e3));
+    }
+
+    // --- codec throughput ---
+    let big = Mat::randn(hidden, v, 1.0, &mut rng);
+    let bytes_in = (big.len() * 4) as u64;
+    let mut cb = Bencher::with_budget(if opts.quick { 100 } else { 400 });
+    cb.group("codec round-trip (encode+decode)");
+    for codec in [Codec::None, Codec::Uniform { bits: 16 }, Codec::Uniform { bits: 8 }] {
+        cb.bench(&codec.label(), || {
+            std::hint::black_box(quant::transfer(codec, &big));
+        });
+        cb.note_throughput(bytes_in);
+    }
+    for r in &cb.results {
+        rows.push(format!("codec_{},{:.6}", r.name, r.p50.as_secs_f64() * 1e3));
+    }
+
+    // quantized-update overhead vs plain (the Q algorithm's compute cost)
+    let mut tb = Bencher::with_budget(if opts.quick { 100 } else { 300 });
+    tb.group("pdADMM-G-Q overhead");
+    tb.bench("p_update_quant", || {
+        std::hint::black_box(
+            be.p_update_quant(&p, &w, &b, &z, &q, &u, 2.0, 0.01, 1.0, -1.0, 1.0, 22.0),
+        );
+    });
+    for r in &tb.results {
+        rows.push(format!("native_{},{:.6}", r.name, r.p50.as_secs_f64() * 1e3));
+    }
+
+    let out = cfg.results_dir().join("perf_breakdown.csv");
+    write_csv_table(&out, "item,ms", &rows)?;
+    println!("[perf] wrote {}", out.display());
+    Ok(())
+}

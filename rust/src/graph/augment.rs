@@ -1,0 +1,129 @@
+//! Multi-hop feature augmentation (substrate S5): the "GA" in GA-MLP.
+//!
+//! With Ψ = {I, Ã, Ã², …, Ã^{K-1}} (the paper's §V-A setting, K = 4),
+//! the GA-MLP input is the stacked X = [HΨ₁; …; HΨ_K] ∈ R^{Kd × |V|}.
+//! We work in the transposed (nodes-major) domain so every SpMM streams
+//! row-major, then emit the features-major X the model consumes.
+
+use crate::graph::csr::Csr;
+use crate::tensor::matrix::Mat;
+
+/// Compute X = [H; HÃ; HÃ²; …] given nodes-major features `h_nd: (|V|, d)`.
+/// Returns `(K*d, |V|)` — the `p_1` of Problem 1.
+pub fn augment(adj_renorm: &Csr, h_nd: &Mat, hops: usize, threads: usize) -> Mat {
+    assert!(hops >= 1, "need at least the identity hop");
+    assert_eq!(adj_renorm.n, h_nd.rows);
+    let (v, d) = h_nd.shape();
+    let mut x = Mat::zeros(hops * d, v);
+
+    let mut cur = h_nd.clone(); // (V, d): H Ã^k in nodes-major layout
+    for k in 0..hops {
+        if k > 0 {
+            cur = adj_renorm.spmm(&cur, threads); // Ã is symmetric: Ã·(HÃ^{k-1})ᵀ
+        }
+        // transpose the hop block into rows [k*d, (k+1)*d) of X
+        for feat in 0..d {
+            let out_row = x.row_mut(k * d + feat);
+            for node in 0..v {
+                out_row[node] = cur.at(node, feat);
+            }
+        }
+    }
+    x
+}
+
+/// Augmentation statistics used by docs/experiments (input dim = K·d).
+pub fn augmented_dim(feat_dim: usize, hops: usize) -> usize {
+    feat_dim * hops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg32;
+
+    fn small_graph() -> Csr {
+        Csr::from_undirected_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]).renormalized()
+    }
+
+    #[test]
+    fn hop_zero_block_is_h_transposed() {
+        let mut rng = Pcg32::seeded(31);
+        let h = Mat::randn(5, 3, 1.0, &mut rng);
+        let x = augment(&small_graph(), &h, 4, 1);
+        assert_eq!(x.shape(), (12, 5));
+        for feat in 0..3 {
+            for node in 0..5 {
+                assert_eq!(x.at(feat, node), h.at(node, feat));
+            }
+        }
+    }
+
+    #[test]
+    fn hop_blocks_match_dense_powers() {
+        let mut rng = Pcg32::seeded(32);
+        let at = small_graph();
+        let h = Mat::randn(5, 3, 1.0, &mut rng);
+        let x = augment(&at, &h, 3, 2);
+        let a_dense = at.to_dense();
+        // block k (features-major) must equal (Ã^k · H)ᵀ = Hᵀ · Ã^k (symmetry)
+        let mut ak_h = h.clone();
+        for k in 0..3 {
+            if k > 0 {
+                ak_h = a_dense.matmul(&ak_h);
+            }
+            for feat in 0..3 {
+                for node in 0..5 {
+                    let got = x.at(k * 3 + feat, node);
+                    let want = ak_h.at(node, feat);
+                    assert!(
+                        (got - want).abs() < 1e-5,
+                        "hop {k} feat {feat} node {node}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn augmented_dim_is_k_times_d() {
+        assert_eq!(augmented_dim(128, 4), 512);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least the identity hop")]
+    fn rejects_zero_hops() {
+        let mut rng = Pcg32::seeded(33);
+        let h = Mat::randn(5, 2, 1.0, &mut rng);
+        augment(&small_graph(), &h, 0, 1);
+    }
+
+    #[test]
+    fn augmentation_smooths_features_toward_neighbors() {
+        // After one Ã hop, adjacent nodes' representations are closer than
+        // the raw features (over-smoothing is the GA-MLP's premise).
+        let mut rng = Pcg32::seeded(34);
+        let at = Csr::from_undirected_edges(
+            40,
+            &(0..39).map(|i| (i as u32, i as u32 + 1)).collect::<Vec<_>>(),
+        )
+        .renormalized();
+        let h = Mat::randn(40, 8, 1.0, &mut rng);
+        let x = augment(&at, &h, 2, 1);
+        let dist = |row_base: usize, a: usize, b: usize| -> f32 {
+            (0..8)
+                .map(|f| {
+                    let d = x.at(row_base + f, a) - x.at(row_base + f, b);
+                    d * d
+                })
+                .sum::<f32>()
+        };
+        let mut raw = 0.0;
+        let mut smooth = 0.0;
+        for i in 0..39 {
+            raw += dist(0, i, i + 1);
+            smooth += dist(8, i, i + 1);
+        }
+        assert!(smooth < raw, "smoothed {smooth} raw {raw}");
+    }
+}

@@ -1,0 +1,213 @@
+//! Compressed sparse row matrices over `|V|` nodes (substrate S3).
+//!
+//! Only what GA-MLP preprocessing needs: symmetric adjacency from an edge
+//! list, the GCN-style renormalized operator, and a dense×sparse product
+//! that runs in the transposed domain so all accesses stream row-major.
+
+use crate::tensor::matrix::Mat;
+use crate::util::threads::parallel_chunks;
+
+/// Symmetric weighted sparse matrix, CSR layout.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub n: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build a symmetric unweighted adjacency from undirected edges;
+    /// duplicates and self-loops in the input are dropped.
+    pub fn from_undirected_edges(n: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            let (a, b) = (a as usize, b as usize);
+            assert!(a < n && b < n, "edge out of range");
+            if a == b {
+                continue;
+            }
+            adj[a].push(b as u32);
+            adj[b].push(a as u32);
+        }
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::new();
+        indptr.push(0);
+        for row in adj.iter_mut() {
+            row.sort_unstable();
+            row.dedup();
+            indices.extend_from_slice(row);
+            indptr.push(indices.len());
+        }
+        let values = vec![1.0; indices.len()];
+        Csr { n, indptr, indices, values }
+    }
+
+    /// Number of stored entries (2x the undirected edge count).
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Degree (row sum of the unweighted pattern).
+    pub fn degrees(&self) -> Vec<usize> {
+        (0..self.n)
+            .map(|i| self.indptr[i + 1] - self.indptr[i])
+            .collect()
+    }
+
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    /// The paper's renormalized operator (Kipf & Welling):
+    /// Ã = (D+I)^{-1/2} (A+I) (D+I)^{-1/2}.
+    /// Output includes the weighted self-loops, stays symmetric.
+    pub fn renormalized(&self) -> Csr {
+        let deg = self.degrees();
+        let inv_sqrt: Vec<f32> = deg.iter().map(|&d| 1.0 / ((d as f32 + 1.0).sqrt())).collect();
+        let mut indptr = Vec::with_capacity(self.n + 1);
+        let mut indices = Vec::with_capacity(self.nnz() + self.n);
+        let mut values = Vec::with_capacity(self.nnz() + self.n);
+        indptr.push(0);
+        for i in 0..self.n {
+            let (cols, _) = self.row(i);
+            // merge the self loop into sorted position
+            let mut inserted = false;
+            for &j in cols {
+                let j = j as usize;
+                if !inserted && j > i {
+                    indices.push(i as u32);
+                    values.push(inv_sqrt[i] * inv_sqrt[i]);
+                    inserted = true;
+                }
+                indices.push(j as u32);
+                values.push(inv_sqrt[i] * inv_sqrt[j]);
+            }
+            if !inserted {
+                indices.push(i as u32);
+                values.push(inv_sqrt[i] * inv_sqrt[i]);
+            }
+            indptr.push(indices.len());
+        }
+        Csr { n: self.n, indptr, indices, values }
+    }
+
+    /// `Y = S @ X` for dense `X: (n, d)` — the transposed-domain product
+    /// used by the augmentation (features stored nodes-major there).
+    /// Thread-parallel over output rows.
+    pub fn spmm(&self, x: &Mat, threads: usize) -> Mat {
+        assert_eq!(x.rows, self.n, "spmm dim mismatch");
+        let d = x.cols;
+        let mut y = Mat::zeros(self.n, d);
+        parallel_chunks(threads, self.n, &mut y.data, d, |row0, chunk| {
+            for (di, yrow) in chunk.chunks_mut(d).enumerate() {
+                let i = row0 + di;
+                let (cols, vals) = self.row(i);
+                for (&j, &v) in cols.iter().zip(vals) {
+                    let xrow = x.row(j as usize);
+                    for (yv, &xv) in yrow.iter_mut().zip(xrow) {
+                        *yv += v * xv;
+                    }
+                }
+            }
+        });
+        y
+    }
+
+    /// Dense copy (tests only — O(n^2)).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.n, self.n);
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                *m.at_mut(i, j as usize) = v;
+            }
+        }
+        m
+    }
+
+    /// Symmetry check (tests / generator invariants).
+    pub fn is_symmetric(&self, tol: f32) -> bool {
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                let (jc, jv) = self.row(j as usize);
+                match jc.binary_search(&(i as u32)) {
+                    Ok(pos) => {
+                        if (jv[pos] - v).abs() > tol {
+                            return false;
+                        }
+                    }
+                    Err(_) => return false,
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Csr {
+        Csr::from_undirected_edges(4, &[(0, 1), (1, 2), (2, 0)])
+    }
+
+    #[test]
+    fn builds_symmetric_dedup_adjacency() {
+        let a = Csr::from_undirected_edges(3, &[(0, 1), (1, 0), (0, 0), (1, 2)]);
+        assert_eq!(a.nnz(), 4); // (0,1),(1,0),(1,2),(2,1)
+        assert_eq!(a.degrees(), vec![1, 2, 1]);
+        assert!(a.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn renormalized_matches_formula_on_triangle() {
+        let a = triangle();
+        let at = a.renormalized();
+        assert!(at.is_symmetric(1e-6));
+        // nodes 0,1,2 have degree 2 -> (d+1) = 3; node 3 isolated -> 1.
+        let dense = at.to_dense();
+        assert!((dense.at(0, 0) - 1.0 / 3.0).abs() < 1e-6);
+        assert!((dense.at(0, 1) - 1.0 / 3.0).abs() < 1e-6);
+        assert!((dense.at(3, 3) - 1.0).abs() < 1e-6);
+        assert_eq!(dense.at(0, 3), 0.0);
+        // Row sums of Ã for a regular component equal 1.
+        let s: f32 = (0..3).map(|j| dense.at(0, j)).sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn renormalized_rows_stay_sorted() {
+        let a = Csr::from_undirected_edges(5, &[(0, 4), (0, 1), (2, 3), (1, 4)]);
+        let at = a.renormalized();
+        for i in 0..at.n {
+            let (cols, _) = at.row(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i}: {cols:?}");
+        }
+    }
+
+    #[test]
+    fn spmm_matches_dense_product() {
+        use crate::tensor::rng::Pcg32;
+        let mut rng = Pcg32::seeded(21);
+        let a = Csr::from_undirected_edges(
+            8,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7), (7, 0), (1, 5)],
+        )
+        .renormalized();
+        let x = Mat::randn(8, 6, 1.0, &mut rng);
+        let want = a.to_dense().matmul(&x);
+        for t in [1, 4] {
+            assert!(a.spmm(&x, t).max_abs_diff(&want) < 1e-5, "threads {t}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "edge out of range")]
+    fn rejects_out_of_range_edges() {
+        Csr::from_undirected_edges(2, &[(0, 5)]);
+    }
+}

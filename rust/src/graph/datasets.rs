@@ -1,0 +1,217 @@
+//! The nine-benchmark registry (substrate S4): turns a `DatasetSpec` into a
+//! ready-to-train `Dataset` — SBM graph, renormalized operator, multi-hop
+//! augmented features, one-hot labels and train/val/test splits.
+//!
+//! Generation is deterministic in the spec's seed, and memoised per process
+//! (the experiment harnesses reuse datasets across many runs).
+
+use crate::config::{DatasetSpec, RootConfig};
+use crate::graph::augment::augment;
+use crate::graph::generator::{self, SbmSpec};
+use crate::tensor::matrix::Mat;
+use crate::tensor::rng::Pcg32;
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// Augmented input X = p_1, shape (K*d, |V|).
+    pub x: Arc<Mat>,
+    /// One-hot labels, shape (C, |V|).
+    pub y_onehot: Arc<Mat>,
+    /// Normalized training mask (1, |V|): 1/n_train on train columns.
+    pub maskn_train: Arc<Mat>,
+    pub labels: Arc<Vec<usize>>,
+    pub train_idx: Arc<Vec<usize>>,
+    pub val_idx: Arc<Vec<usize>>,
+    pub test_idx: Arc<Vec<usize>>,
+    pub classes: usize,
+    pub nodes: usize,
+    pub input_dim: usize,
+    pub edges_stored: usize,
+}
+
+impl Dataset {
+    /// Accuracy of predictions (argmax of logits) over an index set.
+    pub fn accuracy(&self, logits: &Mat, idx: &[usize]) -> f64 {
+        assert_eq!(logits.cols, self.nodes);
+        let preds = logits.argmax_cols();
+        if idx.is_empty() {
+            return 0.0;
+        }
+        let correct = idx.iter().filter(|&&v| preds[v] == self.labels[v]).count();
+        correct as f64 / idx.len() as f64
+    }
+
+    pub fn train_accuracy(&self, logits: &Mat) -> f64 {
+        self.accuracy(logits, &self.train_idx)
+    }
+    pub fn val_accuracy(&self, logits: &Mat) -> f64 {
+        self.accuracy(logits, &self.val_idx)
+    }
+    pub fn test_accuracy(&self, logits: &Mat) -> f64 {
+        self.accuracy(logits, &self.test_idx)
+    }
+}
+
+/// Build a dataset from its spec (pure function of the spec).
+pub fn build(spec: &DatasetSpec, hops: usize, threads: usize) -> Dataset {
+    let g = generator::generate(&SbmSpec {
+        nodes: spec.nodes,
+        classes: spec.classes,
+        avg_degree: spec.avg_degree,
+        homophily_ratio: spec.homophily_ratio,
+        feat_dim: spec.feat_dim,
+        feature_signal: spec.feature_signal,
+        label_noise: spec.label_noise,
+        seed: spec.seed,
+    });
+    let at = g.adjacency.renormalized();
+    let x = augment(&at, &g.features_nd, hops, threads);
+
+    let n = spec.nodes;
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg32::new(spec.seed, 0x5711f5); // split stream
+    rng.shuffle(&mut order);
+    let take = |from: usize, count: usize| -> Vec<usize> {
+        let mut v: Vec<usize> = order[from..(from + count).min(n)].to_vec();
+        v.sort_unstable();
+        v
+    };
+    let train_idx = take(0, spec.train);
+    let val_idx = take(spec.train, spec.val);
+    let test_idx = take(spec.train + spec.val, spec.test);
+
+    let mut y = Mat::zeros(spec.classes, n);
+    for (v, &c) in g.labels.iter().enumerate() {
+        *y.at_mut(c, v) = 1.0;
+    }
+    let mut maskn = Mat::zeros(1, n);
+    let inv = 1.0 / train_idx.len().max(1) as f32;
+    for &v in &train_idx {
+        maskn.data[v] = inv;
+    }
+
+    Dataset {
+        name: spec.name.clone(),
+        input_dim: x.rows,
+        edges_stored: g.adjacency.nnz(),
+        x: Arc::new(x),
+        y_onehot: Arc::new(y),
+        maskn_train: Arc::new(maskn),
+        labels: Arc::new(g.labels),
+        train_idx: Arc::new(train_idx),
+        val_idx: Arc::new(val_idx),
+        test_idx: Arc::new(test_idx),
+        classes: spec.classes,
+        nodes: n,
+    }
+}
+
+static CACHE: Lazy<Mutex<HashMap<String, Dataset>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Memoised load by name through the root config.
+pub fn load(cfg: &RootConfig, name: &str) -> anyhow::Result<Dataset> {
+    {
+        let cache = CACHE.lock().unwrap();
+        if let Some(d) = cache.get(name) {
+            return Ok(d.clone());
+        }
+    }
+    let spec = cfg.dataset(name)?;
+    let ds = build(spec, cfg.hops, crate::tensor::ops::default_threads());
+    CACHE.lock().unwrap().insert(name.to_string(), ds.clone());
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> DatasetSpec {
+        DatasetSpec {
+            name: "tiny".into(),
+            nodes: 120,
+            avg_degree: 6.0,
+            classes: 3,
+            feat_dim: 8,
+            train: 30,
+            val: 30,
+            test: 40,
+            homophily_ratio: 8.0,
+            feature_signal: 1.2,
+            label_noise: 0.0,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn builds_consistent_shapes() {
+        let ds = build(&tiny_spec(), 4, 2);
+        assert_eq!(ds.x.shape(), (32, 120));
+        assert_eq!(ds.y_onehot.shape(), (3, 120));
+        assert_eq!(ds.maskn_train.shape(), (1, 120));
+        assert_eq!(ds.train_idx.len(), 30);
+        assert_eq!(ds.val_idx.len(), 30);
+        assert_eq!(ds.test_idx.len(), 40);
+    }
+
+    #[test]
+    fn splits_are_disjoint() {
+        let ds = build(&tiny_spec(), 2, 1);
+        let mut all: Vec<usize> = ds
+            .train_idx
+            .iter()
+            .chain(ds.val_idx.iter())
+            .chain(ds.test_idx.iter())
+            .copied()
+            .collect();
+        let before = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), before, "split overlap detected");
+    }
+
+    #[test]
+    fn onehot_columns_sum_to_one() {
+        let ds = build(&tiny_spec(), 2, 1);
+        for v in 0..ds.nodes {
+            let s: f32 = (0..ds.classes).map(|c| ds.y_onehot.at(c, v)).sum();
+            assert_eq!(s, 1.0);
+        }
+    }
+
+    #[test]
+    fn maskn_sums_to_one_over_train() {
+        let ds = build(&tiny_spec(), 2, 1);
+        let s: f32 = ds.maskn_train.data.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        for &v in ds.train_idx.iter() {
+            assert!(ds.maskn_train.data[v] > 0.0);
+        }
+    }
+
+    #[test]
+    fn accuracy_of_perfect_and_wrong_logits() {
+        let ds = build(&tiny_spec(), 2, 1);
+        // perfect logits: one-hot * 10
+        let perfect = ds.y_onehot.scale(10.0);
+        assert_eq!(ds.test_accuracy(&perfect), 1.0);
+        // all-zero logits predict class 0 -> roughly 1/3 accuracy
+        let zero = Mat::zeros(ds.classes, ds.nodes);
+        let acc = ds.test_accuracy(&zero);
+        assert!(acc < 0.6);
+    }
+
+    #[test]
+    fn registry_load_is_memoised_and_matches_spec() {
+        let cfg = RootConfig::load_default().unwrap();
+        let a = load(&cfg, "citeseer").unwrap();
+        let b = load(&cfg, "citeseer").unwrap();
+        assert!(Arc::ptr_eq(&a.x, &b.x), "expected cache hit");
+        assert_eq!(a.nodes, 850);
+        assert_eq!(a.input_dim, 4 * 384);
+    }
+}

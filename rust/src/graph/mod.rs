@@ -1,0 +1,12 @@
+//! Graph substrate (S3-S5): sparse adjacency, the renormalized operator
+//! Ã = (D+I)^{-1/2}(A+I)(D+I)^{-1/2}, the multi-hop feature augmentation
+//! X = [H; HÃ; HÃ²; HÃ³] that defines a GA-MLP, the SBM synthetic dataset
+//! generator, and the nine-benchmark registry.
+
+pub mod augment;
+pub mod csr;
+pub mod datasets;
+pub mod generator;
+
+pub use csr::Csr;
+pub use datasets::Dataset;

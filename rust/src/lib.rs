@@ -1,0 +1,32 @@
+//! pdADMM-G: quantized model parallelism for graph-augmented MLPs via a
+//! gradient-free ADMM framework — full-system reproduction.
+//!
+//! Three-layer architecture (DESIGN.md §3):
+//!
+//! * **L3 (this crate)** — the coordinator: layer-per-worker model
+//!   parallelism, byte-accounted channels with quantization codecs,
+//!   greedy layerwise training, GD-family baselines, experiment harnesses.
+//! * **L2 (python/compile/model.py)** — the ADMM subproblem solvers and the
+//!   GA-MLP forward/grad graphs in JAX, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   residual/matmul hot spots, validated against a pure-jnp oracle.
+//!
+//! The crate is fully offline-capable: CLI parsing, JSON, RNG, the thread
+//! substrate, the bench harness and the property-testing mini-framework are
+//! all first-class modules here (DESIGN.md §4).
+
+pub mod admm;
+pub mod backend;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod graph;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use config::RootConfig;
+pub use tensor::matrix::Mat;

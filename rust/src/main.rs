@@ -1,0 +1,229 @@
+//! `repro` — the pdADMM-G launcher (L3 entrypoint).
+//!
+//! Subcommands: `train` (one pdADMM-G/-Q run), `baseline` (one GD-family
+//! run), `exp` (regenerate a paper table/figure), `datasets`, `artifacts`.
+
+use anyhow::Result;
+use pdadmm_g::backend;
+use pdadmm_g::cli::args::{Args, USAGE};
+use pdadmm_g::config::{BackendKind, QuantMode, RootConfig, ScheduleMode, TrainConfig};
+use pdadmm_g::coordinator::greedy::train_greedy;
+use pdadmm_g::coordinator::Trainer;
+use pdadmm_g::experiments::{self, ExpOptions};
+use pdadmm_g::graph::datasets;
+use pdadmm_g::optim::{train_baseline, BaselineConfig, Optimizer, OptimizerKind};
+use pdadmm_g::runtime::XlaRuntime;
+use pdadmm_g::util::fmt_bytes;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        eprintln!("\n{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    if let Some(t) = args.flags.get_parse::<usize>("threads")? {
+        pdadmm_g::tensor::ops::set_default_threads(t);
+    }
+    let cfg = RootConfig::load_default()?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&cfg, &args),
+        "baseline" => cmd_baseline(&cfg, &args),
+        "exp" => cmd_exp(&cfg, &args),
+        "datasets" => cmd_datasets(&cfg),
+        "artifacts" => cmd_artifacts(&cfg),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown subcommand {other:?}")),
+    }
+}
+
+fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
+    let dataset = args
+        .flags
+        .get("dataset")
+        .ok_or_else(|| anyhow::anyhow!("--dataset is required"))?
+        .to_string();
+    let ds = datasets::load(cfg, &dataset)?;
+    let mut tc = TrainConfig::new(
+        &dataset,
+        args.flags.get_or("hidden", 100usize)?,
+        args.flags.get_or("layers", 10usize)?,
+        args.flags.get_or("epochs", 100usize)?,
+    );
+    tc.nu = args.flags.get_or("nu", cfg.admm.nu)?;
+    tc.rho = args.flags.get_or("rho", 0.1f32)?;
+    tc.seed = args.flags.get_or("seed", 0u64)?;
+    tc.backend = args.flags.get_or("backend", BackendKind::Xla)?;
+    tc.quant = args.flags.get_or("quant", QuantMode::None)?;
+    tc.schedule = args.flags.get_or("schedule", ScheduleMode::Parallel)?;
+    tc.workers = args.flags.get_or("workers", 0usize)?;
+    if let Some(stages) = args.flags.get("greedy") {
+        tc.greedy_stages = stages
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()?;
+    }
+    let backend = experiments::make_backend(cfg, tc.backend)?;
+
+    println!(
+        "training {} on {dataset}: L={} h={} epochs={} nu={} rho={} quant={} backend={:?}",
+        if tc.quant == QuantMode::None { "pdADMM-G" } else { "pdADMM-G-Q" },
+        tc.layers, tc.hidden, tc.epochs, tc.nu, tc.rho, tc.quant.label(), tc.backend,
+    );
+    let log = if tc.greedy_stages.is_empty() {
+        let mut trainer = Trainer::new(backend, ds, tc);
+        let mut log = pdadmm_g::metrics::TrainLog::default();
+        for e in 0..trainer.cfg.epochs {
+            let rec = trainer.run_epoch();
+            if e % 10 == 0 || e + 1 == trainer.cfg.epochs {
+                println!(
+                    "epoch {e:>4}  obj {:>12.4e}  res {:>10.3e}  train {:.3}  val {:.3}  test {:.3}  ({:.0} ms, comm {})",
+                    rec.objective, rec.residual, rec.train_acc, rec.val_acc, rec.test_acc,
+                    rec.epoch_ms, fmt_bytes(rec.comm_bytes),
+                );
+            }
+            log.push(rec);
+        }
+        log.method = if trainer.cfg.quant == QuantMode::None {
+            "pdADMM-G".into()
+        } else {
+            "pdADMM-G-Q".into()
+        };
+        log.dataset = dataset.clone();
+        log
+    } else {
+        train_greedy(backend, ds, tc)
+    };
+    let (best_val, test) = log.test_at_best_val();
+    println!(
+        "done: best val {best_val:.3} -> test {test:.3}; total comm {}",
+        fmt_bytes(log.total_comm_bytes())
+    );
+    if let Some(out) = args.flags.get("out") {
+        log.write_csv(std::path::Path::new(out))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_baseline(cfg: &RootConfig, args: &Args) -> Result<()> {
+    let dataset = args
+        .flags
+        .get("dataset")
+        .ok_or_else(|| anyhow::anyhow!("--dataset is required"))?;
+    let kind: OptimizerKind = args
+        .flags
+        .get("optimizer")
+        .ok_or_else(|| anyhow::anyhow!("--optimizer is required"))?
+        .parse()?;
+    let ds = datasets::load(cfg, dataset)?;
+    let mut bc = BaselineConfig::new(
+        kind,
+        args.flags.get_or("hidden", 100usize)?,
+        args.flags.get_or("layers", 10usize)?,
+        args.flags.get_or("epochs", 100usize)?,
+    );
+    bc.lr = args.flags.get_or("lr", Optimizer::default_lr(kind))?;
+    bc.seed = args.flags.get_or("seed", 0u64)?;
+    bc.workers = args.flags.get_or("workers", 1usize)?;
+    let backend_kind: BackendKind = args.flags.get_or("backend", BackendKind::Native)?;
+    let backend = experiments::make_backend(cfg, backend_kind)?;
+    println!(
+        "training {} baseline on {dataset}: L={} h={} epochs={} lr={} workers={}",
+        kind.label(), bc.layers, bc.hidden, bc.epochs, bc.lr, bc.workers
+    );
+    let log = train_baseline(backend, &ds, &bc);
+    for (e, rec) in log.records.iter().enumerate() {
+        if e % 20 == 0 || e + 1 == log.records.len() {
+            println!(
+                "epoch {e:>4}  loss {:>10.4e}  train {:.3}  val {:.3}  test {:.3}",
+                rec.objective, rec.train_acc, rec.val_acc, rec.test_acc
+            );
+        }
+    }
+    let (best_val, test) = log.test_at_best_val();
+    println!("done: best val {best_val:.3} -> test {test:.3}");
+    if let Some(out) = args.flags.get("out") {
+        log.write_csv(std::path::Path::new(out))?;
+    }
+    Ok(())
+}
+
+fn cmd_exp(cfg: &RootConfig, args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("exp requires an experiment id"))?;
+    let opts = ExpOptions {
+        backend: args.flags.get_or("backend", BackendKind::Native)?,
+        quick: args.flags.has("quick"),
+        epochs: args.flags.get_parse("epochs")?,
+        seeds: args.flags.get_parse("seeds")?,
+    };
+    experiments::run(cfg, name, &opts)
+}
+
+fn cmd_datasets(cfg: &RootConfig) -> Result<()> {
+    println!(
+        "{:<18} {:>7} {:>9} {:>7} {:>6} {:>6} {:>13} {:>10}",
+        "dataset", "nodes", "edges", "classes", "feat", "n0", "train/val/test", "homophily"
+    );
+    for spec in &cfg.datasets {
+        let ds = datasets::load(cfg, &spec.name)?;
+        println!(
+            "{:<18} {:>7} {:>9} {:>7} {:>6} {:>6} {:>5}/{}/{} {:>9.3}",
+            spec.name,
+            ds.nodes,
+            ds.edges_stored / 2,
+            ds.classes,
+            spec.feat_dim,
+            ds.input_dim,
+            ds.train_idx.len(),
+            ds.val_idx.len(),
+            ds.test_idx.len(),
+            {
+                // quick empirical homophily recomputation
+                let g = pdadmm_g::graph::generator::generate(
+                    &pdadmm_g::graph::generator::SbmSpec {
+                        nodes: spec.nodes,
+                        classes: spec.classes,
+                        avg_degree: spec.avg_degree,
+                        homophily_ratio: spec.homophily_ratio,
+                        feat_dim: 1,
+                        feature_signal: 0.0,
+                        label_noise: 0.0,
+                        seed: spec.seed,
+                    },
+                );
+                pdadmm_g::graph::generator::edge_homophily(&g.adjacency, &g.labels)
+            }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(cfg: &RootConfig) -> Result<()> {
+    let rt = XlaRuntime::open(&cfg.artifacts_dir())?;
+    let mut by_op: std::collections::BTreeMap<String, usize> = Default::default();
+    for name in rt.manifest.entries.keys() {
+        let op = name.split("__").next().unwrap_or("?").to_string();
+        *by_op.entry(op).or_default() += 1;
+    }
+    println!(
+        "artifact manifest: {} entries (variant {})",
+        rt.manifest.entries.len(),
+        rt.manifest.variant
+    );
+    for (op, n) in by_op {
+        println!("  {op:<18} x{n}");
+    }
+    let _ = backend::XlaBackend::new(std::sync::Arc::new(rt));
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Metrics (substrate S16): per-epoch training records, communication
+//! accounting, and CSV/JSON sinks under `results/`.
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+
+/// One epoch of any trainer (ADMM or baseline).
+#[derive(Clone, Debug, Default)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    /// Augmented Lagrangian (ADMM) or training loss (baselines).
+    pub objective: f64,
+    /// Primal residual sum ||p_{l+1} - q_l||^2 (ADMM only; 0 for baselines).
+    pub residual: f64,
+    pub risk: f64,
+    pub train_acc: f64,
+    pub val_acc: f64,
+    pub test_acc: f64,
+    pub epoch_ms: f64,
+    /// Bytes moved through coordinator channels this epoch.
+    pub comm_bytes: u64,
+}
+
+/// Full run log with run-level metadata.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub method: String,
+    pub dataset: String,
+    pub backend: String,
+    pub quant: String,
+    pub layers: usize,
+    pub hidden: usize,
+    pub seed: u64,
+    pub records: Vec<EpochRecord>,
+}
+
+impl TrainLog {
+    pub fn push(&mut self, rec: EpochRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn last(&self) -> Option<&EpochRecord> {
+        self.records.last()
+    }
+
+    pub fn total_comm_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.comm_bytes).sum()
+    }
+
+    pub fn mean_epoch_ms(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.epoch_ms).sum::<f64>() / self.records.len() as f64
+    }
+
+    /// Best validation accuracy and the test accuracy at that epoch — the
+    /// model-selection rule the paper's tables use.
+    pub fn test_at_best_val(&self) -> (f64, f64) {
+        let mut best = (0.0, 0.0);
+        let mut best_val = f64::NEG_INFINITY;
+        for r in &self.records {
+            if r.val_acc > best_val {
+                best_val = r.val_acc;
+                best = (r.val_acc, r.test_acc);
+            }
+        }
+        best
+    }
+
+    pub fn csv_header() -> &'static str {
+        "epoch,objective,residual,risk,train_acc,val_acc,test_acc,epoch_ms,comm_bytes"
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(Self::csv_header());
+        out.push('\n');
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{:.6e},{:.6e},{:.6e},{:.4},{:.4},{:.4},{:.3},{}\n",
+                r.epoch,
+                r.objective,
+                r.residual,
+                r.risk,
+                r.train_acc,
+                r.val_acc,
+                r.test_acc,
+                r.epoch_ms,
+                r.comm_bytes
+            ));
+        }
+        out
+    }
+
+    pub fn meta_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(&self.method)),
+            ("dataset", Json::str(&self.dataset)),
+            ("backend", Json::str(&self.backend)),
+            ("quant", Json::str(&self.quant)),
+            ("layers", Json::num(self.layers as f64)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("epochs", Json::num(self.records.len() as f64)),
+            ("total_comm_bytes", Json::num(self.total_comm_bytes() as f64)),
+            ("mean_epoch_ms", Json::num(self.mean_epoch_ms())),
+        ])
+    }
+
+    pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Write a table of rows (used by the experiment harnesses for the
+/// paper-shaped output files).
+pub fn write_csv_table(path: &Path, header: &str, rows: &[String]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log_with(vals: &[(f64, f64)]) -> TrainLog {
+        let mut log = TrainLog {
+            method: "pdadmm-g".into(),
+            ..Default::default()
+        };
+        for (i, &(val, test)) in vals.iter().enumerate() {
+            log.push(EpochRecord {
+                epoch: i,
+                val_acc: val,
+                test_acc: test,
+                comm_bytes: 100,
+                epoch_ms: 2.0,
+                ..Default::default()
+            });
+        }
+        log
+    }
+
+    #[test]
+    fn test_at_best_val_selects_correctly() {
+        let log = log_with(&[(0.5, 0.4), (0.8, 0.7), (0.6, 0.9)]);
+        assert_eq!(log.test_at_best_val(), (0.8, 0.7));
+    }
+
+    #[test]
+    fn totals_and_means() {
+        let log = log_with(&[(0.1, 0.1), (0.2, 0.2)]);
+        assert_eq!(log.total_comm_bytes(), 200);
+        assert!((log.mean_epoch_ms() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_round_trip_shape() {
+        let log = log_with(&[(0.1, 0.2)]);
+        let csv = log.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0].split(',').count(),
+            lines[1].split(',').count(),
+            "header/row column mismatch"
+        );
+    }
+
+    #[test]
+    fn meta_json_has_run_fields() {
+        let log = log_with(&[(0.1, 0.2)]);
+        let j = log.meta_json();
+        assert_eq!(j.get("method").unwrap().as_str(), Some("pdadmm-g"));
+        assert_eq!(j.get("epochs").unwrap().as_usize(), Some(1));
+    }
+}

@@ -1,0 +1,10 @@
+//! GD-family baseline optimizers (substrate S15): the paper's comparison
+//! methods — GD, Adadelta, Adagrad, Adam — training the same GA-MLP with
+//! full-batch backpropagation, plus the data-parallel sharded variant used
+//! by the Fig.-4 worker-scaling comparison.
+
+pub mod baseline;
+pub mod rules;
+
+pub use baseline::{train_baseline, BaselineConfig};
+pub use rules::{Optimizer, OptimizerKind};

@@ -1,0 +1,250 @@
+//! PJRT runtime (substrate S9): load AOT HLO-text artifacts, compile them
+//! once on the CPU PJRT client, execute them from the L3 hot path.
+//!
+//! Concurrency note: the `xla` crate's `PjRtClient` is `Rc`-based and
+//! `Literal` wraps raw pointers, so neither is `Send`. All XLA objects are
+//! therefore confined inside `RuntimeInner` behind a `Mutex`; the public
+//! API exchanges only `Mat`s/`f32`s. Execution thus serializes at the
+//! dispatch level — XLA's internal intra-op thread pool still parallelizes
+//! each op — which is why the worker-scaling experiments (Figs. 3/4) run on
+//! the native backend where thread placement is explicit (DESIGN.md §2).
+
+use crate::tensor::matrix::Mat;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One artifact from `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub variant: String,
+    pub entries: HashMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let v = json::parse_file(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let mut entries = HashMap::new();
+        for e in v.req("entries")?.as_arr().ok_or_else(|| anyhow!("entries array"))? {
+            let me = ManifestEntry {
+                name: e.req("name")?.as_str().unwrap_or_default().to_string(),
+                file: e.req("file")?.as_str().unwrap_or_default().to_string(),
+                n_inputs: e.req("n_inputs")?.as_usize().unwrap_or(0),
+                n_outputs: e.req("n_outputs")?.as_usize().unwrap_or(1),
+            };
+            entries.insert(me.name.clone(), me);
+        }
+        Ok(Manifest {
+            variant: v
+                .get("variant")
+                .and_then(Json::as_str)
+                .unwrap_or("flat")
+                .to_string(),
+            entries,
+        })
+    }
+}
+
+/// Arguments to a compiled op: matrices or shape-(1,) scalars.
+pub enum Arg<'a> {
+    M(&'a Mat),
+    S(f32),
+}
+
+struct RuntimeInner {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: `RuntimeInner` is only ever touched through `XlaRuntime::with`,
+// which holds the outer `Mutex` for the entire lifetime of every XLA object
+// created inside (client handles, literals, buffers). No `Rc` clone or raw
+// pointer escapes the critical section, so cross-thread access is fully
+// serialized.
+unsafe impl Send for RuntimeInner {}
+
+pub struct XlaRuntime {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    inner: Mutex<Option<RuntimeInner>>,
+    /// Dispatch/compile statistics (perf accounting).
+    pub stats: Mutex<RuntimeStats>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (does not create the PJRT client yet —
+    /// that happens on first execution).
+    pub fn open(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(dir)?;
+        Ok(XlaRuntime {
+            dir: dir.to_path_buf(),
+            manifest,
+            inner: Mutex::new(None),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.entries.contains_key(name)
+    }
+
+    /// Execute artifact `name` with `args`; returns the output matrices.
+    /// (All ops are lowered with `return_tuple=True`, so the root is always
+    /// a tuple — scalars come back as `(1,)` Mats.)
+    pub fn exec(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Mat>> {
+        let entry = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        if entry.n_inputs != args.len() {
+            return Err(anyhow!(
+                "artifact {name}: expected {} inputs, got {}",
+                entry.n_inputs,
+                args.len()
+            ));
+        }
+        let mut guard = self.inner.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(RuntimeInner {
+                client: xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?,
+                executables: HashMap::new(),
+            });
+        }
+        let inner = guard.as_mut().unwrap();
+
+        if !inner.executables.contains_key(name) {
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            inner.executables.insert(name.to_string(), exe);
+            self.stats.lock().unwrap().compiles += 1;
+        }
+        let exe = inner.executables.get(name).unwrap();
+
+        // Marshal inputs inside the lock.
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| -> Result<xla::Literal> {
+                match a {
+                    Arg::M(m) => Ok(xla::Literal::vec1(&m.data)
+                        .reshape(&[m.rows as i64, m.cols as i64])
+                        .map_err(|e| anyhow!("reshape: {e:?}"))?),
+                    Arg::S(s) => Ok(xla::Literal::vec1(&[*s])),
+                }
+            })
+            .collect::<Result<_>>()?;
+
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        self.stats.lock().unwrap().executions += 1;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            out.push(literal_to_mat(&lit)?);
+        }
+        if out.len() != entry.n_outputs {
+            return Err(anyhow!(
+                "artifact {name}: expected {} outputs, got {}",
+                entry.n_outputs,
+                out.len()
+            ));
+        }
+        Ok(out)
+    }
+}
+
+fn literal_to_mat(lit: &xla::Literal) -> Result<Mat> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("output shape: {e:?}"))?;
+    let dims = shape.dims();
+    let data: Vec<f32> = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("output to_vec: {e:?}"))?;
+    let (rows, cols) = match dims.len() {
+        0 => (1, 1),
+        1 => (dims[0] as usize, 1),
+        2 => (dims[0] as usize, dims[1] as usize),
+        n => return Err(anyhow!("unexpected output rank {n}")),
+    };
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+// ----------------------------------------------------------------------------
+// Artifact naming — must stay in lockstep with python/compile/aot.py.
+// ----------------------------------------------------------------------------
+
+pub fn layer_op_key(op: &str, n_in: usize, n_out: usize, v: usize) -> String {
+    format!("{op}__i{n_in}_o{n_out}_v{v}")
+}
+
+pub fn elementwise_op_key(op: &str, n_out: usize, v: usize) -> String {
+    format!("{op}__o{n_out}_v{v}")
+}
+
+pub fn risk_op_key(op: &str, c: usize, v: usize) -> String {
+    format!("{op}__c{c}_v{v}")
+}
+
+pub fn model_key(op: &str, n0: usize, h: usize, layers: usize, c: usize, v: usize) -> String {
+    format!("{op}__n{n0}_h{h}_L{layers}_c{c}_v{v}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_naming_matches_aot_py() {
+        assert_eq!(layer_op_key("p_update", 256, 64, 1000), "p_update__i256_o64_v1000");
+        assert_eq!(elementwise_op_key("q_update", 64, 850), "q_update__o64_v850");
+        assert_eq!(risk_op_key("risk_value", 7, 1000), "risk_value__c7_v1000");
+        assert_eq!(model_key("fwd", 1024, 64, 4, 7, 1000), "fwd__n1024_h64_L4_c7_v1000");
+    }
+
+    #[test]
+    fn manifest_loads_if_artifacts_built() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.entries.is_empty());
+        let probe = m.entries.values().next().unwrap();
+        assert!(probe.n_inputs > 0);
+        assert!(dir.join(&probe.file).exists());
+    }
+}

@@ -1,0 +1,376 @@
+//! Row-major f32 matrix (substrate S1).
+//!
+//! `Mat` is the single tensor type used across the native backend, the
+//! graph substrate and the coordinator. It deliberately mirrors the shapes
+//! of the paper (Table I): weights `(n_l, n_{l-1})`, activations
+//! `(n_l, |V|)`, intercepts `(n_l, 1)`.
+
+use crate::tensor::rng::Pcg32;
+use crate::tensor::ops;
+
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 16 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. N(0, std^2) entries — the weight initializer.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Pcg32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal() * std);
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on the big activations.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    // -- elementwise ------------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+        assert_eq!(self.shape(), other.shape(), "zip shape mismatch");
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        self.map(|x| x * s)
+    }
+
+    pub fn relu(&self) -> Mat {
+        self.map(|x| x.max(0.0))
+    }
+
+    /// In-place `self += s * other` (the hot-loop AXPY; no allocation).
+    pub fn axpy(&mut self, s: f32, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    /// Broadcast-add a column vector `(rows, 1)` over all columns.
+    pub fn add_col_broadcast(&self, col: &Mat) -> Mat {
+        assert_eq!(col.rows, self.rows);
+        assert_eq!(col.cols, 1);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let c = col.data[i];
+            for v in out.row_mut(i) {
+                *v += c;
+            }
+        }
+        out
+    }
+
+    // -- reductions -------------------------------------------------------
+
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn frob(&self) -> f64 {
+        self.frob_sq().sqrt()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iters_max_abs()
+    }
+
+    /// Mean over columns -> `(rows, 1)`.
+    pub fn mean_cols(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, 1);
+        let inv = 1.0 / self.cols as f32;
+        for i in 0..self.rows {
+            out.data[i] = self.row(i).iter().sum::<f32>() * inv;
+        }
+        out
+    }
+
+    /// Per-column argmax -> class predictions (used on logits `(C, V)`).
+    pub fn argmax_cols(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.cols];
+        for j in 0..self.cols {
+            let (mut best, mut bi) = (f32::NEG_INFINITY, 0);
+            for i in 0..self.rows {
+                let v = self.at(i, j);
+                if v > best {
+                    best = v;
+                    bi = i;
+                }
+            }
+            out[j] = bi;
+        }
+        out
+    }
+
+    /// Column-wise softmax (numerically stable), used by the native
+    /// z_L prox and risk evaluation.
+    pub fn softmax_cols(&self) -> Mat {
+        let mut out = self.clone();
+        for j in 0..self.cols {
+            let mut mx = f32::NEG_INFINITY;
+            for i in 0..self.rows {
+                mx = mx.max(self.at(i, j));
+            }
+            let mut sum = 0.0f32;
+            for i in 0..self.rows {
+                let e = (self.at(i, j) - mx).exp();
+                *out.at_mut(i, j) = e;
+                sum += e;
+            }
+            let inv = 1.0 / sum;
+            for i in 0..self.rows {
+                *out.at_mut(i, j) *= inv;
+            }
+        }
+        out
+    }
+
+    /// Largest singular value (power iteration on `A^T A`), used for the
+    /// Lipschitz step sizes `tau = nu ||W||^2 + rho`, `theta = nu ||p||^2`.
+    pub fn spectral_norm_est(&self, iters: usize, rng: &mut Pcg32) -> f32 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        let mut v = Mat::randn(self.cols, 1, 1.0, rng);
+        let norm = v.frob() as f32;
+        if norm > 0.0 {
+            v = v.scale(1.0 / norm);
+        }
+        let mut sigma = 0.0f32;
+        for _ in 0..iters {
+            let av = ops::matmul_st(self, &v); // (rows,1)
+            let atav = ops::matmul_tn_st(self, &av); // (cols,1)
+            let n = atav.frob() as f32;
+            if n <= 1e-30 {
+                return 0.0;
+            }
+            v = atav.scale(1.0 / n);
+            sigma = n.sqrt();
+        }
+        sigma
+    }
+
+    // -- matmul facade (delegates to ops) ----------------------------------
+
+    /// `self @ other`, thread count chosen by the ops module default.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        ops::matmul(self, other, ops::default_threads())
+    }
+
+    /// `self @ other^T`.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        ops::matmul_nt(self, other, ops::default_threads())
+    }
+
+    /// `self^T @ other`.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        ops::matmul_tn(self, other, ops::default_threads())
+    }
+
+    /// Max |a - b| over all elements (test helper).
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Tiny extension trait so `max_abs` reads naturally above.
+trait MaxAbs {
+    fn iters_max_abs(&self) -> f32;
+}
+impl MaxAbs for Vec<f32> {
+    fn iters_max_abs(&self) -> f32 {
+        self.iter().map(|x| x.abs()).fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_and_row_are_row_major() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let mut rng = Pcg32::seeded(1);
+        let m = Mat::randn(37, 53, 1.0, &mut rng);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (53, 37));
+        assert_eq!(t.transpose(), m);
+        assert_eq!(t.at(5, 7), m.at(7, 5));
+    }
+
+    #[test]
+    fn broadcast_and_mean_cols() {
+        let m = Mat::from_vec(2, 2, vec![1., 3., 5., 7.]);
+        let b = Mat::from_vec(2, 1, vec![10., 20.]);
+        let out = m.add_col_broadcast(&b);
+        assert_eq!(out.data, vec![11., 13., 25., 27.]);
+        assert_eq!(m.mean_cols().data, vec![2., 6.]);
+    }
+
+    #[test]
+    fn argmax_and_softmax_cols() {
+        // rows: [0,5], [2,1], [1,0] -> col 0 argmax = row 1, col 1 = row 0
+        let m = Mat::from_vec(3, 2, vec![0., 5., 2., 1., 1., 0.]);
+        assert_eq!(m.argmax_cols(), vec![1, 0]);
+        let sm = m.softmax_cols();
+        for j in 0..2 {
+            let s: f32 = (0..3).map(|i| sm.at(i, j)).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!(sm.at(0, 1) > sm.at(1, 1));
+    }
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        let mut rng = Pcg32::seeded(2);
+        let mut m = Mat::zeros(4, 4);
+        for (i, s) in [3.0f32, 1.0, 0.5, 2.0].iter().enumerate() {
+            *m.at_mut(i, i) = *s;
+        }
+        let est = m.spectral_norm_est(50, &mut rng);
+        assert!((est - 3.0).abs() < 1e-3, "est {est}");
+    }
+
+    #[test]
+    fn axpy_matches_scale_add() {
+        let mut rng = Pcg32::seeded(3);
+        let a = Mat::randn(5, 9, 1.0, &mut rng);
+        let b = Mat::randn(5, 9, 1.0, &mut rng);
+        let mut c = a.clone();
+        c.axpy(0.25, &b);
+        assert!(c.max_abs_diff(&a.add(&b.scale(0.25))) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "zip shape mismatch")]
+    fn zip_panics_on_mismatch() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(3, 2);
+        let _ = a.add(&b);
+    }
+}

@@ -1,0 +1,10 @@
+//! Dense tensor substrate (S1/S2): row-major f32 matrices, blocked and
+//! thread-parallel matmul kernels, and a deterministic PCG random number
+//! generator. Everything in the native compute path sits on this module.
+
+pub mod matrix;
+pub mod ops;
+pub mod rng;
+
+pub use matrix::Mat;
+pub use rng::Pcg32;

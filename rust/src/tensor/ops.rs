@@ -1,0 +1,246 @@
+//! Blocked, thread-parallel matmul kernels (substrate S1, hot path).
+//!
+//! Layout conventions match the paper's shapes: activations are
+//! `(features, |V|)` so the node dimension is contiguous; all three matmul
+//! orientations needed by the ADMM updates stream memory row-major:
+//!
+//! * `matmul`    — `A @ B`    (i,k,j loop: AXPY over rows of B)
+//! * `matmul_nt` — `A @ B^T`  (dot products of rows)
+//! * `matmul_tn` — `A^T @ B`  (k-major AXPY accumulation)
+//!
+//! Threading is explicit: the coordinator's layer workers run these with
+//! `threads = 1` so model-parallel speedup measurements (Figs. 3/4) are not
+//! confounded by nested intra-op parallelism, while the serial schedule and
+//! preprocessing use all cores.
+
+use crate::tensor::matrix::Mat;
+use crate::util::threads::parallel_chunks;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Default worker count for the facade methods on `Mat` (0 = autodetect).
+pub fn default_threads() -> usize {
+    let t = DEFAULT_THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get().min(16))
+        .unwrap_or(1)
+}
+
+/// Override the process-wide default (CLI `--threads`).
+pub fn set_default_threads(t: usize) {
+    DEFAULT_THREADS.store(t, Ordering::Relaxed);
+}
+
+/// Tile of the k-dimension kept hot in L1/L2 while sweeping B's rows.
+const KBLOCK: usize = 256;
+
+/// `C = A @ B` — A:(m,k), B:(k,n).
+pub fn matmul(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch {:?}x{:?}", a.shape(), b.shape());
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    parallel_chunks(threads, m, &mut c.data, n, |i0, rows_out| {
+        for k0 in (0..k).step_by(KBLOCK) {
+            let k1 = (k0 + KBLOCK).min(k);
+            for (di, crow) in rows_out.chunks_mut(n).enumerate() {
+                let i = i0 + di;
+                let arow = a.row(i);
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(kk);
+                    // Autovectorized AXPY: c[i,:] += a[i,kk] * b[kk,:]
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    });
+    c
+}
+
+/// `C = A @ B^T` — A:(m,k), B:(n,k). Row-row dot products.
+pub fn matmul_nt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner-dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    parallel_chunks(threads, m, &mut c.data, n, |i0, rows_out| {
+        for (di, crow) in rows_out.chunks_mut(n).enumerate() {
+            let arow = a.row(i0 + di);
+            for j in 0..n {
+                let brow = b.row(j);
+                let mut acc0 = 0.0f32;
+                let mut acc1 = 0.0f32;
+                let mut acc2 = 0.0f32;
+                let mut acc3 = 0.0f32;
+                let chunks = k / 4 * 4;
+                let mut kk = 0;
+                while kk < chunks {
+                    acc0 += arow[kk] * brow[kk];
+                    acc1 += arow[kk + 1] * brow[kk + 1];
+                    acc2 += arow[kk + 2] * brow[kk + 2];
+                    acc3 += arow[kk + 3] * brow[kk + 3];
+                    kk += 4;
+                }
+                let mut acc = acc0 + acc1 + acc2 + acc3;
+                while kk < k {
+                    acc += arow[kk] * brow[kk];
+                    kk += 1;
+                }
+                crow[j] = acc;
+            }
+        }
+    });
+    c
+}
+
+/// `C = A^T @ B` — A:(k,m), B:(k,n). k-major accumulation.
+pub fn matmul_tn(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn inner-dim mismatch");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    parallel_chunks(threads, m, &mut c.data, n, |i0, rows_out| {
+        let i_end = i0 + rows_out.len() / n;
+        for kk in 0..k {
+            let arow = a.row(kk);
+            let brow = b.row(kk);
+            for (di, crow) in rows_out.chunks_mut(n).enumerate() {
+                let aik = arow[i0 + di];
+                if aik == 0.0 {
+                    continue;
+                }
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+            let _ = i_end;
+        }
+    });
+    c
+}
+
+/// Single-threaded conveniences (power iteration, tiny shapes).
+pub fn matmul_st(a: &Mat, b: &Mat) -> Mat {
+    matmul(a, b, 1)
+}
+pub fn matmul_tn_st(a: &Mat, b: &Mat) -> Mat {
+    matmul_tn(a, b, 1)
+}
+
+/// Fused native linear map `m = W @ p + b` (bias epilogue fused, mirroring
+/// the L1 pallas `linear` kernel).
+pub fn linear(w: &Mat, p: &Mat, b: &Mat, threads: usize) -> Mat {
+    let mut m = matmul(w, p, threads);
+    assert_eq!(b.rows, m.rows);
+    for i in 0..m.rows {
+        let bi = b.data[i];
+        for v in m.row_mut(i) {
+            *v += bi;
+        }
+    }
+    m
+}
+
+/// Fused native residual `r = z - W @ p - b` (mirrors L1 `residual`).
+pub fn residual(w: &Mat, p: &Mat, b: &Mat, z: &Mat, threads: usize) -> Mat {
+    let m = matmul(w, p, threads);
+    assert_eq!(z.shape(), m.shape());
+    let mut r = Mat::zeros(m.rows, m.cols);
+    for i in 0..m.rows {
+        let bi = b.data[i];
+        let zrow = z.row(i);
+        let mrow = m.row(i);
+        for (j, rv) in r.row_mut(i).iter_mut().enumerate() {
+            *rv = zrow[j] - mrow[j] - bi;
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg32;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for kk in 0..a.cols {
+                    s += a.at(i, kk) as f64 * b.at(kk, j) as f64;
+                }
+                *c.at_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_multi_and_single_thread() {
+        let mut rng = Pcg32::seeded(5);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (17, 33, 29), (64, 128, 50)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let want = naive(&a, &b);
+            for t in [1, 4] {
+                let got = matmul(&a, &b, t);
+                assert!(got.max_abs_diff(&want) < 1e-3, "m{m} k{k} n{n} t{t}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose_composition() {
+        let mut rng = Pcg32::seeded(6);
+        let a = Mat::randn(13, 21, 1.0, &mut rng);
+        let b = Mat::randn(9, 21, 1.0, &mut rng);
+        let want = matmul(&a, &b.transpose(), 1);
+        for t in [1, 3] {
+            assert!(matmul_nt(&a, &b, t).max_abs_diff(&want) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose_composition() {
+        let mut rng = Pcg32::seeded(7);
+        let a = Mat::randn(21, 13, 1.0, &mut rng);
+        let b = Mat::randn(21, 9, 1.0, &mut rng);
+        let want = matmul(&a.transpose(), &b, 1);
+        for t in [1, 3] {
+            assert!(matmul_tn(&a, &b, t).max_abs_diff(&want) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn linear_and_residual_fuse_correctly() {
+        let mut rng = Pcg32::seeded(8);
+        let w = Mat::randn(6, 4, 1.0, &mut rng);
+        let p = Mat::randn(4, 11, 1.0, &mut rng);
+        let b = Mat::randn(6, 1, 1.0, &mut rng);
+        let z = Mat::randn(6, 11, 1.0, &mut rng);
+        let m = linear(&w, &p, &b, 2);
+        let want_m = matmul(&w, &p, 1).add_col_broadcast(&b);
+        assert!(m.max_abs_diff(&want_m) < 1e-5);
+        let r = residual(&w, &p, &b, &z, 2);
+        assert!(r.max_abs_diff(&z.sub(&want_m)) < 1e-5);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut rng = Pcg32::seeded(9);
+        let a = Mat::randn(40, 30, 1.0, &mut rng);
+        let b = Mat::randn(30, 25, 1.0, &mut rng);
+        let t1 = matmul(&a, &b, 1);
+        for t in [2, 5, 16] {
+            assert_eq!(t1.data, matmul(&a, &b, t).data, "t={t}");
+        }
+    }
+}

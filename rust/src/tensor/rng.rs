@@ -1,0 +1,207 @@
+//! Deterministic random number generation (substrate S2).
+//!
+//! PCG32 (O'Neill 2014, `pcg32_random_r`): small state, excellent
+//! statistical quality, and — critically for this repo — identical streams
+//! on every platform, so dataset generation and weight initialization are
+//! reproducible across runs and across the native/XLA backends.
+
+/// PCG-XSH-RR 64/32 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+    /// Cached second output of the Box-Muller transform.
+    gauss_spare: Option<f32>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Seed with a stream id; distinct `(seed, stream)` pairs give
+    /// independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 {
+            state: 0,
+            inc: (stream << 1) | 1,
+            gauss_spare: None,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience constructor on the default stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e39cb94b95bdb)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 high bits -> exactly representable, uniform on the dyadic grid.
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire rejection).
+    pub fn below(&mut self, n: u32) -> u32 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (n as u64);
+        let mut l = m as u32;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (n as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Standard normal via Box-Muller (with the spare cached).
+    pub fn normal(&mut self) -> f32 {
+        if let Some(s) = self.gauss_spare.take() {
+            return s;
+        }
+        loop {
+            let u1 = self.next_f32();
+            let u2 = self.next_f32();
+            if u1 <= f32::EPSILON {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f32::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Geometric-skip sampling helper: next index gap for Bernoulli(p)
+    /// trials (used by the SBM edge sampler to stay O(edges)).
+    pub fn geometric_skip(&mut self, p: f64) -> usize {
+        if p >= 1.0 {
+            return 0;
+        }
+        if p <= 0.0 {
+            return usize::MAX / 2;
+        }
+        let u = self.next_f64().max(1e-300);
+        (u.ln() / (1.0 - p).ln()).floor() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg32::seeded(42);
+        let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_diverge() {
+        let mut a = Pcg32::seeded(1);
+        let mut b = Pcg32::seeded(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Pcg32::seeded(7);
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let x = rng.next_f32();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_and_in_range() {
+        let mut rng = Pcg32::seeded(9);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::seeded(11);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = rng.normal() as f64;
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::seeded(13);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn geometric_skip_mean_matches_1_over_p() {
+        let mut rng = Pcg32::seeded(17);
+        let p = 0.05f64;
+        let n = 20_000;
+        let total: usize = (0..n).map(|_| rng.geometric_skip(p)).sum();
+        let mean = total as f64 / n as f64;
+        // E[skips] = (1-p)/p = 19
+        assert!((mean - 19.0).abs() < 1.0, "mean {mean}");
+    }
+}

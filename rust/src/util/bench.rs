@@ -1,0 +1,147 @@
+//! Micro-benchmark harness (substrate S18; criterion is unavailable
+//! offline). `cargo bench` targets are `harness = false` binaries that use
+//! this module: warmup, adaptive iteration count, and a compact report of
+//! min / mean / p50 wall-clock per iteration.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub mean: Duration,
+    pub p50: Duration,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<48} {:>8}  min {:>12}  mean {:>12}  p50 {:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.min),
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner with a total time budget per case.
+pub struct Bencher {
+    budget: Duration,
+    warmup: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            budget: Duration::from_millis(1200),
+            warmup: Duration::from_millis(150),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn with_budget(budget_ms: u64) -> Self {
+        Bencher {
+            budget: Duration::from_millis(budget_ms),
+            ..Default::default()
+        }
+    }
+
+    /// Time `f` repeatedly; `f` must do one unit of work per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        // Warmup until the warmup budget elapses (at least once).
+        let w0 = Instant::now();
+        loop {
+            f();
+            if w0.elapsed() >= self.warmup {
+                break;
+            }
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget || samples.len() < 5 {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        samples.sort_unstable();
+        let min = samples[0];
+        let p50 = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            min,
+            mean,
+            p50,
+        };
+        println!("{}", res.row());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Header line for a bench group.
+    pub fn group(&self, title: &str) {
+        println!("\n== {title} ==");
+    }
+
+    /// Throughput helper: report GB/s next to a result.
+    pub fn note_throughput(&self, bytes_per_iter: u64) {
+        if let Some(last) = self.results.last() {
+            let gbps = bytes_per_iter as f64 / last.p50.as_secs_f64() / 1e9;
+            println!("{:<48} {:>8}  {:.2} GB/s", format!("  ↳ {}", last.name), "", gbps);
+        }
+    }
+
+    /// GFLOP/s helper for matmul-shaped work.
+    pub fn note_gflops(&self, flops_per_iter: f64) {
+        if let Some(last) = self.results.last() {
+            let g = flops_per_iter / last.p50.as_secs_f64() / 1e9;
+            println!("{:<48} {:>8}  {:.2} GFLOP/s", format!("  ↳ {}", last.name), "", g);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher::with_budget(30);
+        let mut acc = 0u64;
+        let res = b.bench("noop-ish", || {
+            acc = acc.wrapping_add(1);
+            std::hint::black_box(acc);
+        });
+        assert!(res.iters >= 5);
+        assert!(res.min <= res.p50);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,133 @@
+//! Scoped-thread data parallelism (rayon is unavailable offline).
+//!
+//! The only primitive the tensor kernels need is a row-chunked parallel
+//! write into a preallocated output buffer: each worker owns a disjoint
+//! contiguous slice, so there is no synchronization in the hot loop.
+
+/// Split `out` (which holds `n_rows * row_width` elements) into per-thread
+/// contiguous row chunks and invoke `f(first_row, chunk)` concurrently.
+///
+/// `threads <= 1` (or a single row) runs inline — this is what the
+/// coordinator's layer workers use so model-parallel speedups are measured
+/// without nested parallelism.
+pub fn parallel_chunks<F>(threads: usize, n_rows: usize, out: &mut [f32], row_width: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), n_rows * row_width, "output buffer shape mismatch");
+    let threads = threads.max(1).min(n_rows.max(1));
+    if threads == 1 || n_rows <= 1 {
+        f(0, out);
+        return;
+    }
+    let rows_per = n_rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut row0 = 0usize;
+        let fref = &f;
+        while row0 < n_rows {
+            let take = rows_per.min(n_rows - row0);
+            let (chunk, tail) = rest.split_at_mut(take * row_width);
+            rest = tail;
+            let start = row0;
+            scope.spawn(move || fref(start, chunk));
+            row0 += take;
+        }
+    });
+}
+
+/// Run `n` independent jobs on up to `threads` workers and collect results
+/// in order. Used by dataset generation sweeps and the experiment runners.
+pub fn parallel_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    // Give each worker an interleaved view via a shared work queue: slots
+    // are claimed by index through `next`, writes go through a raw pointer
+    // wrapper that guarantees disjointness by construction.
+    struct Slots<T>(*mut Option<T>, usize);
+    unsafe impl<T: Send> Sync for Slots<T> {}
+    let slots = Slots(out.as_mut_ptr(), out.len());
+    std::thread::scope(|scope| {
+        let slots = &slots;
+        let fref = &f;
+        let nref = &next;
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let i = nref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= slots.1 {
+                    break;
+                }
+                let v = fref(i);
+                // SAFETY: each index is claimed exactly once via fetch_add,
+                // indices are in-bounds, and the scope outlives all writes.
+                unsafe { *slots.0.add(i) = Some(v) };
+            });
+        }
+    });
+    out.into_iter().map(|x| x.expect("job completed")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_all_rows_once() {
+        let n_rows = 37;
+        let width = 5;
+        let mut out = vec![0.0f32; n_rows * width];
+        parallel_chunks(4, n_rows, &mut out, width, |row0, chunk| {
+            for (di, row) in chunk.chunks_mut(width).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (row0 + di) as f32;
+                }
+            }
+        });
+        for i in 0..n_rows {
+            for j in 0..width {
+                assert_eq!(out[i * width + j], i as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn inline_when_single_thread() {
+        let mut out = vec![0.0f32; 12];
+        parallel_chunks(1, 3, &mut out, 4, |row0, chunk| {
+            assert_eq!(row0, 0);
+            assert_eq!(chunk.len(), 12);
+            chunk.fill(1.0);
+        });
+        assert!(out.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let got = parallel_map(8, 100, |i| i * i);
+        assert_eq!(got, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        let got1 = parallel_map(1, 5, |i| i + 1);
+        assert_eq!(got1, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn parallel_map_runs_concurrently() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let peak = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        parallel_map(4, 16, |_| {
+            let l = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(l, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) >= 2);
+    }
+}

@@ -1,0 +1,217 @@
+//! Backend parity: every AOT HLO artifact must agree elementwise with the
+//! native rust implementation of the same op. This is the contract between
+//! L3 (rust) and L2/L1 (jax + pallas): if it holds, everything proven about
+//! the native math transfers to the compiled artifacts.
+//!
+//! Requires `make artifacts` (skips politely otherwise). Uses the
+//! quickstart config's shapes (cora/citeseer @ hidden 64).
+
+use pdadmm_g::backend::{ComputeBackend, NativeBackend, XlaBackend};
+use pdadmm_g::config::RootConfig;
+use pdadmm_g::runtime::XlaRuntime;
+use pdadmm_g::tensor::matrix::Mat;
+use pdadmm_g::tensor::rng::Pcg32;
+use std::sync::Arc;
+
+fn setup() -> Option<(XlaBackend, NativeBackend)> {
+    let cfg = RootConfig::load_default().unwrap();
+    let dir = cfg.artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping backend parity: run `make artifacts` first");
+        return None;
+    }
+    let rt = Arc::new(XlaRuntime::open(&dir).unwrap());
+    Some((XlaBackend::strict(rt), NativeBackend::single_thread()))
+}
+
+// quickstart shapes: cora n0=1024, hidden=64, C=7, V=1000
+const N0: usize = 1024;
+const H: usize = 64;
+const C: usize = 7;
+const V: usize = 1000;
+
+struct Fx {
+    w1: Mat, // (H, N0)
+    w2: Mat, // (H, H)
+    wl: Mat, // (C, H)
+    b: Mat,
+    bl: Mat,
+    p1: Mat, // (N0, V)
+    p2: Mat, // (H, V)
+    z: Mat,  // (H, V)
+    zl: Mat, // (C, V)
+    q: Mat,
+    u: Mat,
+    y: Mat,
+    maskn: Mat,
+}
+
+fn fixture() -> Fx {
+    let mut rng = Pcg32::seeded(1234);
+    Fx {
+        w1: Mat::randn(H, N0, 0.05, &mut rng),
+        w2: Mat::randn(H, H, 0.2, &mut rng),
+        wl: Mat::randn(C, H, 0.2, &mut rng),
+        b: Mat::randn(H, 1, 0.1, &mut rng),
+        bl: Mat::randn(C, 1, 0.1, &mut rng),
+        p1: Mat::randn(N0, V, 1.0, &mut rng),
+        p2: Mat::randn(H, V, 1.0, &mut rng),
+        z: Mat::randn(H, V, 1.0, &mut rng),
+        zl: Mat::randn(C, V, 1.0, &mut rng),
+        q: Mat::randn(H, V, 1.0, &mut rng),
+        u: Mat::randn(H, V, 0.1, &mut rng),
+        y: {
+            let mut y = Mat::zeros(C, V);
+            for j in 0..V {
+                *y.at_mut(j % C, j) = 1.0;
+            }
+            y
+        },
+        maskn: Mat::filled(1, V, 1.0 / V as f32),
+    }
+}
+
+fn assert_close(a: &Mat, b: &Mat, tol: f32, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    let diff = a.max_abs_diff(b);
+    let scale = a.max_abs().max(1.0);
+    assert!(diff <= tol * scale, "{what}: max diff {diff} (scale {scale})");
+}
+
+#[test]
+fn linear_parity_all_layer_shapes() {
+    let Some((xla, native)) = setup() else { return };
+    let fx = fixture();
+    for (w, p, b, what) in [
+        (&fx.w1, &fx.p1, &fx.b, "linear first"),
+        (&fx.w2, &fx.p2, &fx.b, "linear mid"),
+        (&fx.wl, &fx.p2, &fx.bl, "linear last"),
+    ] {
+        assert_close(&xla.linear(w, p, b), &native.linear(w, p, b), 2e-4, what);
+    }
+}
+
+#[test]
+fn p_update_parity() {
+    let Some((xla, native)) = setup() else { return };
+    let fx = fixture();
+    let (tau, nu, rho) = (3.0, 0.01, 1.0);
+    let a = xla.p_update(&fx.p2, &fx.w2, &fx.b, &fx.z, &fx.q, &fx.u, tau, nu, rho);
+    let b = native.p_update(&fx.p2, &fx.w2, &fx.b, &fx.z, &fx.q, &fx.u, tau, nu, rho);
+    assert_close(&a, &b, 2e-4, "p_update");
+}
+
+#[test]
+fn p_update_quant_parity_and_grid() {
+    let Some((xla, native)) = setup() else { return };
+    let fx = fixture();
+    let a = xla.p_update_quant(
+        &fx.p2, &fx.w2, &fx.b, &fx.z, &fx.q, &fx.u, 3.0, 0.01, 1.0, -1.0, 1.0, 22.0,
+    );
+    let b = native.p_update_quant(
+        &fx.p2, &fx.w2, &fx.b, &fx.z, &fx.q, &fx.u, 3.0, 0.01, 1.0, -1.0, 1.0, 22.0,
+    );
+    // Quantized outputs are grid points, so parity must be *exact* except
+    // for borderline rounding ties; allow a tiny fraction of one-step skew.
+    let mismatched = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .filter(|(x, y)| (**x - **y).abs() > 1e-6)
+        .count();
+    assert!(
+        (mismatched as f64) < 0.001 * a.data.len() as f64,
+        "{mismatched} grid mismatches of {}",
+        a.data.len()
+    );
+    for &v in &a.data {
+        assert!((-1.0..=20.0).contains(&v) && (v - v.round()).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn w_and_b_update_parity() {
+    let Some((xla, native)) = setup() else { return };
+    let fx = fixture();
+    assert_close(
+        &xla.w_update(&fx.p2, &fx.w2, &fx.b, &fx.z, 2.0, 0.01),
+        &native.w_update(&fx.p2, &fx.w2, &fx.b, &fx.z, 2.0, 0.01),
+        2e-4,
+        "w_update",
+    );
+    assert_close(
+        &xla.b_update(&fx.w2, &fx.p2, &fx.z),
+        &native.b_update(&fx.w2, &fx.p2, &fx.z),
+        2e-4,
+        "b_update",
+    );
+}
+
+#[test]
+fn z_q_u_updates_parity() {
+    let Some((xla, native)) = setup() else { return };
+    let fx = fixture();
+    let m = native.linear(&fx.w2, &fx.p2, &fx.b);
+    assert_close(
+        &xla.z_update_hidden(&m, &fx.z, &fx.q),
+        &native.z_update_hidden(&m, &fx.z, &fx.q),
+        2e-4,
+        "z_update_hidden",
+    );
+    let ml = native.linear(&fx.wl, &fx.p2, &fx.bl);
+    let lr = pdadmm_g::admm::updates::zlast_lr(0.01, V);
+    assert_close(
+        &xla.z_update_last(&ml, &fx.zl, &fx.y, &fx.maskn, 0.01, lr),
+        &native.z_update_last(&ml, &fx.zl, &fx.y, &fx.maskn, 0.01, lr),
+        5e-4,
+        "z_update_last",
+    );
+    assert_close(
+        &xla.q_update(&fx.p2, &fx.u, &fx.z, 0.01, 1.0),
+        &native.q_update(&fx.p2, &fx.u, &fx.z, 0.01, 1.0),
+        2e-4,
+        "q_update",
+    );
+    assert_close(
+        &xla.u_update(&fx.u, &fx.p2, &fx.q, 1.0),
+        &native.u_update(&fx.u, &fx.p2, &fx.q, 1.0),
+        2e-4,
+        "u_update",
+    );
+}
+
+#[test]
+fn risk_and_forward_and_grad_parity() {
+    let Some((xla, native)) = setup() else { return };
+    let fx = fixture();
+    let rx = xla.risk_value(&fx.zl, &fx.y, &fx.maskn);
+    let rn = native.risk_value(&fx.zl, &fx.y, &fx.maskn);
+    assert!((rx - rn).abs() < 1e-3 * (1.0 + rn.abs()), "risk {rx} vs {rn}");
+
+    // forward/grad at the quickstart model config (L=4)
+    let mut rng = Pcg32::seeded(77);
+    let ws = vec![
+        Mat::randn(H, N0, 0.05, &mut rng),
+        Mat::randn(H, H, 0.2, &mut rng),
+        Mat::randn(H, H, 0.2, &mut rng),
+        Mat::randn(C, H, 0.2, &mut rng),
+    ];
+    let bs = vec![
+        Mat::zeros(H, 1),
+        Mat::zeros(H, 1),
+        Mat::zeros(H, 1),
+        Mat::zeros(C, 1),
+    ];
+    let fx_x = &fx.p1;
+    let fa = xla.forward(&ws, &bs, fx_x);
+    let fb = native.forward(&ws, &bs, fx_x);
+    assert_close(&fa, &fb, 5e-4, "forward L=4");
+
+    let (la, dwa, dba) = xla.loss_and_grad(&ws, &bs, fx_x, &fx.y, &fx.maskn);
+    let (lb, dwb, dbb) = native.loss_and_grad(&ws, &bs, fx_x, &fx.y, &fx.maskn);
+    assert!((la - lb).abs() < 1e-3 * (1.0 + lb.abs()), "loss {la} vs {lb}");
+    for l in 0..ws.len() {
+        assert_close(&dwa[l], &dwb[l], 1e-3, &format!("dW[{l}]"));
+        assert_close(&dba[l], &dbb[l], 1e-3, &format!("db[{l}]"));
+    }
+}

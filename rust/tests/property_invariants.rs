@@ -1,0 +1,190 @@
+//! Property tests (substrate S19) over the theory's invariants:
+//! Lemma 4's dual identity, Lemma 1's objective descent for large rho,
+//! Theorem 1's residual decay, codec round-trip bounds, schedule
+//! equivalence, and quantized-p grid membership — each across randomized
+//! problem instances.
+
+use pdadmm_g::backend::NativeBackend;
+use pdadmm_g::config::{DatasetSpec, QuantMode, ScheduleMode, TrainConfig};
+use pdadmm_g::coordinator::quant::{self, Codec};
+use pdadmm_g::coordinator::Trainer;
+use pdadmm_g::graph::datasets::{self, Dataset};
+use pdadmm_g::prop_assert;
+use pdadmm_g::tensor::matrix::Mat;
+use pdadmm_g::tensor::rng::Pcg32;
+use pdadmm_g::util::prop::Prop;
+use std::sync::Arc;
+
+fn random_ds(rng: &mut Pcg32, size: usize) -> Dataset {
+    let nodes = 60 + 10 * (size % 8);
+    let classes = 2 + (rng.below(3) as usize);
+    datasets::build(
+        &DatasetSpec {
+            name: format!("prop{size}"),
+            nodes,
+            avg_degree: 5.0 + rng.next_f32() as f64 * 4.0,
+            classes,
+            feat_dim: 6 + (rng.below(8) as usize),
+            train: nodes / 2,
+            val: nodes / 4,
+            test: nodes / 4,
+            homophily_ratio: 6.0,
+            feature_signal: 1.2,
+            label_noise: 0.0,
+            seed: rng.next_u64(),
+        },
+        2,
+        1,
+    )
+}
+
+fn random_trainer(rng: &mut Pcg32, size: usize, quant: QuantMode) -> Trainer {
+    let ds = random_ds(rng, size);
+    let layers = 3 + (rng.below(3) as usize);
+    let mut tc = TrainConfig::new(&ds.name, 8 + (rng.below(8) as usize), layers, 1);
+    tc.nu = 0.01;
+    tc.rho = 1.0; // rho >> nu: Lemma 1's regime
+    tc.quant = quant;
+    tc.seed = rng.next_u64();
+    tc.schedule = ScheduleMode::Serial;
+    Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc)
+}
+
+#[test]
+fn prop_lemma4_dual_identity() {
+    Prop::new(8, 0x4a11).check("u = nu (q - f(z)) after every epoch", |rng, size| {
+        let mut t = random_trainer(rng, size, QuantMode::None);
+        for _ in 0..3 {
+            t.run_epoch();
+        }
+        for l in 0..t.layers.len() - 1 {
+            let c = &t.layers[l];
+            let want = c.q.as_ref().unwrap().sub(&c.z.relu()).scale(t.cfg.nu);
+            let diff = c.u.as_ref().unwrap().max_abs_diff(&want);
+            prop_assert!(diff < 1e-4, "layer {l}: |u - nu(q - f(z))| = {diff}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_objective_descends_with_large_rho() {
+    Prop::new(8, 0xdec4).check("L_rho decreases after warmup (Lemma 1)", |rng, size| {
+        let mut t = random_trainer(rng, size, QuantMode::None);
+        let mut objs = Vec::new();
+        for _ in 0..10 {
+            objs.push(t.run_epoch().objective);
+        }
+        // allow the first epochs to reshuffle; then demand monotone-ish
+        for w in objs[3..].windows(2) {
+            prop_assert!(
+                w[1] <= w[0] + 1e-3 * (1.0 + w[0].abs()),
+                "objective rose: {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+        prop_assert!(objs.last().unwrap() < &objs[0], "no net decrease: {objs:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_residual_decays() {
+    Prop::new(6, 0x5e5).check("primal residual shrinks (Theorem 1)", |rng, size| {
+        let mut t = random_trainer(rng, size, QuantMode::None);
+        // perturb q to create initial infeasibility
+        for l in 0..t.layers.len() - 1 {
+            if let Some(q) = t.layers[l].q.as_mut() {
+                for v in q.data.iter_mut() {
+                    *v += 0.3 * rng.normal();
+                }
+            }
+        }
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..12 {
+            last = t.run_epoch().residual;
+            first.get_or_insert(last);
+        }
+        let first = first.unwrap();
+        prop_assert!(
+            last < first * 0.5 || last < 1e-6,
+            "residual {first} -> {last}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_schedule_is_numerically_identical() {
+    Prop::new(6, 0x9a1).check("serial == parallel trajectories", |rng, size| {
+        let seed = rng.next_u64();
+        let ds = random_ds(rng, size);
+        let make = |schedule: ScheduleMode| {
+            let mut tc = TrainConfig::new(&ds.name, 10, 4, 1);
+            tc.nu = 0.01;
+            tc.rho = 1.0;
+            tc.seed = seed;
+            tc.schedule = schedule;
+            Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc)
+        };
+        let mut a = make(ScheduleMode::Serial);
+        let mut b = make(ScheduleMode::Parallel);
+        for _ in 0..3 {
+            a.run_epoch();
+            b.run_epoch();
+        }
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            prop_assert!(la.w.data == lb.w.data, "W diverged at layer {}", la.index);
+            prop_assert!(la.z.data == lb.z.data, "z diverged at layer {}", la.index);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantized_p_always_on_grid() {
+    Prop::new(6, 0x61d).check("p in Delta after every epoch", |rng, size| {
+        let mut t = random_trainer(rng, size, QuantMode::IntDelta);
+        for _ in 0..4 {
+            t.run_epoch();
+            for l in 1..t.layers.len() {
+                for &v in &t.layers[l].p.data {
+                    prop_assert!(
+                        (v - v.round()).abs() < 1e-5 && (-1.0..=20.0).contains(&v),
+                        "off-grid p: {v}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_roundtrip_error_bounds() {
+    Prop::new(12, 0xc0dec).check("codec error <= step/2; sizes ordered", |rng, size| {
+        let rows = 1 + size % 20;
+        let cols = 1 + (rng.below(40) as usize);
+        let m = Mat::randn(rows, cols, 1.0 + rng.next_f32() * 5.0, rng);
+        let lo = m.data.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = m.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        for bits in [8u8, 16] {
+            let (d, bytes) = quant::transfer(Codec::Uniform { bits }, &m);
+            let levels = if bits == 8 { 255.0 } else { 65535.0 };
+            let step = ((hi - lo) / levels).max(0.0);
+            let err = m.max_abs_diff(&d);
+            prop_assert!(
+                err <= step / 2.0 + 1e-5,
+                "bits {bits}: err {err} > step/2 {}",
+                step / 2.0
+            );
+            let expect = (m.len() * bits as usize / 8 + 12) as u64;
+            prop_assert!(bytes == expect, "bits {bits}: {bytes} != {expect}");
+        }
+        let (d, _) = quant::transfer(Codec::None, &m);
+        prop_assert!(d.data == m.data, "None codec must be lossless");
+        Ok(())
+    });
+}
