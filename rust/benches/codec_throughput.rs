@@ -1,16 +1,25 @@
 //! Wire-codec throughput: the pdADMM-G-Q communication path must not become
-//! the bottleneck it is meant to remove. (§Perf target: >= 1 GB/s.)
+//! the bottleneck it is meant to remove. (§Perf target: >= 1 GB/s on the
+//! byte-aligned paths; the sub-byte bit-packed paths trade some encode rate
+//! for 2-8x less wire volume.)
+//!
+//! Set `PDADMM_BENCH_QUICK=1` (CI smoke) to shrink budgets and shapes.
 
-use pdadmm_g::coordinator::quant::{self, Codec};
+use pdadmm_g::coordinator::quant::{self, Codec, Encoded};
 use pdadmm_g::tensor::matrix::Mat;
 use pdadmm_g::tensor::rng::Pcg32;
 use pdadmm_g::util::bench::Bencher;
 
 fn main() {
+    let quick = std::env::var("PDADMM_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let budget = if quick { 60 } else { 700 };
     let mut rng = Pcg32::seeded(3);
-    let mut b = Bencher::with_budget(700);
+    let mut b = Bencher::with_budget(budget);
 
-    for (h, v) in [(100usize, 2000usize), (256, 2000), (512, 4000)] {
+    let shapes: &[(usize, usize)] =
+        if quick { &[(100, 2000)] } else { &[(100, 2000), (256, 2000), (512, 4000)] };
+
+    for &(h, v) in shapes {
         let m = Mat::randn(h, v, 2.0, &mut rng);
         let raw_bytes = (m.len() * 4) as u64;
         b.group(&format!("transfer (encode+decode) {h}x{v} = {} f32", m.len()));
@@ -19,6 +28,10 @@ fn main() {
             Codec::paper_int_delta(),
             Codec::Uniform { bits: 16 },
             Codec::Uniform { bits: 8 },
+            Codec::Uniform { bits: 4 },
+            Codec::Uniform { bits: 2 },
+            Codec::BlockUniform { bits: 4, block: 512 },
+            Codec::Stochastic { bits: 8 },
         ] {
             // int-delta requires on-grid values
             let src = if matches!(codec, Codec::IntDelta { .. }) {
@@ -30,12 +43,21 @@ fn main() {
                 std::hint::black_box(quant::transfer(codec, &src));
             });
             b.note_throughput(raw_bytes);
+            let wire = codec.wire_bytes_for(m.len());
+            println!(
+                "{:<48} {:>8}  wire {} B ({:.2} B/elt)",
+                format!("  ↳ {} wire volume", codec.label()),
+                "",
+                wire,
+                wire as f64 / m.len() as f64
+            );
         }
     }
 
     // encode-only vs decode-only split for the 8-bit path
-    let m = Mat::randn(256, 4000, 2.0, &mut rng);
-    b.group("encode/decode split, uniform8, 256x4000");
+    let (h, v) = if quick { (64, 1000) } else { (256, 4000) };
+    let m = Mat::randn(h, v, 2.0, &mut rng);
+    b.group(&format!("encode/decode split, uniform8, {h}x{v}"));
     b.bench("encode", || {
         std::hint::black_box(quant::encode(Codec::Uniform { bits: 8 }, &m));
     });
@@ -43,4 +65,18 @@ fn main() {
     b.bench("decode", || {
         std::hint::black_box(quant::decode(&enc));
     });
+
+    // zero-alloc fast path: encode_into/decode_into with reused buffers,
+    // exactly what CommMeter::transfer_into does in the trainer phase loop.
+    b.group(&format!("reused-buffer round-trip (encode_into/decode_into), {h}x{v}"));
+    for codec in [Codec::Uniform { bits: 8 }, Codec::Uniform { bits: 4 }] {
+        let mut scratch = Encoded::empty();
+        let mut dst = Mat::zeros(h, v);
+        b.bench(&format!("{} into", codec.label()), || {
+            quant::encode_into(codec, &m, &mut scratch);
+            quant::decode_into(&scratch, &mut dst);
+            std::hint::black_box(&dst);
+        });
+        b.note_throughput((m.len() * 4) as u64);
+    }
 }

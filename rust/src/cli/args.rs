@@ -80,7 +80,8 @@ pdADMM-G reproduction launcher
 USAGE:
   repro train   --dataset <name> [--hidden N] [--layers N] [--epochs N]
                 [--nu F] [--rho F] [--seed N] [--backend native|xla]
-                [--quant none|int-delta|p8|p16|pq8|pq16]
+                [--quant none|int-delta|p<bits>|pq<bits>]   (bits 1..=16)
+                [--quant-bits N] [--quant-block N] [--stochastic]
                 [--schedule serial|parallel] [--workers N]
                 [--greedy 2,5,10] [--out results/run.csv]
   repro baseline --dataset <name> --optimizer gd|adadelta|adagrad|adam

@@ -202,6 +202,11 @@ pub struct TrainConfig {
     pub seed: u64,
     pub backend: BackendKind,
     pub quant: QuantMode,
+    /// Block size for block-wise affine quantization of the uniform wire
+    /// codecs (0 = one `(min, step)` pair for the whole tensor).
+    pub quant_block: u32,
+    /// Use stochastic (unbiased) rounding on the uniform wire codecs.
+    pub quant_stochastic: bool,
     /// Worker threads for the parallel schedule (0 = one per layer).
     pub workers: usize,
     pub schedule: ScheduleMode,
@@ -222,6 +227,8 @@ impl TrainConfig {
             seed: 0,
             backend: BackendKind::Native,
             quant: QuantMode::None,
+            quant_block: 0,
+            quant_stochastic: false,
             workers: 0,
             schedule: ScheduleMode::Parallel,
             greedy_stages: vec![],
@@ -256,9 +263,9 @@ pub enum QuantMode {
     None,
     /// The paper's integer set Delta = {-1, 0, ..., 20}.
     IntDelta,
-    /// Uniform affine quantization of p at the given bit width.
+    /// Uniform affine quantization of p at the given bit width (1..=16).
     P { bits: u8 },
-    /// Uniform affine quantization of both p and q.
+    /// Uniform affine quantization of both p and q (1..=16 bits).
     PQ { bits: u8 },
 }
 
@@ -279,19 +286,68 @@ impl QuantMode {
     pub fn quantizes_q(&self) -> bool {
         matches!(self, QuantMode::PQ { .. })
     }
+
+    /// The uniform wire width, if this mode has one.
+    pub fn bits(&self) -> Option<u8> {
+        match self {
+            QuantMode::P { bits } | QuantMode::PQ { bits } => Some(*bits),
+            _ => None,
+        }
+    }
+
+    /// Replace the bit width (CLI `--quant-bits` override). Errors on
+    /// modes without a width and on widths outside 1..=16 — validated here,
+    /// at config time, so a bad flag can never abort a run mid-epoch.
+    pub fn with_bits(self, bits: u8) -> Result<QuantMode> {
+        check_uniform_bits(bits)?;
+        match self {
+            QuantMode::P { .. } => Ok(QuantMode::P { bits }),
+            QuantMode::PQ { .. } => Ok(QuantMode::PQ { bits }),
+            other => Err(anyhow!(
+                "--quant-bits only applies to the p/pq uniform modes, not {:?}",
+                other.label()
+            )),
+        }
+    }
+}
+
+/// The single validity rule for uniform wire widths — shared by QuantMode
+/// parsing here and `coordinator::quant::Codec::validate`, so the CLI and
+/// the codec layer can never drift apart on what widths are supported.
+pub fn check_uniform_bits(bits: u8) -> Result<u8> {
+    if (1..=16).contains(&bits) {
+        Ok(bits)
+    } else {
+        Err(anyhow!("uniform quantization width must be 1..=16 bits, got {bits}"))
+    }
 }
 
 impl std::str::FromStr for QuantMode {
     type Err = anyhow::Error;
     fn from_str(s: &str) -> Result<Self> {
+        let parse_bits = |rest: &str| -> Result<u8> {
+            if rest.is_empty() {
+                return Ok(8);
+            }
+            let bits: u8 = rest
+                .parse()
+                .map_err(|_| anyhow!("bad quant bit width {rest:?} (want p<bits>|pq<bits>)"))?;
+            check_uniform_bits(bits)
+        };
         match s {
             "none" => Ok(QuantMode::None),
             "int-delta" => Ok(QuantMode::IntDelta),
-            "p8" => Ok(QuantMode::P { bits: 8 }),
-            "p16" => Ok(QuantMode::P { bits: 16 }),
-            "pq8" => Ok(QuantMode::PQ { bits: 8 }),
-            "pq16" => Ok(QuantMode::PQ { bits: 16 }),
-            _ => Err(anyhow!("quant must be none|int-delta|p8|p16|pq8|pq16, got {s:?}")),
+            _ => {
+                if let Some(rest) = s.strip_prefix("pq") {
+                    Ok(QuantMode::PQ { bits: parse_bits(rest)? })
+                } else if let Some(rest) = s.strip_prefix('p') {
+                    Ok(QuantMode::P { bits: parse_bits(rest)? })
+                } else {
+                    Err(anyhow!(
+                        "quant must be none|int-delta|p<bits>|pq<bits> (bits 1..=16), got {s:?}"
+                    ))
+                }
+            }
         }
     }
 }
@@ -351,9 +407,31 @@ mod tests {
         assert_eq!("p8".parse::<QuantMode>().unwrap(), QuantMode::P { bits: 8 });
         assert_eq!("pq16".parse::<QuantMode>().unwrap(), QuantMode::PQ { bits: 16 });
         assert_eq!("int-delta".parse::<QuantMode>().unwrap(), QuantMode::IntDelta);
-        assert!("p7".parse::<QuantMode>().is_err());
+        // any width 1..=16 is a valid packed wire format now
+        assert_eq!("p7".parse::<QuantMode>().unwrap(), QuantMode::P { bits: 7 });
+        assert_eq!("pq4".parse::<QuantMode>().unwrap(), QuantMode::PQ { bits: 4 });
+        assert_eq!("pq1".parse::<QuantMode>().unwrap(), QuantMode::PQ { bits: 1 });
+        // bare p/pq default to 8 bits (combined with --quant-bits on the CLI)
+        assert_eq!("p".parse::<QuantMode>().unwrap(), QuantMode::P { bits: 8 });
+        assert_eq!("pq".parse::<QuantMode>().unwrap(), QuantMode::PQ { bits: 8 });
+        assert!("p0".parse::<QuantMode>().is_err());
+        assert!("p17".parse::<QuantMode>().is_err());
+        assert!("pq99".parse::<QuantMode>().is_err());
+        assert!("q8".parse::<QuantMode>().is_err());
         assert!(QuantMode::PQ { bits: 8 }.quantizes_q());
         assert!(!QuantMode::P { bits: 8 }.quantizes_q());
+    }
+
+    #[test]
+    fn quant_mode_bits_override_is_validated() {
+        let pq = "pq8".parse::<QuantMode>().unwrap();
+        assert_eq!(pq.with_bits(4).unwrap(), QuantMode::PQ { bits: 4 });
+        assert_eq!(pq.bits(), Some(8));
+        assert!(pq.with_bits(0).is_err());
+        assert!(pq.with_bits(17).is_err());
+        assert!(QuantMode::None.with_bits(8).is_err());
+        assert!(QuantMode::IntDelta.with_bits(8).is_err());
+        assert_eq!(QuantMode::None.bits(), None);
     }
 
     #[test]

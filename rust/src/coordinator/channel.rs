@@ -2,10 +2,21 @@
 //!
 //! Every tensor that crosses a layer boundary — `p_{l+1}` flowing backward
 //! to worker `l`, `(q_l, u_l)` flowing forward to worker `l+1` — goes
-//! through [`CommMeter::transfer`]: it is physically encoded in the
-//! configured wire format, its exact byte count recorded by tensor kind,
-//! and the *decoded* tensor returned (so quantized variables are consistent
-//! across all consumers). Fig. 5's byte totals come straight from here.
+//! through [`CommMeter::transfer`] / [`CommMeter::transfer_into`]: it is
+//! physically encoded in the configured wire format (see
+//! [`crate::coordinator::quant`] for the exact header + bit-packed payload
+//! layout), its exact byte count recorded by tensor kind, and the *decoded*
+//! tensor returned (so quantized variables are consistent across all
+//! consumers). Fig. 5's byte totals come straight from here.
+//!
+//! Accounting is schedule-independent: every codec is a deterministic
+//! function of the tensor contents (stochastic rounding included — its
+//! randomness is content-seeded), so `ScheduleMode::Serial` and
+//! `ScheduleMode::Parallel` meter identical byte totals.
+//!
+//! The hot path is allocation-free on the wire side:
+//! [`CommMeter::transfer_into`] decodes into a caller-owned tensor and the
+//! encode scratch is a per-thread buffer inside the quant module.
 
 use crate::coordinator::quant::{self, Codec};
 use crate::tensor::matrix::Mat;
@@ -32,10 +43,7 @@ impl CommMeter {
         Self::default()
     }
 
-    /// Encode + count + decode. Thread-safe (called concurrently by layer
-    /// workers inside a phase).
-    pub fn transfer(&self, kind: Kind, codec: Codec, m: &Mat) -> Mat {
-        let (decoded, bytes) = quant::transfer(codec, m);
+    fn count(&self, kind: Kind, bytes: u64) {
         let ctr = match kind {
             Kind::P => &self.p_bytes,
             Kind::Q => &self.q_bytes,
@@ -43,7 +51,24 @@ impl CommMeter {
         };
         ctr.fetch_add(bytes, Ordering::Relaxed);
         self.transfers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Encode + count + decode. Thread-safe (called concurrently by layer
+    /// workers inside a phase).
+    pub fn transfer(&self, kind: Kind, codec: Codec, m: &Mat) -> Mat {
+        let (decoded, bytes) = quant::transfer(codec, m);
+        self.count(kind, bytes);
         decoded
+    }
+
+    /// Encode + count + decode into a caller-owned destination (resized to
+    /// `m`'s shape). The zero-alloc variant used by the trainer's phase
+    /// loops: the encode scratch is thread-local and `dst` is the layer's
+    /// existing tensor, so nothing is allocated per transfer once shapes
+    /// are warm.
+    pub fn transfer_into(&self, kind: Kind, codec: Codec, m: &Mat, dst: &mut Mat) {
+        let bytes = quant::transfer_into(codec, m, dst);
+        self.count(kind, bytes);
     }
 
     pub fn p_bytes(&self) -> u64 {
@@ -104,17 +129,17 @@ mod tests {
     fn accounting_by_kind_and_reset() {
         let meter = CommMeter::new();
         let m = Mat::zeros(10, 10);
-        meter.transfer(Kind::P, Codec::None, &m);
-        meter.transfer(Kind::Q, Codec::Uniform { bits: 8 }, &m);
-        meter.transfer(Kind::U, Codec::None, &m);
-        assert_eq!(meter.p_bytes(), 412);
-        assert_eq!(meter.q_bytes(), 112);
-        assert_eq!(meter.u_bytes(), 412);
-        assert_eq!(meter.paper_bytes(), 524);
-        assert_eq!(meter.total_bytes(), 936);
+        meter.transfer(Kind::P, Codec::None, &m); // 400 + 8
+        meter.transfer(Kind::Q, Codec::Uniform { bits: 8 }, &m); // 100 + 17
+        meter.transfer(Kind::U, Codec::None, &m); // 400 + 8
+        assert_eq!(meter.p_bytes(), 408);
+        assert_eq!(meter.q_bytes(), 117);
+        assert_eq!(meter.u_bytes(), 408);
+        assert_eq!(meter.paper_bytes(), 525);
+        assert_eq!(meter.total_bytes(), 933);
         assert_eq!(meter.transfers(), 3);
         let snap = meter.take();
-        assert_eq!(snap.paper_bytes(), 524);
+        assert_eq!(snap.paper_bytes(), 525);
         assert_eq!(meter.paper_bytes(), 0);
     }
 
@@ -131,6 +156,27 @@ mod tests {
     }
 
     #[test]
+    fn transfer_into_counts_and_decodes_identically() {
+        let meter_a = CommMeter::new();
+        let meter_b = CommMeter::new();
+        let mut rng = Pcg32::seeded(8);
+        let m = Mat::randn(9, 14, 2.0, &mut rng);
+        for codec in [
+            Codec::None,
+            Codec::Uniform { bits: 4 },
+            Codec::BlockUniform { bits: 8, block: 32 },
+        ] {
+            let via_alloc = meter_a.transfer(Kind::Q, codec, &m);
+            let mut dst = Mat::zeros(1, 1);
+            meter_b.transfer_into(Kind::Q, codec, &m, &mut dst);
+            assert_eq!(via_alloc.data, dst.data, "codec {codec:?}");
+            assert_eq!(dst.shape(), m.shape());
+        }
+        assert_eq!(meter_a.q_bytes(), meter_b.q_bytes());
+        assert_eq!(meter_a.transfers(), meter_b.transfers());
+    }
+
+    #[test]
     fn concurrent_transfers_are_counted_exactly() {
         let meter = CommMeter::new();
         let m = Mat::zeros(4, 4);
@@ -138,6 +184,28 @@ mod tests {
             meter.transfer(Kind::Q, Codec::None, &m);
         });
         assert_eq!(meter.transfers(), 64);
-        assert_eq!(meter.q_bytes(), 64 * (16 * 4 + 12));
+        assert_eq!(meter.q_bytes(), 64 * (16 * 4 + 8));
+    }
+
+    #[test]
+    fn serial_and_concurrent_metering_agree_for_all_codecs() {
+        let mut rng = Pcg32::seeded(9);
+        let tensors: Vec<Mat> = (0..16).map(|_| Mat::randn(12, 20, 1.5, &mut rng)).collect();
+        for codec in [
+            Codec::Uniform { bits: 4 },
+            Codec::BlockUniform { bits: 2, block: 64 },
+            Codec::Stochastic { bits: 8 },
+        ] {
+            let serial = CommMeter::new();
+            for t in &tensors {
+                serial.transfer(Kind::P, codec, t);
+            }
+            let parallel = CommMeter::new();
+            crate::util::threads::parallel_map(4, tensors.len(), |i| {
+                parallel.transfer(Kind::P, codec, &tensors[i]);
+            });
+            assert_eq!(serial.p_bytes(), parallel.p_bytes(), "codec {codec:?}");
+            assert_eq!(serial.transfers(), parallel.transfers());
+        }
     }
 }

@@ -1,25 +1,76 @@
 //! Quantization codecs (substrate S13): the physical wire format of
 //! pdADMM-G-Q's inter-layer communication.
 //!
-//! Three regimes, matching Fig. 5's cases:
+//! # Codecs and how they map to the paper (Fig. 5's cases)
 //!
 //! * [`Codec::None`] — pdADMM-G: raw f32 payload (4 B/element).
 //! * [`Codec::IntDelta`] — Problem 3's integer set Δ = {-1, …, 20}: values
 //!   are *already* on the grid (the p-subproblem projects onto Δ), so the
-//!   wire carries lossless u8 indices (1 B/element + 12 B header).
-//! * [`Codec::Uniform{bits}`] — affine quantization onto a 2^bits-level
-//!   grid spanning the tensor's own range; the wire carries uN indices plus
-//!   `(min, step)`. Decoding returns grid values — the receiving *and*
-//!   sending workers adopt the decoded tensor, so every consumer of a
-//!   quantized variable sees the same element of Δ (Definition 4).
+//!   wire carries lossless u8 indices (1 B/element).
+//! * [`Codec::Uniform { bits }`] — affine quantization onto a `2^bits`-level
+//!   grid spanning the tensor's own (finite) range, for any width 1–16.
+//!   Sub-byte widths are **bit-packed**, so a 4-bit transfer really is
+//!   0.5 B/element on the wire. Decoding returns grid values — the
+//!   receiving *and* sending workers adopt the decoded tensor, so every
+//!   consumer of a quantized variable sees the same element of the grid
+//!   (Definition 4's fixed-grid property).
+//! * [`Codec::BlockUniform { bits, block }`] — the same grid, but with an
+//!   independent `(min, step)` per `block` consecutive elements. Outlier
+//!   rows then only destroy resolution inside their own block instead of
+//!   across the whole tensor (cf. AdaQP's block-wise message quantization).
+//! * [`Codec::Stochastic { bits }`] — uniform grid with *stochastic*
+//!   rounding (unbiased: `E[decode] = value`), for the convergence
+//!   experiments. Rounding randomness is derived deterministically from the
+//!   tensor contents, so transfers are schedule-independent (serial and
+//!   parallel runs stay bit-identical).
+//!
+//! # Wire format
+//!
+//! Every transfer is `header ‖ payload`, accounted exactly (no hardcoded
+//! fudge): [`Encoded::wire_bytes`] equals [`Codec::wire_bytes_for`].
+//!
+//! Common header: `rows: u32 LE ‖ cols: u32 LE` (8 bytes). Then per codec:
+//!
+//! | codec          | extra header                            | payload            |
+//! |----------------|-----------------------------------------|--------------------|
+//! | `None`         | —                                       | `4n` bytes f32 LE  |
+//! | `IntDelta`     | `qmin: f32 ‖ qstep: f32` (8 B)          | `n` bytes u8       |
+//! | `Uniform`      | `bits: u8 ‖ min: f32 ‖ step: f32` (9 B) | `ceil(n·bits/8)` B |
+//! | `Stochastic`   | same as `Uniform`                       | same as `Uniform`  |
+//! | `BlockUniform` | `bits: u8 ‖ block: u32` + `(min, step)` per block (5 + 8·⌈n/block⌉ B) | `ceil(n·bits/8)` B |
+//!
+//! The quantized payload is a little-endian bitstream: element `i` occupies
+//! bits `[i·bits, (i+1)·bits)`, where bit `j` is bit `j mod 8` of byte
+//! `⌊j/8⌋`. For `bits ∈ {8, 16}` this coincides with the obvious u8 / LE
+//! u16 array (and takes a fused fast path). Block boundaries are *not*
+//! byte-aligned for sub-byte widths; the stream is continuous.
+//!
+//! # Non-finite and degenerate inputs
+//!
+//! The affine range is computed over **finite** values only. NaN encodes as
+//! index 0 (decodes to the block minimum), `+∞`/`-∞` saturate to the top /
+//! bottom of the grid. A tensor (or block) with no finite values, or a
+//! constant one, gets `step = 1` and round-trips its (finite) constant
+//! exactly; decoded tensors therefore never contain non-finite values.
+//!
+//! # Zero-allocation fast path
+//!
+//! [`encode_into`] / [`decode_into`] reuse caller-owned buffers, and
+//! [`transfer_into`] reuses a thread-local [`Encoded`] scratch — the
+//! trainer's phase loops do not allocate wire buffers per transfer.
 
 use crate::tensor::matrix::Mat;
+use crate::tensor::rng::Pcg32;
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Codec {
     None,
     IntDelta { qmin: f32, qstep: f32, qlevels: u32 },
     Uniform { bits: u8 },
+    BlockUniform { bits: u8, block: u32 },
+    Stochastic { bits: u8 },
 }
 
 impl Codec {
@@ -28,13 +79,101 @@ impl Codec {
         Codec::IntDelta { qmin: -1.0, qstep: 1.0, qlevels: 22 }
     }
 
+    /// Validated constructor for [`Codec::Uniform`].
+    pub fn uniform(bits: u8) -> Result<Codec> {
+        let c = Codec::Uniform { bits };
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Validated constructor for [`Codec::BlockUniform`].
+    pub fn block_uniform(bits: u8, block: u32) -> Result<Codec> {
+        let c = Codec::BlockUniform { bits, block };
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Validated constructor for [`Codec::Stochastic`].
+    pub fn stochastic(bits: u8) -> Result<Codec> {
+        let c = Codec::Stochastic { bits };
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Config-time validation: a bad CLI flag surfaces here as an `Err`
+    /// instead of aborting a long training run mid-epoch (the seed
+    /// `panic!`ed inside `encode` on unsupported widths).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            Codec::None => Ok(()),
+            Codec::IntDelta { qstep, qlevels, .. } => {
+                if !(1..=256).contains(&qlevels) {
+                    return Err(anyhow!(
+                        "int-delta wire format is u8-indexed: qlevels must be 1..=256, got {qlevels}"
+                    ));
+                }
+                if !(qstep > 0.0) {
+                    return Err(anyhow!("int-delta qstep must be positive, got {qstep}"));
+                }
+                Ok(())
+            }
+            Codec::Uniform { bits } | Codec::Stochastic { bits } => check_bits(bits),
+            Codec::BlockUniform { bits, block } => {
+                check_bits(bits)?;
+                if block == 0 {
+                    return Err(anyhow!("block-uniform block size must be >= 1"));
+                }
+                Ok(())
+            }
+        }
+    }
+
     pub fn label(&self) -> String {
         match self {
             Codec::None => "none".into(),
             Codec::IntDelta { qlevels, .. } => format!("int-delta{qlevels}"),
             Codec::Uniform { bits } => format!("uniform{bits}"),
+            Codec::BlockUniform { bits, block } => format!("uniform{bits}/b{block}"),
+            Codec::Stochastic { bits } => format!("stochastic{bits}"),
         }
     }
+
+    /// Exact header size in bytes for an `n`-element tensor (see the
+    /// module-level wire-format table).
+    pub fn header_bytes(&self, n: usize) -> u64 {
+        8 + match *self {
+            Codec::None => 0,
+            Codec::IntDelta { .. } => 8,
+            Codec::Uniform { .. } | Codec::Stochastic { .. } => 1 + 8,
+            Codec::BlockUniform { block, .. } => {
+                1 + 4 + 8 * n.div_ceil(block.max(1) as usize) as u64
+            }
+        }
+    }
+
+    /// Exact payload size in bytes for an `n`-element tensor. Widths are
+    /// clamped to 1..=16 exactly like the encoder, so this stays equal to
+    /// [`Encoded::wire_bytes`] even for hand-built (unvalidated) codecs.
+    pub fn payload_bytes(&self, n: usize) -> u64 {
+        match *self {
+            Codec::None => 4 * n as u64,
+            Codec::IntDelta { .. } => n as u64,
+            Codec::Uniform { bits }
+            | Codec::Stochastic { bits }
+            | Codec::BlockUniform { bits, .. } => {
+                (n as u64 * bits.clamp(1, 16) as u64).div_ceil(8)
+            }
+        }
+    }
+
+    /// Analytic total wire size; [`Encoded::wire_bytes`] always matches.
+    pub fn wire_bytes_for(&self, n: usize) -> u64 {
+        self.header_bytes(n) + self.payload_bytes(n)
+    }
+}
+
+fn check_bits(bits: u8) -> Result<()> {
+    crate::config::check_uniform_bits(bits).map(|_| ())
 }
 
 /// An encoded tensor as it would cross the network.
@@ -43,117 +182,391 @@ pub struct Encoded {
     rows: usize,
     cols: usize,
     codec: Codec,
-    /// Affine parameters for Uniform (min, step); IntDelta carries its grid.
-    min: f32,
-    step: f32,
+    /// Per-block `(min, step)` affine parameters. Whole-tensor codecs
+    /// (`IntDelta`, `Uniform`, `Stochastic`) carry exactly one entry;
+    /// `None` carries none.
+    params: Vec<(f32, f32)>,
 }
 
 impl Encoded {
-    /// Wire size in bytes: payload + the small header (dims + affine params).
+    /// An empty scratch value for [`encode_into`] reuse.
+    pub fn empty() -> Encoded {
+        Encoded { payload: Vec::new(), rows: 0, cols: 0, codec: Codec::None, params: Vec::new() }
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Exact wire size in bytes: payload + the per-codec header.
     pub fn wire_bytes(&self) -> u64 {
-        (self.payload.len() + 12) as u64
+        self.codec.header_bytes(self.rows * self.cols) + self.payload.len() as u64
     }
 }
 
-/// Encode a tensor for transmission.
-pub fn encode(codec: Codec, m: &Mat) -> Encoded {
+// ---------------------------------------------------------------------------
+// Affine parameters
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+struct Affine {
+    lo: f32,
+    step: f32,
+    inv: f32,
+    max_idx: f32,
+}
+
+/// `(min, step)` over the *finite* values of `vals` for a `levels`-point
+/// grid. A degenerate range (no finite values, or a constant) gets
+/// `step = 1` and `max_idx = 0`: every element — including ±∞ — maps to
+/// index 0 and decodes to `lo` exactly.
+fn finite_affine(vals: &[f32], levels: u32) -> Affine {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in vals {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    if hi > lo {
+        let step = (hi - lo) / (levels - 1) as f32;
+        Affine { lo, step, inv: 1.0 / step, max_idx: (levels - 1) as f32 }
+    } else {
+        Affine { lo, step: 1.0, inv: 1.0, max_idx: 0.0 }
+    }
+}
+
+/// Nearest-grid index. NaN maps to 0 (`clamp` propagates NaN, the
+/// saturating `as` cast sends it to 0); ±∞ saturate via `clamp`.
+#[inline(always)]
+fn qidx(v: f32, a: &Affine) -> u32 {
+    ((v - a.lo) * a.inv).round().clamp(0.0, a.max_idx) as u32
+}
+
+/// Stochastically rounded grid index: `floor(x)` or `floor(x) + 1` with
+/// probability equal to the fractional part — unbiased. Near-integer
+/// offsets (`frac < 1e-3` either side) round deterministically so that
+/// re-encoding already-on-grid values is stable (round-trip idempotence).
+#[inline(always)]
+fn qidx_stochastic(v: f32, a: &Affine, rng: &mut Pcg32) -> u32 {
+    let x = (v - a.lo) * a.inv;
+    let f = x.floor();
+    let frac = x - f;
+    let rounded = if !(1e-3..=0.999).contains(&frac) {
+        x.round()
+    } else if rng.next_f32() < frac {
+        f + 1.0
+    } else {
+        f
+    };
+    rounded.clamp(0.0, a.max_idx) as u32
+}
+
+/// Deterministic per-tensor seed for stochastic rounding: a function of the
+/// contents only, so the encoded stream does not depend on which worker or
+/// schedule performs the transfer.
+fn content_seed(vals: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(vals.len() as u64);
+    if !vals.is_empty() {
+        mix(vals[0].to_bits() as u64);
+        mix(vals[vals.len() / 2].to_bits() as u64);
+        mix(vals[vals.len() - 1].to_bits() as u64);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Bit-packed streams
+// ---------------------------------------------------------------------------
+
+/// Little-endian bit accumulator writing into a byte vector.
+struct BitWriter<'a> {
+    out: &'a mut Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitWriter<'a> {
+    fn new(out: &'a mut Vec<u8>) -> Self {
+        BitWriter { out, acc: 0, nbits: 0 }
+    }
+
+    #[inline(always)]
+    fn put(&mut self, v: u32, bits: u32) {
+        self.acc |= (v as u64) << self.nbits;
+        self.nbits += bits;
+        while self.nbits >= 8 {
+            self.out.push((self.acc & 0xff) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    fn finish(&mut self) {
+        if self.nbits > 0 {
+            self.out.push((self.acc & 0xff) as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Quantize `vals` and append. Byte-aligned 8/16-bit spans take a fused
+    /// transform-and-store path (the seed's throughput, kept); other widths
+    /// go through the accumulator.
+    fn write_quantized(
+        &mut self,
+        vals: &[f32],
+        a: &Affine,
+        bits: u32,
+        mut rng: Option<&mut Pcg32>,
+    ) {
+        if self.nbits == 0 && bits == 8 && rng.is_none() {
+            let start = self.out.len();
+            self.out.resize(start + vals.len(), 0);
+            for (o, &v) in self.out[start..].iter_mut().zip(vals) {
+                *o = qidx(v, a) as u8;
+            }
+            return;
+        }
+        if self.nbits == 0 && bits == 16 && rng.is_none() {
+            let start = self.out.len();
+            self.out.resize(start + vals.len() * 2, 0);
+            for (o, &v) in self.out[start..].chunks_exact_mut(2).zip(vals) {
+                o.copy_from_slice(&(qidx(v, a) as u16).to_le_bytes());
+            }
+            return;
+        }
+        match rng.as_deref_mut() {
+            Option::None => {
+                for &v in vals {
+                    self.put(qidx(v, a), bits);
+                }
+            }
+            Some(r) => {
+                for &v in vals {
+                    self.put(qidx_stochastic(v, a, r), bits);
+                }
+            }
+        }
+    }
+}
+
+/// Little-endian bit accumulator reading from a byte slice.
+struct BitReader<'a> {
+    inp: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(inp: &'a [u8]) -> Self {
+        BitReader { inp, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    #[inline(always)]
+    fn get(&mut self, bits: u32) -> u32 {
+        while self.nbits < bits {
+            self.acc |= (self.inp[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        let v = (self.acc & ((1u64 << bits) - 1)) as u32;
+        self.acc >>= bits;
+        self.nbits -= bits;
+        v
+    }
+
+    /// Dequantize the next `out.len()` indices into grid values.
+    fn read_dequantized(&mut self, out: &mut [f32], lo: f32, step: f32, bits: u32) {
+        if self.nbits == 0 && bits == 8 {
+            let src = &self.inp[self.pos..self.pos + out.len()];
+            for (o, &b) in out.iter_mut().zip(src) {
+                *o = lo + b as f32 * step;
+            }
+            self.pos += out.len();
+            return;
+        }
+        if self.nbits == 0 && bits == 16 {
+            let src = &self.inp[self.pos..self.pos + out.len() * 2];
+            for (o, c) in out.iter_mut().zip(src.chunks_exact(2)) {
+                *o = lo + u16::from_le_bytes([c[0], c[1]]) as f32 * step;
+            }
+            self.pos += out.len() * 2;
+            return;
+        }
+        for o in out.iter_mut() {
+            *o = lo + self.get(bits) as f32 * step;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode / decode
+// ---------------------------------------------------------------------------
+
+/// Encode a tensor for transmission into a reusable [`Encoded`] buffer
+/// (clears and refills `enc`; no allocation once capacities are warm).
+pub fn encode_into(codec: Codec, m: &Mat, enc: &mut Encoded) {
+    debug_assert!(codec.validate().is_ok(), "unvalidated codec {codec:?}");
+    enc.rows = m.rows;
+    enc.cols = m.cols;
+    enc.codec = codec;
+    enc.payload.clear();
+    enc.params.clear();
     match codec {
         Codec::None => {
-            let mut payload = Vec::with_capacity(m.len() * 4);
+            enc.payload.reserve(m.len() * 4);
             for &v in &m.data {
-                payload.extend_from_slice(&v.to_le_bytes());
+                enc.payload.extend_from_slice(&v.to_le_bytes());
             }
-            Encoded { payload, rows: m.rows, cols: m.cols, codec, min: 0.0, step: 0.0 }
         }
         Codec::IntDelta { qmin, qstep, qlevels } => {
+            // Always-on: an over-wide grid would silently saturate indices
+            // in the u8 cast below (validated constructors catch this at
+            // config time; this guards hand-built codecs in release too).
             assert!(qlevels <= 256, "IntDelta wire format is u8-indexed");
-            let payload = m
-                .data
-                .iter()
-                .map(|&v| {
-                    let idx = ((v - qmin) / qstep).round();
-                    debug_assert!(
-                        (0.0..qlevels as f32).contains(&idx),
-                        "value {v} not on the Delta grid"
-                    );
-                    idx.clamp(0.0, (qlevels - 1) as f32) as u8
-                })
-                .collect();
-            Encoded { payload, rows: m.rows, cols: m.cols, codec, min: qmin, step: qstep }
-        }
-        Codec::Uniform { bits } => {
-            let levels: u32 = match bits {
-                8 => 256,
-                16 => 65536,
-                b => panic!("unsupported uniform bit width {b}"),
-            };
-            let mut lo = f32::INFINITY;
-            let mut hi = f32::NEG_INFINITY;
+            enc.params.push((qmin, qstep));
+            enc.payload.reserve(m.len());
+            let inv = 1.0 / qstep;
             for &v in &m.data {
-                lo = lo.min(v);
-                hi = hi.max(v);
+                let idx = ((v - qmin) * inv).round();
+                debug_assert!(
+                    (0.0..qlevels as f32).contains(&idx),
+                    "value {v} not on the Delta grid"
+                );
+                enc.payload.push(idx.clamp(0.0, (qlevels - 1) as f32) as u8);
             }
-            if !lo.is_finite() || !hi.is_finite() {
-                lo = 0.0;
-                hi = 0.0;
-            }
-            let step = if hi > lo { (hi - lo) / (levels - 1) as f32 } else { 1.0 };
-            let inv = 1.0 / step;
-            let max_idx = (levels - 1) as f32;
-            // Branchless per-element transform with preallocated output
-            // (§Perf iteration 2: 3x over the push-per-element loop).
-            let payload = if bits == 8 {
-                let mut out = vec![0u8; m.len()];
-                for (o, &v) in out.iter_mut().zip(&m.data) {
-                    *o = ((v - lo) * inv).round().clamp(0.0, max_idx) as u8;
-                }
-                out
+        }
+        Codec::Uniform { bits } | Codec::Stochastic { bits } => {
+            let bits = u32::from(bits.clamp(1, 16));
+            let a = finite_affine(&m.data, 1u32 << bits);
+            enc.params.push((a.lo, a.step));
+            enc.payload.reserve(codec.payload_bytes(m.len()) as usize);
+            let mut rng;
+            let rng_opt = if matches!(codec, Codec::Stochastic { .. }) {
+                rng = Pcg32::seeded(content_seed(&m.data));
+                Some(&mut rng)
             } else {
-                let mut out = vec![0u8; m.len() * 2];
-                for (o, &v) in out.chunks_exact_mut(2).zip(&m.data) {
-                    let idx = ((v - lo) * inv).round().clamp(0.0, max_idx) as u16;
-                    o.copy_from_slice(&idx.to_le_bytes());
-                }
-                out
+                Option::None
             };
-            Encoded { payload, rows: m.rows, cols: m.cols, codec, min: lo, step }
+            let mut w = BitWriter::new(&mut enc.payload);
+            w.write_quantized(&m.data, &a, bits, rng_opt);
+            w.finish();
+        }
+        Codec::BlockUniform { bits, block } => {
+            let bits = u32::from(bits.clamp(1, 16));
+            let block = block.max(1) as usize;
+            enc.params.reserve(m.len().div_ceil(block));
+            enc.payload.reserve(codec.payload_bytes(m.len()) as usize);
+            let mut w = BitWriter::new(&mut enc.payload);
+            for chunk in m.data.chunks(block) {
+                let a = finite_affine(chunk, 1u32 << bits);
+                enc.params.push((a.lo, a.step));
+                w.write_quantized(chunk, &a, bits, Option::None);
+            }
+            w.finish();
         }
     }
 }
 
-/// Decode back to a tensor (grid values for quantized codecs).
-pub fn decode(e: &Encoded) -> Mat {
+/// Encode a tensor for transmission (allocating convenience wrapper).
+pub fn encode(codec: Codec, m: &Mat) -> Encoded {
+    let mut enc = Encoded::empty();
+    encode_into(codec, m, &mut enc);
+    enc
+}
+
+/// Decode into a reusable tensor (resized to the encoded shape; grid values
+/// for quantized codecs).
+pub fn decode_into(e: &Encoded, dst: &mut Mat) {
     let n = e.rows * e.cols;
-    let mut data = vec![0.0f32; n];
+    dst.rows = e.rows;
+    dst.cols = e.cols;
+    // Length change only — every codec arm below overwrites all n elements,
+    // so zero-filling an already-right-sized buffer would waste a write pass
+    // on the hot path.
+    if dst.data.len() != n {
+        dst.data.resize(n, 0.0);
+    }
     match e.codec {
         Codec::None => {
             assert_eq!(e.payload.len(), n * 4);
-            for (o, chunk) in data.iter_mut().zip(e.payload.chunks_exact(4)) {
+            for (o, chunk) in dst.data.iter_mut().zip(e.payload.chunks_exact(4)) {
                 *o = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
             }
         }
-        Codec::IntDelta { .. } | Codec::Uniform { bits: 8 } => {
+        Codec::IntDelta { .. } => {
             assert_eq!(e.payload.len(), n);
-            for (o, &idx) in data.iter_mut().zip(&e.payload) {
-                *o = e.min + idx as f32 * e.step;
+            let (lo, step) = e.params[0];
+            for (o, &idx) in dst.data.iter_mut().zip(&e.payload) {
+                *o = lo + idx as f32 * step;
             }
         }
-        Codec::Uniform { .. } => {
-            assert_eq!(e.payload.len(), n * 2);
-            for (o, chunk) in data.iter_mut().zip(e.payload.chunks_exact(2)) {
-                *o = e.min + u16::from_le_bytes([chunk[0], chunk[1]]) as f32 * e.step;
+        Codec::Uniform { bits } | Codec::Stochastic { bits } => {
+            let bits = u32::from(bits.clamp(1, 16));
+            let (lo, step) = e.params[0];
+            let mut r = BitReader::new(&e.payload);
+            r.read_dequantized(&mut dst.data, lo, step, bits);
+        }
+        Codec::BlockUniform { bits, block } => {
+            let bits = u32::from(bits.clamp(1, 16));
+            let block = block.max(1) as usize;
+            let mut r = BitReader::new(&e.payload);
+            for (chunk, &(lo, step)) in dst.data.chunks_mut(block).zip(&e.params) {
+                r.read_dequantized(chunk, lo, step, bits);
             }
         }
     }
-    Mat::from_vec(e.rows, e.cols, data)
+}
+
+/// Decode back to a fresh tensor.
+pub fn decode(e: &Encoded) -> Mat {
+    let mut m = Mat::zeros(e.rows, e.cols);
+    decode_into(e, &mut m);
+    m
+}
+
+thread_local! {
+    /// Per-thread wire scratch so the trainer's phase loops do not
+    /// reallocate encode buffers on every transfer.
+    static SCRATCH: RefCell<Encoded> = RefCell::new(Encoded::empty());
 }
 
 /// Round-trip a tensor through the wire, returning the decoded tensor and
 /// the wire byte count — the coordinator's per-transfer primitive.
 pub fn transfer(codec: Codec, m: &Mat) -> (Mat, u64) {
-    let enc = encode(codec, m);
-    let bytes = enc.wire_bytes();
-    (decode(&enc), bytes)
+    SCRATCH.with(|s| {
+        let mut enc = s.borrow_mut();
+        encode_into(codec, m, &mut enc);
+        (decode(&enc), enc.wire_bytes())
+    })
+}
+
+/// Round-trip through the wire into a caller-owned destination tensor
+/// (resized to `m`'s shape). Returns the wire byte count. Together with the
+/// thread-local encode scratch this is the zero-alloc transfer path.
+pub fn transfer_into(codec: Codec, m: &Mat, dst: &mut Mat) -> u64 {
+    SCRATCH.with(|s| {
+        let mut enc = s.borrow_mut();
+        encode_into(codec, m, &mut enc);
+        decode_into(&enc, dst);
+        enc.wire_bytes()
+    })
 }
 
 #[cfg(test)]
@@ -161,13 +574,28 @@ mod tests {
     use super::*;
     use crate::tensor::rng::Pcg32;
 
+    fn range_step(m: &Mat, bits: u32) -> f32 {
+        let lo = m.data.iter().cloned().filter(|v| v.is_finite()).fold(f32::INFINITY, f32::min);
+        let hi = m
+            .data
+            .iter()
+            .cloned()
+            .filter(|v| v.is_finite())
+            .fold(f32::NEG_INFINITY, f32::max);
+        if hi > lo {
+            (hi - lo) / ((1u64 << bits) - 1) as f32
+        } else {
+            1.0
+        }
+    }
+
     #[test]
     fn none_codec_is_lossless_4_bytes() {
         let mut rng = Pcg32::seeded(1);
         let m = Mat::randn(7, 11, 3.0, &mut rng);
         let (d, bytes) = transfer(Codec::None, &m);
         assert_eq!(d.data, m.data);
-        assert_eq!(bytes, 7 * 11 * 4 + 12);
+        assert_eq!(bytes, 7 * 11 * 4 + 8); // payload + dims header
     }
 
     #[test]
@@ -177,19 +605,60 @@ mod tests {
         let m = Mat::from_fn(5, 9, |_, _| (rng.below(22) as f32) - 1.0);
         let (d, bytes) = transfer(codec, &m);
         assert_eq!(d.data, m.data);
-        assert_eq!(bytes, 5 * 9 + 12); // 1 byte per element
+        assert_eq!(bytes, 5 * 9 + 16); // 1 B/element + dims + (qmin, qstep)
     }
 
     #[test]
-    fn uniform8_error_bounded_by_half_step() {
+    fn uniform_error_bounded_by_half_step_all_widths() {
         let mut rng = Pcg32::seeded(3);
         let m = Mat::randn(20, 30, 5.0, &mut rng);
-        let (d, bytes) = transfer(Codec::Uniform { bits: 8 }, &m);
-        assert_eq!(bytes, 20 * 30 + 12);
-        let lo = m.data.iter().cloned().fold(f32::INFINITY, f32::min);
-        let hi = m.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let step = (hi - lo) / 255.0;
-        assert!(m.max_abs_diff(&d) <= step / 2.0 + 1e-6);
+        for bits in 1..=16u8 {
+            let codec = Codec::uniform(bits).unwrap();
+            let (d, bytes) = transfer(codec, &m);
+            assert_eq!(bytes, codec.wire_bytes_for(m.len()), "bits {bits}");
+            let step = range_step(&m, bits as u32);
+            // slack scales with level count: decode computes lo + k*step in
+            // f32, whose rounding grows with k (up to 2^16 - 1)
+            let tol = step / 2.0 + step * (1u32 << bits) as f32 * 2e-6;
+            assert!(
+                m.max_abs_diff(&d) <= tol,
+                "bits {bits}: err {} > {tol}",
+                m.max_abs_diff(&d),
+            );
+        }
+    }
+
+    #[test]
+    fn sub_byte_widths_shrink_the_wire() {
+        let m = Mat::zeros(50, 50); // n = 2500
+        let b_none = encode(Codec::None, &m).wire_bytes();
+        let b16 = encode(Codec::Uniform { bits: 16 }, &m).wire_bytes();
+        let b8 = encode(Codec::Uniform { bits: 8 }, &m).wire_bytes();
+        let b4 = encode(Codec::Uniform { bits: 4 }, &m).wire_bytes();
+        let b2 = encode(Codec::Uniform { bits: 2 }, &m).wire_bytes();
+        let b1 = encode(Codec::Uniform { bits: 1 }, &m).wire_bytes();
+        assert_eq!(b_none, 2500 * 4 + 8);
+        assert_eq!(b16, 2500 * 2 + 17);
+        assert_eq!(b8, 2500 + 17);
+        assert_eq!(b4, 1250 + 17);
+        assert_eq!(b2, 625 + 17);
+        assert_eq!(b1, 313 + 17); // ceil(2500/8)
+        assert!(b_none > b16 && b16 > b8 && b8 > b4 && b4 > b2 && b2 > b1);
+    }
+
+    #[test]
+    fn uniform4_wire_is_at_most_half_byte_per_element() {
+        // Acceptance criterion: bits=4 round-trips at <= 0.5 B/element + header.
+        let mut rng = Pcg32::seeded(17);
+        let m = Mat::randn(64, 33, 2.0, &mut rng);
+        let codec = Codec::Uniform { bits: 4 };
+        let enc = encode(codec, &m);
+        let n = m.len() as u64;
+        assert!(enc.payload.len() as u64 <= n.div_ceil(2));
+        assert_eq!(enc.wire_bytes(), n.div_ceil(2) + codec.header_bytes(m.len()));
+        let d = decode(&enc);
+        let step = range_step(&m, 4);
+        assert!(m.max_abs_diff(&d) <= step / 2.0 + step * 1e-3);
     }
 
     #[test]
@@ -204,32 +673,201 @@ mod tests {
 
     #[test]
     fn uniform_idempotent_on_decoded_values() {
-        // decode(encode(x)) is a grid value; re-encoding must be lossless.
+        // decode(encode(x)) is a grid value; re-encoding must be stable
+        // (Definition 4's fixed-grid property).
         let mut rng = Pcg32::seeded(5);
         let m = Mat::randn(9, 9, 1.0, &mut rng);
-        let (d1, _) = transfer(Codec::Uniform { bits: 8 }, &m);
-        let (d2, _) = transfer(Codec::Uniform { bits: 8 }, &d1);
-        assert!(d1.max_abs_diff(&d2) < 1e-6);
+        for codec in [
+            Codec::Uniform { bits: 3 },
+            Codec::Uniform { bits: 8 },
+            Codec::BlockUniform { bits: 4, block: 16 },
+        ] {
+            let (d1, _) = transfer(codec, &m);
+            let (d2, _) = transfer(codec, &d1);
+            assert!(d1.max_abs_diff(&d2) < 1e-5, "codec {codec:?}");
+        }
     }
 
     #[test]
     fn constant_tensor_round_trips() {
         let m = Mat::filled(4, 4, 2.5);
-        for codec in [Codec::None, Codec::Uniform { bits: 8 }, Codec::Uniform { bits: 16 }] {
+        for codec in [
+            Codec::None,
+            Codec::Uniform { bits: 1 },
+            Codec::Uniform { bits: 4 },
+            Codec::Uniform { bits: 8 },
+            Codec::Uniform { bits: 16 },
+            Codec::BlockUniform { bits: 4, block: 5 },
+            Codec::Stochastic { bits: 8 },
+        ] {
             let (d, _) = transfer(codec, &m);
             assert!(m.max_abs_diff(&d) < 1e-6, "codec {codec:?}");
         }
     }
 
     #[test]
-    fn wire_sizes_rank_none_gt_16_gt_8() {
-        let m = Mat::zeros(50, 50);
-        let bn = encode(Codec::None, &m).wire_bytes();
-        let b16 = encode(Codec::Uniform { bits: 16 }, &m).wire_bytes();
-        let b8 = encode(Codec::Uniform { bits: 8 }, &m).wire_bytes();
-        assert!(bn > b16 && b16 > b8);
-        assert_eq!(bn, 10012);
-        assert_eq!(b16, 5012);
-        assert_eq!(b8, 2512);
+    fn non_finite_values_saturate_and_decode_finite() {
+        let m = Mat::from_vec(
+            2,
+            4,
+            vec![1.0, f32::NAN, f32::INFINITY, 3.0, f32::NEG_INFINITY, 2.0, 2.5, 1.5],
+        );
+        for codec in [
+            Codec::Uniform { bits: 4 },
+            Codec::Uniform { bits: 8 },
+            Codec::BlockUniform { bits: 8, block: 4 },
+            Codec::Stochastic { bits: 8 },
+        ] {
+            let (d, _) = transfer(codec, &m);
+            assert!(d.data.iter().all(|v| v.is_finite()), "codec {codec:?}: {:?}", d.data);
+            // finite range of the whole tensor is [1.0, 3.0]
+            let lo = 1.0;
+            let hi = 3.0;
+            for &v in &d.data {
+                assert!((lo - 1e-5..=hi + 1e-5).contains(&v), "codec {codec:?}: {v}");
+            }
+        }
+        // whole-tensor uniform: NaN -> grid minimum, ±inf -> grid extremes
+        let (d, _) = transfer(Codec::Uniform { bits: 8 }, &m);
+        assert_eq!(d.data[1], 1.0); // NaN -> lo
+        assert!((d.data[2] - 3.0).abs() < 1e-5); // +inf -> hi
+        assert_eq!(d.data[4], 1.0); // -inf -> lo
+    }
+
+    #[test]
+    fn all_non_finite_tensor_decodes_to_zero() {
+        let m = Mat::from_vec(1, 3, vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY]);
+        let (d, _) = transfer(Codec::Uniform { bits: 8 }, &m);
+        assert_eq!(d.data, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn block_uniform_localizes_outlier_damage() {
+        // One huge outlier: whole-tensor quantization loses all resolution,
+        // block-wise only inside the outlier's block.
+        let mut rng = Pcg32::seeded(6);
+        let mut m = Mat::randn(8, 32, 1.0, &mut rng); // 256 elements
+        m.data[200] = 1.0e4;
+        let (d_whole, _) = transfer(Codec::Uniform { bits: 8 }, &m);
+        let (d_block, _) = transfer(Codec::BlockUniform { bits: 8, block: 64 }, &m);
+        let err_outside = |d: &Mat| -> f32 {
+            m.data
+                .iter()
+                .zip(&d.data)
+                .enumerate()
+                .filter(|(i, _)| !(192..256).contains(i))
+                .map(|(_, (a, b))| (a - b).abs())
+                .fold(0.0, f32::max)
+        };
+        let e_whole = err_outside(&d_whole);
+        let e_block = err_outside(&d_block);
+        assert!(
+            e_block * 10.0 < e_whole,
+            "block err {e_block} should be far below whole-tensor err {e_whole}"
+        );
+    }
+
+    #[test]
+    fn stochastic_rounding_is_deterministic_and_unbiased() {
+        let mut rng = Pcg32::seeded(7);
+        let m = Mat::randn(40, 50, 2.0, &mut rng);
+        let codec = Codec::Stochastic { bits: 6 };
+        let (d1, b1) = transfer(codec, &m);
+        let (d2, b2) = transfer(codec, &m);
+        assert_eq!(d1.data, d2.data, "content-seeded rounding must be deterministic");
+        assert_eq!(b1, b2);
+        let step = range_step(&m, 6);
+        // per-element error bounded by one step (not step/2)
+        assert!(m.max_abs_diff(&d1) <= step + step * 1e-3);
+        // unbiased: mean signed error far below the deterministic floor
+        let mean_err: f64 = m
+            .data
+            .iter()
+            .zip(&d1.data)
+            .map(|(&a, &b)| (b - a) as f64)
+            .sum::<f64>()
+            / m.len() as f64;
+        assert!(
+            mean_err.abs() < 0.05 * step as f64,
+            "mean signed error {mean_err} vs step {step}"
+        );
+    }
+
+    #[test]
+    fn bit_packing_round_trips_every_width() {
+        // Random data, every width 1..=16, including non-multiple-of-8
+        // element counts so the final partial byte is exercised.
+        let mut rng = Pcg32::seeded(8);
+        let m = Mat::randn(7, 13, 4.0, &mut rng); // 91 elements
+        for bits in 1..=16u8 {
+            let codec = Codec::Uniform { bits };
+            let enc = encode(codec, &m);
+            assert_eq!(enc.payload.len() as u64, codec.payload_bytes(m.len()), "bits {bits}");
+            let d = decode(&enc);
+            // decoded values must lie on the grid: re-encoding is exact
+            let enc2 = encode(codec, &d);
+            assert_eq!(enc.payload, enc2.payload, "bits {bits}: payload not stable");
+        }
+    }
+
+    #[test]
+    fn encode_into_reuses_buffers() {
+        let mut rng = Pcg32::seeded(9);
+        let m = Mat::randn(32, 32, 1.0, &mut rng);
+        let mut enc = Encoded::empty();
+        encode_into(Codec::Uniform { bits: 8 }, &m, &mut enc);
+        let cap0 = enc.payload.capacity();
+        let ptr0 = enc.payload.as_ptr();
+        let mut dst = Mat::zeros(32, 32);
+        for _ in 0..5 {
+            encode_into(Codec::Uniform { bits: 8 }, &m, &mut enc);
+            decode_into(&enc, &mut dst);
+        }
+        assert_eq!(enc.payload.capacity(), cap0);
+        assert_eq!(enc.payload.as_ptr(), ptr0, "payload buffer was reallocated");
+        assert_eq!(dst.shape(), m.shape());
+    }
+
+    #[test]
+    fn transfer_into_matches_transfer() {
+        let mut rng = Pcg32::seeded(10);
+        let m = Mat::randn(11, 17, 2.0, &mut rng);
+        for codec in [
+            Codec::None,
+            Codec::Uniform { bits: 5 },
+            Codec::BlockUniform { bits: 3, block: 32 },
+        ] {
+            let (d, bytes) = transfer(codec, &m);
+            let mut dst = Mat::zeros(1, 1);
+            let bytes2 = transfer_into(codec, &m, &mut dst);
+            assert_eq!(bytes, bytes2);
+            assert_eq!(d.data, dst.data, "codec {codec:?}");
+            assert_eq!(dst.shape(), m.shape());
+        }
+    }
+
+    #[test]
+    fn codec_validation_rejects_bad_configs() {
+        assert!(Codec::uniform(0).is_err());
+        assert!(Codec::uniform(17).is_err());
+        assert!(Codec::uniform(1).is_ok());
+        assert!(Codec::uniform(16).is_ok());
+        assert!(Codec::block_uniform(4, 0).is_err());
+        assert!(Codec::block_uniform(4, 128).is_ok());
+        assert!(Codec::stochastic(33).is_err());
+        assert!(Codec::IntDelta { qmin: 0.0, qstep: 1.0, qlevels: 300 }.validate().is_err());
+    }
+
+    #[test]
+    fn analytic_wire_bytes_matches_partial_blocks() {
+        // n = 100, block = 48 -> 3 blocks (last partial), bits = 3.
+        let mut rng = Pcg32::seeded(11);
+        let m = Mat::randn(10, 10, 1.0, &mut rng);
+        let codec = Codec::BlockUniform { bits: 3, block: 48 };
+        let enc = encode(codec, &m);
+        let header = 8 + 1 + 4 + 8 * 3;
+        let payload = (100u64 * 3).div_ceil(8);
+        assert_eq!(enc.wire_bytes(), header + payload);
+        assert_eq!(codec.wire_bytes_for(100), header + payload);
     }
 }

@@ -99,6 +99,21 @@ impl Trainer {
         }
     }
 
+    /// The uniform-grid wire codec variant selected by the config:
+    /// block-wise affine when `quant_block > 0`, stochastic rounding when
+    /// requested, plain whole-tensor uniform otherwise. The block+stochastic
+    /// combination has no wire format and is rejected by the CLI; if both
+    /// are set programmatically, block-wise wins.
+    fn uniform_codec(&self, bits: u8) -> Codec {
+        if self.cfg.quant_block > 0 {
+            Codec::BlockUniform { bits, block: self.cfg.quant_block }
+        } else if self.cfg.quant_stochastic {
+            Codec::Stochastic { bits }
+        } else {
+            Codec::Uniform { bits }
+        }
+    }
+
     /// Wire codec for p transfers.
     fn p_codec(&self) -> Codec {
         match self.cfg.quant {
@@ -106,14 +121,14 @@ impl Trainer {
             // p is already projected onto Delta by the quantized subproblem:
             // the wire carries lossless 1-byte indices.
             QuantMode::IntDelta => Codec::paper_int_delta(),
-            QuantMode::P { bits } | QuantMode::PQ { bits } => Codec::Uniform { bits },
+            QuantMode::P { bits } | QuantMode::PQ { bits } => self.uniform_codec(bits),
         }
     }
 
     /// Wire codec for q transfers.
     fn q_codec(&self) -> Codec {
         match self.cfg.quant {
-            QuantMode::PQ { bits } => Codec::Uniform { bits },
+            QuantMode::PQ { bits } => self.uniform_codec(bits),
             _ => Codec::None,
         }
     }
@@ -191,10 +206,13 @@ impl Trainer {
         });
         // p_l travels to worker l-1 (it is needed there for q/u updates):
         // route through the meter; all consumers adopt the decoded tensor.
+        // `transfer_into` decodes straight into the layer's existing p
+        // buffer — no per-transfer allocation in the phase loop.
         let p_codec = self.p_codec();
         for (l, out) in new_ps.into_iter().enumerate() {
             if let Some((p, tau)) = out {
-                self.layers[l].p = self.meter.transfer(Kind::P, p_codec, &p);
+                let dst = &mut self.layers[l].p;
+                self.meter.transfer_into(Kind::P, p_codec, &p, dst);
                 self.layers[l].tau = tau;
             }
         }
@@ -290,7 +308,8 @@ impl Trainer {
                 // every consumer (including the owner) adopts the decoded
                 // grid value, which is exactly the paper's q-quantized
                 // variant (Appendix B).
-                self.layers[l].q = Some(self.meter.transfer(Kind::Q, q_codec, &q));
+                let dst = self.layers[l].q.get_or_insert_with(|| crate::Mat::zeros(0, 0));
+                self.meter.transfer_into(Kind::Q, q_codec, &q, dst);
             }
         }
 
@@ -315,7 +334,8 @@ impl Trainer {
             if let Some(u) = u {
                 // u_l accompanies q_l to worker l+1 (not part of the
                 // paper's p/q byte accounting; metered separately).
-                self.layers[l].u = Some(self.meter.transfer(Kind::U, Codec::None, &u));
+                let dst = self.layers[l].u.get_or_insert_with(|| crate::Mat::zeros(0, 0));
+                self.meter.transfer_into(Kind::U, Codec::None, &u, dst);
             }
         }
 

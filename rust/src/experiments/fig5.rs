@@ -7,6 +7,12 @@
 //! final test accuracy. Expected shape: quantizing more variables at fewer
 //! bits monotonically cuts bytes — up to ~45% for pq@8 — at ≈equal
 //! accuracy.
+//!
+//! Beyond the paper's cases, the sweep continues into the sub-byte regime
+//! the bit-packed wire codecs open up: pq@4 (whole-tensor and block-wise
+//! `(min, step)` per 512 elements) and pq@2/b512. Block-wise scaling is
+//! what keeps the coarse widths usable on tensors with outlier rows — the
+//! AdaQP-style message quantization the ISSUE/ROADMAP point at.
 
 use super::{make_backend, ExpOptions};
 use crate::config::{QuantMode, RootConfig, ScheduleMode, TrainConfig};
@@ -17,14 +23,26 @@ use crate::util::fmt_bytes;
 
 pub const DATASETS: [&str; 3] = ["citeseer", "pubmed", "coauthor-cs"];
 
-pub const CASES: [QuantMode; 6] = [
-    QuantMode::None,
-    QuantMode::P { bits: 16 },
-    QuantMode::P { bits: 8 },
-    QuantMode::PQ { bits: 16 },
-    QuantMode::PQ { bits: 8 },
-    QuantMode::IntDelta,
+/// (mode, block): block = 0 means whole-tensor `(min, step)`.
+pub const CASES: [(QuantMode, u32); 9] = [
+    (QuantMode::None, 0),
+    (QuantMode::P { bits: 16 }, 0),
+    (QuantMode::P { bits: 8 }, 0),
+    (QuantMode::PQ { bits: 16 }, 0),
+    (QuantMode::PQ { bits: 8 }, 0),
+    (QuantMode::PQ { bits: 4 }, 0),
+    (QuantMode::PQ { bits: 4 }, 512),
+    (QuantMode::PQ { bits: 2 }, 512),
+    (QuantMode::IntDelta, 0),
 ];
+
+fn case_label(quant: QuantMode, block: u32) -> String {
+    if block > 0 {
+        format!("{}/b{block}", quant.label())
+    } else {
+        quant.label()
+    }
+}
 
 pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
     let epochs = opts.epochs.unwrap_or(if opts.quick { 10 } else { 60 });
@@ -35,12 +53,13 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
     for ds_name in DATASETS {
         let ds = datasets::load(cfg, ds_name)?;
         let mut none_bytes: u64 = 0;
-        for quant in CASES {
+        for (quant, block) in CASES {
             let backend = make_backend(cfg, opts.backend)?;
             let mut tc = TrainConfig::new(ds_name, hidden, layers, epochs);
             tc.nu = 0.01;
             tc.rho = 1.0;
             tc.quant = quant;
+            tc.quant_block = block;
             tc.schedule = ScheduleMode::Parallel;
             let mut trainer = Trainer::new(backend, ds.clone(), tc);
             let log = trainer.run();
@@ -54,15 +73,12 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
             } else {
                 0.0
             };
+            let label = case_label(quant, block);
             println!(
-                "[fig5] {ds_name:<14} {:<10} comm {:>12}  (-{saving:>5.1}%)  test acc {test_acc:.3}",
-                quant.label(),
+                "[fig5] {ds_name:<14} {label:<10} comm {:>12}  (-{saving:>5.1}%)  test acc {test_acc:.3}",
                 fmt_bytes(bytes),
             );
-            rows.push(format!(
-                "{ds_name},{},{bytes},{saving:.2},{test_acc:.4}",
-                quant.label()
-            ));
+            rows.push(format!("{ds_name},{label},{bytes},{saving:.2},{test_acc:.4}"));
         }
     }
     let out = cfg.results_dir().join("fig5_communication.csv");

@@ -10,9 +10,8 @@ use crate::graph::augment::augment;
 use crate::graph::generator::{self, SbmSpec};
 use crate::tensor::matrix::Mat;
 use crate::tensor::rng::Pcg32;
-use once_cell::sync::Lazy;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 #[derive(Clone)]
 pub struct Dataset {
@@ -110,19 +109,23 @@ pub fn build(spec: &DatasetSpec, hops: usize, threads: usize) -> Dataset {
     }
 }
 
-static CACHE: Lazy<Mutex<HashMap<String, Dataset>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+static CACHE: OnceLock<Mutex<HashMap<String, Dataset>>> = OnceLock::new();
+
+fn cache() -> &'static Mutex<HashMap<String, Dataset>> {
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
 
 /// Memoised load by name through the root config.
 pub fn load(cfg: &RootConfig, name: &str) -> anyhow::Result<Dataset> {
     {
-        let cache = CACHE.lock().unwrap();
-        if let Some(d) = cache.get(name) {
+        let guard = cache().lock().unwrap();
+        if let Some(d) = guard.get(name) {
             return Ok(d.clone());
         }
     }
     let spec = cfg.dataset(name)?;
     let ds = build(spec, cfg.hops, crate::tensor::ops::default_threads());
-    CACHE.lock().unwrap().insert(name.to_string(), ds.clone());
+    cache().lock().unwrap().insert(name.to_string(), ds.clone());
     Ok(ds)
 }
 

@@ -14,6 +14,24 @@
 //! The crate is fully offline-capable: CLI parsing, JSON, RNG, the thread
 //! substrate, the bench harness and the property-testing mini-framework are
 //! all first-class modules here (DESIGN.md §4).
+//!
+//! # Wire codecs ↔ Fig. 5
+//!
+//! The quantized-communication cases of the paper's Fig. 5 map onto
+//! [`coordinator::quant::Codec`] as follows (see that module for the exact
+//! bit-packed wire format):
+//!
+//! | Fig. 5 case     | `--quant`    | wire codec (p / q)                      |
+//! |-----------------|--------------|-----------------------------------------|
+//! | pdADMM-G        | `none`       | `None` / `None` (raw f32)               |
+//! | quantized Δ set | `int-delta`  | `IntDelta` (lossless u8) / `None`       |
+//! | p@bits          | `p<bits>`    | `Uniform{bits}` / `None`                |
+//! | pq@bits         | `pq<bits>`   | `Uniform{bits}` / `Uniform{bits}`       |
+//!
+//! Any width 1–16 is a valid packed wire format (`pq4` really is half a
+//! byte per element). `--quant-block N` switches the uniform codecs to
+//! block-wise `(min, step)` scaling; `--stochastic` selects unbiased
+//! stochastic rounding for the convergence experiments.
 
 pub mod admm;
 pub mod backend;

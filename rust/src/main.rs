@@ -62,6 +62,26 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
     tc.seed = args.flags.get_or("seed", 0u64)?;
     tc.backend = args.flags.get_or("backend", BackendKind::Xla)?;
     tc.quant = args.flags.get_or("quant", QuantMode::None)?;
+    // Wire-format tuning, validated here at config time: a bad width or
+    // block size errors out before training starts, never mid-epoch.
+    if let Some(bits) = args.flags.get_parse::<u8>("quant-bits")? {
+        tc.quant = tc.quant.with_bits(bits)?;
+    }
+    tc.quant_block = args.flags.get_or("quant-block", 0u32)?;
+    tc.quant_stochastic = args.flags.has("stochastic");
+    if tc.quant_stochastic && tc.quant_block > 0 {
+        return Err(anyhow::anyhow!(
+            "--stochastic and --quant-block cannot be combined: the wire \
+             format has no block-wise stochastic variant (pick one)"
+        ));
+    }
+    if (tc.quant_stochastic || tc.quant_block > 0) && tc.quant.bits().is_none() {
+        return Err(anyhow::anyhow!(
+            "--stochastic/--quant-block only apply to the p/pq uniform modes, \
+             not {:?}",
+            tc.quant.label()
+        ));
+    }
     tc.schedule = args.flags.get_or("schedule", ScheduleMode::Parallel)?;
     tc.workers = args.flags.get_or("workers", 0usize)?;
     if let Some(stages) = args.flags.get("greedy") {

@@ -8,6 +8,11 @@
 //! dispatch level — XLA's internal intra-op thread pool still parallelizes
 //! each op — which is why the worker-scaling experiments (Figs. 3/4) run on
 //! the native backend where thread placement is explicit (DESIGN.md §2).
+//!
+//! Build note: the PJRT pieces are gated behind the off-by-default `xla`
+//! cargo feature so the crate builds in offline environments without the
+//! `xla` dependency. Without the feature, manifests still load (pure JSON)
+//! and [`XlaRuntime::exec`] returns an error instead of executing.
 
 use crate::tensor::matrix::Mat;
 use crate::util::json::{self, Json};
@@ -62,6 +67,7 @@ pub enum Arg<'a> {
     S(f32),
 }
 
+#[cfg(feature = "xla")]
 struct RuntimeInner {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
@@ -72,7 +78,12 @@ struct RuntimeInner {
 // created inside (client handles, literals, buffers). No `Rc` clone or raw
 // pointer escapes the critical section, so cross-thread access is fully
 // serialized.
+#[cfg(feature = "xla")]
 unsafe impl Send for RuntimeInner {}
+
+/// Placeholder so the struct layout exists without the `xla` feature.
+#[cfg(not(feature = "xla"))]
+struct RuntimeInner {}
 
 pub struct XlaRuntime {
     dir: PathBuf,
@@ -106,8 +117,22 @@ impl XlaRuntime {
     }
 
     /// Execute artifact `name` with `args`; returns the output matrices.
+    /// Without the `xla` cargo feature this always errors (no PJRT client
+    /// is linked in); the manifest itself still loads for inspection.
+    #[cfg(not(feature = "xla"))]
+    pub fn exec(&self, name: &str, _args: &[Arg<'_>]) -> Result<Vec<Mat>> {
+        let _ = (&self.inner, &self.dir, &self.stats);
+        Err(anyhow!(
+            "artifact {name:?}: built without the `xla` feature; \
+             rebuild with `--features xla` (requires the PJRT `xla` crate) \
+             to execute AOT artifacts"
+        ))
+    }
+
+    /// Execute artifact `name` with `args`; returns the output matrices.
     /// (All ops are lowered with `return_tuple=True`, so the root is always
     /// a tuple — scalars come back as `(1,)` Mats.)
+    #[cfg(feature = "xla")]
     pub fn exec(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Mat>> {
         let entry = self
             .manifest
@@ -185,6 +210,7 @@ impl XlaRuntime {
     }
 }
 
+#[cfg(feature = "xla")]
 fn literal_to_mat(lit: &xla::Literal) -> Result<Mat> {
     let shape = lit
         .array_shape()

@@ -4,6 +4,7 @@
 //! equivalence, and quantized-p grid membership — each across randomized
 //! problem instances.
 
+use pdadmm_g::admm::updates;
 use pdadmm_g::backend::NativeBackend;
 use pdadmm_g::config::{DatasetSpec, QuantMode, ScheduleMode, TrainConfig};
 use pdadmm_g::coordinator::quant::{self, Codec};
@@ -162,29 +163,260 @@ fn prop_quantized_p_always_on_grid() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Codec invariants (the wire subsystem's contract; Definition 4, Fig. 5)
+// ---------------------------------------------------------------------------
+
+/// The grid step a `bits`-wide uniform codec uses over `vals`' finite range.
+fn grid_step(vals: &[f32], bits: u32) -> f32 {
+    let lo = vals.iter().cloned().filter(|v| v.is_finite()).fold(f32::INFINITY, f32::min);
+    let hi = vals.iter().cloned().filter(|v| v.is_finite()).fold(f32::NEG_INFINITY, f32::max);
+    if hi > lo {
+        (hi - lo) / ((1u64 << bits) - 1) as f32
+    } else {
+        1.0
+    }
+}
+
 #[test]
 fn prop_codec_roundtrip_error_bounds() {
-    Prop::new(12, 0xc0dec).check("codec error <= step/2; sizes ordered", |rng, size| {
+    Prop::new(12, 0xc0dec).check("uniform error <= step/2 for widths 1..=16", |rng, size| {
         let rows = 1 + size % 20;
         let cols = 1 + (rng.below(40) as usize);
         let m = Mat::randn(rows, cols, 1.0 + rng.next_f32() * 5.0, rng);
-        let lo = m.data.iter().cloned().fold(f32::INFINITY, f32::min);
-        let hi = m.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        for bits in [8u8, 16] {
-            let (d, bytes) = quant::transfer(Codec::Uniform { bits }, &m);
-            let levels = if bits == 8 { 255.0 } else { 65535.0 };
-            let step = ((hi - lo) / levels).max(0.0);
+        for bits in 1..=16u8 {
+            let codec = Codec::Uniform { bits };
+            let (d, bytes) = quant::transfer(codec, &m);
+            let step = grid_step(&m.data, bits as u32);
             let err = m.max_abs_diff(&d);
-            prop_assert!(
-                err <= step / 2.0 + 1e-5,
-                "bits {bits}: err {err} > step/2 {}",
-                step / 2.0
-            );
-            let expect = (m.len() * bits as usize / 8 + 12) as u64;
+            // slack scales with level count: decode's `lo + k*step` f32
+            // rounding grows with k (up to 2^16 - 1)
+            let tol = step / 2.0 + step * (1u32 << bits) as f32 * 2e-6;
+            prop_assert!(err <= tol, "bits {bits}: err {err} > {tol}");
+            let expect = codec.wire_bytes_for(m.len());
             prop_assert!(bytes == expect, "bits {bits}: {bytes} != {expect}");
         }
         let (d, _) = quant::transfer(Codec::None, &m);
         prop_assert!(d.data == m.data, "None codec must be lossless");
         Ok(())
     });
+}
+
+#[test]
+fn prop_codec_roundtrip_idempotence() {
+    // Definition 4's fixed-grid property: decoded tensors are grid points,
+    // so a second wire round-trip must reproduce them:
+    //   decode(encode(decode(encode(m)))) == decode(encode(m)).
+    Prop::new(10, 0xf17ed).check("double round-trip is a fixed point", |rng, size| {
+        let rows = 2 + size % 12;
+        let cols = 2 + (rng.below(30) as usize);
+        let scale = 0.5 + rng.next_f32() * 4.0;
+        let m = Mat::randn(rows, cols, scale, rng);
+        let codecs = [
+            Codec::None,
+            Codec::Uniform { bits: 1 + (rng.below(16) as u8) },
+            Codec::Uniform { bits: 8 },
+            Codec::BlockUniform { bits: 1 + (rng.below(8) as u8), block: 1 + rng.below(96) },
+            Codec::Stochastic { bits: 1 + (rng.below(8) as u8) },
+        ];
+        for codec in codecs {
+            let (d1, b1) = quant::transfer(codec, &m);
+            let (d2, b2) = quant::transfer(codec, &d1);
+            let range = (m.max_abs() + 1.0) * 2.0;
+            let diff = d1.max_abs_diff(&d2);
+            prop_assert!(
+                diff <= 1e-4 * range,
+                "codec {codec:?}: second round-trip moved by {diff} (range {range})"
+            );
+            prop_assert!(b1 == b2, "codec {codec:?}: wire size changed {b1} -> {b2}");
+        }
+        // IntDelta is lossless on grid values: exact fixed point.
+        let on_grid = updates::quantize(&m, -1.0, 1.0, 22.0);
+        let delta = Codec::paper_int_delta();
+        let (d1, _) = quant::transfer(delta, &on_grid);
+        prop_assert!(d1.data == on_grid.data, "int-delta not lossless on the grid");
+        let (d2, _) = quant::transfer(delta, &d1);
+        prop_assert!(d2.data == d1.data, "int-delta round-trip not idempotent");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_bytes_match_analytic_formula() {
+    // Exact accounting: Encoded::wire_bytes == header + ceil(n*bits/8),
+    // per the wire-format table in coordinator/quant.rs.
+    Prop::new(12, 0xb17e5).check("wire bytes = payload bits + header", |rng, size| {
+        let rows = 1 + size % 25;
+        let cols = 1 + (rng.below(50) as usize);
+        let m = Mat::randn(rows, cols, 2.0, rng);
+        let n = m.len() as u64;
+        let bits = 1 + rng.below(16) as u8;
+        let block = 1 + rng.below(200);
+        let cases: [(Codec, u64); 5] = [
+            (Codec::None, 8 + 4 * n),
+            (Codec::paper_int_delta(), 16 + n),
+            (Codec::Uniform { bits }, 17 + (n * bits as u64).div_ceil(8)),
+            (Codec::Stochastic { bits }, 17 + (n * bits as u64).div_ceil(8)),
+            (
+                Codec::BlockUniform { bits, block },
+                13 + 8 * n.div_ceil(block as u64) + (n * bits as u64).div_ceil(8),
+            ),
+        ];
+        for (codec, expect) in cases {
+            let src = if matches!(codec, Codec::IntDelta { .. }) {
+                updates::quantize(&m, -1.0, 1.0, 22.0)
+            } else {
+                m.clone()
+            };
+            let enc = quant::encode(codec, &src);
+            prop_assert!(
+                enc.wire_bytes() == expect,
+                "codec {codec:?}: wire {} != analytic {expect}",
+                enc.wire_bytes()
+            );
+            prop_assert!(
+                codec.wire_bytes_for(m.len()) == expect,
+                "codec {codec:?}: wire_bytes_for mismatch"
+            );
+        }
+        // Acceptance: 4-bit packs to <= 0.5 B/element + header.
+        let enc4 = quant::encode(Codec::Uniform { bits: 4 }, &m);
+        prop_assert!(
+            enc4.wire_bytes() <= n.div_ceil(2) + 17,
+            "4-bit wire {} exceeds 0.5 B/element + header",
+            enc4.wire_bytes()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_uniform_error_bounded_by_block_step() {
+    // Per-block resolution: each element's error is bounded by half of its
+    // OWN block's step, even when another block contains huge outliers.
+    Prop::new(10, 0xb10c).check("block-wise error <= local step/2", |rng, size| {
+        let rows = 2 + size % 10;
+        let cols = 4 + (rng.below(40) as usize);
+        let mut m = Mat::randn(rows, cols, 1.0, rng);
+        // plant an outlier somewhere
+        let oi = rng.below(m.len() as u32) as usize;
+        m.data[oi] = 1.0e4 * if rng.next_f32() < 0.5 { -1.0 } else { 1.0 };
+        let bits = 2 + rng.below(7) as u8;
+        let block = 8 + rng.below(64);
+        let (d, _) = quant::transfer(Codec::BlockUniform { bits, block }, &m);
+        for (bi, chunk) in m.data.chunks(block as usize).enumerate() {
+            let step = grid_step(chunk, bits as u32);
+            let start = bi * block as usize;
+            let tol = step / 2.0 + step * (1u32 << bits) as f32 * 2e-6;
+            for (j, &v) in chunk.iter().enumerate() {
+                let err = (v - d.data[start + j]).abs();
+                prop_assert!(err <= tol, "block {bi} elt {j}: err {err} > {tol}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_comm_meter_consistent_across_schedules() {
+    // Every codec is a deterministic function of the tensor contents
+    // (stochastic rounding is content-seeded), so Serial and Parallel
+    // schedules must meter identical byte totals AND produce identical
+    // trajectories.
+    Prop::new(5, 0x5c4ed).check("serial vs parallel comm bytes identical", |rng, size| {
+        let seed = rng.next_u64();
+        let ds = random_ds(rng, size);
+        let variants: [(QuantMode, u32, bool); 3] = [
+            (QuantMode::PQ { bits: 4 }, 0, false),
+            (QuantMode::PQ { bits: 4 }, 128, false),
+            (QuantMode::PQ { bits: 8 }, 0, true),
+        ];
+        for (quant, block, stochastic) in variants {
+            let make = |schedule: ScheduleMode| {
+                let mut tc = TrainConfig::new(&ds.name, 10, 4, 1);
+                tc.nu = 0.01;
+                tc.rho = 1.0;
+                tc.seed = seed;
+                tc.quant = quant;
+                tc.quant_block = block;
+                tc.quant_stochastic = stochastic;
+                tc.schedule = schedule;
+                Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc)
+            };
+            let mut a = make(ScheduleMode::Serial);
+            let mut b = make(ScheduleMode::Parallel);
+            for e in 0..2 {
+                let ra = a.run_epoch();
+                let rb = b.run_epoch();
+                prop_assert!(
+                    ra.comm_bytes == rb.comm_bytes,
+                    "{quant:?}/b{block}/st{stochastic} epoch {e}: serial {} vs parallel {} bytes",
+                    ra.comm_bytes,
+                    rb.comm_bytes
+                );
+            }
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                prop_assert!(
+                    la.w.data == lb.w.data && la.z.data == lb.z.data,
+                    "{quant:?}: trajectories diverged at layer {}",
+                    la.index
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sub_byte_widths_cut_comm_monotonically() {
+    // The Fig.-5 shape extended into the sub-byte regime: fewer bits on
+    // both p and q monotonically shrink the metered wire volume.
+    Prop::new(4, 0x5b17).check("pq@16 > pq@8 > pq@4 > pq@2 bytes", |rng, size| {
+        let seed = rng.next_u64();
+        let ds = random_ds(rng, size);
+        let mut bytes = Vec::new();
+        for bits in [16u8, 8, 4, 2] {
+            let mut tc = TrainConfig::new(&ds.name, 10, 4, 1);
+            tc.nu = 0.01;
+            tc.rho = 1.0;
+            tc.seed = seed;
+            tc.quant = QuantMode::PQ { bits };
+            tc.schedule = ScheduleMode::Serial;
+            let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
+            bytes.push(t.run_epoch().comm_bytes);
+        }
+        for w in bytes.windows(2) {
+            prop_assert!(w[1] < w[0], "bytes not monotone: {bytes:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn codec_edge_cases_nan_inf_constant() {
+    // Documented non-finite semantics: finite-only range, NaN -> block lo,
+    // ±inf saturate to the grid ends, decoded tensors are always finite.
+    let m = Mat::from_vec(
+        3,
+        3,
+        vec![f32::NAN, -2.0, 7.0, f32::INFINITY, 0.5, f32::NEG_INFINITY, 1.0, -1.5, 3.0],
+    );
+    for bits in [1u8, 2, 4, 8, 12, 16] {
+        let (d, _) = quant::transfer(Codec::Uniform { bits }, &m);
+        assert!(d.data.iter().all(|v| v.is_finite()), "bits {bits}: {:?}", d.data);
+        assert_eq!(d.data[0], -2.0, "bits {bits}: NaN must decode to the range min");
+        assert!((d.data[3] - 7.0).abs() < 1e-4, "bits {bits}: +inf must saturate to max");
+        assert_eq!(d.data[5], -2.0, "bits {bits}: -inf must saturate to min");
+    }
+    // constant tensors round-trip exactly at every width and block size
+    for codec in [
+        Codec::Uniform { bits: 1 },
+        Codec::Uniform { bits: 16 },
+        Codec::BlockUniform { bits: 4, block: 2 },
+        Codec::Stochastic { bits: 8 },
+    ] {
+        let c = Mat::filled(5, 5, -3.25);
+        let (d, _) = quant::transfer(codec, &c);
+        assert_eq!(d.data, c.data, "codec {codec:?}");
+    }
 }

@@ -1,0 +1,186 @@
+//! Minimal, dependency-free shim of the `anyhow` crate.
+//!
+//! The build environment for this repository is fully offline, so the real
+//! crates.io `anyhow` cannot be fetched. This shim implements exactly the
+//! API surface the workspace uses:
+//!
+//! * [`Error`] / [`Result`] with context chains,
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros,
+//! * the [`Context`] extension trait (`context` / `with_context`),
+//! * `From<E: std::error::Error + Send + Sync + 'static>` so `?` converts
+//!   std errors (io, parse, ...) automatically.
+//!
+//! Display follows anyhow's convention: `{}` prints the outermost message,
+//! `{:#}` prints the full `outer: inner: ...` chain, and `Debug` prints the
+//! message followed by a `Caused by:` list.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error with an ordered chain of messages (outermost first).
+pub struct Error {
+    stack: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { stack: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (used by the [`Context`] trait).
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.stack.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.stack.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.stack.join(": "))
+        } else {
+            write!(f, "{}", self.stack.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.stack.first().map(String::as_str).unwrap_or(""))?;
+        if self.stack.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, msg) in self.stack[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Mirrors real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut stack = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            stack.push(s.to_string());
+            src = s.source();
+        }
+        Error { stack }
+    }
+}
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e)?;
+        Ok(())
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad width {}", 7);
+        assert_eq!(e.to_string(), "bad width 7");
+    }
+
+    #[test]
+    fn context_chain_and_alternate() {
+        let e = fails_io().context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: Result<()> = Err(anyhow!("inner")).with_context(|| format!("outer {}", 1));
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer 1: inner");
+    }
+
+    #[test]
+    fn ensure_returns_formatted_error() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(-1).unwrap_err().to_string(), "x must be positive, got -1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert!(parse("12").is_ok());
+        assert!(parse("nope").is_err());
+    }
+}
