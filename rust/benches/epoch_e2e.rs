@@ -1,6 +1,10 @@
 //! End-to-end epoch benchmark: full pdADMM-G iterations on real dataset
-//! shapes, serial vs parallel, plain vs quantized, native vs XLA — the
-//! numbers behind EXPERIMENTS.md §Perf's epoch table.
+//! shapes, serial vs pool-dispatched parallel, plain vs quantized, native
+//! vs XLA — the numbers behind EXPERIMENTS.md §Perf's epoch table.
+//!
+//! Set `PDADMM_BENCH_QUICK=1` (CI smoke) to shrink budgets and shapes; the
+//! pool-dispatch cases run in both modes so the persistent layer-worker
+//! runtime is exercised on every CI run.
 
 use pdadmm_g::backend::NativeBackend;
 use pdadmm_g::config::{BackendKind, QuantMode, RootConfig, ScheduleMode, TrainConfig};
@@ -11,31 +15,35 @@ use pdadmm_g::util::bench::Bencher;
 use std::sync::Arc;
 
 fn main() {
+    let quick = std::env::var("PDADMM_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let cfg = RootConfig::load_default().unwrap();
     let ds = datasets::load(&cfg, "pubmed").unwrap();
-    let mut b = Bencher::with_budget(2500);
+    let mut b = Bencher::with_budget(if quick { 250 } else { 2500 });
+    let (hidden, layers) = if quick { (64, 6) } else { (256, 10) };
 
     let mk = |quant: QuantMode, schedule: ScheduleMode| {
-        let mut tc = TrainConfig::new("pubmed", 256, 10, 1);
+        let mut tc = TrainConfig::new("pubmed", hidden, layers, 1);
         tc.nu = 0.01;
         tc.rho = 1.0;
         tc.quant = quant;
         tc.schedule = schedule;
         let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
         t.measure = false;
-        t.run_epoch(); // warmup
+        t.run_epoch(); // warmup (parallel: builds the persistent pool)
         t
     };
 
-    b.group("pubmed 10x256 epoch (native, 1 thread/worker)");
+    b.group(&format!("pubmed {layers}x{hidden} epoch (native, 1 thread/worker)"));
     let mut t = mk(QuantMode::None, ScheduleMode::Serial);
     b.bench("serial", || {
         std::hint::black_box(t.run_epoch());
     });
     let mut t = mk(QuantMode::None, ScheduleMode::Parallel);
-    b.bench("parallel (1 worker/layer)", || {
+    b.bench("parallel (pool, 1 worker/layer)", || {
         std::hint::black_box(t.run_epoch());
     });
+    let spawned = t.pool.as_ref().map_or(0, |p| p.spawned_threads());
+    assert_eq!(spawned, layers, "pool must not spawn threads per epoch");
     let mut t = mk(QuantMode::IntDelta, ScheduleMode::Parallel);
     b.bench("parallel + int-delta quant", || {
         std::hint::black_box(t.run_epoch());
@@ -45,25 +53,27 @@ fn main() {
         std::hint::black_box(t.run_epoch());
     });
 
-    if cfg.artifacts_dir().join("manifest.json").exists() {
-        b.group("pubmed 10x256 epoch (xla AOT artifacts)");
+    if !quick && cfg.artifacts_dir().join("manifest.json").exists() {
+        b.group(&format!("pubmed {layers}x{hidden} epoch (xla AOT artifacts)"));
         let backend = make_backend(&cfg, BackendKind::Xla).unwrap();
-        let mut tc = TrainConfig::new("pubmed", 256, 10, 1);
+        let mut tc = TrainConfig::new("pubmed", hidden, layers, 1);
         tc.nu = 0.01;
         tc.rho = 1.0;
         let mut t = Trainer::new(backend, ds.clone(), tc);
         t.measure = false;
         t.run_epoch(); // warmup = compile all ops
-        b.bench("parallel (serialized dispatch)", || {
+        b.bench("parallel (pool dispatch)", || {
             std::hint::black_box(t.run_epoch());
         });
     }
 
-    // metrics overhead (objective + forward + accuracies)
-    b.group("measurement overhead");
-    let mut t = mk(QuantMode::None, ScheduleMode::Parallel);
-    t.measure = true;
-    b.bench("epoch with measure=on", || {
-        std::hint::black_box(t.run_epoch());
-    });
+    if !quick {
+        // metrics overhead (objective + forward + accuracies)
+        b.group("measurement overhead");
+        let mut t = mk(QuantMode::None, ScheduleMode::Parallel);
+        t.measure = true;
+        b.bench("epoch with measure=on", || {
+            std::hint::black_box(t.run_epoch());
+        });
+    }
 }

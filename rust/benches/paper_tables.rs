@@ -35,7 +35,7 @@ fn main() {
 
     // --- fig3 (smoke): speedup grows with layers on flickr ---
     {
-        use pdadmm_g::coordinator::trainer::simulated_parallel_ms;
+        use pdadmm_g::coordinator::trainer::phase_makespan_ms;
         let ds = datasets::load(&cfg, "flickr").unwrap();
         let mut speeds = Vec::new();
         for layers in [8usize, 14] {
@@ -48,7 +48,7 @@ fn main() {
             t.record_layer_times = true;
             t.run_epoch();
             let rec = t.run_epoch();
-            let par = simulated_parallel_ms(&t.last_layer_secs, layers);
+            let par = phase_makespan_ms(&t.last_phase_layer_secs, layers);
             speeds.push((layers, rec.epoch_ms / par));
         }
         println!(

@@ -83,10 +83,18 @@ pub fn w_update(p: &Mat, w: &Mat, b: &Mat, z: &Mat, theta: f32, nu: f32, threads
     out
 }
 
+/// Closed-form b minimizer from a precomputed linear map `wp = W @ p`:
+/// row-mean of z - wp (DESIGN.md §3 deviation). The coordinator computes
+/// `wp` once in phase B and reuses it for phase Z's pre-activation, so the
+/// epoch does one big matmul here instead of two.
+pub fn b_update_wp(wp: &Mat, z: &Mat) -> Mat {
+    z.sub(wp).mean_cols()
+}
+
 /// Closed-form b minimizer: row-mean of z - W p (DESIGN.md §3 deviation).
+/// Recomputes `W @ p`; hot paths precompute it and call [`b_update_wp`].
 pub fn b_update(w: &Mat, p: &Mat, z: &Mat, threads: usize) -> Mat {
-    let m = ops::matmul(w, p, threads);
-    z.sub(&m).mean_cols()
+    b_update_wp(&ops::matmul(w, p, threads), z)
 }
 
 /// Appendix A.4 (Eq. 6), ReLU closed form with elementwise candidate pick.
@@ -184,14 +192,9 @@ pub fn forward(ws: &[Mat], bs: &[Mat], x: &Mat, threads: usize) -> Mat {
     assert_eq!(ws.len(), bs.len());
     let mut p = x.clone();
     for (l, (w, b)) in ws.iter().zip(bs).enumerate() {
-        let m = linear(w, p_ref(&p, l), b, threads);
+        let m = linear(w, &p, b, threads);
         p = if l + 1 < ws.len() { m.relu() } else { m };
     }
-    p
-}
-
-#[inline]
-fn p_ref<'a>(p: &'a Mat, _l: usize) -> &'a Mat {
     p
 }
 
@@ -250,6 +253,15 @@ mod tests {
             let mean: f32 = r.row(i).iter().sum::<f32>() / r.cols as f32;
             assert!(mean.abs() < 1e-5, "row {i} mean {mean}");
         }
+    }
+
+    #[test]
+    fn b_update_wp_matches_recomputing_variant() {
+        let (p, w, _, z, _, _) = setup(4, 3, 20, 11);
+        let wp = ops::matmul(&w, &p, 1);
+        let via_cache = b_update_wp(&wp, &z);
+        let recomputed = b_update(&w, &p, &z, 1);
+        assert_eq!(via_cache.data, recomputed.data);
     }
 
     #[test]

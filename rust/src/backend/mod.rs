@@ -69,6 +69,26 @@ pub trait ComputeBackend: Send + Sync {
 
     fn w_update(&self, p: &Mat, w: &Mat, b: &Mat, z: &Mat, theta: f32, nu: f32) -> Mat;
 
+    /// The bias-free linear map `W @ p` — shared by the B and Z phases.
+    /// The coordinator computes it once per layer per epoch (phase B),
+    /// derives b from it, and completes the Z-phase pre-activation with
+    /// [`ComputeBackend::add_bias`] instead of a second full matmul.
+    fn wp(&self, w: &Mat, p: &Mat) -> Mat;
+
+    /// Closed-form b from a precomputed `wp = W @ p`: row-mean of z - wp.
+    fn b_update_wp(&self, wp: &Mat, z: &Mat) -> Mat {
+        z.sub(wp).mean_cols()
+    }
+
+    /// `m = wp + b` (column broadcast): completes `linear` from a cached
+    /// product — elementwise-identical to `linear(w, p, b)`.
+    fn add_bias(&self, wp: &Mat, b: &Mat) -> Mat {
+        wp.add_col_broadcast(b)
+    }
+
+    /// b minimizer that recomputes `W @ p` itself. Kept for callers without
+    /// a cached product (benches, parity tests); the epoch loop uses
+    /// [`ComputeBackend::b_update_wp`].
     fn b_update(&self, w: &Mat, p: &Mat, z: &Mat) -> Mat;
 
     fn z_update_hidden(&self, m: &Mat, z_old: &Mat, q: &Mat) -> Mat;

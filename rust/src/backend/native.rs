@@ -80,6 +80,14 @@ impl ComputeBackend for NativeBackend {
         u::w_update(p, w, b, z, theta, nu, self.threads)
     }
 
+    fn wp(&self, w: &Mat, p: &Mat) -> Mat {
+        ops::matmul(w, p, self.threads)
+    }
+
+    fn b_update_wp(&self, wp: &Mat, z: &Mat) -> Mat {
+        u::b_update_wp(wp, z)
+    }
+
     fn b_update(&self, w: &Mat, p: &Mat, z: &Mat) -> Mat {
         u::b_update(w, p, z, self.threads)
     }

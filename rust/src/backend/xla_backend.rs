@@ -154,6 +154,17 @@ impl ComputeBackend for XlaBackend {
         )
     }
 
+    /// No dedicated artifact: reuse the `linear` artifact with a zero bias
+    /// so the B/Z-phase matmul still runs on the XLA path; shapes missing
+    /// from the manifest fall back to the native bias-free matmul.
+    fn wp(&self, w: &Mat, p: &Mat) -> Mat {
+        let key = runtime::layer_op_key("linear", w.cols, w.rows, p.cols);
+        let zero = Mat::zeros(w.rows, 1);
+        self.run_or(&key, &[Arg::M(w), Arg::M(p), Arg::M(&zero)], || {
+            self.fallback.wp(w, p)
+        })
+    }
+
     fn b_update(&self, w: &Mat, p: &Mat, z: &Mat) -> Mat {
         let key = runtime::layer_op_key("b_update", w.cols, w.rows, p.cols);
         self.run_or(&key, &[Arg::M(w), Arg::M(p), Arg::M(z)], || {

@@ -83,6 +83,7 @@ USAGE:
                 [--quant none|int-delta|p<bits>|pq<bits>]   (bits 1..=16)
                 [--quant-bits N] [--quant-block N] [--stochastic]
                 [--schedule serial|parallel] [--workers N]
+                [--assign round-robin|block|lpt]
                 [--greedy 2,5,10] [--out results/run.csv]
   repro baseline --dataset <name> --optimizer gd|adadelta|adagrad|adam
                 [--hidden N] [--layers N] [--epochs N] [--lr F] [--seed N]

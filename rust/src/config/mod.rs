@@ -209,6 +209,8 @@ pub struct TrainConfig {
     pub quant_stochastic: bool,
     /// Worker threads for the parallel schedule (0 = one per layer).
     pub workers: usize,
+    /// Layer→worker assignment policy when `workers` < layers.
+    pub assign: WorkerAssign,
     pub schedule: ScheduleMode,
     /// Greedy layerwise stage plan; empty = train all layers at once.
     pub greedy_stages: Vec<usize>,
@@ -230,6 +232,7 @@ impl TrainConfig {
             quant_block: 0,
             quant_stochastic: false,
             workers: 0,
+            assign: WorkerAssign::RoundRobin,
             schedule: ScheduleMode::Parallel,
             greedy_stages: vec![],
             zlast_prox_steps: 24,
@@ -356,8 +359,36 @@ impl std::str::FromStr for QuantMode {
 pub enum ScheduleMode {
     /// All layer updates on the caller thread (speedup baseline).
     Serial,
-    /// One worker per layer (or `workers` pooled workers).
+    /// Phase dispatch over the persistent layer-worker pool (one pinned
+    /// OS thread per worker, spawned once per trainer).
     Parallel,
+}
+
+/// Layer→worker assignment policy for the persistent pool when a run has
+/// fewer workers than layers. Assignment never changes numerics — only
+/// which worker's wall-clock a layer lands on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerAssign {
+    /// Layer `l` on worker `l % workers` (the paper's default).
+    RoundRobin,
+    /// Contiguous blocks of layers per worker.
+    Block,
+    /// Longest-processing-time-first over the previous epoch's measured
+    /// per-layer times (requires `record_layer_times`; falls back to
+    /// round-robin until a measurement exists).
+    Lpt,
+}
+
+impl std::str::FromStr for WorkerAssign {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "round-robin" => Ok(WorkerAssign::RoundRobin),
+            "block" => Ok(WorkerAssign::Block),
+            "lpt" => Ok(WorkerAssign::Lpt),
+            _ => Err(anyhow!("assign must be round-robin|block|lpt, got {s:?}")),
+        }
+    }
 }
 
 impl std::str::FromStr for ScheduleMode {
@@ -439,5 +470,14 @@ mod tests {
         assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
         assert_eq!("serial".parse::<ScheduleMode>().unwrap(), ScheduleMode::Serial);
         assert!("gpu".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn worker_assign_parsing() {
+        assert_eq!("round-robin".parse::<WorkerAssign>().unwrap(), WorkerAssign::RoundRobin);
+        assert_eq!("block".parse::<WorkerAssign>().unwrap(), WorkerAssign::Block);
+        assert_eq!("lpt".parse::<WorkerAssign>().unwrap(), WorkerAssign::Lpt);
+        assert!("random".parse::<WorkerAssign>().is_err());
+        assert_eq!(TrainConfig::new("cora", 8, 3, 1).assign, WorkerAssign::RoundRobin);
     }
 }

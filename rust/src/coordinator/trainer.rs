@@ -1,13 +1,21 @@
 //! The pdADMM-G coordinator (substrate S12): Algorithm 1 as a phase-barrier
-//! schedule over layer workers.
+//! schedule over a persistent layer-worker runtime.
 //!
 //! One epoch = the six phases of DESIGN.md §7 (P, W, B, Z, Q, U). Within a
 //! phase every layer's subproblem is independent — `ScheduleMode::Parallel`
-//! fans them out over a worker pool (one OS thread per worker, compute
-//! pinned to one thread each so Figs. 3/4 measure *model* parallelism);
-//! `ScheduleMode::Serial` runs the identical updates on the caller thread.
-//! The two schedules are numerically identical (asserted by property
-//! tests): parallelism changes wall-clock only.
+//! dispatches them to a [`WorkerPool`] built once per trainer (one pinned
+//! OS worker thread each, layers assigned to workers for the whole run by
+//! the `--assign` policy), so an epoch costs six condvar handshakes instead
+//! of six rounds of thread spawns. `ScheduleMode::Serial` runs the
+//! identical updates inline on the caller thread; the two schedules are
+//! bitwise-identical (asserted by property tests) — parallelism changes
+//! wall-clock only.
+//!
+//! On hosts with >= 2 cores the pool realizes the parallel schedule
+//! physically and the speedup experiments report measured wall-clock. On
+//! single-core hosts they fall back to [`phase_makespan_ms`], which
+//! computes the schedule's true phase-barrier makespan from measured
+//! per-phase, per-layer compute times (`record_layer_times`).
 //!
 //! All cross-layer tensor movement goes through the byte-accounted
 //! [`CommMeter`] with the configured quantization codecs (pdADMM-G-Q).
@@ -16,12 +24,12 @@ use crate::admm::objective;
 use crate::admm::state::{self, LayerRole, LayerState};
 use crate::admm::updates::zlast_lr;
 use crate::backend::ComputeBackend;
-use crate::config::{QuantMode, ScheduleMode, TrainConfig};
+use crate::config::{QuantMode, ScheduleMode, TrainConfig, WorkerAssign};
 use crate::coordinator::channel::{CommMeter, Kind};
 use crate::coordinator::quant::Codec;
 use crate::graph::datasets::Dataset;
 use crate::metrics::{EpochRecord, TrainLog};
-use crate::util::threads::parallel_map;
+use crate::util::threads::{lpt_assignment, WorkerPool};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -34,27 +42,72 @@ pub struct Trainer {
     pub epoch: usize,
     /// Evaluate objective/accuracy every epoch (disable for pure timing).
     pub measure: bool,
-    /// When set, per-layer compute seconds are recorded each epoch for the
-    /// critical-path schedule simulator (speedup experiments on hosts with
-    /// fewer cores than workers — DESIGN.md §2).
+    /// When set, per-phase, per-layer compute seconds are recorded each
+    /// epoch for the schedule simulator (speedup experiments on hosts with
+    /// fewer cores than workers — DESIGN.md §2) and the `lpt` assignment.
     pub record_layer_times: bool,
-    /// layer -> accumulated compute seconds in the last epoch.
+    /// phase (P,W,B,Z,Q,U) -> layer -> compute seconds in the last epoch.
+    pub last_phase_layer_secs: Vec<Vec<f64>>,
+    /// layer -> compute seconds summed over the six phases (last epoch).
     pub last_layer_secs: Vec<f64>,
+    /// The persistent layer-worker pool (`ScheduleMode::Parallel` only).
+    /// Built on the first epoch and reused for every phase dispatch; its
+    /// spawn counter is the regression hook for "no threads per epoch".
+    pub pool: Option<WorkerPool>,
 }
 
-/// Simulated parallel epoch time: layers are assigned round-robin to
-/// `workers`; within each of the six phases all workers run concurrently,
-/// so the phase's makespan is the maximum worker bin. (Phase barriers are
-/// exactly Algorithm 1's semantics.) Here per-layer times are aggregated
-/// over the whole epoch, which upper-bounds the phase-wise makespan when
-/// layer costs are balanced — they are, except the first layer (bigger n0).
-pub fn simulated_parallel_ms(layer_secs: &[f64], workers: usize) -> f64 {
-    let workers = workers.max(1);
-    let mut bins = vec![0.0f64; workers];
-    for (l, &t) in layer_secs.iter().enumerate() {
-        bins[l % workers] += t;
+/// The **phase-wise** simulated parallel epoch time, from per-phase,
+/// per-layer measured compute seconds (`Trainer::last_phase_layer_secs`).
+///
+/// Layers are pinned to `workers` bins for the whole epoch by
+/// longest-processing-time-first over their total times — the same policy
+/// as the pool's `lpt` assignment — and each of the six phases contributes
+/// the maximum bin load *within that phase* (Algorithm 1's barriers).
+///
+/// This replaces the old `simulated_parallel_ms`, which aggregated layer
+/// times over the whole epoch into round-robin bins and therefore
+/// understated the makespan (overstating speedup) whenever layer costs
+/// were phase-skewed — which they always are: layer 1 carries the larger
+/// input width n0 through phases W/B/Z but skips phase P entirely, so its
+/// epoch-aggregate hides an uncovered phase-P bubble. The regression test
+/// `legacy_round_robin_accounting_overstated_speedup` pins this down.
+pub fn phase_makespan_ms(phase_layer_secs: &[Vec<f64>], workers: usize) -> f64 {
+    let n = phase_layer_secs.first().map_or(0, |ph| ph.len());
+    if n == 0 {
+        return 0.0;
     }
-    bins.iter().cloned().fold(0.0, f64::max) * 1e3
+    let workers = workers.max(1);
+    let mut totals = vec![0.0f64; n];
+    for ph in phase_layer_secs {
+        for (l, &t) in ph.iter().enumerate() {
+            totals[l] += t;
+        }
+    }
+    let (assign, _) = lpt_assignment(&totals, workers);
+    let mut makespan = 0.0;
+    for ph in phase_layer_secs {
+        let mut bins = vec![0.0f64; workers];
+        for (l, &t) in ph.iter().enumerate() {
+            bins[assign[l]] += t;
+        }
+        makespan += bins.iter().cloned().fold(0.0, f64::max);
+    }
+    makespan * 1e3
+}
+
+/// Run `n` layer jobs: over the persistent pool under the epoch's fixed
+/// assignment (parallel schedule), or inline in index order (serial
+/// reference path). Jobs only read pre-phase state and write their own
+/// result slot, so both paths produce identical outputs.
+fn dispatch<T, F>(pool: Option<&WorkerPool>, n: usize, assignment: &[usize], f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    match pool {
+        Some(p) => p.run(n, assignment, f),
+        None => (0..n).map(f).collect(),
+    }
 }
 
 impl Trainer {
@@ -76,7 +129,9 @@ impl Trainer {
             epoch: 0,
             measure: true,
             record_layer_times: false,
+            last_phase_layer_secs: Vec::new(),
             last_layer_secs: Vec::new(),
+            pool: None,
         }
     }
 
@@ -94,6 +149,50 @@ impl Trainer {
                     self.layers.len()
                 } else {
                     self.cfg.workers
+                }
+            }
+        }
+    }
+
+    /// Create or resize the persistent worker pool (parallel schedule
+    /// only). This is the **only** place the runtime spawns threads; the
+    /// six phase dispatches of every epoch reuse the pool's workers.
+    fn ensure_pool(&mut self) {
+        if self.cfg.schedule != ScheduleMode::Parallel {
+            return;
+        }
+        let want = self.n_workers().min(self.layers.len()).max(1);
+        let stale = match &self.pool {
+            Some(p) => p.workers() != want,
+            None => true,
+        };
+        if stale {
+            self.pool = Some(WorkerPool::new(want));
+        }
+    }
+
+    /// The epoch's layer→worker map (values < pool worker count), per the
+    /// configured [`WorkerAssign`] policy. Assignment never changes
+    /// numerics — only which worker's wall-clock a layer lands on.
+    fn layer_assignment(&self, n_layers: usize) -> Vec<usize> {
+        let workers = match (&self.pool, self.cfg.schedule) {
+            (Some(p), ScheduleMode::Parallel) => p.workers(),
+            _ => 1,
+        };
+        let round_robin = || (0..n_layers).map(|l| l % workers).collect::<Vec<usize>>();
+        match self.cfg.assign {
+            WorkerAssign::RoundRobin => round_robin(),
+            WorkerAssign::Block => {
+                let per = n_layers.div_ceil(workers);
+                (0..n_layers).map(|l| l / per).collect()
+            }
+            WorkerAssign::Lpt => {
+                if self.last_layer_secs.len() == n_layers
+                    && self.last_layer_secs.iter().any(|&t| t > 0.0)
+                {
+                    lpt_assignment(&self.last_layer_secs, workers).0
+                } else {
+                    round_robin()
                 }
             }
         }
@@ -136,17 +235,27 @@ impl Trainer {
     /// One full Algorithm-1 iteration. Returns the epoch record.
     pub fn run_epoch(&mut self) -> EpochRecord {
         let t0 = Instant::now();
-        let workers = self.n_workers();
+        self.ensure_pool();
         let n_layers = self.layers.len();
+        let assignment = self.layer_assignment(n_layers);
         let (nu, rho) = (self.cfg.nu, self.cfg.rho);
         use std::sync::atomic::{AtomicU64, Ordering as AtOrd};
-        let layer_ns: Vec<AtomicU64> = (0..n_layers).map(|_| AtomicU64::new(0)).collect();
-        let record = self.record_layer_times;
-        let clock = |l: usize, t0: Instant, layer_ns: &Vec<AtomicU64>| {
+        let phase_ns: Vec<Vec<AtomicU64>> = (0..6)
+            .map(|_| (0..n_layers).map(|_| AtomicU64::new(0)).collect())
+            .collect();
+        // The lpt assignment policy feeds on measured layer times, so it
+        // implies recording even when the caller didn't ask for it —
+        // otherwise `--assign lpt` would silently stay on its round-robin
+        // fallback forever.
+        let record = self.record_layer_times
+            || (self.cfg.schedule == ScheduleMode::Parallel
+                && self.cfg.assign == WorkerAssign::Lpt);
+        let clock = |ph: usize, l: usize, start: Instant| {
             if record {
-                layer_ns[l].fetch_add(t0.elapsed().as_nanos() as u64, AtOrd::Relaxed);
+                phase_ns[ph][l].fetch_add(start.elapsed().as_nanos() as u64, AtOrd::Relaxed);
             }
         };
+        let mut phase_ms = [0.0f64; 6];
 
         // Step sizes tau/theta: initialized from the Lipschitz upper bound
         // once, then adapted by backtracking every epoch (the Appendix-A
@@ -158,15 +267,21 @@ impl Trainer {
             state::refresh_step_sizes(&mut self.layers, nu, rho, self.cfg.seed);
         }
 
-        // ---- phase P: p_l^{k+1} for l >= 2, in parallel ----
         let backend = &self.backend;
-        let layers = &self.layers;
+        let pool = match self.cfg.schedule {
+            ScheduleMode::Parallel => self.pool.as_ref(),
+            ScheduleMode::Serial => None,
+        };
         let quant = self.cfg.quant;
-        let new_ps: Vec<Option<(crate::Mat, f32)>> = parallel_map(workers, n_layers, |l| {
+
+        // ---- phase P: p_l^{k+1} for l >= 2, in parallel ----
+        let pt = Instant::now();
+        let layers = &self.layers;
+        let new_ps: Vec<Option<(crate::Mat, f32)>> = dispatch(pool, n_layers, &assignment, |l| {
             if l == 0 {
                 return None; // p_1 = X is fixed
             }
-            let t0 = Instant::now();
+            let start = Instant::now();
             let cur = &layers[l];
             let prev = &layers[l - 1];
             let q_prev = prev.q.as_ref().expect("prev layer has q");
@@ -201,7 +316,7 @@ impl Trainer {
                     -1.0, 1.0, 22.0,
                 );
             }
-            clock(l, t0, &layer_ns);
+            clock(0, l, start);
             Some((cand, tau))
         });
         // p_l travels to worker l-1 (it is needed there for q/u updates):
@@ -216,11 +331,13 @@ impl Trainer {
                 self.layers[l].tau = tau;
             }
         }
+        phase_ms[0] = pt.elapsed().as_secs_f64() * 1e3;
 
         // ---- phase W (local, backtracked like phase P) ----
+        let pt = Instant::now();
         let layers = &self.layers;
-        let new_ws: Vec<(crate::Mat, f32)> = parallel_map(workers, n_layers, |l| {
-            let t0 = Instant::now();
+        let new_ws: Vec<(crate::Mat, f32)> = dispatch(pool, n_layers, &assignment, |l| {
+            let start = Instant::now();
             let c = &layers[l];
             let phi0 = backend.recon_sq(&c.w, &c.p, &c.b, &c.z);
             let mut theta = (c.theta * 0.5).max(1e-4);
@@ -239,35 +356,46 @@ impl Trainer {
                 }
                 theta *= 2.0;
             }
-            clock(l, t0, &layer_ns);
+            clock(1, l, start);
             (cand, theta)
         });
         for (l, (w, theta)) in new_ws.into_iter().enumerate() {
             self.layers[l].w = w;
             self.layers[l].theta = theta;
         }
+        phase_ms[1] = pt.elapsed().as_secs_f64() * 1e3;
 
         // ---- phase B (local) ----
+        let pt = Instant::now();
         let layers = &self.layers;
-        let new_bs: Vec<crate::Mat> = parallel_map(workers, n_layers, |l| {
-            let t0 = Instant::now();
+        let new_bs: Vec<(crate::Mat, crate::Mat)> = dispatch(pool, n_layers, &assignment, |l| {
+            let start = Instant::now();
+            // One matmul serves both phases: wp = W p determines b in
+            // closed form here and completes phase Z's pre-activation
+            // below (b_update used to recompute the product from scratch).
             let c = &layers[l];
-            let out = backend.b_update(&c.w, &c.p, &c.z);
-            clock(l, t0, &layer_ns);
-            out
+            let wp = backend.wp(&c.w, &c.p);
+            let b = backend.b_update_wp(&wp, &c.z);
+            clock(2, l, start);
+            (b, wp)
         });
-        for (l, b) in new_bs.into_iter().enumerate() {
+        let mut wps: Vec<crate::Mat> = Vec::with_capacity(n_layers);
+        for (l, (b, wp)) in new_bs.into_iter().enumerate() {
             self.layers[l].b = b;
+            wps.push(wp);
         }
+        phase_ms[2] = pt.elapsed().as_secs_f64() * 1e3;
 
-        // ---- phase Z (local) ----
+        // ---- phase Z (local; reuses phase B's cached W p) ----
+        let pt = Instant::now();
         let layers = &self.layers;
         let ds = &self.ds;
+        let wps = &wps;
         let prox_lr = zlast_lr(nu, ds.train_idx.len());
-        let new_zs: Vec<crate::Mat> = parallel_map(workers, n_layers, |l| {
-            let t0 = Instant::now();
+        let new_zs: Vec<crate::Mat> = dispatch(pool, n_layers, &assignment, |l| {
+            let start = Instant::now();
             let c = &layers[l];
-            let m = backend.linear(&c.w, &c.p, &c.b);
+            let m = backend.add_bias(&wps[l], &c.b);
             let out = match c.role {
                 LayerRole::Hidden => {
                     backend.z_update_hidden(&m, &c.z, c.q.as_ref().expect("hidden q"))
@@ -281,24 +409,26 @@ impl Trainer {
                     prox_lr,
                 ),
             };
-            clock(l, t0, &layer_ns);
+            clock(3, l, start);
             out
         });
         for (l, z) in new_zs.into_iter().enumerate() {
             self.layers[l].z = z;
         }
+        phase_ms[3] = pt.elapsed().as_secs_f64() * 1e3;
 
         // ---- phase Q: q_l from the received p_{l+1} (l < L) ----
+        let pt = Instant::now();
         let layers = &self.layers;
-        let new_qs: Vec<Option<crate::Mat>> = parallel_map(workers, n_layers, |l| {
+        let new_qs: Vec<Option<crate::Mat>> = dispatch(pool, n_layers, &assignment, |l| {
             if l + 1 == n_layers {
                 return None;
             }
-            let t0 = Instant::now();
+            let start = Instant::now();
             let c = &layers[l];
             let p_next = &layers[l + 1].p;
             let out = backend.q_update(p_next, c.u.as_ref().unwrap(), &c.z, nu, rho);
-            clock(l, t0, &layer_ns);
+            clock(4, l, start);
             Some(out)
         });
         let q_codec = self.q_codec();
@@ -312,14 +442,16 @@ impl Trainer {
                 self.meter.transfer_into(Kind::Q, q_codec, &q, dst);
             }
         }
+        phase_ms[4] = pt.elapsed().as_secs_f64() * 1e3;
 
         // ---- phase U: duals + residuals (l < L) ----
+        let pt = Instant::now();
         let layers = &self.layers;
-        let new_us: Vec<Option<crate::Mat>> = parallel_map(workers, n_layers, |l| {
+        let new_us: Vec<Option<crate::Mat>> = dispatch(pool, n_layers, &assignment, |l| {
             if l + 1 == n_layers {
                 return None;
             }
-            let t0 = Instant::now();
+            let start = Instant::now();
             let c = &layers[l];
             let out = backend.u_update(
                 c.u.as_ref().unwrap(),
@@ -327,7 +459,7 @@ impl Trainer {
                 c.q.as_ref().unwrap(),
                 rho,
             );
-            clock(l, t0, &layer_ns);
+            clock(5, l, start);
             Some(out)
         });
         for (l, u) in new_us.into_iter().enumerate() {
@@ -338,11 +470,15 @@ impl Trainer {
                 self.meter.transfer_into(Kind::U, Codec::None, &u, dst);
             }
         }
+        phase_ms[5] = pt.elapsed().as_secs_f64() * 1e3;
 
         if record {
-            self.last_layer_secs = layer_ns
+            self.last_phase_layer_secs = phase_ns
                 .iter()
-                .map(|a| a.load(AtOrd::Relaxed) as f64 * 1e-9)
+                .map(|ph| ph.iter().map(|a| a.load(AtOrd::Relaxed) as f64 * 1e-9).collect())
+                .collect();
+            self.last_layer_secs = (0..n_layers)
+                .map(|l| self.last_phase_layer_secs.iter().map(|ph| ph[l]).sum::<f64>())
                 .collect();
         }
         let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -352,6 +488,7 @@ impl Trainer {
         let mut rec = EpochRecord {
             epoch: self.epoch,
             epoch_ms: elapsed_ms,
+            phase_ms,
             comm_bytes: comm.paper_bytes(),
             ..Default::default()
         };
@@ -472,6 +609,175 @@ mod tests {
             assert_eq!(la.w.data, lb.w.data);
             assert_eq!(la.z.data, lb.z.data);
         }
+    }
+
+    /// Serial and pool schedules must agree bit-for-bit: same trajectories,
+    /// same metered bytes, with layer-time recording enabled on both.
+    fn assert_schedules_match(quant: QuantMode, block: u32, stochastic: bool) {
+        let mk = |schedule: ScheduleMode| {
+            let mut t = trainer(quant, schedule);
+            t.cfg.quant_block = block;
+            t.cfg.quant_stochastic = stochastic;
+            t.record_layer_times = true;
+            t
+        };
+        let mut a = mk(ScheduleMode::Serial);
+        let mut b = mk(ScheduleMode::Parallel);
+        for _ in 0..4 {
+            let ra = a.run_epoch();
+            let rb = b.run_epoch();
+            assert_eq!(ra.comm_bytes, rb.comm_bytes, "{quant:?}/b{block}/st{stochastic}");
+        }
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.w.data, lb.w.data, "W diverged at layer {}", la.index);
+            assert_eq!(la.z.data, lb.z.data, "z diverged at layer {}", la.index);
+            assert_eq!(la.p.data, lb.p.data, "p diverged at layer {}", la.index);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial_pq4() {
+        assert_schedules_match(QuantMode::PQ { bits: 4 }, 0, false);
+    }
+
+    #[test]
+    fn parallel_equals_serial_blockwise() {
+        assert_schedules_match(QuantMode::PQ { bits: 4 }, 64, false);
+    }
+
+    #[test]
+    fn parallel_equals_serial_stochastic() {
+        assert_schedules_match(QuantMode::PQ { bits: 8 }, 0, true);
+    }
+
+    #[test]
+    fn parallel_equals_serial_under_every_assignment() {
+        for assign in [WorkerAssign::RoundRobin, WorkerAssign::Block, WorkerAssign::Lpt] {
+            let mut a = trainer(QuantMode::None, ScheduleMode::Serial);
+            let mut b = trainer(QuantMode::None, ScheduleMode::Parallel);
+            b.cfg.assign = assign;
+            b.cfg.workers = 2; // fewer workers than the 3 layers
+            b.record_layer_times = true; // feeds the lpt policy
+            for _ in 0..3 {
+                a.run_epoch();
+                b.run_epoch();
+            }
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(la.w.data, lb.w.data, "{assign:?}: W diverged");
+                assert_eq!(la.z.data, lb.z.data, "{assign:?}: z diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_spawns_no_threads_after_warmup() {
+        let mut t = trainer(QuantMode::None, ScheduleMode::Parallel);
+        t.run_epoch(); // warmup builds the pool (one worker per layer)
+        let pool = t.pool.as_ref().expect("parallel schedule builds a pool");
+        let spawned = pool.spawned_threads();
+        assert_eq!(spawned, t.layers.len());
+        for _ in 0..3 {
+            t.run_epoch();
+        }
+        assert_eq!(
+            t.pool.as_ref().unwrap().spawned_threads(),
+            spawned,
+            "epochs after warmup must not spawn threads"
+        );
+    }
+
+    #[test]
+    fn serial_schedule_builds_no_pool() {
+        let mut t = trainer(QuantMode::None, ScheduleMode::Serial);
+        t.run_epoch();
+        assert!(t.pool.is_none());
+    }
+
+    #[test]
+    fn records_per_phase_layer_times() {
+        let mut t = trainer(QuantMode::None, ScheduleMode::Parallel);
+        t.record_layer_times = true;
+        let rec = t.run_epoch();
+        let n = t.layers.len();
+        assert_eq!(t.last_phase_layer_secs.len(), 6);
+        for ph in &t.last_phase_layer_secs {
+            assert_eq!(ph.len(), n);
+        }
+        // structural zeros: layer 1 skips phase P (p_1 = X), the last
+        // layer skips phases Q and U
+        assert_eq!(t.last_phase_layer_secs[0][0], 0.0);
+        assert_eq!(t.last_phase_layer_secs[4][n - 1], 0.0);
+        assert_eq!(t.last_phase_layer_secs[5][n - 1], 0.0);
+        assert!(t.last_layer_secs.iter().sum::<f64>() > 0.0);
+        // per-layer totals are the phase sums
+        for l in 0..n {
+            let sum: f64 = t.last_phase_layer_secs.iter().map(|ph| ph[l]).sum();
+            assert!((t.last_layer_secs[l] - sum).abs() < 1e-12);
+        }
+        // the epoch record carries per-phase wall-clock
+        assert!(rec.phase_ms.iter().all(|&ms| ms >= 0.0));
+        assert!(rec.phase_ms.iter().sum::<f64>() > 0.0);
+    }
+
+    #[test]
+    fn phase_makespan_sums_per_phase_maxima() {
+        // workers >= layers: the makespan is the sum of per-phase maxima.
+        let phases = vec![
+            vec![0.0, 1.0],
+            vec![2.0, 1.0],
+            vec![2.0, 1.0],
+            vec![2.0, 1.0],
+            vec![1.0, 0.0],
+            vec![1.0, 0.0],
+        ];
+        let ms = phase_makespan_ms(&phases, 2);
+        assert!((ms - 9.0e3).abs() < 1e-6, "got {ms}");
+        // a single worker serializes everything
+        let ms1 = phase_makespan_ms(&phases, 1);
+        assert!((ms1 - 12.0e3).abs() < 1e-6, "got {ms1}");
+    }
+
+    /// Regression for the old `simulated_parallel_ms` accounting bug: it
+    /// aggregated per-layer times over the whole epoch into round-robin
+    /// bins, so with a phase-skewed layer 1 (bigger n0 in W/B/Z, no phase
+    /// P) it understated the phase-barrier makespan and overstated speedup.
+    #[test]
+    fn legacy_round_robin_accounting_overstated_speedup() {
+        // 4 layers, one worker each; layer 0 heavy in W/B/Z (bigger n0),
+        // idle in P; the last layer has no Q/U work.
+        let phases: Vec<Vec<f64>> = vec![
+            vec![0.0, 1.0, 1.0, 1.0], // P
+            vec![4.0, 1.0, 1.0, 1.0], // W
+            vec![4.0, 1.0, 1.0, 1.0], // B
+            vec![4.0, 1.0, 1.0, 1.0], // Z
+            vec![1.0, 1.0, 1.0, 0.0], // Q
+            vec![1.0, 1.0, 1.0, 0.0], // U
+        ];
+        let workers = 4;
+        // the old formula: whole-epoch layer totals, round-robin bins
+        let mut totals = vec![0.0f64; 4];
+        for ph in &phases {
+            for (l, &t) in ph.iter().enumerate() {
+                totals[l] += t;
+            }
+        }
+        let mut bins = vec![0.0f64; workers];
+        for (l, &t) in totals.iter().enumerate() {
+            bins[l % workers] += t;
+        }
+        let legacy_ms = bins.iter().cloned().fold(0.0, f64::max) * 1e3;
+        let correct_ms = phase_makespan_ms(&phases, workers);
+        // phase barriers make the true makespan strictly larger: the other
+        // layers' phase-P work cannot hide under layer 0's W/B/Z time.
+        assert!((legacy_ms - 14.0e3).abs() < 1e-6, "legacy {legacy_ms}");
+        assert!((correct_ms - 15.0e3).abs() < 1e-6, "correct {correct_ms}");
+        let serial_ms: f64 = totals.iter().sum::<f64>() * 1e3;
+        assert!(
+            serial_ms / legacy_ms > serial_ms / correct_ms,
+            "old formula must overstate speedup: {} vs {}",
+            serial_ms / legacy_ms,
+            serial_ms / correct_ms
+        );
     }
 
     #[test]

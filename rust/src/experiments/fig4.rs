@@ -2,31 +2,46 @@
 //! against the GD-family baselines.
 //!
 //! Paper setting: 16-layer GA-MLP, 4000 neurons (scaled), flickr and
-//! ogbn-arxiv. pdADMM-G: layers round-robin over w workers, epoch time =
-//! phase-barrier makespan over *measured* per-layer compute (DESIGN.md §2:
-//! single-core host, so the schedule is simulated from measurements exactly
-//! as the multi-GPU testbed would realize it). Baselines: node-sharded data
-//! parallelism — per-shard grad compute is measured, epoch time =
-//! max(shard) + measured gradient all-reduce time (the serial aggregation
-//! that full-parameter synchronous data parallelism cannot avoid).
+//! ogbn-arxiv. pdADMM-G: layers assigned to `w` pooled workers; on hosts
+//! with >= 2 cores the epoch time is **physically measured** on the
+//! persistent worker pool, otherwise it is the phase-barrier makespan
+//! simulated from measured per-phase, per-layer compute
+//! ([`phase_makespan_ms`]) — exactly what the paper's multi-GPU testbed
+//! would realize. Both are emitted (`epoch_ms` headline, `sim_ms` always
+//! the simulator). Baselines: node-sharded data parallelism — per-shard
+//! grad compute is measured, epoch time = max(shard) + measured gradient
+//! all-reduce time (the serial aggregation that full-parameter synchronous
+//! data parallelism cannot avoid).
 //!
 //! Expected shape: pdADMM-G scales near-linearly; baselines flatten.
+//! Physically measured curves flatten at the host's core count — the
+//! simulator column preserves the paper-shaped curve beyond it.
 
 use super::ExpOptions;
 use crate::backend::{ComputeBackend, NativeBackend};
-use crate::config::{RootConfig, ScheduleMode, TrainConfig};
-use crate::coordinator::trainer::{simulated_parallel_ms, Trainer};
+use crate::config::{RootConfig, ScheduleMode, TrainConfig, WorkerAssign};
+use crate::coordinator::trainer::{phase_makespan_ms, Trainer};
 use crate::graph::datasets::{self, Dataset};
 use crate::metrics::write_csv_table;
 use crate::optim::{Optimizer, OptimizerKind};
 use crate::tensor::matrix::Mat;
+use crate::util::threads::host_cores;
 use std::sync::Arc;
 use std::time::Instant;
 
 pub const DATASETS: [&str; 2] = ["flickr", "ogbn-arxiv"];
 
-/// Measured per-layer times once, then the makespan for every worker count.
-fn admm_curve(ds: &Dataset, hidden: usize, layers: usize, reps: usize, workers: &[usize]) -> Vec<f64> {
+/// Per worker count: `(epoch_ms, sim_ms)` plus whether `epoch_ms` was
+/// physically measured on the pool (hosts with >= 2 cores) or is the
+/// simulator value. Per-phase layer times are measured once on the serial
+/// path; the simulator then bins them for every `w`.
+fn admm_curve(
+    ds: &Dataset,
+    hidden: usize,
+    layers: usize,
+    reps: usize,
+    workers: &[usize],
+) -> (Vec<f64>, Vec<f64>, bool) {
     let mut tc = TrainConfig::new(&ds.name, hidden, layers, reps);
     tc.nu = 1e-3;
     tc.rho = 1e-3;
@@ -35,14 +50,41 @@ fn admm_curve(ds: &Dataset, hidden: usize, layers: usize, reps: usize, workers: 
     trainer.measure = false;
     trainer.record_layer_times = true;
     trainer.run_epoch();
-    let mut acc = vec![0.0f64; workers.len()];
+    let mut sim = vec![0.0f64; workers.len()];
     for _ in 0..reps {
         trainer.run_epoch();
         for (i, &w) in workers.iter().enumerate() {
-            acc[i] += simulated_parallel_ms(&trainer.last_layer_secs, w);
+            sim[i] += phase_makespan_ms(&trainer.last_phase_layer_secs, w);
         }
     }
-    acc.iter().map(|t| t / reps as f64).collect()
+    let sim: Vec<f64> = sim.iter().map(|t| t / reps as f64).collect();
+
+    let measured = host_cores() >= 2;
+    let epoch = if measured {
+        let mut out = Vec::with_capacity(workers.len());
+        for &w in workers {
+            let mut tc = TrainConfig::new(&ds.name, hidden, layers, reps);
+            tc.nu = 1e-3;
+            tc.rho = 1e-3;
+            tc.schedule = ScheduleMode::Parallel;
+            tc.workers = w;
+            // same layer→worker policy the simulator bins with, so the
+            // measured and simulated columns differ only by real overhead
+            tc.assign = WorkerAssign::Lpt;
+            let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
+            t.measure = false;
+            t.run_epoch(); // warmup: builds the pool + first layer-time measurement
+            let mut ms = 0.0;
+            for _ in 0..reps {
+                ms += t.run_epoch().epoch_ms;
+            }
+            out.push(ms / reps as f64);
+        }
+        out
+    } else {
+        sim.clone()
+    };
+    (epoch, sim, measured)
 }
 
 /// Baseline: shard grads measured individually; epoch(w) = max shard time +
@@ -132,14 +174,18 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for ds_name in DATASETS {
         let ds = datasets::load(cfg, ds_name)?;
-        let admm = admm_curve(&ds, hidden, layers, reps, &worker_counts);
+        let (admm, admm_sim, measured) = admm_curve(&ds, hidden, layers, reps, &worker_counts);
+        let mode = if measured { "measured" } else { "simulated" };
         for (i, &w) in worker_counts.iter().enumerate() {
             let speedup = admm[0] / admm[i];
             println!(
-                "[fig4] {ds_name:<12} pdADMM-G   w={w:<3} {:>9.1} ms  speedup {speedup:>5.2}x",
-                admm[i]
+                "[fig4] {ds_name:<12} pdADMM-G   w={w:<3} {:>9.1} ms ({mode})  sim {:>9.1} ms  speedup {speedup:>5.2}x",
+                admm[i], admm_sim[i]
             );
-            rows.push(format!("{ds_name},pdADMM-G,{w},{:.3},{speedup:.4}", admm[i]));
+            rows.push(format!(
+                "{ds_name},pdADMM-G,{w},{:.3},{:.3},{speedup:.4},{mode}",
+                admm[i], admm_sim[i]
+            ));
         }
         for kind in OptimizerKind::all() {
             let curve = baseline_curve(&ds, kind, hidden, layers, &worker_counts);
@@ -151,15 +197,16 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
                     curve[i]
                 );
                 rows.push(format!(
-                    "{ds_name},{},{w},{:.3},{speedup:.4}",
+                    "{ds_name},{},{w},{:.3},{:.3},{speedup:.4},modeled",
                     kind.label(),
+                    curve[i],
                     curve[i]
                 ));
             }
         }
     }
     let out = cfg.results_dir().join("fig4_speedup_workers.csv");
-    write_csv_table(&out, "dataset,method,workers,epoch_ms,speedup", &rows)?;
+    write_csv_table(&out, "dataset,method,workers,epoch_ms,sim_ms,speedup,epoch_mode", &rows)?;
     println!("[fig4] wrote {}", out.display());
     Ok(())
 }

@@ -12,10 +12,11 @@ use crate::config::{BackendKind, RootConfig, ScheduleMode, TrainConfig};
 use crate::coordinator::quant::{self, Codec};
 use crate::coordinator::Trainer;
 use crate::graph::datasets;
-use crate::metrics::write_csv_table;
+use crate::metrics::{write_csv_table, PHASE_NAMES};
 use crate::tensor::matrix::Mat;
 use crate::tensor::rng::Pcg32;
 use crate::util::bench::Bencher;
+use std::sync::Arc;
 use std::time::Instant;
 
 pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
@@ -49,6 +50,30 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
         rows.push(format!("epoch_{kind:?},{ms:.3}"));
     }
 
+    // --- phase breakdown from the persistent pool (parallel schedule) ---
+    {
+        let mut tc = TrainConfig::new("pubmed", hidden, 10, 2);
+        tc.nu = 0.01;
+        tc.rho = 1.0;
+        tc.schedule = ScheduleMode::Parallel;
+        let mut trainer = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
+        trainer.measure = false;
+        trainer.record_layer_times = true;
+        trainer.run_epoch(); // warmup: builds the pool
+        let rec = trainer.run_epoch();
+        let workers = trainer.pool.as_ref().map_or(1, |p| p.workers());
+        println!("[perf] phase breakdown (pool, {workers} workers): wall vs summed compute");
+        for (i, name) in PHASE_NAMES.iter().enumerate() {
+            let compute: f64 = trainer.last_phase_layer_secs[i].iter().sum::<f64>() * 1e3;
+            println!(
+                "[perf]   phase {name}: wall {:>8.2} ms  compute {:>8.2} ms",
+                rec.phase_ms[i], compute
+            );
+            rows.push(format!("phase_{name}_wall_ms,{:.3}", rec.phase_ms[i]));
+            rows.push(format!("phase_{name}_compute_ms,{compute:.3}"));
+        }
+    }
+
     // --- native op breakdown at the layer shape (h x h x V) ---
     let mut rng = Pcg32::seeded(1);
     let v = ds.nodes;
@@ -70,6 +95,11 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
     });
     bench.bench("b_update", || {
         std::hint::black_box(be.b_update(&w, &p, &z));
+    });
+    // the B/Z fusion win: b from a cached W@p skips the phase's big matmul
+    let wp = be.wp(&w, &p);
+    bench.bench("b_update_wp (cached W@p)", || {
+        std::hint::black_box(be.b_update_wp(&wp, &z));
     });
     bench.bench("z_update_hidden", || {
         std::hint::black_box(be.z_update_hidden(&z, &z, &q));

@@ -32,6 +32,17 @@
 //! byte per element). `--quant-block N` switches the uniform codecs to
 //! block-wise `(min, step)` scaling; `--stochastic` selects unbiased
 //! stochastic rounding for the convergence experiments.
+//!
+//! # Execution model
+//!
+//! Algorithm 1's six phases run over a **persistent layer-worker pool**
+//! ([`util::threads::WorkerPool`]): one dedicated OS thread per worker,
+//! spawned once per [`coordinator::Trainer`], with phases dispatched as
+//! condvar barrier rounds and layers pinned to workers for the whole run
+//! (`--assign round-robin|block|lpt`). The serial schedule is the inline,
+//! bitwise-identical reference path. Speedup experiments physically
+//! measure the pool on multi-core hosts and otherwise use the phase-wise
+//! makespan simulator ([`coordinator::trainer::phase_makespan_ms`]).
 
 pub mod admm;
 pub mod backend;

@@ -84,6 +84,7 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
     }
     tc.schedule = args.flags.get_or("schedule", ScheduleMode::Parallel)?;
     tc.workers = args.flags.get_or("workers", 0usize)?;
+    tc.assign = args.flags.get_or("assign", tc.assign)?;
     if let Some(stages) = args.flags.get("greedy") {
         tc.greedy_stages = stages
             .split(',')

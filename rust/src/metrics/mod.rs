@@ -18,9 +18,17 @@ pub struct EpochRecord {
     pub val_acc: f64,
     pub test_acc: f64,
     pub epoch_ms: f64,
+    /// Wall-clock per Algorithm-1 phase, in [`PHASE_NAMES`] order
+    /// (dispatch through barrier and wire transfer; ADMM only).
+    pub phase_ms: [f64; 6],
     /// Bytes moved through coordinator channels this epoch.
     pub comm_bytes: u64,
 }
+
+/// The six phases of one Algorithm-1 iteration, in execution order —
+/// the index convention for [`EpochRecord::phase_ms`] and the trainer's
+/// per-phase layer timings.
+pub const PHASE_NAMES: [&str; 6] = ["P", "W", "B", "Z", "Q", "U"];
 
 /// Full run log with run-level metadata.
 #[derive(Clone, Debug, Default)]
@@ -70,7 +78,8 @@ impl TrainLog {
     }
 
     pub fn csv_header() -> &'static str {
-        "epoch,objective,residual,risk,train_acc,val_acc,test_acc,epoch_ms,comm_bytes"
+        "epoch,objective,residual,risk,train_acc,val_acc,test_acc,epoch_ms,comm_bytes,\
+         p_ms,w_ms,b_ms,z_ms,q_ms,u_ms"
     }
 
     pub fn to_csv(&self) -> String {
@@ -78,7 +87,7 @@ impl TrainLog {
         out.push('\n');
         for r in &self.records {
             out.push_str(&format!(
-                "{},{:.6e},{:.6e},{:.6e},{:.4},{:.4},{:.4},{:.3},{}\n",
+                "{},{:.6e},{:.6e},{:.6e},{:.4},{:.4},{:.4},{:.3},{}",
                 r.epoch,
                 r.objective,
                 r.residual,
@@ -89,6 +98,10 @@ impl TrainLog {
                 r.epoch_ms,
                 r.comm_bytes
             ));
+            for ms in r.phase_ms {
+                out.push_str(&format!(",{ms:.3}"));
+            }
+            out.push('\n');
         }
         out
     }
@@ -178,6 +191,13 @@ mod tests {
             lines[1].split(',').count(),
             "header/row column mismatch"
         );
+        // one timing column per Algorithm-1 phase, in phase order
+        assert!(
+            lines[0].ends_with("p_ms,w_ms,b_ms,z_ms,q_ms,u_ms"),
+            "missing per-phase columns: {}",
+            lines[0]
+        );
+        assert_eq!(PHASE_NAMES.len(), 6);
     }
 
     #[test]

@@ -107,7 +107,6 @@ pub fn matmul_tn(a: &Mat, b: &Mat, threads: usize) -> Mat {
     let (k, m, n) = (a.rows, a.cols, b.cols);
     let mut c = Mat::zeros(m, n);
     parallel_chunks(threads, m, &mut c.data, n, |i0, rows_out| {
-        let i_end = i0 + rows_out.len() / n;
         for kk in 0..k {
             let arow = a.row(kk);
             let brow = b.row(kk);
@@ -120,7 +119,6 @@ pub fn matmul_tn(a: &Mat, b: &Mat, threads: usize) -> Mat {
                     *cv += aik * bv;
                 }
             }
-            let _ = i_end;
         }
     });
     c

@@ -1,8 +1,238 @@
-//! Scoped-thread data parallelism (rayon is unavailable offline).
+//! Thread primitives (rayon is unavailable offline).
 //!
-//! The only primitive the tensor kernels need is a row-chunked parallel
-//! write into a preallocated output buffer: each worker owns a disjoint
-//! contiguous slice, so there is no synchronization in the hot loop.
+//! Three tiers, matching who spawns what:
+//!
+//! * [`parallel_chunks`] — scoped row-chunked writes for the tensor
+//!   kernels (intra-op parallelism; layer workers pass `threads = 1`).
+//! * [`parallel_map`] — scoped fork/join for one-shot sweeps (dataset
+//!   generation, baseline shards) where spawn cost is amortized by the
+//!   job size.
+//! * [`WorkerPool`] — the coordinator's **persistent** layer-worker
+//!   runtime: OS threads spawned once per trainer and reused for every
+//!   phase dispatch of every epoch. Algorithm 1 runs six barrier rounds
+//!   per iteration, so per-round thread spawns would dominate the small
+//!   subproblem updates; the pool replaces them with a condvar handshake.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Number of hardware threads available to this process (1 when detection
+/// fails). Experiments use this to decide between physically measuring the
+/// parallel schedule and falling back to the makespan simulator.
+pub fn host_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Longest-processing-time-first assignment of weighted jobs to `workers`
+/// bins: jobs are placed heaviest-first onto the currently lightest bin.
+/// Returns `(assignment, makespan_secs)` where `assignment[j]` is the bin
+/// of job `j` and the makespan is the heaviest bin's total. The classic
+/// 4/3-approximation to minimum makespan — what the schedule simulator and
+/// the `lpt` worker-assignment policy share.
+pub fn lpt_assignment(times: &[f64], workers: usize) -> (Vec<usize>, f64) {
+    let workers = workers.max(1);
+    let mut order: Vec<usize> = (0..times.len()).collect();
+    order.sort_by(|&a, &b| times[b].partial_cmp(&times[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut bins = vec![0.0f64; workers];
+    let mut assignment = vec![0usize; times.len()];
+    for &j in &order {
+        let mut lightest = 0usize;
+        for (w, &load) in bins.iter().enumerate() {
+            if load < bins[lightest] {
+                lightest = w;
+            }
+        }
+        assignment[j] = lightest;
+        bins[lightest] += times[j];
+    }
+    let makespan = bins.iter().cloned().fold(0.0, f64::max);
+    (assignment, makespan)
+}
+
+/// A round's type-erased task: called once per worker with the worker's
+/// index. The `'static` is a lie maintained by [`WorkerPool::run`]'s
+/// barrier — the borrow never outlives the round.
+type RoundTask = &'static (dyn Fn(usize) + Sync);
+
+struct PoolState {
+    /// Monotone dispatch-round counter; workers run once per increment.
+    round: u64,
+    task: Option<RoundTask>,
+    /// Workers that have not finished the current round yet.
+    remaining: usize,
+    /// Set when a worker's task panicked this round (re-raised by `run`).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Total OS threads ever spawned by this pool — the regression hook
+    /// asserting the runtime never regresses to per-epoch thread spawns.
+    spawned: AtomicUsize,
+}
+
+fn worker_loop(shared: &PoolShared, w: usize) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.round > seen {
+                    seen = st.round;
+                    break st.task.expect("task set for dispatched round");
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // Contain panics to the round: a poisoned barrier would deadlock
+        // the coordinator, so the panic is re-raised from `run` instead.
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(w))).is_ok();
+        let mut st = shared.state.lock().unwrap();
+        if !ok {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// A persistent layer-worker pool: `workers` named OS threads created once
+/// and parked on a condvar between dispatch rounds.
+///
+/// [`WorkerPool::run`] executes `n` independent jobs under a fixed
+/// job→worker `assignment` and blocks until every worker reaches the
+/// round's barrier — exactly the phase-barrier semantics of Algorithm 1's
+/// parallel schedule. Each job writes only its own output slot and jobs
+/// read only pre-round state, so results are independent of thread
+/// interleaving: `ScheduleMode::Parallel` on the pool is bitwise-identical
+/// to the inline `Serial` reference path.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Serializes dispatch rounds (`run` takes `&self`).
+    dispatch: Mutex<()>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` (>= 1) dedicated worker threads. This is the only
+    /// place the pool ever spawns a thread.
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                round: 0,
+                task: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            spawned: AtomicUsize::new(0),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let sh = Arc::clone(&shared);
+            shared.spawned.fetch_add(1, Ordering::SeqCst);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("layer-worker-{w}"))
+                    .spawn(move || worker_loop(&sh, w))
+                    .expect("spawn layer worker"),
+            );
+        }
+        WorkerPool { shared, handles, dispatch: Mutex::new(()), workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// How many OS threads this pool has spawned over its lifetime. Stays
+    /// equal to `workers()` forever — asserted by the runtime tests.
+    pub fn spawned_threads(&self) -> usize {
+        self.shared.spawned.load(Ordering::SeqCst)
+    }
+
+    /// One barrier round: job `j` runs on worker `assignment[j]`; returns
+    /// the job results in index order after every worker has finished.
+    pub fn run<T, F>(&self, n: usize, assignment: &[usize], f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        assert_eq!(assignment.len(), n, "assignment must map every job");
+        assert!(
+            assignment.iter().all(|&w| w < self.workers),
+            "assignment targets a worker >= pool size {}",
+            self.workers
+        );
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        struct Slots<T>(*mut Option<T>);
+        unsafe impl<T: Send> Sync for Slots<T> {}
+        let slots = Slots(out.as_mut_ptr());
+        let fref = &f;
+        let worker_fn = move |w: usize| {
+            for (j, &owner) in assignment.iter().enumerate() {
+                if owner == w {
+                    let v = fref(j);
+                    // SAFETY: each job index has exactly one owner worker,
+                    // so writes to distinct slots never alias, and the
+                    // round barrier below keeps `out` alive and unread
+                    // until all writes are done.
+                    unsafe { *slots.0.add(j) = Some(v) };
+                }
+            }
+        };
+        let guard = self.dispatch.lock().unwrap();
+        let obj: &(dyn Fn(usize) + Sync) = &worker_fn;
+        // SAFETY: the barrier below blocks until every worker finished the
+        // round and the task slot is cleared, so the 'static erasure never
+        // outlives the actual borrow of `worker_fn`.
+        let obj: RoundTask = unsafe { std::mem::transmute(obj) };
+        let mut st = self.shared.state.lock().unwrap();
+        st.task = Some(obj);
+        st.remaining = self.workers;
+        st.round += 1;
+        drop(st);
+        self.shared.work_cv.notify_all();
+        let mut st = self.shared.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.task = None;
+        let panicked = st.panicked;
+        st.panicked = false;
+        drop(st);
+        drop(guard);
+        if panicked {
+            panic!("a layer worker panicked during a phase dispatch");
+        }
+        out.into_iter().map(|x| x.expect("every job ran")).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
 
 /// Split `out` (which holds `n_rows * row_width` elements) into per-thread
 /// contiguous row chunks and invoke `f(first_row, chunk)` concurrently.
@@ -119,7 +349,6 @@ mod tests {
 
     #[test]
     fn parallel_map_runs_concurrently() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
         let peak = AtomicUsize::new(0);
         let live = AtomicUsize::new(0);
         parallel_map(4, 16, |_| {
@@ -129,5 +358,91 @@ mod tests {
             live.fetch_sub(1, Ordering::SeqCst);
         });
         assert!(peak.load(Ordering::SeqCst) >= 2);
+    }
+
+    #[test]
+    fn lpt_balances_skewed_jobs() {
+        // round-robin would bin {4,3} vs {3,2} (makespan 7); LPT gets 6.
+        let (assignment, makespan) = lpt_assignment(&[4.0, 3.0, 3.0, 2.0], 2);
+        assert_eq!(assignment.len(), 4);
+        assert!(assignment.iter().all(|&w| w < 2));
+        assert!((makespan - 6.0).abs() < 1e-12, "makespan {makespan}");
+    }
+
+    #[test]
+    fn lpt_with_enough_workers_is_the_max_job() {
+        let (assignment, makespan) = lpt_assignment(&[1.0, 5.0, 2.0], 8);
+        assert!((makespan - 5.0).abs() < 1e-12);
+        // the three jobs land on three distinct workers
+        let mut seen = assignment.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 3);
+    }
+
+    #[test]
+    fn pool_runs_jobs_under_fixed_assignment() {
+        let pool = WorkerPool::new(3);
+        let assignment: Vec<usize> = (0..10).map(|j| j % 3).collect();
+        let got = pool.run(10, &assignment, |j| j * 7);
+        assert_eq!(got, (0..10).map(|j| j * 7).collect::<Vec<_>>());
+        assert_eq!(pool.workers(), 3);
+    }
+
+    #[test]
+    fn pool_reuses_threads_across_rounds() {
+        let pool = WorkerPool::new(4);
+        let assignment: Vec<usize> = (0..16).map(|j| j % 4).collect();
+        for _ in 0..5 {
+            let got = pool.run(16, &assignment, |j| j + 1);
+            assert_eq!(got[15], 16);
+        }
+        // five dispatch rounds, zero new threads
+        assert_eq!(pool.spawned_threads(), 4);
+    }
+
+    #[test]
+    fn pool_rounds_run_concurrently() {
+        let pool = WorkerPool::new(4);
+        let peak = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        let assignment: Vec<usize> = (0..8).map(|j| j % 4).collect();
+        pool.run(8, &assignment, |_| {
+            let l = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(l, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) >= 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "layer worker panicked")]
+    fn pool_propagates_worker_panics() {
+        let pool = WorkerPool::new(2);
+        pool.run(2, &[0, 1], |j| {
+            if j == 1 {
+                panic!("boom");
+            }
+            j
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_round() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, &[0, 1], |j| {
+                if j == 0 {
+                    panic!("boom");
+                }
+                j
+            })
+        }));
+        assert!(r.is_err());
+        // the next round still runs on the same threads
+        let got = pool.run(2, &[0, 1], |j| j + 10);
+        assert_eq!(got, vec![10, 11]);
+        assert_eq!(pool.spawned_threads(), 2);
     }
 }
