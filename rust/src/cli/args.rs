@@ -84,12 +84,17 @@ USAGE:
                 [--quant-bits N] [--quant-block N] [--stochastic]
                 [--schedule serial|parallel] [--workers N]
                 [--assign round-robin|block|lpt]
+                [--distributed N]           # spawn N localhost worker processes
+                [--workers-at a:p,unix:/s]  # drive pre-started workers instead
                 [--greedy 2,5,10] [--out results/run.csv]
+  repro worker  --listen  <host:port|unix:path>   # serve one coordinator
+  repro worker  --connect <host:port|unix:path>   # dial a coordinator
   repro baseline --dataset <name> --optimizer gd|adadelta|adagrad|adam
                 [--hidden N] [--layers N] [--epochs N] [--lr F] [--seed N]
                 [--workers N] [--backend native|xla]
   repro exp     fig2|fig3|fig4|fig5|table3|table4|perf|all
                 [--quick] [--backend native|xla] [--epochs N] [--seeds N]
+                [--distributed]   # fig3/fig4: also measure socket workers
   repro datasets            # list the benchmark suite with statistics
   repro artifacts           # show the AOT artifact manifest summary
   repro help

@@ -24,6 +24,55 @@ pub struct DatasetSpec {
     pub seed: u64,
 }
 
+impl DatasetSpec {
+    /// Serialize for the distributed-worker setup message (field names
+    /// match `configs/datasets.json`; the seed travels as a string so the
+    /// full u64 range survives the f64-backed JSON numbers).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("avg_degree", Json::num(self.avg_degree)),
+            ("classes", Json::num(self.classes as f64)),
+            ("feat_dim", Json::num(self.feat_dim as f64)),
+            ("train", Json::num(self.train as f64)),
+            ("val", Json::num(self.val as f64)),
+            ("test", Json::num(self.test as f64)),
+            ("p_in_over_p_out", Json::num(self.homophily_ratio)),
+            ("feature_signal", Json::num(self.feature_signal as f64)),
+            ("label_noise", Json::num(self.label_noise as f64)),
+            ("seed", Json::str(self.seed.to_string())),
+        ])
+    }
+
+    /// Inverse of [`DatasetSpec::to_json`].
+    pub fn from_json(v: &Json) -> Result<DatasetSpec> {
+        let num = |key: &str| -> Result<f64> {
+            v.req(key)?.as_f64().ok_or_else(|| anyhow!("{key} must be a number"))
+        };
+        Ok(DatasetSpec {
+            name: v.req("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string(),
+            nodes: num("nodes")? as usize,
+            avg_degree: num("avg_degree")?,
+            classes: num("classes")? as usize,
+            feat_dim: num("feat_dim")? as usize,
+            train: num("train")? as usize,
+            val: num("val")? as usize,
+            test: num("test")? as usize,
+            homophily_ratio: num("p_in_over_p_out")?,
+            feature_signal: num("feature_signal")? as f32,
+            label_noise: num("label_noise")? as f32,
+            seed: parse_seed(v, "seed")?,
+        })
+    }
+}
+
+/// Parse a u64 seed serialized as a decimal string.
+fn parse_seed(v: &Json, key: &str) -> Result<u64> {
+    let s = v.req(key)?.as_str().ok_or_else(|| anyhow!("{key} must be a string"))?;
+    s.parse::<u64>().map_err(|e| anyhow!("{key} {s:?}: {e}"))
+}
+
 /// An AOT artifact build config (mirrors aot.py's artifact_configs).
 #[derive(Clone, Debug)]
 pub struct ArtifactConfig {
@@ -240,12 +289,89 @@ impl TrainConfig {
     }
 }
 
+impl TrainConfig {
+    /// Serialize for the distributed-worker setup message. Enum fields use
+    /// their `FromStr` spellings so [`TrainConfig::from_json`] is the exact
+    /// inverse; f32 values survive via exact f32→f64 widening.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(&self.dataset)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("layers", Json::num(self.layers as f64)),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("nu", Json::num(self.nu as f64)),
+            ("rho", Json::num(self.rho as f64)),
+            ("seed", Json::str(self.seed.to_string())),
+            ("backend", Json::str(self.backend.label())),
+            ("quant", Json::str(self.quant.wire_str())),
+            ("quant_block", Json::num(self.quant_block as f64)),
+            ("quant_stochastic", Json::Bool(self.quant_stochastic)),
+            ("workers", Json::num(self.workers as f64)),
+            ("assign", Json::str(self.assign.label())),
+            ("schedule", Json::str(self.schedule.label())),
+            (
+                "greedy_stages",
+                Json::Arr(self.greedy_stages.iter().map(|&s| Json::num(s as f64)).collect()),
+            ),
+            ("zlast_prox_steps", Json::num(self.zlast_prox_steps as f64)),
+        ])
+    }
+
+    /// Inverse of [`TrainConfig::to_json`].
+    pub fn from_json(v: &Json) -> Result<TrainConfig> {
+        let num = |key: &str| -> Result<f64> {
+            v.req(key)?.as_f64().ok_or_else(|| anyhow!("{key} must be a number"))
+        };
+        let text = |key: &str| -> Result<&str> {
+            v.req(key)?.as_str().ok_or_else(|| anyhow!("{key} must be a string"))
+        };
+        let mut tc = TrainConfig::new(
+            text("dataset")?,
+            num("hidden")? as usize,
+            num("layers")? as usize,
+            num("epochs")? as usize,
+        );
+        tc.nu = num("nu")? as f32;
+        tc.rho = num("rho")? as f32;
+        tc.seed = parse_seed(v, "seed")?;
+        tc.backend = text("backend")?.parse()?;
+        tc.quant = text("quant")?.parse()?;
+        tc.quant_block = num("quant_block")? as u32;
+        tc.quant_stochastic = v
+            .req("quant_stochastic")?
+            .as_bool()
+            .ok_or_else(|| anyhow!("quant_stochastic must be a bool"))?;
+        tc.workers = num("workers")? as usize;
+        tc.assign = text("assign")?.parse()?;
+        tc.schedule = text("schedule")?.parse()?;
+        tc.greedy_stages = v
+            .req("greedy_stages")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("greedy_stages must be an array"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("greedy stage must be a number")))
+            .collect::<Result<Vec<_>>>()?;
+        tc.zlast_prox_steps = num("zlast_prox_steps")? as usize;
+        Ok(tc)
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
     /// Pure-rust ops (substrate S11) — exact-thread-control path.
     Native,
     /// AOT artifacts through PJRT (the three-layer architecture's default).
     Xla,
+}
+
+impl BackendKind {
+    /// The `FromStr` spelling (config wire format).
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
 }
 
 impl std::str::FromStr for BackendKind {
@@ -288,6 +414,18 @@ impl QuantMode {
 
     pub fn quantizes_q(&self) -> bool {
         matches!(self, QuantMode::PQ { .. })
+    }
+
+    /// The `FromStr`-parseable spelling (unlike [`QuantMode::label`], which
+    /// is the human-facing `p@8` form) — the config wire format of the
+    /// distributed setup message.
+    pub fn wire_str(&self) -> String {
+        match self {
+            QuantMode::None => "none".into(),
+            QuantMode::IntDelta => "int-delta".into(),
+            QuantMode::P { bits } => format!("p{bits}"),
+            QuantMode::PQ { bits } => format!("pq{bits}"),
+        }
     }
 
     /// The uniform wire width, if this mode has one.
@@ -364,6 +502,16 @@ pub enum ScheduleMode {
     Parallel,
 }
 
+impl ScheduleMode {
+    /// The `FromStr` spelling (config wire format).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScheduleMode::Serial => "serial",
+            ScheduleMode::Parallel => "parallel",
+        }
+    }
+}
+
 /// Layer→worker assignment policy for the persistent pool when a run has
 /// fewer workers than layers. Assignment never changes numerics — only
 /// which worker's wall-clock a layer lands on.
@@ -377,6 +525,17 @@ pub enum WorkerAssign {
     /// per-layer times (requires `record_layer_times`; falls back to
     /// round-robin until a measurement exists).
     Lpt,
+}
+
+impl WorkerAssign {
+    /// The `FromStr` spelling (config wire format).
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkerAssign::RoundRobin => "round-robin",
+            WorkerAssign::Block => "block",
+            WorkerAssign::Lpt => "lpt",
+        }
+    }
 }
 
 impl std::str::FromStr for WorkerAssign {
@@ -470,6 +629,61 @@ mod tests {
         assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
         assert_eq!("serial".parse::<ScheduleMode>().unwrap(), ScheduleMode::Serial);
         assert!("gpu".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn train_config_json_round_trips_exactly() {
+        let mut tc = TrainConfig::new("cora", 96, 7, 42);
+        tc.nu = 1e-3;
+        tc.rho = 0.1;
+        tc.seed = u64::MAX - 17; // beyond f64's exact-integer range
+        tc.backend = BackendKind::Native;
+        tc.quant = QuantMode::PQ { bits: 4 };
+        tc.quant_block = 512;
+        tc.workers = 3;
+        tc.assign = WorkerAssign::Lpt;
+        tc.schedule = ScheduleMode::Serial;
+        tc.greedy_stages = vec![2, 5, 7];
+        let text = tc.to_json().to_string_compact();
+        let back = TrainConfig::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.dataset, tc.dataset);
+        assert_eq!(back.hidden, tc.hidden);
+        assert_eq!(back.layers, tc.layers);
+        assert_eq!(back.epochs, tc.epochs);
+        assert_eq!(back.nu.to_bits(), tc.nu.to_bits());
+        assert_eq!(back.rho.to_bits(), tc.rho.to_bits());
+        assert_eq!(back.seed, tc.seed);
+        assert_eq!(back.backend, tc.backend);
+        assert_eq!(back.quant, tc.quant);
+        assert_eq!(back.quant_block, tc.quant_block);
+        assert_eq!(back.quant_stochastic, tc.quant_stochastic);
+        assert_eq!(back.workers, tc.workers);
+        assert_eq!(back.assign, tc.assign);
+        assert_eq!(back.schedule, tc.schedule);
+        assert_eq!(back.greedy_stages, tc.greedy_stages);
+        assert_eq!(back.zlast_prox_steps, tc.zlast_prox_steps);
+    }
+
+    #[test]
+    fn dataset_spec_json_round_trips_exactly() {
+        let cfg = RootConfig::load_default().unwrap();
+        for spec in &cfg.datasets {
+            let text = spec.to_json().to_string_compact();
+            let back =
+                DatasetSpec::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.name, spec.name);
+            assert_eq!(back.nodes, spec.nodes);
+            assert_eq!(back.avg_degree.to_bits(), spec.avg_degree.to_bits());
+            assert_eq!(back.classes, spec.classes);
+            assert_eq!(back.feat_dim, spec.feat_dim);
+            assert_eq!(back.train, spec.train);
+            assert_eq!(back.val, spec.val);
+            assert_eq!(back.test, spec.test);
+            assert_eq!(back.homophily_ratio.to_bits(), spec.homophily_ratio.to_bits());
+            assert_eq!(back.feature_signal.to_bits(), spec.feature_signal.to_bits());
+            assert_eq!(back.label_noise.to_bits(), spec.label_noise.to_bits());
+            assert_eq!(back.seed, spec.seed);
+        }
     }
 
     #[test]

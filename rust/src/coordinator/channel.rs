@@ -71,6 +71,15 @@ impl CommMeter {
         self.count(kind, bytes);
     }
 
+    /// Record a transfer whose encoding the caller performed itself. The
+    /// distributed runtime keeps the [`quant::Encoded`] buffer alive as the
+    /// physical frame payload, so it cannot go through `transfer_into`;
+    /// `bytes` must be that encoding's `wire_bytes()` for the accounting to
+    /// stay schedule-independent.
+    pub fn record(&self, kind: Kind, bytes: u64) {
+        self.count(kind, bytes);
+    }
+
     pub fn p_bytes(&self) -> u64 {
         self.p_bytes.load(Ordering::Relaxed)
     }
@@ -117,6 +126,15 @@ pub struct CommSnapshot {
 impl CommSnapshot {
     pub fn paper_bytes(&self) -> u64 {
         self.p_bytes + self.q_bytes
+    }
+
+    /// Accumulate another snapshot (the distributed coordinator sums the
+    /// per-worker meters into the epoch total).
+    pub fn add(&mut self, other: &CommSnapshot) {
+        self.p_bytes += other.p_bytes;
+        self.q_bytes += other.q_bytes;
+        self.u_bytes += other.u_bytes;
+        self.transfers += other.transfers;
     }
 }
 

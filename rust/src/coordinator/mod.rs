@@ -1,12 +1,23 @@
 //! L3 coordinator (the paper's system contribution): phase-barrier
-//! model-parallel ADMM over layer workers, byte-accounted quantized
-//! communication, and the greedy layerwise protocol.
+//! model-parallel ADMM over layer workers — in-process or cross-process —
+//! byte-accounted quantized communication, and the greedy layerwise
+//! protocol.
+//!
+//! * [`phases`] — the six per-layer subproblem kernels every runtime runs.
+//! * [`trainer`] — the in-process coordinator (serial / pooled-thread).
+//! * [`transport`] — the [`transport::Transport`] abstraction: the framed
+//!   Unix-socket/TCP runtime next to the in-process one.
+//! * [`worker`] — the `repro worker` process serving one layer block.
 
 pub mod channel;
 pub mod greedy;
+pub mod phases;
 pub mod quant;
 pub mod trainer;
+pub mod transport;
+pub mod worker;
 
 pub use channel::{CommMeter, CommSnapshot};
 pub use quant::Codec;
 pub use trainer::Trainer;
+pub use transport::{InProcessTransport, SocketTransport, Transport};

@@ -1,0 +1,246 @@
+//! The six per-layer subproblem updates of Algorithm 1, as runtime-agnostic
+//! kernels (substrate S12).
+//!
+//! Every schedule — the inline serial path, the pooled-thread dispatch, and
+//! the cross-process socket workers — executes *these* functions, so the
+//! three runtimes are bitwise-identical by construction: a schedule decides
+//! only *where* a layer's update runs and *how* its result travels, never
+//! what is computed. The schedule-parity integration test pins this down
+//! end-to-end (identical `EpochRecord` trajectories and identical metered
+//! byte totals across Serial, Parallel and Distributed).
+//!
+//! Also here: the wire-codec selectors ([`p_codec`] / [`q_codec`]) shared by
+//! the trainer and the remote workers (both sides of a socket must agree on
+//! the codec out-of-band — the tensor wire format is not self-describing),
+//! and [`build_chain`], the deterministic layer-chain constructor every
+//! process derives its state from.
+
+use crate::admm::state::{self, LayerRole, LayerState};
+use crate::backend::ComputeBackend;
+use crate::config::{QuantMode, TrainConfig};
+use crate::coordinator::quant::Codec;
+use crate::graph::datasets::Dataset;
+use crate::tensor::matrix::Mat;
+
+/// Phase P: the backtracked p-subproblem for one layer (`l >= 1`).
+/// `q_prev` / `u_prev` are layer `l-1`'s output-side variables (received
+/// from that layer's worker). Returns the accepted step and its tau.
+pub fn p_update(
+    backend: &dyn ComputeBackend,
+    cur: &LayerState,
+    q_prev: &Mat,
+    u_prev: &Mat,
+    nu: f32,
+    rho: f32,
+    quant: QuantMode,
+) -> (Mat, f32) {
+    // phi(p) = (nu/2)||z - Wp - b||^2 + u^T(p - q) + (rho/2)||p - q||^2
+    let phi = |pp: &Mat| -> f64 {
+        let gap = pp.sub(q_prev);
+        (nu as f64 / 2.0) * backend.recon_sq(&cur.w, pp, &cur.b, &cur.z)
+            + u_prev.zip(&gap, |a, b| a * b).sum()
+            + (rho as f64 / 2.0) * gap.frob_sq()
+    };
+    let phi0 = phi(&cur.p);
+    let mut tau = (cur.tau * 0.5).max(rho + 1e-4);
+    let mut cand;
+    loop {
+        cand = backend.p_update(&cur.p, &cur.w, &cur.b, &cur.z, q_prev, u_prev, tau, nu, rho);
+        let dp2 = cand.sub(&cur.p).frob_sq();
+        // U-condition <=> phi(p') <= phi0 - (tau/2)||dp||^2
+        if phi(&cand) <= phi0 - (tau as f64 / 2.0) * dp2 + 1e-9 * (1.0 + phi0.abs()) || tau > 1e8 {
+            break;
+        }
+        tau *= 2.0;
+    }
+    if quant == QuantMode::IntDelta {
+        // re-run the accepted step with the projection onto Delta
+        cand = backend.p_update_quant(
+            &cur.p, &cur.w, &cur.b, &cur.z, q_prev, u_prev, tau, nu, rho, -1.0, 1.0, 22.0,
+        );
+    }
+    (cand, tau)
+}
+
+/// Phase W: the backtracked w-subproblem for one layer (local).
+pub fn w_update(backend: &dyn ComputeBackend, c: &LayerState, nu: f32) -> (Mat, f32) {
+    let phi0 = backend.recon_sq(&c.w, &c.p, &c.b, &c.z);
+    let mut theta = (c.theta * 0.5).max(1e-4);
+    let mut cand;
+    loop {
+        cand = backend.w_update(&c.p, &c.w, &c.b, &c.z, theta, nu);
+        let dw2 = cand.sub(&c.w).frob_sq();
+        let phi1 = backend.recon_sq(&cand, &c.p, &c.b, &c.z);
+        // phi here is (nu/2)||r||^2; same U-condition algebra
+        if (nu as f64 / 2.0) * phi1
+            <= (nu as f64 / 2.0) * phi0 - (theta as f64 / 2.0) * dw2 + 1e-9 * (1.0 + phi0.abs())
+            || theta > 1e8
+        {
+            break;
+        }
+        theta *= 2.0;
+    }
+    (cand, theta)
+}
+
+/// Phase B: closed-form b from one `W @ p` matmul. Returns `(b, wp)` — the
+/// cached product completes phase Z's pre-activation without a second
+/// full matmul.
+pub fn b_update(backend: &dyn ComputeBackend, c: &LayerState) -> (Mat, Mat) {
+    let wp = backend.wp(&c.w, &c.p);
+    let b = backend.b_update_wp(&wp, &c.z);
+    (b, wp)
+}
+
+/// Phase Z: the z-subproblem from the phase-B cached `wp`, the layer's
+/// *new* b, and (for the last layer) the labels/mask.
+pub fn z_update(
+    backend: &dyn ComputeBackend,
+    c: &LayerState,
+    wp: &Mat,
+    y: &Mat,
+    maskn: &Mat,
+    nu: f32,
+    prox_lr: f32,
+) -> Mat {
+    let m = backend.add_bias(wp, &c.b);
+    match c.role {
+        LayerRole::Hidden => backend.z_update_hidden(&m, &c.z, c.q.as_ref().expect("hidden q")),
+        LayerRole::Last => backend.z_update_last(&m, &c.z, y, maskn, nu, prox_lr),
+    }
+}
+
+/// Phase Q: q_l from the received `p_{l+1}` (layers `l < L` only).
+pub fn q_update(
+    backend: &dyn ComputeBackend,
+    c: &LayerState,
+    p_next: &Mat,
+    nu: f32,
+    rho: f32,
+) -> Mat {
+    backend.q_update(p_next, c.u.as_ref().expect("hidden u"), &c.z, nu, rho)
+}
+
+/// Phase U: the dual ascent step (layers `l < L` only).
+pub fn u_update(backend: &dyn ComputeBackend, c: &LayerState, p_next: &Mat, rho: f32) -> Mat {
+    let u = c.u.as_ref().expect("hidden u");
+    backend.u_update(u, p_next, c.q.as_ref().expect("hidden q"), rho)
+}
+
+/// The uniform-grid wire codec variant selected by the config: block-wise
+/// affine when `quant_block > 0`, stochastic rounding when requested, plain
+/// whole-tensor uniform otherwise. The block+stochastic combination has no
+/// wire format and is rejected by the CLI; if both are set
+/// programmatically, block-wise wins.
+fn uniform_codec(cfg: &TrainConfig, bits: u8) -> Codec {
+    if cfg.quant_block > 0 {
+        Codec::BlockUniform { bits, block: cfg.quant_block }
+    } else if cfg.quant_stochastic {
+        Codec::Stochastic { bits }
+    } else {
+        Codec::Uniform { bits }
+    }
+}
+
+/// Wire codec for p transfers under `cfg` (shared by the trainer and the
+/// socket workers — both ends derive it from the same config).
+pub fn p_codec(cfg: &TrainConfig) -> Codec {
+    match cfg.quant {
+        QuantMode::None => Codec::None,
+        // p is already projected onto Delta by the quantized subproblem:
+        // the wire carries lossless 1-byte indices.
+        QuantMode::IntDelta => Codec::paper_int_delta(),
+        QuantMode::P { bits } | QuantMode::PQ { bits } => uniform_codec(cfg, bits),
+    }
+}
+
+/// Wire codec for q transfers under `cfg`.
+pub fn q_codec(cfg: &TrainConfig) -> Codec {
+    match cfg.quant {
+        QuantMode::PQ { bits } => uniform_codec(cfg, bits),
+        _ => Codec::None,
+    }
+}
+
+/// He-style init scale for the warm-start weights.
+pub fn init_std(fan_in: usize) -> f32 {
+    (2.0 / fan_in as f32).sqrt()
+}
+
+/// Build the layer chain for `cfg` on `ds` — a pure function of
+/// `(ds, cfg.layers, cfg.hidden, cfg.seed)`, so every process of a
+/// distributed run reconstructs bitwise-identical state from the same
+/// setup message (numerics are thread-invariant; `threads` only changes
+/// wall-clock).
+pub fn build_chain(ds: &Dataset, cfg: &TrainConfig, threads: usize) -> Vec<LayerState> {
+    let mut dims = vec![ds.input_dim];
+    for _ in 0..cfg.layers - 1 {
+        dims.push(cfg.hidden);
+    }
+    dims.push(ds.classes);
+    state::init_chain(&dims, &ds.x, cfg.seed, init_std(ds.input_dim), threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+    use crate::graph::datasets;
+
+    fn tiny_cfg() -> (Dataset, TrainConfig) {
+        let ds = datasets::build(
+            &DatasetSpec {
+                name: "tiny".into(),
+                nodes: 40,
+                avg_degree: 4.0,
+                classes: 2,
+                feat_dim: 4,
+                train: 20,
+                val: 10,
+                test: 10,
+                homophily_ratio: 6.0,
+                feature_signal: 1.0,
+                label_noise: 0.0,
+                seed: 5,
+            },
+            2,
+            1,
+        );
+        let mut cfg = TrainConfig::new("tiny", 6, 3, 1);
+        cfg.seed = 9;
+        (ds, cfg)
+    }
+
+    #[test]
+    fn build_chain_is_deterministic_and_thread_invariant() {
+        let (ds, cfg) = tiny_cfg();
+        let a = build_chain(&ds, &cfg, 1);
+        let b = build_chain(&ds, &cfg, 4);
+        assert_eq!(a.len(), 3);
+        for (la, lb) in a.iter().zip(&b) {
+            assert_eq!(la.w.data, lb.w.data);
+            assert_eq!(la.z.data, lb.z.data);
+            assert_eq!(la.p.data, lb.p.data);
+        }
+    }
+
+    #[test]
+    fn codec_selectors_follow_the_config() {
+        let (_, mut cfg) = tiny_cfg();
+        assert_eq!(p_codec(&cfg), Codec::None);
+        assert_eq!(q_codec(&cfg), Codec::None);
+        cfg.quant = QuantMode::PQ { bits: 4 };
+        assert_eq!(p_codec(&cfg), Codec::Uniform { bits: 4 });
+        assert_eq!(q_codec(&cfg), Codec::Uniform { bits: 4 });
+        cfg.quant_block = 64;
+        assert_eq!(p_codec(&cfg), Codec::BlockUniform { bits: 4, block: 64 });
+        cfg.quant_block = 0;
+        cfg.quant_stochastic = true;
+        assert_eq!(q_codec(&cfg), Codec::Stochastic { bits: 4 });
+        cfg.quant = QuantMode::P { bits: 8 };
+        assert_eq!(p_codec(&cfg), Codec::Stochastic { bits: 8 });
+        assert_eq!(q_codec(&cfg), Codec::None);
+        cfg.quant = QuantMode::IntDelta;
+        assert_eq!(p_codec(&cfg), Codec::paper_int_delta());
+    }
+}

@@ -58,6 +58,25 @@
 //! [`encode_into`] / [`decode_into`] reuse caller-owned buffers, and
 //! [`transfer_into`] reuses a thread-local [`Encoded`] scratch — the
 //! trainer's phase loops do not allocate wire buffers per transfer.
+//!
+//! # Framed transport (cross-process runs)
+//!
+//! In distributed mode ([`crate::coordinator::transport`]) every tensor
+//! that crosses a process boundary is carried as a length-prefixed frame
+//!
+//! ```text
+//! magic: u8 = 0xA5 ‖ kind: u8 ‖ len: u32 LE ‖ payload (len bytes)
+//! ```
+//!
+//! whose tensor payloads are **exactly** the wire format above —
+//! [`Encoded::write_wire`] serializes `rows ‖ cols ‖ per-codec header ‖
+//! packed payload` (always [`Encoded::wire_bytes`] bytes), and
+//! [`read_wire`] parses it back given the codec, which both ends derive
+//! from the run config (the format is deliberately not self-describing:
+//! the metered byte counts ARE the physical frame payload sizes, so
+//! Fig. 5's totals are observable on a socket). `read_wire` rejects
+//! truncated buffers, trailing bytes, oversized shapes and codec
+//! parameter mismatches with errors, never panics.
 
 use crate::tensor::matrix::Mat;
 use crate::tensor::rng::Pcg32;
@@ -206,6 +225,133 @@ impl Encoded {
     pub fn wire_bytes(&self) -> u64 {
         self.codec.header_bytes(self.rows * self.cols) + self.payload.len() as u64
     }
+
+    /// Serialize to the documented wire layout (`rows ‖ cols ‖ per-codec
+    /// header ‖ payload`), appending exactly [`Encoded::wire_bytes`] bytes
+    /// to `out`. This is the physical frame payload of distributed runs.
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.rows as u32).to_le_bytes());
+        out.extend_from_slice(&(self.cols as u32).to_le_bytes());
+        match self.codec {
+            Codec::None => {}
+            Codec::IntDelta { .. } => {
+                let (lo, step) = self.params[0];
+                out.extend_from_slice(&lo.to_le_bytes());
+                out.extend_from_slice(&step.to_le_bytes());
+            }
+            Codec::Uniform { bits } | Codec::Stochastic { bits } => {
+                out.push(bits);
+                let (lo, step) = self.params[0];
+                out.extend_from_slice(&lo.to_le_bytes());
+                out.extend_from_slice(&step.to_le_bytes());
+            }
+            Codec::BlockUniform { bits, block } => {
+                out.push(bits);
+                out.extend_from_slice(&block.to_le_bytes());
+                for &(lo, step) in &self.params {
+                    out.extend_from_slice(&lo.to_le_bytes());
+                    out.extend_from_slice(&step.to_le_bytes());
+                }
+            }
+        }
+        out.extend_from_slice(&self.payload);
+    }
+
+    /// Allocating convenience wrapper over [`Encoded::write_wire`].
+    pub fn to_wire(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes() as usize);
+        self.write_wire(&mut out);
+        out
+    }
+}
+
+/// Hard cap on elements of a wire-decoded tensor (2^28 = 1 GiB of f32): a
+/// corrupt shape header fails fast instead of attempting a huge allocation.
+pub const MAX_WIRE_ELEMS: u64 = 1 << 28;
+
+fn wire_take<'a>(buf: &'a [u8], pos: &mut usize, n: usize, what: &str) -> Result<&'a [u8]> {
+    let have = buf.len().saturating_sub(*pos);
+    if have < n {
+        return Err(anyhow!(
+            "tensor wire truncated reading {what}: need {n} bytes at offset {pos}, have {have}"
+        ));
+    }
+    let s = &buf[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+fn wire_u8(buf: &[u8], pos: &mut usize, what: &str) -> Result<u8> {
+    Ok(wire_take(buf, pos, 1, what)?[0])
+}
+
+fn wire_u32(buf: &[u8], pos: &mut usize, what: &str) -> Result<u32> {
+    let s = wire_take(buf, pos, 4, what)?;
+    Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+}
+
+fn wire_f32(buf: &[u8], pos: &mut usize, what: &str) -> Result<f32> {
+    let s = wire_take(buf, pos, 4, what)?;
+    Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+}
+
+/// Parse a buffer produced by [`Encoded::write_wire`] under `codec` (known
+/// out of band: both ends of a distributed run derive it from the shared
+/// config). Every size and codec parameter is validated — truncated input,
+/// trailing bytes, oversized shapes and mismatched widths/blocks all
+/// return errors; this function never panics on untrusted bytes.
+pub fn read_wire(codec: Codec, buf: &[u8]) -> Result<Encoded> {
+    codec.validate()?;
+    let mut pos = 0usize;
+    let rows = wire_u32(buf, &mut pos, "rows")? as usize;
+    let cols = wire_u32(buf, &mut pos, "cols")? as usize;
+    let n64 = rows as u64 * cols as u64;
+    if n64 > MAX_WIRE_ELEMS {
+        return Err(anyhow!("tensor wire shape {rows}x{cols} exceeds {MAX_WIRE_ELEMS} elements"));
+    }
+    let n = n64 as usize;
+    let mut params: Vec<(f32, f32)> = Vec::new();
+    match codec {
+        Codec::None => {}
+        Codec::IntDelta { .. } => {
+            let lo = wire_f32(buf, &mut pos, "qmin")?;
+            let step = wire_f32(buf, &mut pos, "qstep")?;
+            params.push((lo, step));
+        }
+        Codec::Uniform { bits } | Codec::Stochastic { bits } => {
+            let wb = wire_u8(buf, &mut pos, "bits")?;
+            if wb != bits {
+                return Err(anyhow!("wire width {wb} does not match configured {bits}-bit codec"));
+            }
+            let lo = wire_f32(buf, &mut pos, "min")?;
+            let step = wire_f32(buf, &mut pos, "step")?;
+            params.push((lo, step));
+        }
+        Codec::BlockUniform { bits, block } => {
+            let wb = wire_u8(buf, &mut pos, "bits")?;
+            if wb != bits {
+                return Err(anyhow!("wire width {wb} does not match configured {bits}-bit codec"));
+            }
+            let wblock = wire_u32(buf, &mut pos, "block")?;
+            if wblock != block {
+                return Err(anyhow!(
+                    "wire block size {wblock} does not match configured block {block}"
+                ));
+            }
+            let blocks = n.div_ceil(block.max(1) as usize);
+            params.reserve(blocks);
+            for _ in 0..blocks {
+                let lo = wire_f32(buf, &mut pos, "block min")?;
+                let step = wire_f32(buf, &mut pos, "block step")?;
+                params.push((lo, step));
+            }
+        }
+    }
+    let payload = wire_take(buf, &mut pos, codec.payload_bytes(n) as usize, "payload")?.to_vec();
+    if pos != buf.len() {
+        return Err(anyhow!("tensor wire has {} trailing bytes", buf.len() - pos));
+    }
+    Ok(Encoded { payload, rows, cols, codec, params })
 }
 
 // ---------------------------------------------------------------------------
@@ -856,6 +1002,54 @@ mod tests {
         assert!(Codec::block_uniform(4, 128).is_ok());
         assert!(Codec::stochastic(33).is_err());
         assert!(Codec::IntDelta { qmin: 0.0, qstep: 1.0, qlevels: 300 }.validate().is_err());
+    }
+
+    #[test]
+    fn wire_serialization_round_trips_every_codec() {
+        let mut rng = Pcg32::seeded(12);
+        let m = Mat::randn(9, 13, 2.0, &mut rng);
+        let grid = Mat::from_fn(4, 7, |i, j| ((i * 7 + j) % 22) as f32 - 1.0);
+        for (codec, src) in [
+            (Codec::None, &m),
+            (Codec::paper_int_delta(), &grid),
+            (Codec::Uniform { bits: 4 }, &m),
+            (Codec::Uniform { bits: 16 }, &m),
+            (Codec::BlockUniform { bits: 3, block: 32 }, &m),
+            (Codec::Stochastic { bits: 8 }, &m),
+        ] {
+            let enc = encode(codec, src);
+            let wire = enc.to_wire();
+            assert_eq!(wire.len() as u64, enc.wire_bytes(), "codec {codec:?}");
+            let back = read_wire(codec, &wire).unwrap();
+            assert_eq!(back.shape(), src.shape());
+            assert_eq!(decode(&back).data, decode(&enc).data, "codec {codec:?}");
+        }
+    }
+
+    #[test]
+    fn wire_parse_rejects_corruption_cleanly() {
+        let mut rng = Pcg32::seeded(13);
+        let m = Mat::randn(6, 10, 1.0, &mut rng);
+        let codec = Codec::BlockUniform { bits: 4, block: 16 };
+        let wire = encode(codec, &m).to_wire();
+        // truncation anywhere (header or payload) errors, no panic
+        for cut in [0, 3, 7, 9, 12, wire.len() - 1] {
+            assert!(read_wire(codec, &wire[..cut]).is_err(), "cut {cut}");
+        }
+        // trailing garbage
+        let mut long = wire.clone();
+        long.push(0);
+        assert!(read_wire(codec, &long).is_err());
+        // codec parameter mismatches
+        assert!(read_wire(Codec::BlockUniform { bits: 8, block: 16 }, &wire).is_err());
+        assert!(read_wire(Codec::BlockUniform { bits: 4, block: 8 }, &wire).is_err());
+        let uwire = encode(Codec::Uniform { bits: 8 }, &m).to_wire();
+        assert!(read_wire(Codec::Uniform { bits: 4 }, &uwire).is_err());
+        // absurd shape header fails fast instead of allocating
+        let mut huge = vec![0u8; 8];
+        huge[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        huge[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_wire(Codec::None, &huge).is_err());
     }
 
     #[test]

@@ -21,11 +21,12 @@
 //! [`CommMeter`] with the configured quantization codecs (pdADMM-G-Q).
 
 use crate::admm::objective;
-use crate::admm::state::{self, LayerRole, LayerState};
+use crate::admm::state::{self, LayerState};
 use crate::admm::updates::zlast_lr;
 use crate::backend::ComputeBackend;
 use crate::config::{QuantMode, ScheduleMode, TrainConfig, WorkerAssign};
 use crate::coordinator::channel::{CommMeter, Kind};
+use crate::coordinator::phases;
 use crate::coordinator::quant::Codec;
 use crate::graph::datasets::Dataset;
 use crate::metrics::{EpochRecord, TrainLog};
@@ -113,13 +114,8 @@ where
 impl Trainer {
     /// Build a trainer with `layers` layers of width `hidden` on `ds`.
     pub fn new(backend: Arc<dyn ComputeBackend>, ds: Dataset, cfg: TrainConfig) -> Trainer {
-        let mut dims = vec![ds.input_dim];
-        for _ in 0..cfg.layers - 1 {
-            dims.push(cfg.hidden);
-        }
-        dims.push(ds.classes);
         let threads = crate::tensor::ops::default_threads();
-        let layers = state::init_chain(&dims, &ds.x, cfg.seed, init_std(ds.input_dim), threads);
+        let layers = phases::build_chain(&ds, &cfg, threads);
         Trainer {
             backend,
             ds,
@@ -198,40 +194,6 @@ impl Trainer {
         }
     }
 
-    /// The uniform-grid wire codec variant selected by the config:
-    /// block-wise affine when `quant_block > 0`, stochastic rounding when
-    /// requested, plain whole-tensor uniform otherwise. The block+stochastic
-    /// combination has no wire format and is rejected by the CLI; if both
-    /// are set programmatically, block-wise wins.
-    fn uniform_codec(&self, bits: u8) -> Codec {
-        if self.cfg.quant_block > 0 {
-            Codec::BlockUniform { bits, block: self.cfg.quant_block }
-        } else if self.cfg.quant_stochastic {
-            Codec::Stochastic { bits }
-        } else {
-            Codec::Uniform { bits }
-        }
-    }
-
-    /// Wire codec for p transfers.
-    fn p_codec(&self) -> Codec {
-        match self.cfg.quant {
-            QuantMode::None => Codec::None,
-            // p is already projected onto Delta by the quantized subproblem:
-            // the wire carries lossless 1-byte indices.
-            QuantMode::IntDelta => Codec::paper_int_delta(),
-            QuantMode::P { bits } | QuantMode::PQ { bits } => self.uniform_codec(bits),
-        }
-    }
-
-    /// Wire codec for q transfers.
-    fn q_codec(&self) -> Codec {
-        match self.cfg.quant {
-            QuantMode::PQ { bits } => self.uniform_codec(bits),
-            _ => Codec::None,
-        }
-    }
-
     /// One full Algorithm-1 iteration. Returns the epoch record.
     pub fn run_epoch(&mut self) -> EpochRecord {
         let t0 = Instant::now();
@@ -284,46 +246,23 @@ impl Trainer {
             let start = Instant::now();
             let cur = &layers[l];
             let prev = &layers[l - 1];
-            let q_prev = prev.q.as_ref().expect("prev layer has q");
-            let u_prev = prev.u.as_ref().expect("prev layer has u");
-            // phi(p) = (nu/2)||z - Wp - b||^2 + u^T(p - q) + (rho/2)||p - q||^2
-            let phi = |pp: &crate::Mat| -> f64 {
-                let gap = pp.sub(q_prev);
-                (nu as f64 / 2.0) * backend.recon_sq(&cur.w, pp, &cur.b, &cur.z)
-                    + u_prev.zip(&gap, |a, b| a * b).sum()
-                    + (rho as f64 / 2.0) * gap.frob_sq()
-            };
-            let phi0 = phi(&cur.p);
-            let mut tau = (cur.tau * 0.5).max(rho + 1e-4);
-            let mut cand;
-            loop {
-                cand = backend.p_update(
-                    &cur.p, &cur.w, &cur.b, &cur.z, q_prev, u_prev, tau, nu, rho,
-                );
-                let dp2 = cand.sub(&cur.p).frob_sq();
-                // U-condition <=> phi(p') <= phi0 - (tau/2)||dp||^2
-                if phi(&cand) <= phi0 - (tau as f64 / 2.0) * dp2 + 1e-9 * (1.0 + phi0.abs())
-                    || tau > 1e8
-                {
-                    break;
-                }
-                tau *= 2.0;
-            }
-            if quant == QuantMode::IntDelta {
-                // re-run the accepted step with the projection onto Delta
-                cand = backend.p_update_quant(
-                    &cur.p, &cur.w, &cur.b, &cur.z, q_prev, u_prev, tau, nu, rho,
-                    -1.0, 1.0, 22.0,
-                );
-            }
+            let out = phases::p_update(
+                backend.as_ref(),
+                cur,
+                prev.q.as_ref().expect("prev layer has q"),
+                prev.u.as_ref().expect("prev layer has u"),
+                nu,
+                rho,
+                quant,
+            );
             clock(0, l, start);
-            Some((cand, tau))
+            Some(out)
         });
         // p_l travels to worker l-1 (it is needed there for q/u updates):
         // route through the meter; all consumers adopt the decoded tensor.
         // `transfer_into` decodes straight into the layer's existing p
         // buffer — no per-transfer allocation in the phase loop.
-        let p_codec = self.p_codec();
+        let p_codec = phases::p_codec(&self.cfg);
         for (l, out) in new_ps.into_iter().enumerate() {
             if let Some((p, tau)) = out {
                 let dst = &mut self.layers[l].p;
@@ -338,26 +277,9 @@ impl Trainer {
         let layers = &self.layers;
         let new_ws: Vec<(crate::Mat, f32)> = dispatch(pool, n_layers, &assignment, |l| {
             let start = Instant::now();
-            let c = &layers[l];
-            let phi0 = backend.recon_sq(&c.w, &c.p, &c.b, &c.z);
-            let mut theta = (c.theta * 0.5).max(1e-4);
-            let mut cand;
-            loop {
-                cand = backend.w_update(&c.p, &c.w, &c.b, &c.z, theta, nu);
-                let dw2 = cand.sub(&c.w).frob_sq();
-                let phi1 = backend.recon_sq(&cand, &c.p, &c.b, &c.z);
-                // phi here is (nu/2)||r||^2; same U-condition algebra
-                if (nu as f64 / 2.0) * phi1
-                    <= (nu as f64 / 2.0) * phi0 - (theta as f64 / 2.0) * dw2
-                        + 1e-9 * (1.0 + phi0.abs())
-                    || theta > 1e8
-                {
-                    break;
-                }
-                theta *= 2.0;
-            }
+            let out = phases::w_update(backend.as_ref(), &layers[l], nu);
             clock(1, l, start);
-            (cand, theta)
+            out
         });
         for (l, (w, theta)) in new_ws.into_iter().enumerate() {
             self.layers[l].w = w;
@@ -373,11 +295,9 @@ impl Trainer {
             // One matmul serves both phases: wp = W p determines b in
             // closed form here and completes phase Z's pre-activation
             // below (b_update used to recompute the product from scratch).
-            let c = &layers[l];
-            let wp = backend.wp(&c.w, &c.p);
-            let b = backend.b_update_wp(&wp, &c.z);
+            let out = phases::b_update(backend.as_ref(), &layers[l]);
             clock(2, l, start);
-            (b, wp)
+            out
         });
         let mut wps: Vec<crate::Mat> = Vec::with_capacity(n_layers);
         for (l, (b, wp)) in new_bs.into_iter().enumerate() {
@@ -394,21 +314,15 @@ impl Trainer {
         let prox_lr = zlast_lr(nu, ds.train_idx.len());
         let new_zs: Vec<crate::Mat> = dispatch(pool, n_layers, &assignment, |l| {
             let start = Instant::now();
-            let c = &layers[l];
-            let m = backend.add_bias(&wps[l], &c.b);
-            let out = match c.role {
-                LayerRole::Hidden => {
-                    backend.z_update_hidden(&m, &c.z, c.q.as_ref().expect("hidden q"))
-                }
-                LayerRole::Last => backend.z_update_last(
-                    &m,
-                    &c.z,
-                    &ds.y_onehot,
-                    &ds.maskn_train,
-                    nu,
-                    prox_lr,
-                ),
-            };
+            let out = phases::z_update(
+                backend.as_ref(),
+                &layers[l],
+                &wps[l],
+                &ds.y_onehot,
+                &ds.maskn_train,
+                nu,
+                prox_lr,
+            );
             clock(3, l, start);
             out
         });
@@ -425,13 +339,11 @@ impl Trainer {
                 return None;
             }
             let start = Instant::now();
-            let c = &layers[l];
-            let p_next = &layers[l + 1].p;
-            let out = backend.q_update(p_next, c.u.as_ref().unwrap(), &c.z, nu, rho);
+            let out = phases::q_update(backend.as_ref(), &layers[l], &layers[l + 1].p, nu, rho);
             clock(4, l, start);
             Some(out)
         });
-        let q_codec = self.q_codec();
+        let q_codec = phases::q_codec(&self.cfg);
         for (l, q) in new_qs.into_iter().enumerate() {
             if let Some(q) = q {
                 // q_l travels forward to worker l+1; with PQ quantization
@@ -452,13 +364,7 @@ impl Trainer {
                 return None;
             }
             let start = Instant::now();
-            let c = &layers[l];
-            let out = backend.u_update(
-                c.u.as_ref().unwrap(),
-                &layers[l + 1].p,
-                c.q.as_ref().unwrap(),
-                rho,
-            );
+            let out = phases::u_update(backend.as_ref(), &layers[l], &layers[l + 1].p, rho);
             clock(5, l, start);
             Some(out)
         });
@@ -493,23 +399,7 @@ impl Trainer {
             ..Default::default()
         };
         if self.measure {
-            let threads = crate::tensor::ops::default_threads();
-            let parts = objective::evaluate(
-                &self.layers,
-                &self.ds.y_onehot,
-                &self.ds.maskn_train,
-                nu,
-                rho,
-                threads,
-            );
-            rec.objective = parts.total();
-            rec.risk = parts.risk;
-            rec.residual = objective::residual_sq(&self.layers);
-            let (ws, bs) = state::params_of(&self.layers);
-            let logits = self.backend.forward(&ws, &bs, &self.ds.x);
-            rec.train_acc = self.ds.train_accuracy(&logits);
-            rec.val_acc = self.ds.val_accuracy(&logits);
-            rec.test_acc = self.ds.test_accuracy(&logits);
+            measure_record(&mut rec, self.backend.as_ref(), &self.layers, &self.ds, nu, rho);
         }
         rec
     }
@@ -543,9 +433,28 @@ impl Trainer {
     }
 }
 
-/// He-style init scale for the warm-start weights.
-fn init_std(fan_in: usize) -> f32 {
-    (2.0 / fan_in as f32).sqrt()
+/// Fill an epoch record's measured fields (objective, residual, accuracies)
+/// from a complete layer chain. Shared by the in-process trainer and the
+/// socket coordinator's post-epoch mirror evaluation, so every schedule
+/// reports losses through the identical code path.
+pub fn measure_record(
+    rec: &mut EpochRecord,
+    backend: &dyn ComputeBackend,
+    layers: &[LayerState],
+    ds: &Dataset,
+    nu: f32,
+    rho: f32,
+) {
+    let threads = crate::tensor::ops::default_threads();
+    let parts = objective::evaluate(layers, &ds.y_onehot, &ds.maskn_train, nu, rho, threads);
+    rec.objective = parts.total();
+    rec.risk = parts.risk;
+    rec.residual = objective::residual_sq(layers);
+    let (ws, bs) = state::params_of(layers);
+    let logits = backend.forward(&ws, &bs, &ds.x);
+    rec.train_acc = ds.train_accuracy(&logits);
+    rec.val_acc = ds.val_accuracy(&logits);
+    rec.test_acc = ds.test_accuracy(&logits);
 }
 
 #[cfg(test)]

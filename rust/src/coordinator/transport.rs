@@ -1,0 +1,904 @@
+//! The transport layer (substrate S12/S13): how an Algorithm-1 epoch's
+//! barriers and tensor movement are physically realized.
+//!
+//! [`Transport`] abstracts the coordinator's runtime. Two implementations:
+//!
+//! * [`InProcessTransport`] — the existing [`Trainer`] (serial inline or
+//!   pooled-thread schedule) behind the common interface.
+//! * [`SocketTransport`] — cross-process layer workers over a framed
+//!   Unix-socket/TCP transport. Each worker OS process owns a contiguous
+//!   block of layers ([`crate::util::threads::block_partition`]) and runs
+//!   the six phases against this coordinator's barrier protocol; only
+//!   block-boundary tensors cross process boundaries, and those frames
+//!   carry **exactly** the `quant` codec wire format, so the paper's
+//!   byte totals are physically observable on the socket while
+//!   [`CommMeter`](crate::coordinator::channel::CommMeter) accounting is
+//!   unchanged (each worker meters its own layers' transfers; the
+//!   coordinator sums the per-worker snapshots).
+//!
+//! # Frame format
+//!
+//! Every protocol message is one length-prefixed frame:
+//!
+//! ```text
+//! magic: u8 = 0xA5 ‖ kind: u8 ‖ len: u32 LE ‖ payload (len bytes)
+//! ```
+//!
+//! [`read_frame`] rejects bad magic and lengths above [`MAX_FRAME_BYTES`]
+//! with errors (never panics, never allocates for a corrupt header).
+//!
+//! # Barrier protocol (coordinator-driven, per epoch)
+//!
+//! ```text
+//! for phase in P,W,B,Z,Q,U:
+//!     coordinator -> all workers: PHASE(phase)
+//!     worker: applies queued VAR frames, runs the phase on its block,
+//!             streams boundary VAR frames, replies PHASE_DONE
+//!     coordinator: relays VAR frames to the neighbor block's owner
+//! coordinator -> all: EPOCH_END  -> SNAPSHOT (per-worker CommMeter)
+//! coordinator -> all: EVAL       -> STATE* + STATE_DONE (measured epochs)
+//! ```
+//!
+//! TCP guarantees per-connection ordering, so a worker always applies its
+//! neighbors' VAR frames before the next PHASE command arrives.
+
+use crate::admm::state::LayerState;
+use crate::backend::{ComputeBackend, NativeBackend};
+use crate::config::{BackendKind, DatasetSpec, TrainConfig};
+use crate::coordinator::channel::CommSnapshot;
+use crate::coordinator::phases;
+use crate::coordinator::quant::{self, Codec};
+use crate::coordinator::trainer::{measure_record, Trainer};
+use crate::graph::datasets::{self, Dataset};
+use crate::metrics::EpochRecord;
+use crate::tensor::matrix::Mat;
+use crate::util::json::Json;
+use crate::util::threads::block_partition;
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::Child;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// First byte of every frame (garbage-header detection).
+pub const FRAME_MAGIC: u8 = 0xA5;
+
+/// Hard cap on frame payloads (1 GiB): a corrupt length prefix fails fast
+/// instead of attempting a huge allocation.
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// Protocol frame kinds.
+pub mod frame_kind {
+    /// Coordinator → worker: JSON [`super::DistSetup`].
+    pub const SETUP: u8 = 1;
+    /// Worker → coordinator: setup complete.
+    pub const READY: u8 = 2;
+    /// Coordinator → worker: run phase `payload[0]` (0..6 = P,W,B,Z,Q,U).
+    pub const PHASE: u8 = 3;
+    /// Worker → coordinator: phase barrier reached.
+    pub const PHASE_DONE: u8 = 4;
+    /// Either direction: a boundary tensor
+    /// (`var: u8 ‖ layer: u32 LE ‖ quant codec wire bytes`).
+    pub const VAR: u8 = 5;
+    /// Coordinator → worker: upload owned layer state.
+    pub const EVAL: u8 = 6;
+    /// Worker → coordinator: one tensor of layer state
+    /// (`layer: u32 LE ‖ slot: u8 ‖ Codec::None wire bytes`).
+    pub const STATE: u8 = 7;
+    /// Worker → coordinator: state upload complete.
+    pub const STATE_DONE: u8 = 8;
+    /// Coordinator → worker: epoch finished, report the comm meter.
+    pub const EPOCH_END: u8 = 9;
+    /// Worker → coordinator: `p/q/u/transfer` counters (4 × u64 LE).
+    pub const SNAPSHOT: u8 = 10;
+    /// Coordinator → worker: session over.
+    pub const SHUTDOWN: u8 = 11;
+    /// Worker → coordinator: fatal error (utf-8 message).
+    pub const ERROR: u8 = 12;
+}
+
+/// VAR tag: a p tensor (travels to the owner of layer `l-1`).
+pub(crate) const VAR_P: u8 = 0;
+/// VAR tag: a q tensor (travels to the owner of layer `l+1`).
+pub(crate) const VAR_Q: u8 = 1;
+/// VAR tag: a u tensor (travels with q to the owner of layer `l+1`).
+pub(crate) const VAR_U: u8 = 2;
+
+/// Write one frame (header + payload) and flush. Errors (no panics) on
+/// payloads above [`MAX_FRAME_BYTES`] — nothing ever goes on the wire
+/// that the receiving [`read_frame`] would reject.
+pub fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> Result<()> {
+    if payload.len() as u64 > MAX_FRAME_BYTES as u64 {
+        return Err(anyhow!(
+            "frame payload of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap",
+            payload.len()
+        ));
+    }
+    w.write_all(&[FRAME_MAGIC, kind])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. Errors (no panics) on truncated streams, bad magic and
+/// oversized length prefixes; a corrupt length never causes an allocation.
+pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>)> {
+    let mut hdr = [0u8; 6];
+    r.read_exact(&mut hdr).context("reading frame header")?;
+    if hdr[0] != FRAME_MAGIC {
+        return Err(anyhow!(
+            "bad frame magic {:#04x} (expected {:#04x})",
+            hdr[0],
+            FRAME_MAGIC
+        ));
+    }
+    let len = u32::from_le_bytes([hdr[2], hdr[3], hdr[4], hdr[5]]);
+    if len > MAX_FRAME_BYTES {
+        return Err(anyhow!("frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"));
+    }
+    // Grow the buffer as bytes actually arrive (capped initial reserve):
+    // a garbage length prefix with a lucky magic byte must not trigger a
+    // huge blind allocation before the truncation is detected.
+    let mut payload = Vec::with_capacity((len as usize).min(1 << 20));
+    let got = r
+        .by_ref()
+        .take(len as u64)
+        .read_to_end(&mut payload)
+        .context("reading frame payload")?;
+    if got as u64 != len as u64 {
+        return Err(anyhow!("frame payload truncated: expected {len} bytes, got {got}"));
+    }
+    Ok((hdr[1], payload))
+}
+
+/// One framed, bidirectional connection (TCP or Unix socket).
+pub struct Conn {
+    reader: BufReader<Box<dyn Read + Send>>,
+    writer: BufWriter<Box<dyn Write + Send>>,
+}
+
+impl Conn {
+    pub fn from_tcp(s: TcpStream) -> Result<Conn> {
+        s.set_nodelay(true).ok();
+        let r = s.try_clone().context("cloning tcp stream")?;
+        Ok(Conn {
+            reader: BufReader::new(Box::new(r)),
+            writer: BufWriter::new(Box::new(s)),
+        })
+    }
+
+    #[cfg(unix)]
+    pub fn from_unix(s: std::os::unix::net::UnixStream) -> Result<Conn> {
+        let r = s.try_clone().context("cloning unix stream")?;
+        Ok(Conn {
+            reader: BufReader::new(Box::new(r)),
+            writer: BufWriter::new(Box::new(s)),
+        })
+    }
+
+    /// Dial `addr` — `unix:<path>` or TCP `host:port` — retrying refused
+    /// connections for a few seconds (worker/coordinator startup races).
+    pub fn dial(addr: &str) -> Result<Conn> {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        #[cfg(unix)]
+        if let Some(path) = addr.strip_prefix("unix:") {
+            loop {
+                match std::os::unix::net::UnixStream::connect(path) {
+                    Ok(s) => return Conn::from_unix(s),
+                    Err(e) => {
+                        if Instant::now() > deadline {
+                            return Err(anyhow!("connecting to {addr}: {e}"));
+                        }
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+        }
+        #[cfg(not(unix))]
+        if addr.starts_with("unix:") {
+            return Err(anyhow!("unix socket addresses need a unix platform: {addr}"));
+        }
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => return Conn::from_tcp(s),
+                Err(e) => {
+                    if Instant::now() > deadline {
+                        return Err(anyhow!("connecting to {addr}: {e}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    pub fn send(&mut self, kind: u8, payload: &[u8]) -> Result<()> {
+        write_frame(&mut self.writer, kind, payload)
+    }
+
+    pub fn recv(&mut self) -> Result<(u8, Vec<u8>)> {
+        read_frame(&mut self.reader)
+    }
+}
+
+/// Bind `addr` (`unix:<path>` or TCP `host:port`) and accept exactly one
+/// coordinator connection — the worker side of `pdadmm worker --listen`.
+pub fn listen_accept_one(addr: &str) -> Result<Conn> {
+    #[cfg(unix)]
+    if let Some(path) = addr.strip_prefix("unix:") {
+        // reclaim only a stale *socket* at the path — never delete a
+        // regular file the user pointed at by mistake
+        if let Ok(meta) = std::fs::symlink_metadata(path) {
+            use std::os::unix::fs::FileTypeExt;
+            if meta.file_type().is_socket() {
+                let _ = std::fs::remove_file(path);
+            } else {
+                return Err(anyhow!("refusing to replace the non-socket file at {path}"));
+            }
+        }
+        let l = std::os::unix::net::UnixListener::bind(path)
+            .with_context(|| format!("binding {addr}"))?;
+        eprintln!("[worker] listening on {addr}");
+        let (s, _) = l.accept().context("accepting coordinator")?;
+        return Conn::from_unix(s);
+    }
+    #[cfg(not(unix))]
+    if addr.starts_with("unix:") {
+        return Err(anyhow!("unix socket addresses need a unix platform: {addr}"));
+    }
+    let l = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("[worker] listening on {}", l.local_addr()?);
+    let (s, _) = l.accept().context("accepting coordinator")?;
+    Conn::from_tcp(s)
+}
+
+/// Build a VAR frame payload: `var ‖ layer ‖ codec wire bytes`.
+pub(crate) fn var_payload(var: u8, layer: usize, enc: &quant::Encoded) -> Vec<u8> {
+    let mut out = Vec::with_capacity(5 + enc.wire_bytes() as usize);
+    out.push(var);
+    out.extend_from_slice(&(layer as u32).to_le_bytes());
+    enc.write_wire(&mut out);
+    out
+}
+
+/// Split a VAR frame payload into `(var, layer, wire bytes)`.
+pub(crate) fn parse_var_header(payload: &[u8]) -> Result<(u8, usize, &[u8])> {
+    if payload.len() < 5 {
+        return Err(anyhow!("VAR frame of {} bytes is too short", payload.len()));
+    }
+    let layer = u32::from_le_bytes([payload[1], payload[2], payload[3], payload[4]]) as usize;
+    Ok((payload[0], layer, &payload[5..]))
+}
+
+/// Encode a per-worker [`CommSnapshot`] as the SNAPSHOT frame payload.
+pub(crate) fn snapshot_payload(s: &CommSnapshot) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32);
+    for v in [s.p_bytes, s.q_bytes, s.u_bytes, s.transfers] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn parse_snapshot(payload: &[u8]) -> Result<CommSnapshot> {
+    if payload.len() != 32 {
+        return Err(anyhow!("SNAPSHOT frame must be 32 bytes, got {}", payload.len()));
+    }
+    let g = |i: usize| u64::from_le_bytes(payload[i * 8..i * 8 + 8].try_into().unwrap());
+    Ok(CommSnapshot { p_bytes: g(0), q_bytes: g(1), u_bytes: g(2), transfers: g(3) })
+}
+
+/// Everything a worker process needs to reconstruct its share of a run:
+/// the dataset spec (rebuilt deterministically), the train config, and the
+/// contiguous layer block this worker owns.
+#[derive(Clone, Debug)]
+pub struct DistSetup {
+    pub spec: DatasetSpec,
+    pub hops: usize,
+    /// Thread count for dataset build + chain init. Numerics are
+    /// thread-invariant (asserted by tests); this only shapes wall-clock.
+    pub threads: usize,
+    pub cfg: TrainConfig,
+    pub layer_lo: usize,
+    pub layer_hi: usize,
+}
+
+impl DistSetup {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", self.spec.to_json()),
+            ("hops", Json::num(self.hops as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("cfg", self.cfg.to_json()),
+            ("layer_lo", Json::num(self.layer_lo as f64)),
+            ("layer_hi", Json::num(self.layer_hi as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<DistSetup> {
+        Ok(DistSetup {
+            spec: DatasetSpec::from_json(v.req("dataset")?)?,
+            hops: v.req("hops")?.as_usize().ok_or_else(|| anyhow!("hops"))?,
+            threads: v.req("threads")?.as_usize().ok_or_else(|| anyhow!("threads"))?,
+            cfg: TrainConfig::from_json(v.req("cfg")?)?,
+            layer_lo: v.req("layer_lo")?.as_usize().ok_or_else(|| anyhow!("layer_lo"))?,
+            layer_hi: v.req("layer_hi")?.as_usize().ok_or_else(|| anyhow!("layer_hi"))?,
+        })
+    }
+}
+
+/// How an epoch's phase schedule is executed and its tensors moved — the
+/// coordinator-side runtime handle.
+pub trait Transport {
+    /// Human-readable runtime label (`"in-process"` / `"socket"`).
+    fn kind(&self) -> &'static str;
+    /// Number of layer workers realizing the schedule.
+    fn workers(&self) -> usize;
+    /// One Algorithm-1 epoch across all layer workers.
+    fn run_epoch(&mut self) -> Result<EpochRecord>;
+    /// Current logits over the full graph (syncs remote state if needed).
+    fn logits(&mut self) -> Result<Mat>;
+    /// Graceful teardown (joins worker processes where applicable).
+    fn shutdown(&mut self) -> Result<()>;
+}
+
+/// The in-process runtime (serial or pooled-thread [`Trainer`]) behind the
+/// transport interface.
+pub struct InProcessTransport {
+    pub trainer: Trainer,
+}
+
+impl InProcessTransport {
+    pub fn new(trainer: Trainer) -> InProcessTransport {
+        InProcessTransport { trainer }
+    }
+}
+
+impl Transport for InProcessTransport {
+    fn kind(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn workers(&self) -> usize {
+        self.trainer.pool.as_ref().map_or(1, |p| p.workers())
+    }
+
+    fn run_epoch(&mut self) -> Result<EpochRecord> {
+        Ok(self.trainer.run_epoch())
+    }
+
+    fn logits(&mut self) -> Result<Mat> {
+        Ok(self.trainer.logits())
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The cross-process runtime: drives worker processes over framed sockets
+/// and mirrors their state for evaluation.
+pub struct SocketTransport {
+    conns: Vec<Conn>,
+    children: Vec<Child>,
+    blocks: Vec<(usize, usize)>,
+    /// Coordinator-side mirror of the full layer chain (refreshed by EVAL;
+    /// evaluation runs the same [`measure_record`] path as the trainer).
+    mirror: Vec<LayerState>,
+    ds: Dataset,
+    cfg: TrainConfig,
+    backend: Arc<dyn ComputeBackend>,
+    epoch: usize,
+    synced: bool,
+    /// Evaluate objective/accuracy every epoch (disable for pure timing —
+    /// measured epochs add one state upload per worker).
+    pub measure: bool,
+}
+
+impl SocketTransport {
+    /// Bind a loopback listener, spawn `workers` worker processes via
+    /// `spawn_worker(addr)`, and complete the setup handshake. The worker
+    /// count is clamped to the layer count (one process per layer max).
+    /// Every error path kills and reaps the already-spawned children — a
+    /// failed spawn never leaves orphan worker processes behind.
+    pub fn spawn(
+        spec: &DatasetSpec,
+        hops: usize,
+        cfg: TrainConfig,
+        workers: usize,
+        mut spawn_worker: impl FnMut(&str) -> Result<Child>,
+    ) -> Result<SocketTransport> {
+        let workers = workers.clamp(1, cfg.layers);
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding loopback listener")?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let mut children = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            match spawn_worker(&addr) {
+                Ok(c) => children.push(c),
+                Err(e) => {
+                    reap_children(&mut children);
+                    return Err(e);
+                }
+            }
+        }
+        let conns = match Self::accept_workers(&listener, &mut children, workers) {
+            Ok(conns) => conns,
+            Err(e) => {
+                reap_children(&mut children);
+                return Err(e);
+            }
+        };
+        Self::handshake(conns, children, spec, hops, cfg)
+    }
+
+    /// Accept exactly `workers` connections, polling for early child exits.
+    fn accept_workers(
+        listener: &TcpListener,
+        children: &mut [Child],
+        workers: usize,
+    ) -> Result<Vec<Conn>> {
+        let mut conns = Vec::with_capacity(workers);
+        let deadline = Instant::now() + Duration::from_secs(120);
+        while conns.len() < workers {
+            match listener.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    conns.push(Conn::from_tcp(s)?);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    for c in children.iter_mut() {
+                        if let Some(status) = c.try_wait()? {
+                            return Err(anyhow!("worker exited before connecting: {status}"));
+                        }
+                    }
+                    if Instant::now() > deadline {
+                        return Err(anyhow!("timed out waiting for {workers} workers to connect"));
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(anyhow!("accepting worker connection: {e}")),
+            }
+        }
+        Ok(conns)
+    }
+
+    /// Connect to already-listening workers (`pdadmm worker --listen ...`)
+    /// at `addrs` (TCP `host:port` or `unix:<path>`).
+    pub fn connect(
+        spec: &DatasetSpec,
+        hops: usize,
+        cfg: TrainConfig,
+        addrs: &[String],
+    ) -> Result<SocketTransport> {
+        if addrs.is_empty() {
+            return Err(anyhow!("need at least one worker address"));
+        }
+        if addrs.len() > cfg.layers {
+            return Err(anyhow!(
+                "{} workers for {} layers: at most one worker per layer",
+                addrs.len(),
+                cfg.layers
+            ));
+        }
+        let mut conns = Vec::with_capacity(addrs.len());
+        for a in addrs {
+            conns.push(Conn::dial(a).with_context(|| format!("connecting to worker {a}"))?);
+        }
+        Self::handshake(conns, Vec::new(), spec, hops, cfg)
+    }
+
+    /// Run the fallible setup exchange; on error the spawned children are
+    /// killed and reaped instead of leaking.
+    fn handshake(
+        conns: Vec<Conn>,
+        mut children: Vec<Child>,
+        spec: &DatasetSpec,
+        hops: usize,
+        cfg: TrainConfig,
+    ) -> Result<SocketTransport> {
+        match Self::handshake_inner(conns, spec, hops, cfg) {
+            Ok(mut transport) => {
+                transport.children = children;
+                Ok(transport)
+            }
+            Err(e) => {
+                reap_children(&mut children);
+                Err(e)
+            }
+        }
+    }
+
+    fn handshake_inner(
+        mut conns: Vec<Conn>,
+        spec: &DatasetSpec,
+        hops: usize,
+        cfg: TrainConfig,
+    ) -> Result<SocketTransport> {
+        if cfg.backend != BackendKind::Native {
+            return Err(anyhow!(
+                "the distributed runtime supports the native backend only (got {})",
+                cfg.backend.label()
+            ));
+        }
+        let threads = crate::tensor::ops::default_threads();
+        let ds = datasets::build(spec, hops, threads);
+        let mirror = phases::build_chain(&ds, &cfg, threads);
+        let blocks = block_partition(mirror.len(), conns.len());
+        if blocks.len() != conns.len() {
+            return Err(anyhow!(
+                "{} workers for {} layers: at most one worker per layer",
+                conns.len(),
+                mirror.len()
+            ));
+        }
+        for (w, conn) in conns.iter_mut().enumerate() {
+            let setup = DistSetup {
+                spec: spec.clone(),
+                hops,
+                threads,
+                cfg: cfg.clone(),
+                layer_lo: blocks[w].0,
+                layer_hi: blocks[w].1,
+            };
+            conn.send(frame_kind::SETUP, setup.to_json().to_string_compact().as_bytes())?;
+        }
+        for (w, conn) in conns.iter_mut().enumerate() {
+            let (k, payload) = conn.recv().with_context(|| format!("worker {w} handshake"))?;
+            match k {
+                frame_kind::READY => {}
+                frame_kind::ERROR => {
+                    return Err(anyhow!(
+                        "worker {w} setup failed: {}",
+                        String::from_utf8_lossy(&payload)
+                    ));
+                }
+                other => return Err(anyhow!("worker {w}: expected READY, got frame {other}")),
+            }
+        }
+        Ok(SocketTransport {
+            conns,
+            children: Vec::new(),
+            blocks,
+            mirror,
+            ds,
+            cfg,
+            backend: Arc::new(NativeBackend::default()),
+            epoch: 0,
+            synced: true,
+            measure: true,
+        })
+    }
+
+    /// Which worker owns `layer`.
+    fn owner_of(&self, layer: usize) -> Result<usize> {
+        self.blocks
+            .iter()
+            .position(|&(lo, hi)| (lo..hi).contains(&layer))
+            .ok_or_else(|| anyhow!("no worker owns layer {layer}"))
+    }
+
+    /// One epoch over the socket: six phase barriers with VAR relays, then
+    /// snapshot aggregation and (when measuring) a mirror sync + the same
+    /// evaluation path as the in-process trainer.
+    pub fn run_epoch(&mut self) -> Result<EpochRecord> {
+        let t0 = Instant::now();
+        self.synced = false;
+        let mut phase_ms = [0.0f64; 6];
+        for ph in 0..6u8 {
+            let pt = Instant::now();
+            for conn in &mut self.conns {
+                conn.send(frame_kind::PHASE, &[ph])?;
+            }
+            let mut relays: Vec<(usize, Vec<u8>)> = Vec::new();
+            for w in 0..self.conns.len() {
+                loop {
+                    let (k, payload) = self.conns[w].recv()?;
+                    match k {
+                        frame_kind::PHASE_DONE => break,
+                        frame_kind::VAR => {
+                            let (var, layer, _) = parse_var_header(&payload)?;
+                            let target = match var {
+                                VAR_P => self.owner_of(
+                                    layer
+                                        .checked_sub(1)
+                                        .ok_or_else(|| anyhow!("p_1 never travels"))?,
+                                )?,
+                                VAR_Q | VAR_U => self.owner_of(layer + 1)?,
+                                other => return Err(anyhow!("unknown VAR tag {other}")),
+                            };
+                            relays.push((target, payload));
+                        }
+                        frame_kind::ERROR => {
+                            return Err(anyhow!(
+                                "worker {w} failed in phase {ph}: {}",
+                                String::from_utf8_lossy(&payload)
+                            ));
+                        }
+                        other => {
+                            return Err(anyhow!(
+                                "unexpected frame {other} from worker {w} in phase {ph}"
+                            ));
+                        }
+                    }
+                }
+            }
+            for (target, payload) in relays {
+                self.conns[target].send(frame_kind::VAR, &payload)?;
+            }
+            phase_ms[ph as usize] = pt.elapsed().as_secs_f64() * 1e3;
+        }
+        // epoch end: aggregate the per-worker communication meters
+        let mut comm = CommSnapshot::default();
+        for conn in &mut self.conns {
+            conn.send(frame_kind::EPOCH_END, &[])?;
+        }
+        for w in 0..self.conns.len() {
+            let (k, payload) = self.conns[w].recv()?;
+            match k {
+                frame_kind::SNAPSHOT => comm.add(&parse_snapshot(&payload)?),
+                frame_kind::ERROR => {
+                    return Err(anyhow!(
+                        "worker {w} failed at epoch end: {}",
+                        String::from_utf8_lossy(&payload)
+                    ));
+                }
+                other => return Err(anyhow!("expected SNAPSHOT from worker {w}, got {other}")),
+            }
+        }
+        self.epoch += 1;
+        let mut rec = EpochRecord {
+            epoch: self.epoch,
+            epoch_ms: t0.elapsed().as_secs_f64() * 1e3,
+            phase_ms,
+            comm_bytes: comm.paper_bytes(),
+            ..Default::default()
+        };
+        if self.measure {
+            self.sync_mirror()?;
+            measure_record(
+                &mut rec,
+                self.backend.as_ref(),
+                &self.mirror,
+                &self.ds,
+                self.cfg.nu,
+                self.cfg.rho,
+            );
+        }
+        Ok(rec)
+    }
+
+    /// Pull every worker's owned layer state into the coordinator mirror.
+    fn sync_mirror(&mut self) -> Result<()> {
+        if self.synced {
+            return Ok(());
+        }
+        for conn in &mut self.conns {
+            conn.send(frame_kind::EVAL, &[])?;
+        }
+        for w in 0..self.conns.len() {
+            loop {
+                let (k, payload) = self.conns[w].recv()?;
+                match k {
+                    frame_kind::STATE_DONE => break,
+                    frame_kind::STATE => self.apply_state(&payload)?,
+                    frame_kind::ERROR => {
+                        return Err(anyhow!(
+                            "worker {w} failed during eval: {}",
+                            String::from_utf8_lossy(&payload)
+                        ));
+                    }
+                    other => {
+                        return Err(anyhow!("unexpected frame {other} from worker {w} in eval"));
+                    }
+                }
+            }
+        }
+        self.synced = true;
+        Ok(())
+    }
+
+    fn apply_state(&mut self, payload: &[u8]) -> Result<()> {
+        if payload.len() < 5 {
+            return Err(anyhow!("STATE frame of {} bytes is too short", payload.len()));
+        }
+        let layer = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+        let slot = payload[4];
+        if layer >= self.mirror.len() {
+            return Err(anyhow!("STATE for unknown layer {layer}"));
+        }
+        let enc = quant::read_wire(Codec::None, &payload[5..])?;
+        let l = &mut self.mirror[layer];
+        let dst = match slot {
+            0 => &mut l.w,
+            1 => &mut l.b,
+            2 => &mut l.z,
+            3 => &mut l.p,
+            4 => l.q.get_or_insert_with(|| Mat::zeros(0, 0)),
+            5 => l.u.get_or_insert_with(|| Mat::zeros(0, 0)),
+            other => return Err(anyhow!("unknown state slot {other}")),
+        };
+        quant::decode_into(&enc, dst);
+        Ok(())
+    }
+
+    /// Post-epoch layer chain as the coordinator sees it (forces a sync).
+    pub fn synced_layers(&mut self) -> Result<&[LayerState]> {
+        self.sync_mirror()?;
+        Ok(&self.mirror)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Current logits over the full graph (forces a mirror sync).
+    pub fn logits(&mut self) -> Result<Mat> {
+        self.sync_mirror()?;
+        let (ws, bs) = crate::admm::state::params_of(&self.mirror);
+        Ok(self.backend.forward(&ws, &bs, &self.ds.x))
+    }
+
+    /// Tell every worker to exit, close the sockets, and reap spawned
+    /// children — waiting briefly for a graceful exit, then killing.
+    /// Idempotent; also invoked on drop.
+    pub fn shutdown(&mut self) -> Result<()> {
+        for conn in &mut self.conns {
+            let _ = conn.send(frame_kind::SHUTDOWN, &[]);
+        }
+        // dropping the sockets unblocks workers that missed the frame
+        self.conns.clear();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        for mut child in self.children.drain(..) {
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() <= deadline => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Kill and reap worker children (error-path cleanup: never leave orphan
+/// processes behind a failed spawn or handshake).
+fn reap_children(children: &mut Vec<Child>) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    children.clear();
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        let _ = SocketTransport::shutdown(self);
+    }
+}
+
+impl Transport for SocketTransport {
+    fn kind(&self) -> &'static str {
+        "socket"
+    }
+
+    fn workers(&self) -> usize {
+        SocketTransport::workers(self)
+    }
+
+    fn run_epoch(&mut self) -> Result<EpochRecord> {
+        SocketTransport::run_epoch(self)
+    }
+
+    fn logits(&mut self) -> Result<Mat> {
+        SocketTransport::logits(self)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        SocketTransport::shutdown(self)
+    }
+}
+
+/// Spawn this same executable as `worker --connect <addr>` — valid when
+/// the current executable is the `repro` binary (the CLI train path and
+/// the `--distributed` experiment harnesses).
+pub fn spawn_self_repro_worker(addr: &str) -> Result<Child> {
+    let exe = std::env::current_exe().context("resolving current executable")?;
+    std::process::Command::new(exe)
+        .arg("worker")
+        .arg("--connect")
+        .arg(addr)
+        .spawn()
+        .context("spawning worker process")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_round_trip_and_overhead() {
+        let payload = vec![7u8; 300];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame_kind::VAR, &payload).unwrap();
+        assert_eq!(buf.len(), 6 + payload.len());
+        let (k, p) = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(k, frame_kind::VAR);
+        assert_eq!(p, payload);
+    }
+
+    #[test]
+    fn frame_rejects_bad_magic_and_oversize() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 3, b"abc").unwrap();
+        buf[0] ^= 0xFF;
+        let err = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+
+        let mut huge = vec![FRAME_MAGIC, 1];
+        huge.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&huge)).unwrap_err();
+        assert!(format!("{err:#}").contains("cap"), "{err:#}");
+    }
+
+    #[test]
+    fn var_payload_round_trips() {
+        let m = Mat::filled(3, 4, 1.5);
+        let enc = quant::encode(Codec::None, &m);
+        let payload = var_payload(VAR_Q, 7, &enc);
+        let (var, layer, wire) = parse_var_header(&payload).unwrap();
+        assert_eq!(var, VAR_Q);
+        assert_eq!(layer, 7);
+        let back = quant::read_wire(Codec::None, wire).unwrap();
+        assert_eq!(quant::decode(&back).data, m.data);
+    }
+
+    #[test]
+    fn snapshot_payload_round_trips() {
+        let s = CommSnapshot { p_bytes: 10, q_bytes: 20, u_bytes: 30, transfers: 4 };
+        let back = parse_snapshot(&snapshot_payload(&s)).unwrap();
+        assert_eq!(back, s);
+        assert!(parse_snapshot(&[0u8; 31]).is_err());
+    }
+
+    #[test]
+    fn dist_setup_json_round_trips() {
+        let spec = DatasetSpec {
+            name: "t".into(),
+            nodes: 10,
+            avg_degree: 3.0,
+            classes: 2,
+            feat_dim: 4,
+            train: 5,
+            val: 3,
+            test: 2,
+            homophily_ratio: 4.0,
+            feature_signal: 1.0,
+            label_noise: 0.0,
+            seed: 77,
+        };
+        let setup = DistSetup {
+            spec,
+            hops: 2,
+            threads: 3,
+            cfg: TrainConfig::new("t", 8, 4, 2),
+            layer_lo: 1,
+            layer_hi: 3,
+        };
+        let text = setup.to_json().to_string_compact();
+        let back = DistSetup::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.spec.name, "t");
+        assert_eq!(back.hops, 2);
+        assert_eq!(back.threads, 3);
+        assert_eq!(back.cfg.layers, 4);
+        assert_eq!((back.layer_lo, back.layer_hi), (1, 3));
+    }
+}

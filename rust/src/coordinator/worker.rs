@@ -1,0 +1,396 @@
+//! The layer-worker process (substrate S12): `repro worker --listen/--connect`.
+//!
+//! One worker OS process owns a contiguous block of layers and runs the six
+//! ADMM phases against the coordinator's barrier protocol (see
+//! [`crate::coordinator::transport`] for the frame format and message
+//! choreography). The worker rebuilds its dataset and the full layer chain
+//! deterministically from the SETUP message — both are pure functions of
+//! the spec/config — then computes only its own block; the non-owned
+//! entries of the chain serve as mailboxes for the neighbor tensors that
+//! arrive as VAR frames (`q_{lo-1}`/`u_{lo-1}` from the previous block,
+//! `p_{hi}` from the next).
+//!
+//! Numeric and accounting parity with the in-process schedules is by
+//! construction: every update is a [`phases`] kernel, every logical
+//! transfer is encoded once with the configured codec, metered once by the
+//! owner's [`CommMeter`], and every consumer (owner and neighbor alike)
+//! adopts the *decoded* tensor — exactly the in-process semantics, with
+//! the boundary encodings additionally shipped as physical frames.
+
+use crate::admm::state::{self, LayerState};
+use crate::admm::updates::zlast_lr;
+use crate::backend::{ComputeBackend, NativeBackend};
+use crate::config::{BackendKind, TrainConfig};
+use crate::coordinator::channel::{CommMeter, Kind};
+use crate::coordinator::phases;
+use crate::coordinator::quant::{self, Codec};
+use crate::coordinator::transport::{self, frame_kind, Conn, DistSetup};
+use crate::graph::datasets::{self, Dataset};
+use crate::tensor::matrix::Mat;
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+
+/// Bind `addr`, wait for one coordinator, serve the session to completion.
+pub fn listen(addr: &str) -> Result<()> {
+    serve(transport::listen_accept_one(addr)?)
+}
+
+/// Dial the coordinator at `addr` and serve the session to completion.
+pub fn connect(addr: &str) -> Result<()> {
+    serve(Conn::dial(addr)?)
+}
+
+fn serve(mut conn: Conn) -> Result<()> {
+    let (k, payload) = conn.recv().context("waiting for SETUP")?;
+    if k != frame_kind::SETUP {
+        return Err(anyhow!("expected SETUP, got frame kind {k}"));
+    }
+    let text = std::str::from_utf8(&payload).context("SETUP payload is not utf-8")?;
+    let parsed =
+        crate::util::json::parse(text).map_err(|e| anyhow!("parsing SETUP json: {e}"))?;
+    let mut st = match DistSetup::from_json(&parsed).and_then(WorkerState::build) {
+        Ok(st) => st,
+        Err(e) => {
+            let _ = conn.send(frame_kind::ERROR, format!("{e:#}").as_bytes());
+            return Err(e);
+        }
+    };
+    conn.send(frame_kind::READY, &[])?;
+    loop {
+        let (k, payload) = conn.recv().context("waiting for a coordinator frame")?;
+        let outcome = match k {
+            frame_kind::VAR => st.apply_var(&payload),
+            frame_kind::PHASE => {
+                if payload.len() != 1 {
+                    Err(anyhow!("PHASE frame needs exactly 1 byte"))
+                } else {
+                    st.run_phase(payload[0], &mut conn)
+                        .and_then(|_| conn.send(frame_kind::PHASE_DONE, &[]))
+                }
+            }
+            frame_kind::EPOCH_END => {
+                let snap = st.meter.take();
+                conn.send(frame_kind::SNAPSHOT, &transport::snapshot_payload(&snap))
+            }
+            frame_kind::EVAL => st
+                .send_state(&mut conn)
+                .and_then(|_| conn.send(frame_kind::STATE_DONE, &[])),
+            frame_kind::SHUTDOWN => return Ok(()),
+            other => Err(anyhow!("unexpected frame kind {other}")),
+        };
+        if let Err(e) = outcome {
+            let _ = conn.send(frame_kind::ERROR, format!("{e:#}").as_bytes());
+            return Err(e);
+        }
+    }
+}
+
+/// All state a worker session owns.
+struct WorkerState {
+    backend: Arc<dyn ComputeBackend>,
+    ds: Dataset,
+    cfg: TrainConfig,
+    /// Full chain (deterministic rebuild); only `[lo, hi)` is computed
+    /// here. Non-owned entries are trimmed to empty after the epoch-0
+    /// step-size refresh, keeping just the neighbor mailboxes.
+    layers: Vec<LayerState>,
+    lo: usize,
+    hi: usize,
+    meter: CommMeter,
+    epoch: usize,
+    /// Phase-B cached `W @ p` per owned layer (consumed by phase Z).
+    wps: Vec<Option<Mat>>,
+}
+
+impl WorkerState {
+    fn build(setup: DistSetup) -> Result<WorkerState> {
+        if setup.cfg.backend != BackendKind::Native {
+            return Err(anyhow!("distributed workers support the native backend only"));
+        }
+        let threads = setup.threads.max(1);
+        let ds = datasets::build(&setup.spec, setup.hops, threads);
+        let layers = phases::build_chain(&ds, &setup.cfg, threads);
+        let n = layers.len();
+        if setup.layer_lo >= setup.layer_hi || setup.layer_hi > n {
+            return Err(anyhow!(
+                "bad layer block [{}, {}) for {n} layers",
+                setup.layer_lo,
+                setup.layer_hi
+            ));
+        }
+        Ok(WorkerState {
+            // one compute thread per worker process: model parallelism comes
+            // from the processes themselves (numerics are thread-invariant)
+            backend: Arc::new(NativeBackend::single_thread()),
+            ds,
+            cfg: setup.cfg,
+            layers,
+            lo: setup.layer_lo,
+            hi: setup.layer_hi,
+            meter: CommMeter::new(),
+            epoch: 0,
+            wps: (0..n).map(|_| None).collect(),
+        })
+    }
+
+    /// Drop the tensors of non-owned layers — except the neighbor
+    /// mailboxes (`q`/`u` of layer `lo-1`, `p` of layer `hi`) — so a
+    /// worker's steady-state residency is its own block plus boundaries,
+    /// not `worker_count ×` the full model. Runs once, right after the
+    /// epoch-0 step-size refresh (the only full-chain computation).
+    fn trim_non_owned(&mut self) {
+        let n = self.layers.len();
+        for l in 0..n {
+            if (self.lo..self.hi).contains(&l) {
+                continue;
+            }
+            let keep_qu = l + 1 == self.lo;
+            let keep_p = l == self.hi;
+            let layer = &mut self.layers[l];
+            layer.w = Mat::zeros(0, 0);
+            layer.b = Mat::zeros(0, 0);
+            layer.z = Mat::zeros(0, 0);
+            if !keep_p {
+                layer.p = Mat::zeros(0, 0);
+            }
+            if !keep_qu {
+                layer.q = None;
+                layer.u = None;
+            }
+        }
+    }
+
+    /// Store a neighbor tensor arriving as a VAR frame into its mailbox
+    /// slot. Not metered: the producing worker already counted the
+    /// transfer once (the in-process accounting convention).
+    fn apply_var(&mut self, payload: &[u8]) -> Result<()> {
+        let (var, layer, wire) = transport::parse_var_header(payload)?;
+        if layer >= self.layers.len() {
+            return Err(anyhow!("VAR for unknown layer {layer}"));
+        }
+        let (codec, dst) = match var {
+            transport::VAR_P => (phases::p_codec(&self.cfg), &mut self.layers[layer].p),
+            transport::VAR_Q => (
+                phases::q_codec(&self.cfg),
+                self.layers[layer].q.get_or_insert_with(|| Mat::zeros(0, 0)),
+            ),
+            transport::VAR_U => {
+                (Codec::None, self.layers[layer].u.get_or_insert_with(|| Mat::zeros(0, 0)))
+            }
+            other => return Err(anyhow!("unknown VAR tag {other}")),
+        };
+        let enc = quant::read_wire(codec, wire)?;
+        quant::decode_into(&enc, dst);
+        Ok(())
+    }
+
+    /// Commit an owned layer's outbound tensor: encode once with the wire
+    /// codec, meter the exact wire bytes, adopt the decoded value locally,
+    /// and — iff `boundary` — ship the same encoding as a VAR frame.
+    #[allow(clippy::too_many_arguments)]
+    fn commit_transfer(
+        &mut self,
+        conn: &mut Conn,
+        kind: Kind,
+        var: u8,
+        layer: usize,
+        codec: Codec,
+        value: &Mat,
+        boundary: bool,
+    ) -> Result<()> {
+        let enc = quant::encode(codec, value);
+        self.meter.record(kind, enc.wire_bytes());
+        let dst = match var {
+            transport::VAR_P => &mut self.layers[layer].p,
+            transport::VAR_Q => self.layers[layer].q.get_or_insert_with(|| Mat::zeros(0, 0)),
+            _ => self.layers[layer].u.get_or_insert_with(|| Mat::zeros(0, 0)),
+        };
+        quant::decode_into(&enc, dst);
+        if boundary {
+            conn.send(frame_kind::VAR, &transport::var_payload(var, layer, &enc))?;
+        }
+        Ok(())
+    }
+
+    /// Run one phase over the owned block. Mirrors the in-process
+    /// semantics exactly: compute every layer's update from pre-phase
+    /// state, then commit (and meter) the results.
+    fn run_phase(&mut self, ph: u8, conn: &mut Conn) -> Result<()> {
+        let nu = self.cfg.nu;
+        let rho = self.cfg.rho;
+        if ph == 0 && self.epoch == 0 {
+            // identical to the trainer's first-epoch step-size refresh: the
+            // full chain is bitwise-identical in every process, so the
+            // shared RNG stream yields the same tau/theta everywhere. This
+            // is the last full-chain dependency — trim right after.
+            state::refresh_step_sizes(&mut self.layers, nu, rho, self.cfg.seed);
+            self.trim_non_owned();
+        }
+        let n = self.layers.len();
+        match ph {
+            0 => {
+                let codec = phases::p_codec(&self.cfg);
+                let mut outs: Vec<(usize, Mat, f32)> = Vec::new();
+                for l in self.lo..self.hi {
+                    if l == 0 {
+                        continue; // p_1 = X is fixed
+                    }
+                    let cur = &self.layers[l];
+                    let prev = &self.layers[l - 1];
+                    let (cand, tau) = phases::p_update(
+                        self.backend.as_ref(),
+                        cur,
+                        prev.q.as_ref().ok_or_else(|| anyhow!("layer {} missing q", l - 1))?,
+                        prev.u.as_ref().ok_or_else(|| anyhow!("layer {} missing u", l - 1))?,
+                        nu,
+                        rho,
+                        self.cfg.quant,
+                    );
+                    outs.push((l, cand, tau));
+                }
+                for (l, cand, tau) in outs {
+                    // p_l travels to the owner of layer l-1; that owner is
+                    // another process only at the block boundary.
+                    let boundary = l == self.lo;
+                    self.commit_transfer(
+                        conn,
+                        Kind::P,
+                        transport::VAR_P,
+                        l,
+                        codec,
+                        &cand,
+                        boundary,
+                    )?;
+                    self.layers[l].tau = tau;
+                }
+            }
+            1 => {
+                let mut outs: Vec<(usize, Mat, f32)> = Vec::new();
+                for l in self.lo..self.hi {
+                    let (w, theta) = phases::w_update(self.backend.as_ref(), &self.layers[l], nu);
+                    outs.push((l, w, theta));
+                }
+                for (l, w, theta) in outs {
+                    self.layers[l].w = w;
+                    self.layers[l].theta = theta;
+                }
+            }
+            2 => {
+                let mut outs: Vec<(usize, Mat, Mat)> = Vec::new();
+                for l in self.lo..self.hi {
+                    let (b, wp) = phases::b_update(self.backend.as_ref(), &self.layers[l]);
+                    outs.push((l, b, wp));
+                }
+                for (l, b, wp) in outs {
+                    self.layers[l].b = b;
+                    self.wps[l] = Some(wp);
+                }
+            }
+            3 => {
+                let prox_lr = zlast_lr(nu, self.ds.train_idx.len());
+                let mut outs: Vec<(usize, Mat)> = Vec::new();
+                for l in self.lo..self.hi {
+                    let wp =
+                        self.wps[l].as_ref().ok_or_else(|| anyhow!("phase Z before phase B"))?;
+                    let z = phases::z_update(
+                        self.backend.as_ref(),
+                        &self.layers[l],
+                        wp,
+                        &self.ds.y_onehot,
+                        &self.ds.maskn_train,
+                        nu,
+                        prox_lr,
+                    );
+                    outs.push((l, z));
+                }
+                for (l, z) in outs {
+                    self.layers[l].z = z;
+                }
+            }
+            4 => {
+                let codec = phases::q_codec(&self.cfg);
+                let mut outs: Vec<(usize, Mat)> = Vec::new();
+                for l in self.lo..self.hi {
+                    if l + 1 == n {
+                        continue; // the last layer has no q
+                    }
+                    let q = phases::q_update(
+                        self.backend.as_ref(),
+                        &self.layers[l],
+                        &self.layers[l + 1].p,
+                        nu,
+                        rho,
+                    );
+                    outs.push((l, q));
+                }
+                for (l, q) in outs {
+                    // q_l travels forward to the owner of layer l+1
+                    let boundary = l + 1 == self.hi;
+                    self.commit_transfer(conn, Kind::Q, transport::VAR_Q, l, codec, &q, boundary)?;
+                }
+            }
+            5 => {
+                let mut outs: Vec<(usize, Mat)> = Vec::new();
+                for l in self.lo..self.hi {
+                    if l + 1 == n {
+                        continue;
+                    }
+                    let u = phases::u_update(
+                        self.backend.as_ref(),
+                        &self.layers[l],
+                        &self.layers[l + 1].p,
+                        rho,
+                    );
+                    outs.push((l, u));
+                }
+                for (l, u) in outs {
+                    // u_l accompanies q_l forward (metered separately, raw f32)
+                    let boundary = l + 1 == self.hi;
+                    self.commit_transfer(
+                        conn,
+                        Kind::U,
+                        transport::VAR_U,
+                        l,
+                        Codec::None,
+                        &u,
+                        boundary,
+                    )?;
+                }
+            }
+            other => return Err(anyhow!("unknown phase {other}")),
+        }
+        if ph == 5 {
+            self.epoch += 1;
+        }
+        Ok(())
+    }
+
+    /// Upload the owned block's state (lossless `Codec::None` wire) for
+    /// the coordinator's evaluation mirror.
+    fn send_state(&mut self, conn: &mut Conn) -> Result<()> {
+        for l in self.lo..self.hi {
+            let ls = &self.layers[l];
+            let mut ship = |slot: u8, m: &Mat| -> Result<()> {
+                let enc = quant::encode(Codec::None, m);
+                let mut payload = Vec::with_capacity(5 + enc.wire_bytes() as usize);
+                payload.extend_from_slice(&(l as u32).to_le_bytes());
+                payload.push(slot);
+                enc.write_wire(&mut payload);
+                conn.send(frame_kind::STATE, &payload)
+            };
+            ship(0, &ls.w)?;
+            ship(1, &ls.b)?;
+            ship(2, &ls.z)?;
+            if l > 0 {
+                ship(3, &ls.p)?; // p_1 = X never changes; skip the upload
+            }
+            if let Some(q) = &ls.q {
+                ship(4, q)?;
+            }
+            if let Some(u) = &ls.u {
+                ship(5, u)?;
+            }
+        }
+        Ok(())
+    }
+}

@@ -21,8 +21,9 @@
 
 use super::ExpOptions;
 use crate::backend::NativeBackend;
-use crate::config::{RootConfig, ScheduleMode, TrainConfig};
+use crate::config::{BackendKind, DatasetSpec, RootConfig, ScheduleMode, TrainConfig};
 use crate::coordinator::trainer::{phase_makespan_ms, Trainer};
+use crate::coordinator::transport::{spawn_self_repro_worker, SocketTransport};
 use crate::graph::datasets;
 use crate::metrics::write_csv_table;
 use crate::util::threads::host_cores;
@@ -30,6 +31,17 @@ use std::sync::Arc;
 
 pub const SMALL: [&str; 4] = ["cora", "pubmed", "amazon-computers", "coauthor-cs"];
 pub const LARGE: [&str; 2] = ["flickr", "ogbn-arxiv"];
+
+/// The speedup experiments' shared training config (the paper's
+/// rho = nu = 1e-3 setting). Single source for the serial, pooled and
+/// distributed measurement paths of fig3/fig4, so their timing columns
+/// always measure the identically-conditioned problem.
+pub(crate) fn bench_cfg(name: &str, hidden: usize, layers: usize, epochs: usize) -> TrainConfig {
+    let mut tc = TrainConfig::new(name, hidden, layers, epochs);
+    tc.nu = 1e-3;
+    tc.rho = 1e-3;
+    tc
+}
 
 /// Per-depth epoch times: `(serial_ms, parallel_ms, parallel_sim_ms,
 /// measured)`. `parallel_ms` is physically measured on the worker pool
@@ -40,9 +52,7 @@ fn epoch_times(
     layers: usize,
     reps: usize,
 ) -> (f64, f64, f64, bool) {
-    let mut tc = TrainConfig::new(&ds.name, hidden, layers, reps);
-    tc.nu = 1e-3;
-    tc.rho = 1e-3;
+    let mut tc = bench_cfg(&ds.name, hidden, layers, reps);
     tc.schedule = ScheduleMode::Serial;
     let mut trainer = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
     trainer.measure = false;
@@ -59,9 +69,7 @@ fn epoch_times(
 
     let measured = host_cores() >= 2;
     let parallel = if measured {
-        let mut tc = TrainConfig::new(&ds.name, hidden, layers, reps);
-        tc.nu = 1e-3;
-        tc.rho = 1e-3;
+        let mut tc = bench_cfg(&ds.name, hidden, layers, reps);
         tc.schedule = ScheduleMode::Parallel;
         tc.workers = 0; // one worker per layer, as in the paper
         let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
@@ -76,6 +84,33 @@ fn epoch_times(
         sim
     };
     (serial, parallel, sim, measured)
+}
+
+/// Measured epoch time and metered bytes of a real cross-process run:
+/// `workers` spawned localhost worker processes, one contiguous layer
+/// block each, driven over the framed socket transport.
+pub(crate) fn distributed_epoch(
+    spec: &DatasetSpec,
+    hops: usize,
+    hidden: usize,
+    layers: usize,
+    reps: usize,
+    workers: usize,
+) -> anyhow::Result<(f64, u64)> {
+    let mut tc = bench_cfg(&spec.name, hidden, layers, reps);
+    tc.backend = BackendKind::Native;
+    let mut tr = SocketTransport::spawn(spec, hops, tc, workers, spawn_self_repro_worker)?;
+    tr.measure = false;
+    tr.run_epoch()?; // warmup (allocations, page cache)
+    let mut ms = 0.0;
+    let mut bytes = 0u64;
+    for _ in 0..reps {
+        let rec = tr.run_epoch()?;
+        ms += rec.epoch_ms;
+        bytes = rec.comm_bytes;
+    }
+    tr.shutdown()?;
+    Ok((ms / reps as f64, bytes))
 }
 
 pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
@@ -96,6 +131,9 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
         "phase-makespan simulator"
     };
     println!("[fig3] hidden={hidden} reps={reps} cores={cores} (parallel = {par_source})");
+    if opts.distributed {
+        println!("[fig3] --distributed: also measuring one worker process per layer");
+    }
     for ds_name in datasets_all {
         let ds = datasets::load(cfg, ds_name)?;
         for &l in &layer_counts {
@@ -105,15 +143,28 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
             println!(
                 "[fig3] {ds_name:<18} L={l:<3} serial {serial:>9.1} ms  parallel {parallel:>9.1} ms ({mode})  sim {sim:>9.1} ms  speedup {speedup:>5.2}x"
             );
+            // the paper's setting: one worker (process) per layer
+            let dist_cell = if opts.distributed {
+                let spec = cfg.dataset(ds_name)?;
+                let (dist_ms, dist_bytes) =
+                    distributed_epoch(spec, cfg.hops, hidden, l, reps, l)?;
+                println!(
+                    "[fig3] {ds_name:<18} L={l:<3} distributed {dist_ms:>9.1} ms ({l} processes)  comm {dist_bytes} B  speedup {:>5.2}x",
+                    serial / dist_ms
+                );
+                format!("{dist_ms:.3},{dist_bytes}")
+            } else {
+                ",".to_string()
+            };
             rows.push(format!(
-                "{ds_name},{l},{serial:.3},{parallel:.3},{sim:.3},{speedup:.4},{mode}"
+                "{ds_name},{l},{serial:.3},{parallel:.3},{sim:.3},{speedup:.4},{mode},{dist_cell}"
             ));
         }
     }
     let out = cfg.results_dir().join("fig3_speedup_layers.csv");
     write_csv_table(
         &out,
-        "dataset,layers,serial_ms,parallel_ms,parallel_sim_ms,speedup,parallel_mode",
+        "dataset,layers,serial_ms,parallel_ms,parallel_sim_ms,speedup,parallel_mode,dist_ms,dist_comm_bytes",
         &rows,
     )?;
     println!("[fig3] wrote {}", out.display());

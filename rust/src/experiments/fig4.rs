@@ -19,7 +19,7 @@
 
 use super::ExpOptions;
 use crate::backend::{ComputeBackend, NativeBackend};
-use crate::config::{RootConfig, ScheduleMode, TrainConfig, WorkerAssign};
+use crate::config::{RootConfig, ScheduleMode, WorkerAssign};
 use crate::coordinator::trainer::{phase_makespan_ms, Trainer};
 use crate::graph::datasets::{self, Dataset};
 use crate::metrics::write_csv_table;
@@ -42,9 +42,7 @@ fn admm_curve(
     reps: usize,
     workers: &[usize],
 ) -> (Vec<f64>, Vec<f64>, bool) {
-    let mut tc = TrainConfig::new(&ds.name, hidden, layers, reps);
-    tc.nu = 1e-3;
-    tc.rho = 1e-3;
+    let mut tc = super::fig3::bench_cfg(&ds.name, hidden, layers, reps);
     tc.schedule = ScheduleMode::Serial;
     let mut trainer = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
     trainer.measure = false;
@@ -63,9 +61,7 @@ fn admm_curve(
     let epoch = if measured {
         let mut out = Vec::with_capacity(workers.len());
         for &w in workers {
-            let mut tc = TrainConfig::new(&ds.name, hidden, layers, reps);
-            tc.nu = 1e-3;
-            tc.rho = 1e-3;
+            let mut tc = super::fig3::bench_cfg(&ds.name, hidden, layers, reps);
             tc.schedule = ScheduleMode::Parallel;
             tc.workers = w;
             // same layer→worker policy the simulator bins with, so the
@@ -182,8 +178,22 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
                 "[fig4] {ds_name:<12} pdADMM-G   w={w:<3} {:>9.1} ms ({mode})  sim {:>9.1} ms  speedup {speedup:>5.2}x",
                 admm[i], admm_sim[i]
             );
+            // cross-process measurement: w real worker OS processes over
+            // the framed socket transport, next to the pooled numbers
+            let dist_cell = if opts.distributed {
+                let spec = cfg.dataset(ds_name)?;
+                let (dist_ms, dist_bytes) =
+                    super::fig3::distributed_epoch(spec, cfg.hops, hidden, layers, reps, w)?;
+                println!(
+                    "[fig4] {ds_name:<12} pdADMM-G   w={w:<3} {dist_ms:>9.1} ms (distributed, {w} processes)  comm {dist_bytes} B  speedup {:>5.2}x",
+                    admm[0] / dist_ms
+                );
+                format!("{dist_ms:.3},{dist_bytes}")
+            } else {
+                ",".to_string()
+            };
             rows.push(format!(
-                "{ds_name},pdADMM-G,{w},{:.3},{:.3},{speedup:.4},{mode}",
+                "{ds_name},pdADMM-G,{w},{:.3},{:.3},{speedup:.4},{mode},{dist_cell}",
                 admm[i], admm_sim[i]
             ));
         }
@@ -197,7 +207,7 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
                     curve[i]
                 );
                 rows.push(format!(
-                    "{ds_name},{},{w},{:.3},{:.3},{speedup:.4},modeled",
+                    "{ds_name},{},{w},{:.3},{:.3},{speedup:.4},modeled,,",
                     kind.label(),
                     curve[i],
                     curve[i]
@@ -206,7 +216,11 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
         }
     }
     let out = cfg.results_dir().join("fig4_speedup_workers.csv");
-    write_csv_table(&out, "dataset,method,workers,epoch_ms,sim_ms,speedup,epoch_mode", &rows)?;
+    write_csv_table(
+        &out,
+        "dataset,method,workers,epoch_ms,sim_ms,speedup,epoch_mode,dist_ms,dist_comm_bytes",
+        &rows,
+    )?;
     println!("[fig4] wrote {}", out.display());
     Ok(())
 }

@@ -34,11 +34,20 @@ pub struct ExpOptions {
     pub quick: bool,
     pub epochs: Option<usize>,
     pub seeds: Option<usize>,
+    /// Additionally measure the cross-process socket runtime (fig3/fig4):
+    /// spawns localhost worker processes per configuration.
+    pub distributed: bool,
 }
 
 impl Default for ExpOptions {
     fn default() -> Self {
-        ExpOptions { backend: BackendKind::Native, quick: false, epochs: None, seeds: None }
+        ExpOptions {
+            backend: BackendKind::Native,
+            quick: false,
+            epochs: None,
+            seeds: None,
+            distributed: false,
+        }
     }
 }
 

@@ -126,6 +126,23 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
         rows.push(format!("codec_{},{:.6}", r.name, r.p50.as_secs_f64() * 1e3));
     }
 
+    // --- distributed wire path: encode + frame serialize + parse + decode
+    // (what one boundary tensor costs on the socket transport, minus I/O) ---
+    let mut wb = Bencher::with_budget(if opts.quick { 100 } else { 300 });
+    wb.group("distributed wire round-trip (encode+serialize+parse+decode)");
+    for codec in [Codec::None, Codec::Uniform { bits: 8 }, Codec::Uniform { bits: 4 }] {
+        wb.bench(&codec.label(), || {
+            let enc = quant::encode(codec, &big);
+            let wire = enc.to_wire();
+            let back = quant::read_wire(codec, &wire).expect("wire parse");
+            std::hint::black_box(quant::decode(&back));
+        });
+        wb.note_throughput(bytes_in);
+    }
+    for r in &wb.results {
+        rows.push(format!("wire_{},{:.6}", r.name, r.p50.as_secs_f64() * 1e3));
+    }
+
     // quantized-update overhead vs plain (the Q algorithm's compute cost)
     let mut tb = Bencher::with_budget(if opts.quick { 100 } else { 300 });
     tb.group("pdADMM-G-Q overhead");

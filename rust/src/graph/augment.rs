@@ -17,15 +17,28 @@ pub fn augment(adj_renorm: &Csr, h_nd: &Mat, hops: usize, threads: usize) -> Mat
     let mut x = Mat::zeros(hops * d, v);
 
     let mut cur = h_nd.clone(); // (V, d): H Ã^k in nodes-major layout
+    // Tile size for the hop-block transpose: 64 f32 = one 256-byte stripe,
+    // small enough that a B×B tile of `cur` stays L1/L2-resident.
+    const B: usize = 64;
     for k in 0..hops {
         if k > 0 {
             cur = adj_renorm.spmm(&cur, threads); // Ã is symmetric: Ã·(HÃ^{k-1})ᵀ
         }
-        // transpose the hop block into rows [k*d, (k+1)*d) of X
-        for feat in 0..d {
-            let out_row = x.row_mut(k * d + feat);
-            for node in 0..v {
-                out_row[node] = cur.at(node, feat);
+        // Transpose the hop block into rows [k*d, (k+1)*d) of X in B×B
+        // tiles. The previous loop walked `node` innermost and read
+        // `cur.at(node, feat)` — a d-element stride per step, touching a
+        // fresh cache line for every element once V*d outgrows the cache.
+        // Tiling keeps both the read and write sides inside resident tiles.
+        for f0 in (0..d).step_by(B) {
+            let f1 = (f0 + B).min(d);
+            for n0 in (0..v).step_by(B) {
+                let n1 = (n0 + B).min(v);
+                for feat in f0..f1 {
+                    let out_row = x.row_mut(k * d + feat);
+                    for node in n0..n1 {
+                        out_row[node] = cur.data[node * d + feat];
+                    }
+                }
             }
         }
     }
@@ -88,6 +101,38 @@ mod tests {
     #[test]
     fn augmented_dim_is_k_times_d() {
         assert_eq!(augmented_dim(128, 4), 512);
+    }
+
+    /// The blocked transpose must agree with the naive definition on sizes
+    /// that straddle the tile boundary (v, d not multiples of the tile).
+    #[test]
+    fn blocked_transpose_matches_naive_past_tile_boundaries() {
+        let mut rng = Pcg32::seeded(35);
+        let v = 131; // > one 64-tile, not a multiple
+        let d = 9;
+        let at = Csr::from_undirected_edges(
+            v,
+            &(0..v - 1).map(|i| (i as u32, i as u32 + 1)).collect::<Vec<_>>(),
+        )
+        .renormalized();
+        let h = Mat::randn(v, d, 1.0, &mut rng);
+        let x = augment(&at, &h, 2, 1);
+        assert_eq!(x.shape(), (2 * d, v));
+        // hop 0 is exactly Hᵀ
+        for feat in 0..d {
+            for node in 0..v {
+                assert_eq!(x.at(feat, node), h.at(node, feat));
+            }
+        }
+        // hop 1 equals the dense product, element by element
+        let ah = at.to_dense().matmul(&h);
+        for feat in 0..d {
+            for node in 0..v {
+                let got = x.at(d + feat, node);
+                let want = ah.at(node, feat);
+                assert!((got - want).abs() < 1e-5, "({feat},{node}): {got} vs {want}");
+            }
+        }
     }
 
     #[test]

@@ -33,16 +33,32 @@
 //! block-wise `(min, step)` scaling; `--stochastic` selects unbiased
 //! stochastic rounding for the convergence experiments.
 //!
-//! # Execution model
+//! # Execution model — three schedules, one set of kernels
 //!
-//! Algorithm 1's six phases run over a **persistent layer-worker pool**
-//! ([`util::threads::WorkerPool`]): one dedicated OS thread per worker,
-//! spawned once per [`coordinator::Trainer`], with phases dispatched as
-//! condvar barrier rounds and layers pinned to workers for the whole run
-//! (`--assign round-robin|block|lpt`). The serial schedule is the inline,
-//! bitwise-identical reference path. Speedup experiments physically
-//! measure the pool on multi-core hosts and otherwise use the phase-wise
-//! makespan simulator ([`coordinator::trainer::phase_makespan_ms`]).
+//! Algorithm 1's six phases (P, W, B, Z, Q, U) always execute the
+//! [`coordinator::phases`] kernels; the schedules differ only in where a
+//! layer's update runs and how its tensors travel:
+//!
+//! 1. **Serial** — every layer inline on the caller thread; the reference
+//!    path.
+//! 2. **Parallel (pool)** — a **persistent layer-worker pool**
+//!    ([`util::threads::WorkerPool`]): one dedicated OS thread per worker,
+//!    spawned once per [`coordinator::Trainer`], phases dispatched as
+//!    condvar barrier rounds, layers pinned for the whole run
+//!    (`--assign round-robin|block|lpt`).
+//! 3. **Distributed (socket)** — cross-process layer workers behind the
+//!    [`coordinator::transport::Transport`] abstraction: each
+//!    `repro worker` OS process owns a contiguous layer block and runs
+//!    the phases against the coordinator's framed Unix-socket/TCP barrier
+//!    protocol; block-boundary tensors cross the wire as frames whose
+//!    payloads are exactly the `quant` codec format.
+//!
+//! All three are bitwise-identical — same `EpochRecord` trajectories,
+//! same metered byte totals — asserted end-to-end by the schedule-parity
+//! integration test. Speedup experiments physically measure the pool (and,
+//! with `--distributed`, the socket runtime) on multi-core hosts and
+//! otherwise use the phase-wise makespan simulator
+//! ([`coordinator::trainer::phase_makespan_ms`]).
 
 pub mod admm;
 pub mod backend;

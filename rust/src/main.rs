@@ -8,7 +8,8 @@ use pdadmm_g::backend;
 use pdadmm_g::cli::args::{Args, USAGE};
 use pdadmm_g::config::{BackendKind, QuantMode, RootConfig, ScheduleMode, TrainConfig};
 use pdadmm_g::coordinator::greedy::train_greedy;
-use pdadmm_g::coordinator::Trainer;
+use pdadmm_g::coordinator::transport::{self, SocketTransport};
+use pdadmm_g::coordinator::{worker, Trainer};
 use pdadmm_g::experiments::{self, ExpOptions};
 use pdadmm_g::graph::datasets;
 use pdadmm_g::optim::{train_baseline, BaselineConfig, Optimizer, OptimizerKind};
@@ -29,6 +30,11 @@ fn run(argv: &[String]) -> Result<()> {
     if let Some(t) = args.flags.get_parse::<usize>("threads")? {
         pdadmm_g::tensor::ops::set_default_threads(t);
     }
+    // the worker subcommand takes its whole config over the socket — it
+    // must not require a findable configs/datasets.json
+    if args.subcommand == "worker" {
+        return cmd_worker(&args);
+    }
     let cfg = RootConfig::load_default()?;
     match args.subcommand.as_str() {
         "train" => cmd_train(&cfg, &args),
@@ -41,6 +47,18 @@ fn run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         other => Err(anyhow::anyhow!("unknown subcommand {other:?}")),
+    }
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    if let Some(addr) = args.flags.get("connect") {
+        worker::connect(addr)
+    } else if let Some(addr) = args.flags.get("listen") {
+        worker::listen(addr)
+    } else {
+        Err(anyhow::anyhow!(
+            "worker needs --connect <host:port|unix:path> or --listen <host:port|unix:path>"
+        ))
     }
 }
 
@@ -91,6 +109,31 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
             .map(|s| s.trim().parse::<usize>())
             .collect::<Result<Vec<_>, _>>()?;
     }
+
+    // --- cross-process mode: spawned localhost workers (--distributed N)
+    // or pre-started workers (--workers-at addr,addr) ---
+    // `--distributed N` picks the worker-process count; a bare
+    // `--distributed` defaults to 2 processes
+    let dist_workers = if args.flags.has("distributed") {
+        2
+    } else {
+        args.flags.get_or("distributed", 0usize)?
+    };
+    let workers_at: Option<Vec<String>> = args
+        .flags
+        .get("workers-at")
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
+    if dist_workers > 0 || workers_at.is_some() {
+        if args.flags.get("backend").is_none() {
+            tc.backend = BackendKind::Native; // the distributed runtime's backend
+        }
+        if !tc.greedy_stages.is_empty() {
+            return Err(anyhow::anyhow!("--greedy is not supported in distributed mode"));
+        }
+        let spec = cfg.dataset(&dataset)?.clone();
+        return train_distributed(cfg, &spec, tc, dist_workers, workers_at, args);
+    }
+
     let backend = experiments::make_backend(cfg, tc.backend)?;
 
     println!(
@@ -122,6 +165,69 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
     } else {
         train_greedy(backend, ds, tc)
     };
+    let (best_val, test) = log.test_at_best_val();
+    println!(
+        "done: best val {best_val:.3} -> test {test:.3}; total comm {}",
+        fmt_bytes(log.total_comm_bytes())
+    );
+    if let Some(out) = args.flags.get("out") {
+        log.write_csv(std::path::Path::new(out))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// Drive a full training run over the socket transport, printing the same
+/// per-epoch lines as the in-process path.
+fn train_distributed(
+    cfg: &RootConfig,
+    spec: &pdadmm_g::config::DatasetSpec,
+    tc: TrainConfig,
+    dist_workers: usize,
+    workers_at: Option<Vec<String>>,
+    args: &Args,
+) -> Result<()> {
+    let epochs = tc.epochs;
+    let quant_label = tc.quant.label();
+    let method = if tc.quant == QuantMode::None { "pdADMM-G" } else { "pdADMM-G-Q" }.to_string();
+    let (layers, hidden, seed) = (tc.layers, tc.hidden, tc.seed);
+    let mut tr = match workers_at {
+        Some(addrs) => SocketTransport::connect(spec, cfg.hops, tc, &addrs)?,
+        None => SocketTransport::spawn(
+            spec,
+            cfg.hops,
+            tc,
+            dist_workers,
+            transport::spawn_self_repro_worker,
+        )?,
+    };
+    println!(
+        "training {method} on {} (distributed: {} worker processes): L={layers} h={hidden} quant={quant_label}",
+        spec.name,
+        tr.workers(),
+    );
+    let mut log = pdadmm_g::metrics::TrainLog {
+        method,
+        dataset: spec.name.clone(),
+        backend: "native".into(),
+        quant: quant_label,
+        layers,
+        hidden,
+        seed,
+        records: Vec::with_capacity(epochs),
+    };
+    for e in 0..epochs {
+        let rec = tr.run_epoch()?;
+        if e % 10 == 0 || e + 1 == epochs {
+            println!(
+                "epoch {e:>4}  obj {:>12.4e}  res {:>10.3e}  train {:.3}  val {:.3}  test {:.3}  ({:.0} ms, comm {})",
+                rec.objective, rec.residual, rec.train_acc, rec.val_acc, rec.test_acc,
+                rec.epoch_ms, fmt_bytes(rec.comm_bytes),
+            );
+        }
+        log.push(rec);
+    }
+    tr.shutdown()?;
     let (best_val, test) = log.test_at_best_val();
     println!(
         "done: best val {best_val:.3} -> test {test:.3}; total comm {}",
@@ -187,6 +293,8 @@ fn cmd_exp(cfg: &RootConfig, args: &Args) -> Result<()> {
         quick: args.flags.has("quick"),
         epochs: args.flags.get_parse("epochs")?,
         seeds: args.flags.get_parse("seeds")?,
+        // accept both the bare switch and an (ignored) numeric value
+        distributed: args.flags.has("distributed") || args.flags.get("distributed").is_some(),
     };
     experiments::run(cfg, name, &opts)
 }

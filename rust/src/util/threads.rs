@@ -49,6 +49,26 @@ pub fn lpt_assignment(times: &[f64], workers: usize) -> (Vec<usize>, f64) {
     (assignment, makespan)
 }
 
+/// Contiguous ownership blocks for the distributed runtime: `n` jobs
+/// (layers) split over `workers` ranked workers into half-open `(lo, hi)`
+/// ranges — sizes differ by at most one and, with `workers` clamped to
+/// `n`, every block is non-empty. This is the layer→process map of the
+/// socket transport (each OS worker process owns one contiguous block, so
+/// only block-boundary tensors cross process boundaries).
+pub fn block_partition(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let workers = workers.clamp(1, n.max(1));
+    let base = n / workers;
+    let extra = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut lo = 0usize;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
 /// A round's type-erased task: called once per worker with the worker's
 /// index. The `'static` is a lie maintained by [`WorkerPool::run`]'s
 /// barrier — the borrow never outlives the round.
@@ -358,6 +378,26 @@ mod tests {
             live.fetch_sub(1, Ordering::SeqCst);
         });
         assert!(peak.load(Ordering::SeqCst) >= 2);
+    }
+
+    #[test]
+    fn block_partition_covers_contiguously_and_balances() {
+        for (n, w) in [(5usize, 4usize), (3, 2), (10, 3), (4, 4), (7, 1), (2, 9)] {
+            let blocks = block_partition(n, w);
+            assert_eq!(blocks.len(), w.clamp(1, n), "n={n} w={w}");
+            assert_eq!(blocks[0].0, 0);
+            assert_eq!(blocks.last().unwrap().1, n);
+            let mut sizes = Vec::new();
+            for win in blocks.windows(2) {
+                assert_eq!(win[0].1, win[1].0, "blocks must be contiguous");
+            }
+            for &(lo, hi) in &blocks {
+                assert!(hi > lo, "empty block in {blocks:?}");
+                sizes.push(hi - lo);
+            }
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced {sizes:?}");
+        }
     }
 
     #[test]

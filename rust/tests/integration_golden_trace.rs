@@ -1,0 +1,115 @@
+//! Golden-trace regression: a fixed-seed 5-epoch training run on the tiny
+//! SBM benchmark, pinned bit-for-bit (f64 bit patterns of the objective /
+//! residual plus the metered byte totals), so future refactors cannot
+//! silently change numerics. See `tests/golden/README.md` for the bless
+//! workflow: a missing golden file is bootstrapped from the current run
+//! (commit it); a present one is compared strictly.
+
+use pdadmm_g::backend::NativeBackend;
+use pdadmm_g::config::{BackendKind, DatasetSpec, QuantMode, ScheduleMode, TrainConfig};
+use pdadmm_g::coordinator::Trainer;
+use pdadmm_g::graph::datasets;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const EPOCHS: usize = 5;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/tiny_sbm_trace.csv")
+}
+
+/// One epoch's pinned quantities.
+#[derive(Debug, PartialEq, Eq)]
+struct TracePoint {
+    objective_bits: u64,
+    residual_bits: u64,
+    comm_bytes: u64,
+}
+
+fn run_trace(schedule: ScheduleMode) -> Vec<TracePoint> {
+    let spec = DatasetSpec {
+        name: "tiny-golden".into(),
+        nodes: 90,
+        avg_degree: 6.0,
+        classes: 3,
+        feat_dim: 8,
+        train: 45,
+        val: 20,
+        test: 25,
+        homophily_ratio: 8.0,
+        feature_signal: 1.5,
+        label_noise: 0.0,
+        seed: 13,
+    };
+    let ds = datasets::build(&spec, 2, 1);
+    let mut tc = TrainConfig::new("tiny-golden", 10, 3, EPOCHS);
+    tc.nu = 0.01;
+    tc.rho = 1.0;
+    tc.seed = 3;
+    tc.schedule = schedule;
+    tc.backend = BackendKind::Native;
+    // exercise the codec path the paper's Fig. 5 meters: block-wise pq4
+    tc.quant = QuantMode::PQ { bits: 4 };
+    tc.quant_block = 64;
+    let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc);
+    (0..EPOCHS)
+        .map(|_| {
+            let r = t.run_epoch();
+            TracePoint {
+                objective_bits: r.objective.to_bits(),
+                residual_bits: r.residual.to_bits(),
+                comm_bytes: r.comm_bytes,
+            }
+        })
+        .collect()
+}
+
+fn render(trace: &[TracePoint]) -> String {
+    let mut out = String::from(
+        "# golden trace: tiny SBM (90 nodes, K=2), L=3 h=10, pq4-b64, nu=0.01 rho=1.0, seed 3\n\
+         # f64 bit patterns in hex; regenerate by deleting this file and rerunning the test\n\
+         epoch,objective_bits,residual_bits,comm_bytes\n",
+    );
+    for (e, p) in trace.iter().enumerate() {
+        out.push_str(&format!(
+            "{},{:016x},{:016x},{}\n",
+            e + 1,
+            p.objective_bits,
+            p.residual_bits,
+            p.comm_bytes
+        ));
+    }
+    out
+}
+
+#[test]
+fn golden_trace_replay_is_bitwise_stable() {
+    let a = run_trace(ScheduleMode::Serial);
+    let b = run_trace(ScheduleMode::Serial);
+    assert_eq!(a, b, "same-process replay must be deterministic");
+    // the pooled schedule replays the identical trace (schedule parity)
+    let c = run_trace(ScheduleMode::Parallel);
+    assert_eq!(a, c, "pooled schedule must replay the serial trace bitwise");
+
+    let path = golden_path();
+    let rendered = render(&a);
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &rendered).unwrap();
+        eprintln!(
+            "golden trace bootstrapped at {} — commit this file so future \
+             refactors are pinned to today's numerics",
+            path.display()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        rendered,
+        want,
+        "training trace diverged from the committed golden file {} — if the \
+         numeric change is intentional, delete the file, rerun the test to \
+         re-bless, and commit the regenerated trace",
+        path.display()
+    );
+}

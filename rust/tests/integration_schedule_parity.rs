@@ -1,0 +1,240 @@
+//! Schedule parity, end to end: **Serial**, **Parallel (pool)** and
+//! **Distributed (loopback worker processes)** must produce identical
+//! `EpochRecord` losses/accuracies and identical `CommMeter` byte totals
+//! for every wire codec — the acceptance proof that the cross-process
+//! runtime computes the same training run the paper's Fig. 5 accounts.
+//!
+//! The distributed runs use *real* OS processes: the test re-executes its
+//! own binary filtered to [`worker_reentry`], which turns into a worker
+//! process when `PDADMM_TEST_WORKER_CONNECT` is set (and is an instant
+//! no-op pass during a normal test run).
+
+use pdadmm_g::backend::NativeBackend;
+use pdadmm_g::config::{BackendKind, DatasetSpec, QuantMode, ScheduleMode, TrainConfig};
+use pdadmm_g::coordinator::transport::{InProcessTransport, SocketTransport, Transport};
+use pdadmm_g::coordinator::Trainer;
+use pdadmm_g::graph::datasets;
+use pdadmm_g::metrics::EpochRecord;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+const HOPS: usize = 2;
+const EPOCHS: usize = 3;
+
+fn tiny_spec() -> DatasetSpec {
+    DatasetSpec {
+        name: "tiny".into(),
+        nodes: 90,
+        avg_degree: 6.0,
+        classes: 3,
+        feat_dim: 8,
+        train: 45,
+        val: 20,
+        test: 25,
+        homophily_ratio: 8.0,
+        feature_signal: 1.5,
+        label_noise: 0.0,
+        seed: 13,
+    }
+}
+
+fn base_cfg(quant: QuantMode, block: u32, stochastic: bool, seed: u64) -> TrainConfig {
+    let mut tc = TrainConfig::new("tiny", 10, 3, EPOCHS);
+    tc.nu = 0.01;
+    tc.rho = 1.0;
+    tc.quant = quant;
+    tc.quant_block = block;
+    tc.quant_stochastic = stochastic;
+    tc.seed = seed;
+    tc.backend = BackendKind::Native;
+    tc
+}
+
+fn run_inproc(cfg: &TrainConfig, schedule: ScheduleMode) -> (Vec<EpochRecord>, Trainer) {
+    let ds = datasets::build(&tiny_spec(), HOPS, 1);
+    let mut tc = cfg.clone();
+    tc.schedule = schedule;
+    let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc);
+    let recs = (0..EPOCHS).map(|_| t.run_epoch()).collect();
+    (recs, t)
+}
+
+/// Spawn this test binary as a worker process (see module doc).
+fn spawn_test_worker(addr: &str) -> anyhow::Result<Child> {
+    let exe = std::env::current_exe()?;
+    Ok(Command::new(exe)
+        .args(["worker_reentry", "--exact", "--nocapture"])
+        .env("PDADMM_TEST_WORKER_CONNECT", addr)
+        .stdout(Stdio::null())
+        .spawn()?)
+}
+
+/// Re-entry point for worker processes. A normal test run (env unset) is a
+/// no-op pass; the spawned copies connect to the coordinator and serve.
+#[test]
+fn worker_reentry() {
+    if let Ok(addr) = std::env::var("PDADMM_TEST_WORKER_CONNECT") {
+        pdadmm_g::coordinator::worker::connect(&addr).expect("worker session");
+    }
+}
+
+fn run_distributed(
+    cfg: &TrainConfig,
+    workers: usize,
+) -> (Vec<EpochRecord>, Vec<pdadmm_g::admm::state::LayerState>) {
+    let mut tr = SocketTransport::spawn(&tiny_spec(), HOPS, cfg.clone(), workers, spawn_test_worker)
+        .expect("spawn socket transport");
+    let recs: Vec<EpochRecord> =
+        (0..EPOCHS).map(|_| tr.run_epoch().expect("distributed epoch")).collect();
+    let layers = tr.synced_layers().expect("final state sync").to_vec();
+    tr.shutdown().expect("shutdown");
+    (recs, layers)
+}
+
+fn assert_records_identical(tag: &str, a: &[EpochRecord], b: &[EpochRecord]) {
+    assert_eq!(a.len(), b.len(), "{tag}: epoch count");
+    for (ra, rb) in a.iter().zip(b) {
+        let e = ra.epoch;
+        assert_eq!(ra.comm_bytes, rb.comm_bytes, "{tag}: comm bytes diverged at epoch {e}");
+        assert_eq!(
+            ra.objective.to_bits(),
+            rb.objective.to_bits(),
+            "{tag}: objective diverged at epoch {e}: {} vs {}",
+            ra.objective,
+            rb.objective
+        );
+        assert_eq!(
+            ra.residual.to_bits(),
+            rb.residual.to_bits(),
+            "{tag}: residual diverged at epoch {e}"
+        );
+        assert_eq!(ra.risk.to_bits(), rb.risk.to_bits(), "{tag}: risk diverged at epoch {e}");
+        for (name, x, y) in [
+            ("train", ra.train_acc, rb.train_acc),
+            ("val", ra.val_acc, rb.val_acc),
+            ("test", ra.test_acc, rb.test_acc),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: {name} acc diverged at epoch {e}");
+        }
+    }
+}
+
+fn parity_case(quant: QuantMode, block: u32, stochastic: bool) {
+    for seed in [3u64, 11] {
+        let cfg = base_cfg(quant, block, stochastic, seed);
+        let tag = format!("{quant:?}/b{block}/st{stochastic}/seed{seed}");
+        let (serial, serial_t) = run_inproc(&cfg, ScheduleMode::Serial);
+        let (pool, _) = run_inproc(&cfg, ScheduleMode::Parallel);
+        let (dist, dist_layers) = run_distributed(&cfg, 2);
+        assert_records_identical(&format!("{tag}: serial vs pool"), &serial, &pool);
+        assert_records_identical(&format!("{tag}: serial vs distributed"), &serial, &dist);
+        // final layer state must match bit for bit across the process boundary
+        assert_eq!(serial_t.layers.len(), dist_layers.len());
+        for (ls, ld) in serial_t.layers.iter().zip(&dist_layers) {
+            let l = ls.index;
+            assert_eq!(ls.w.data, ld.w.data, "{tag}: W diverged at layer {l}");
+            assert_eq!(ls.b.data, ld.b.data, "{tag}: b diverged at layer {l}");
+            assert_eq!(ls.z.data, ld.z.data, "{tag}: z diverged at layer {l}");
+            assert_eq!(ls.p.data, ld.p.data, "{tag}: p diverged at layer {l}");
+            assert_eq!(
+                ls.q.as_ref().map(|m| &m.data),
+                ld.q.as_ref().map(|m| &m.data),
+                "{tag}: q diverged at layer {l}"
+            );
+            assert_eq!(
+                ls.u.as_ref().map(|m| &m.data),
+                ld.u.as_ref().map(|m| &m.data),
+                "{tag}: u diverged at layer {l}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parity_fp32() {
+    parity_case(QuantMode::None, 0, false);
+}
+
+#[test]
+fn parity_pq8() {
+    parity_case(QuantMode::PQ { bits: 8 }, 0, false);
+}
+
+#[test]
+fn parity_pq4_block512() {
+    parity_case(QuantMode::PQ { bits: 4 }, 512, false);
+}
+
+#[test]
+fn parity_stochastic() {
+    parity_case(QuantMode::PQ { bits: 8 }, 0, true);
+}
+
+/// A distributed run with more workers than the 2-process parity cases:
+/// one process per layer, byte totals still identical to serial.
+#[test]
+fn parity_one_process_per_layer() {
+    let cfg = base_cfg(QuantMode::PQ { bits: 4 }, 0, false, 7);
+    let (serial, _) = run_inproc(&cfg, ScheduleMode::Serial);
+    let (dist, _) = run_distributed(&cfg, 3);
+    assert_records_identical("pq4 x3 workers", &serial, &dist);
+}
+
+/// The `Transport` abstraction drives both runtimes through one
+/// interface, and they agree on losses and metered bytes.
+#[test]
+fn transport_trait_drives_both_runtimes() {
+    let cfg = base_cfg(QuantMode::PQ { bits: 8 }, 0, false, 3);
+    let ds = datasets::build(&tiny_spec(), HOPS, 1);
+    let mut inproc_cfg = cfg.clone();
+    inproc_cfg.schedule = ScheduleMode::Serial;
+    let trainer = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, inproc_cfg);
+    let socket = SocketTransport::spawn(&tiny_spec(), HOPS, cfg, 2, spawn_test_worker)
+        .expect("spawn socket transport");
+    let mut transports: Vec<Box<dyn Transport>> =
+        vec![Box::new(InProcessTransport::new(trainer)), Box::new(socket)];
+    let mut outcomes = Vec::new();
+    for t in &mut transports {
+        let mut last = None;
+        for _ in 0..2 {
+            last = Some(t.run_epoch().expect("epoch over transport"));
+        }
+        let rec = last.unwrap();
+        let logits = t.logits().expect("logits over transport");
+        assert_eq!(logits.cols, 90);
+        outcomes.push((t.kind(), rec.objective, rec.comm_bytes));
+        t.shutdown().expect("transport shutdown");
+    }
+    assert_ne!(outcomes[0].0, outcomes[1].0, "two distinct runtimes: {outcomes:?}");
+    assert_eq!(outcomes[0].1.to_bits(), outcomes[1].1.to_bits(), "{outcomes:?}");
+    assert_eq!(outcomes[0].2, outcomes[1].2, "{outcomes:?}");
+}
+
+/// CI's distributed-loopback smoke (2 workers, 2 epochs on the cora-scale
+/// benchmark), gated like `PDADMM_BENCH_QUICK`: set `PDADMM_DIST_SMOKE=1`
+/// to run it.
+#[test]
+fn distributed_loopback_smoke() {
+    if std::env::var("PDADMM_DIST_SMOKE").is_err() {
+        eprintln!("skipping distributed loopback smoke (set PDADMM_DIST_SMOKE=1)");
+        return;
+    }
+    let root = pdadmm_g::config::RootConfig::load_default().expect("repo config");
+    let spec = root.dataset("cora").expect("cora spec").clone();
+    let mut tc = TrainConfig::new("cora", 32, 4, 2);
+    tc.nu = 0.01;
+    tc.rho = 1.0;
+    tc.backend = BackendKind::Native;
+    tc.quant = QuantMode::PQ { bits: 4 };
+    let mut tr = SocketTransport::spawn(&spec, root.hops, tc, 2, spawn_test_worker)
+        .expect("spawn smoke transport");
+    let mut last = None;
+    for _ in 0..2 {
+        last = Some(tr.run_epoch().expect("smoke epoch"));
+    }
+    let rec = last.unwrap();
+    assert!(rec.objective.is_finite(), "objective {}", rec.objective);
+    assert!(rec.comm_bytes > 0);
+    assert_eq!(tr.workers(), 2);
+    tr.shutdown().expect("smoke shutdown");
+}

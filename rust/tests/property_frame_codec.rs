@@ -1,0 +1,169 @@
+//! Property tests for the distributed transport's frame codec and the
+//! tensor wire serialization (substrate S19 over S13): length-prefix
+//! round-trips for arbitrary payload sizes, and clean `Err`s — no panics,
+//! no partial successes — on truncated streams, oversized lengths and
+//! garbage headers.
+
+use pdadmm_g::coordinator::quant::{self, Codec};
+use pdadmm_g::coordinator::transport::{read_frame, write_frame, FRAME_MAGIC, MAX_FRAME_BYTES};
+use pdadmm_g::prop_assert;
+use pdadmm_g::tensor::matrix::Mat;
+use pdadmm_g::tensor::rng::Pcg32;
+use pdadmm_g::util::prop::Prop;
+use std::io::Cursor;
+
+fn random_payload(rng: &mut Pcg32, len: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.below(256) as u8).collect()
+}
+
+#[test]
+fn prop_frame_round_trips_arbitrary_payload_sizes() {
+    Prop::new(24, 0xf4a3e).check("write_frame | read_frame round-trip", |rng, size| {
+        // sizes: empty, tiny, multi-KiB, and odd lengths
+        let len = match size % 4 {
+            0 => 0,
+            1 => size,
+            2 => size * 97 + 1,
+            _ => 1 + rng.below(8192) as usize,
+        };
+        let payload = random_payload(rng, len);
+        let kind = rng.below(256) as u8;
+        let mut buf = Vec::new();
+        write_frame(&mut buf, kind, &payload).map_err(|e| format!("{e:#}"))?;
+        prop_assert!(buf.len() == 6 + payload.len(), "frame overhead must be exactly 6 bytes");
+        let (k, p) = read_frame(&mut Cursor::new(&buf)).map_err(|e| format!("{e:#}"))?;
+        prop_assert!(k == kind, "kind {k} != {kind}");
+        prop_assert!(p == payload, "payload mismatch at len {len}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_back_to_back_frames_stream_in_order() {
+    Prop::new(12, 0xbacc).check("N frames on one stream", |rng, size| {
+        let n = 1 + size % 5;
+        let frames: Vec<(u8, Vec<u8>)> = (0..n)
+            .map(|i| (i as u8, random_payload(rng, rng.below(512) as usize)))
+            .collect();
+        let mut buf = Vec::new();
+        for (k, p) in &frames {
+            write_frame(&mut buf, *k, p).map_err(|e| format!("{e:#}"))?;
+        }
+        let mut cur = Cursor::new(&buf);
+        for (k, p) in &frames {
+            let (k2, p2) = read_frame(&mut cur).map_err(|e| format!("{e:#}"))?;
+            prop_assert!(k2 == *k && p2 == *p, "stream order violated");
+        }
+        // the stream is fully consumed: one more read hits clean EOF
+        prop_assert!(read_frame(&mut cur).is_err(), "read past the last frame must fail");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncation_anywhere_errors_cleanly() {
+    Prop::new(20, 0x7c0c).check("any strict prefix fails to parse", |rng, size| {
+        let payload = random_payload(rng, 1 + size * 3);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 5, &payload).map_err(|e| format!("{e:#}"))?;
+        // cut inside the header, at the header/payload seam, inside payload
+        for cut in [0, 1, 3, 5, 6, buf.len() / 2, buf.len() - 1] {
+            let r = read_frame(&mut Cursor::new(&buf[..cut]));
+            prop_assert!(r.is_err(), "prefix of {cut} bytes must not parse");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_garbage_headers_error_without_panicking() {
+    Prop::new(32, 0x6a4ba6e).check("random 6-byte headers never panic", |rng, _| {
+        let hdr: Vec<u8> = (0..6).map(|_| rng.below(256) as u8).collect();
+        let len = u32::from_le_bytes([hdr[2], hdr[3], hdr[4], hdr[5]]);
+        let r = read_frame(&mut Cursor::new(&hdr));
+        if hdr[0] == FRAME_MAGIC && len == 0 {
+            // the one accidentally-valid case: an empty frame
+            prop_assert!(r.is_ok(), "empty frame with good magic must parse");
+        } else {
+            // bad magic, oversized length, or missing payload — all Err
+            prop_assert!(r.is_err(), "garbage header {hdr:?} must not parse");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_allocation() {
+    // largest possible prefix: would be a 4 GiB allocation if trusted
+    for len in [MAX_FRAME_BYTES + 1, u32::MAX] {
+        let mut buf = vec![FRAME_MAGIC, 9];
+        buf.extend_from_slice(&len.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert!(format!("{err:#}").contains("cap"), "{err:#}");
+    }
+}
+
+#[test]
+fn prop_tensor_wire_round_trips_across_codecs() {
+    Prop::new(16, 0x3e4a).check("encode|to_wire|read_wire|decode identity", |rng, size| {
+        let rows = 1 + size % 9;
+        let cols = 1 + rng.below(40) as usize;
+        let m = Mat::randn(rows, cols, 1.5, rng);
+        let codecs = [
+            Codec::None,
+            Codec::Uniform { bits: 1 + (size % 16) as u8 },
+            Codec::BlockUniform { bits: 4, block: 1 + rng.below(64) },
+            Codec::Stochastic { bits: 8 },
+        ];
+        for codec in codecs {
+            let enc = quant::encode(codec, &m);
+            let wire = enc.to_wire();
+            prop_assert!(
+                wire.len() as u64 == enc.wire_bytes(),
+                "{codec:?}: serialized {} bytes, accounted {}",
+                wire.len(),
+                enc.wire_bytes()
+            );
+            let back = quant::read_wire(codec, &wire).map_err(|e| format!("{e:#}"))?;
+            prop_assert!(
+                quant::decode(&back).data == quant::decode(&enc).data,
+                "{codec:?}: wire round-trip changed the decoded tensor"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tensor_wire_truncation_and_trailing_bytes_error() {
+    Prop::new(12, 0x7bc).check("corrupt tensor wire fails cleanly", |rng, size| {
+        let m = Mat::randn(2 + size % 6, 3 + rng.below(20) as usize, 1.0, rng);
+        for codec in [Codec::None, Codec::Uniform { bits: 8 }] {
+            let wire = quant::encode(codec, &m).to_wire();
+            for cut in [0, 2, 4, 7, wire.len() / 2, wire.len() - 1] {
+                prop_assert!(
+                    quant::read_wire(codec, &wire[..cut]).is_err(),
+                    "{codec:?}: {cut}-byte prefix must not parse"
+                );
+            }
+            let mut long = wire.clone();
+            long.push(0xEE);
+            prop_assert!(
+                quant::read_wire(codec, &long).is_err(),
+                "{codec:?}: trailing bytes must be rejected"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tensor_wire_codec_mismatches_are_rejected() {
+    let mut rng = Pcg32::seeded(91);
+    let m = Mat::randn(5, 11, 1.0, &mut rng);
+    let wire8 = quant::encode(Codec::Uniform { bits: 8 }, &m).to_wire();
+    assert!(quant::read_wire(Codec::Uniform { bits: 4 }, &wire8).is_err());
+    let wireb = quant::encode(Codec::BlockUniform { bits: 4, block: 16 }, &m).to_wire();
+    assert!(quant::read_wire(Codec::BlockUniform { bits: 4, block: 8 }, &wireb).is_err());
+    assert!(quant::read_wire(Codec::BlockUniform { bits: 2, block: 16 }, &wireb).is_err());
+}
