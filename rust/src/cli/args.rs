@@ -78,7 +78,8 @@ pub const USAGE: &str = "\
 pdADMM-G reproduction launcher
 
 USAGE:
-  repro train   --dataset <name> [--hidden N] [--layers N] [--epochs N]
+  repro train   --dataset <name> | --dataset-dir <path>
+                [--hidden N] [--layers N] [--epochs N]
                 [--nu F] [--rho F] [--seed N] [--backend native|xla]
                 [--quant none|int-delta|p<bits>|pq<bits>]   (bits 1..=16)
                 [--quant-bits N] [--quant-block N] [--stochastic]
@@ -98,6 +99,12 @@ USAGE:
   repro datasets            # list the benchmark suite with statistics
   repro artifacts           # show the AOT artifact manifest summary
   repro help
+
+--dataset-dir loads an on-disk dataset (graph.edges + meta.json; format
+spec in README \"On-disk datasets\"). Its content hash is pinned at load
+time and shipped to distributed workers, which refuse to train on
+different bytes. Registry entries in configs/datasets.json may also be
+on-disk: {\"kind\": \"on-disk\", \"name\": ..., \"dir\": ..., \"sha256\": ...}.
 ";
 
 #[cfg(test)]

@@ -8,7 +8,7 @@ use std::path::{Path, PathBuf};
 
 /// One synthetic benchmark dataset (paper Table II, scaled per DESIGN.md §2).
 #[derive(Clone, Debug)]
-pub struct DatasetSpec {
+pub struct SyntheticSpec {
     pub name: String,
     pub nodes: usize,
     pub avg_degree: f64,
@@ -24,33 +24,103 @@ pub struct DatasetSpec {
     pub seed: u64,
 }
 
+/// A dataset that lives on disk in the repo's ingestion format
+/// (`graph.edges` + `meta.json`; see [`crate::graph::io`] for the spec).
+#[derive(Clone, Debug)]
+pub struct OnDiskSpec {
+    /// Registry key / display name (the loaded `Dataset` carries it).
+    pub name: String,
+    /// Directory holding `graph.edges` and `meta.json`. Registry entries
+    /// resolve relative paths against the config root at parse time.
+    pub dir: PathBuf,
+    /// Expected content hash ([`crate::graph::io::dir_sha256`]); when
+    /// present the loader refuses mismatching bytes. The distributed
+    /// SETUP frame always carries it so workers provably rebuild the
+    /// coordinator's exact dataset.
+    pub sha256: Option<String>,
+}
+
+/// What a dataset *is*: either a deterministic SBM generator spec or an
+/// on-disk edge-list/manifest directory. Everything downstream (registry,
+/// trainer, experiments, the distributed SETUP frame) speaks this enum.
+#[derive(Clone, Debug)]
+pub enum DatasetSpec {
+    Synthetic(SyntheticSpec),
+    OnDisk(OnDiskSpec),
+}
+
+impl From<SyntheticSpec> for DatasetSpec {
+    fn from(s: SyntheticSpec) -> DatasetSpec {
+        DatasetSpec::Synthetic(s)
+    }
+}
+
 impl DatasetSpec {
-    /// Serialize for the distributed-worker setup message (field names
-    /// match `configs/datasets.json`; the seed travels as a string so the
-    /// full u64 range survives the f64-backed JSON numbers).
+    pub fn name(&self) -> &str {
+        match self {
+            DatasetSpec::Synthetic(s) => &s.name,
+            DatasetSpec::OnDisk(o) => &o.name,
+        }
+    }
+
+    /// The synthetic parameters, when this spec has them.
+    pub fn as_synthetic(&self) -> Option<&SyntheticSpec> {
+        match self {
+            DatasetSpec::Synthetic(s) => Some(s),
+            DatasetSpec::OnDisk(_) => None,
+        }
+    }
+
+    /// Serialize for the distributed-worker setup message (synthetic
+    /// field names match `configs/datasets.json`; the seed travels as a
+    /// string so the full u64 range survives the f64-backed JSON
+    /// numbers). On-disk specs are tagged `"kind": "on-disk"`; untagged
+    /// objects deserialize as synthetic for registry back-compat.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("name", Json::str(&self.name)),
-            ("nodes", Json::num(self.nodes as f64)),
-            ("avg_degree", Json::num(self.avg_degree)),
-            ("classes", Json::num(self.classes as f64)),
-            ("feat_dim", Json::num(self.feat_dim as f64)),
-            ("train", Json::num(self.train as f64)),
-            ("val", Json::num(self.val as f64)),
-            ("test", Json::num(self.test as f64)),
-            ("p_in_over_p_out", Json::num(self.homophily_ratio)),
-            ("feature_signal", Json::num(self.feature_signal as f64)),
-            ("label_noise", Json::num(self.label_noise as f64)),
-            ("seed", Json::str(self.seed.to_string())),
-        ])
+        match self {
+            DatasetSpec::Synthetic(s) => Json::obj(vec![
+                ("name", Json::str(&s.name)),
+                ("nodes", Json::num(s.nodes as f64)),
+                ("avg_degree", Json::num(s.avg_degree)),
+                ("classes", Json::num(s.classes as f64)),
+                ("feat_dim", Json::num(s.feat_dim as f64)),
+                ("train", Json::num(s.train as f64)),
+                ("val", Json::num(s.val as f64)),
+                ("test", Json::num(s.test as f64)),
+                ("p_in_over_p_out", Json::num(s.homophily_ratio)),
+                ("feature_signal", Json::num(s.feature_signal as f64)),
+                ("label_noise", Json::num(s.label_noise as f64)),
+                ("seed", Json::str(s.seed.to_string())),
+            ]),
+            DatasetSpec::OnDisk(o) => {
+                let mut kvs = vec![
+                    ("kind", Json::str("on-disk")),
+                    ("name", Json::str(&o.name)),
+                    ("dir", Json::str(o.dir.display().to_string())),
+                ];
+                if let Some(h) = &o.sha256 {
+                    kvs.push(("sha256", Json::str(h)));
+                }
+                Json::obj(kvs)
+            }
+        }
     }
 
     /// Inverse of [`DatasetSpec::to_json`].
     pub fn from_json(v: &Json) -> Result<DatasetSpec> {
+        if v.get("kind").and_then(Json::as_str) == Some("on-disk") {
+            return Ok(DatasetSpec::OnDisk(OnDiskSpec {
+                name: v.req("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string(),
+                dir: PathBuf::from(
+                    v.req("dir")?.as_str().ok_or_else(|| anyhow!("dir must be a string"))?,
+                ),
+                sha256: v.get("sha256").and_then(Json::as_str).map(str::to_string),
+            }));
+        }
         let num = |key: &str| -> Result<f64> {
             v.req(key)?.as_f64().ok_or_else(|| anyhow!("{key} must be a number"))
         };
-        Ok(DatasetSpec {
+        Ok(DatasetSpec::Synthetic(SyntheticSpec {
             name: v.req("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string(),
             nodes: num("nodes")? as usize,
             avg_degree: num("avg_degree")?,
@@ -61,16 +131,23 @@ impl DatasetSpec {
             test: num("test")? as usize,
             homophily_ratio: num("p_in_over_p_out")?,
             feature_signal: num("feature_signal")? as f32,
-            label_noise: num("label_noise")? as f32,
+            label_noise: v.get("label_noise").and_then(Json::as_f64).unwrap_or(0.0) as f32,
             seed: parse_seed(v, "seed")?,
-        })
+        }))
     }
 }
 
-/// Parse a u64 seed serialized as a decimal string.
+/// Parse a u64 seed: a decimal string (the wire format — survives the
+/// f64-backed JSON numbers) or a plain JSON number (the registry format).
 fn parse_seed(v: &Json, key: &str) -> Result<u64> {
-    let s = v.req(key)?.as_str().ok_or_else(|| anyhow!("{key} must be a string"))?;
-    s.parse::<u64>().map_err(|e| anyhow!("{key} {s:?}: {e}"))
+    let field = v.req(key)?;
+    if let Some(s) = field.as_str() {
+        return s.parse::<u64>().map_err(|e| anyhow!("{key} {s:?}: {e}"));
+    }
+    field
+        .as_f64()
+        .map(|x| x as u64)
+        .ok_or_else(|| anyhow!("{key} must be a string or number"))
 }
 
 /// An AOT artifact build config (mirrors aot.py's artifact_configs).
@@ -141,31 +218,16 @@ impl RootConfig {
         let hops = v.req("hops")?.as_usize().ok_or_else(|| anyhow!("hops must be a number"))?;
         let mut datasets = Vec::new();
         for d in v.req("datasets")?.as_arr().ok_or_else(|| anyhow!("datasets must be an array"))? {
-            datasets.push(DatasetSpec {
-                name: d.req("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string(),
-                nodes: d.req("nodes")?.as_usize().ok_or_else(|| anyhow!("nodes"))?,
-                avg_degree: d.req("avg_degree")?.as_f64().ok_or_else(|| anyhow!("avg_degree"))?,
-                classes: d.req("classes")?.as_usize().ok_or_else(|| anyhow!("classes"))?,
-                feat_dim: d.req("feat_dim")?.as_usize().ok_or_else(|| anyhow!("feat_dim"))?,
-                train: d.req("train")?.as_usize().ok_or_else(|| anyhow!("train"))?,
-                val: d.req("val")?.as_usize().ok_or_else(|| anyhow!("val"))?,
-                test: d.req("test")?.as_usize().ok_or_else(|| anyhow!("test"))?,
-                homophily_ratio: d
-                    .req("p_in_over_p_out")?
-                    .as_f64()
-                    .ok_or_else(|| anyhow!("p_in_over_p_out"))?,
-                feature_signal: d
-                    .req("feature_signal")?
-                    .as_f64()
-                    .ok_or_else(|| anyhow!("feature_signal"))? as f32,
-                label_noise: d
-                    .get("label_noise")
-                    .and_then(Json::as_f64)
-                    .unwrap_or(0.0) as f32,
-                seed: d.req("seed")?.as_f64().ok_or_else(|| anyhow!("seed"))? as u64,
-            });
+            let mut spec = DatasetSpec::from_json(d)?;
+            // registry on-disk entries resolve relative to the config root
+            if let DatasetSpec::OnDisk(o) = &mut spec {
+                if o.dir.is_relative() {
+                    o.dir = root.join(&o.dir);
+                }
+            }
+            datasets.push(spec);
         }
-        let all_names: Vec<String> = datasets.iter().map(|d| d.name.clone()).collect();
+        let all_names: Vec<String> = datasets.iter().map(|d| d.name().to_string()).collect();
         let mut artifact_configs = Vec::new();
         for a in v
             .req("artifact_configs")?
@@ -216,11 +278,11 @@ impl RootConfig {
     pub fn dataset(&self, name: &str) -> Result<&DatasetSpec> {
         self.datasets
             .iter()
-            .find(|d| d.name == name)
+            .find(|d| d.name() == name)
             .ok_or_else(|| {
                 anyhow!(
                     "unknown dataset {name:?}; available: {}",
-                    self.datasets.iter().map(|d| d.name.as_str()).collect::<Vec<_>>().join(", ")
+                    self.datasets.iter().map(|d| d.name()).collect::<Vec<_>>().join(", ")
                 )
             })
     }
@@ -233,9 +295,10 @@ impl RootConfig {
         self.root.join("results")
     }
 
-    /// Model input dimension for a dataset: n0 = K * d.
-    pub fn input_dim(&self, ds: &DatasetSpec) -> usize {
-        self.hops * ds.feat_dim
+    /// Model input dimension for a dataset: n0 = K * d. `None` for
+    /// on-disk specs, whose feature width lives in their `meta.json`.
+    pub fn input_dim(&self, ds: &DatasetSpec) -> Option<usize> {
+        ds.as_synthetic().map(|s| self.hops * s.feat_dim)
     }
 }
 
@@ -571,8 +634,8 @@ mod tests {
         assert_eq!(cfg.hops, 4);
         assert_eq!(cfg.datasets.len(), 9);
         let cora = cfg.dataset("cora").unwrap();
-        assert_eq!(cora.nodes, 1000);
-        assert_eq!(cfg.input_dim(cora), 1024);
+        assert_eq!(cora.as_synthetic().unwrap().nodes, 1000);
+        assert_eq!(cfg.input_dim(cora), Some(1024));
         assert!(cfg.artifact_configs.iter().any(|a| a.name == "quickstart"));
     }
 
@@ -669,8 +732,10 @@ mod tests {
         let cfg = RootConfig::load_default().unwrap();
         for spec in &cfg.datasets {
             let text = spec.to_json().to_string_compact();
-            let back =
+            let parsed =
                 DatasetSpec::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+            let spec = spec.as_synthetic().expect("repo registry is synthetic");
+            let back = parsed.as_synthetic().expect("round trip keeps the variant");
             assert_eq!(back.name, spec.name);
             assert_eq!(back.nodes, spec.nodes);
             assert_eq!(back.avg_degree.to_bits(), spec.avg_degree.to_bits());
@@ -684,6 +749,70 @@ mod tests {
             assert_eq!(back.label_noise.to_bits(), spec.label_noise.to_bits());
             assert_eq!(back.seed, spec.seed);
         }
+    }
+
+    #[test]
+    fn on_disk_spec_json_round_trips() {
+        let spec = DatasetSpec::OnDisk(OnDiskSpec {
+            name: "reddit-sample".into(),
+            dir: PathBuf::from("/data/reddit-sample"),
+            sha256: Some("ab".repeat(32)),
+        });
+        let text = spec.to_json().to_string_compact();
+        let back = DatasetSpec::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        match back {
+            DatasetSpec::OnDisk(o) => {
+                assert_eq!(o.name, "reddit-sample");
+                assert_eq!(o.dir, PathBuf::from("/data/reddit-sample"));
+                assert_eq!(o.sha256.as_deref(), Some("ab".repeat(32).as_str()));
+            }
+            other => panic!("expected on-disk, got {other:?}"),
+        }
+        // without a hash the field round-trips as absent
+        let spec = DatasetSpec::OnDisk(OnDiskSpec {
+            name: "x".into(),
+            dir: PathBuf::from("rel/dir"),
+            sha256: None,
+        });
+        let text = spec.to_json().to_string_compact();
+        match DatasetSpec::from_json(&crate::util::json::parse(&text).unwrap()).unwrap() {
+            DatasetSpec::OnDisk(o) => assert_eq!(o.sha256, None),
+            other => panic!("expected on-disk, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn registry_accepts_on_disk_entries_and_resolves_dirs() {
+        let text = r#"{
+            "hops": 2,
+            "datasets": [
+                {"kind": "on-disk", "name": "mydata", "dir": "data/mydata",
+                 "sha256": "00112233"},
+                {"name": "syn", "nodes": 10, "avg_degree": 2.0, "classes": 2,
+                 "feat_dim": 4, "train": 4, "val": 3, "test": 3,
+                 "p_in_over_p_out": 4.0, "feature_signal": 1.0, "seed": 7}
+            ],
+            "artifact_configs": [
+                {"name": "a", "datasets": "all", "hidden": 8}
+            ],
+            "admm_defaults": {"nu": 0.001, "rho": 0.001, "zlast_prox_steps": 24},
+            "quant_defaults": {"delta_min": -1, "delta_max": 20}
+        }"#;
+        let v = crate::util::json::parse(text).unwrap();
+        let cfg = RootConfig::from_json(&v, Path::new("/repo")).unwrap();
+        assert_eq!(cfg.datasets.len(), 2);
+        match cfg.dataset("mydata").unwrap() {
+            DatasetSpec::OnDisk(o) => {
+                assert_eq!(o.dir, PathBuf::from("/repo/data/mydata"));
+                assert_eq!(o.sha256.as_deref(), Some("00112233"));
+            }
+            other => panic!("expected on-disk, got {other:?}"),
+        }
+        // untagged entries stay synthetic; "all" expansion sees both names
+        assert!(cfg.dataset("syn").unwrap().as_synthetic().is_some());
+        assert_eq!(cfg.artifact_configs[0].datasets, vec!["mydata", "syn"]);
+        // label_noise stays optional for synthetic entries
+        assert_eq!(cfg.dataset("syn").unwrap().as_synthetic().unwrap().label_noise, 0.0);
     }
 
     #[test]

@@ -130,12 +130,12 @@ mod tests {
     use super::*;
     use crate::admm::state;
     use crate::backend::NativeBackend;
-    use crate::config::{DatasetSpec, QuantMode};
+    use crate::config::{DatasetSpec, QuantMode, SyntheticSpec};
     use crate::graph::datasets;
 
     fn tiny_ds() -> Dataset {
         datasets::build(
-            &DatasetSpec {
+            &DatasetSpec::Synthetic(SyntheticSpec {
                 name: "tiny".into(),
                 nodes: 80,
                 avg_degree: 6.0,
@@ -148,10 +148,11 @@ mod tests {
                 feature_signal: 1.5,
                 label_noise: 0.0,
                 seed: 23,
-            },
+            }),
             2,
             1,
         )
+        .unwrap()
     }
 
     #[test]

@@ -184,12 +184,12 @@ pub fn build_chain(ds: &Dataset, cfg: &TrainConfig, threads: usize) -> Vec<Layer
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::DatasetSpec;
+    use crate::config::{DatasetSpec, SyntheticSpec};
     use crate::graph::datasets;
 
     fn tiny_cfg() -> (Dataset, TrainConfig) {
         let ds = datasets::build(
-            &DatasetSpec {
+            &DatasetSpec::Synthetic(SyntheticSpec {
                 name: "tiny".into(),
                 nodes: 40,
                 avg_degree: 4.0,
@@ -202,10 +202,11 @@ mod tests {
                 feature_signal: 1.0,
                 label_noise: 0.0,
                 seed: 5,
-            },
+            }),
             2,
             1,
-        );
+        )
+        .unwrap();
         let mut cfg = TrainConfig::new("tiny", 6, 3, 1);
         cfg.seed = 9;
         (ds, cfg)

@@ -461,12 +461,12 @@ pub fn measure_record(
 mod tests {
     use super::*;
     use crate::backend::NativeBackend;
-    use crate::config::{DatasetSpec, TrainConfig};
+    use crate::config::{DatasetSpec, SyntheticSpec, TrainConfig};
     use crate::graph::datasets;
 
     fn tiny_ds() -> Dataset {
         datasets::build(
-            &DatasetSpec {
+            &DatasetSpec::Synthetic(SyntheticSpec {
                 name: "tiny".into(),
                 nodes: 90,
                 avg_degree: 6.0,
@@ -479,10 +479,11 @@ mod tests {
                 feature_signal: 1.5,
                 label_noise: 0.0,
                 seed: 13,
-            },
+            }),
             2,
             1,
         )
+        .unwrap()
     }
 
     fn trainer(quant: QuantMode, schedule: ScheduleMode) -> Trainer {

@@ -522,7 +522,7 @@ impl SocketTransport {
             ));
         }
         let threads = crate::tensor::ops::default_threads();
-        let ds = datasets::build(spec, hops, threads);
+        let ds = datasets::build(spec, hops, threads)?;
         let mirror = phases::build_chain(&ds, &cfg, threads);
         let blocks = block_partition(mirror.len(), conns.len());
         if blocks.len() != conns.len() {
@@ -871,7 +871,7 @@ mod tests {
 
     #[test]
     fn dist_setup_json_round_trips() {
-        let spec = DatasetSpec {
+        let spec = DatasetSpec::Synthetic(crate::config::SyntheticSpec {
             name: "t".into(),
             nodes: 10,
             avg_degree: 3.0,
@@ -884,7 +884,7 @@ mod tests {
             feature_signal: 1.0,
             label_noise: 0.0,
             seed: 77,
-        };
+        });
         let setup = DistSetup {
             spec,
             hops: 2,
@@ -895,10 +895,36 @@ mod tests {
         };
         let text = setup.to_json().to_string_compact();
         let back = DistSetup::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
-        assert_eq!(back.spec.name, "t");
+        assert_eq!(back.spec.name(), "t");
         assert_eq!(back.hops, 2);
         assert_eq!(back.threads, 3);
         assert_eq!(back.cfg.layers, 4);
         assert_eq!((back.layer_lo, back.layer_hi), (1, 3));
+    }
+
+    #[test]
+    fn dist_setup_carries_on_disk_path_and_hash() {
+        let spec = DatasetSpec::OnDisk(crate::config::OnDiskSpec {
+            name: "disk".into(),
+            dir: std::path::PathBuf::from("/data/disk"),
+            sha256: Some("deadbeef".into()),
+        });
+        let setup = DistSetup {
+            spec,
+            hops: 3,
+            threads: 1,
+            cfg: TrainConfig::new("disk", 8, 4, 2),
+            layer_lo: 0,
+            layer_hi: 2,
+        };
+        let text = setup.to_json().to_string_compact();
+        let back = DistSetup::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        match back.spec {
+            DatasetSpec::OnDisk(o) => {
+                assert_eq!(o.dir, std::path::PathBuf::from("/data/disk"));
+                assert_eq!(o.sha256.as_deref(), Some("deadbeef"));
+            }
+            other => panic!("expected on-disk, got {other:?}"),
+        }
     }
 }

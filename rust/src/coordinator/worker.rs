@@ -108,7 +108,10 @@ impl WorkerState {
             return Err(anyhow!("distributed workers support the native backend only"));
         }
         let threads = setup.threads.max(1);
-        let ds = datasets::build(&setup.spec, setup.hops, threads);
+        // on-disk specs re-verify the SETUP frame's content hash here, so
+        // a worker can never train on different bytes than the coordinator
+        let ds = datasets::build(&setup.spec, setup.hops, threads)
+            .with_context(|| format!("rebuilding dataset {:?}", setup.spec.name()))?;
         let layers = phases::build_chain(&ds, &setup.cfg, threads);
         let n = layers.len();
         if setup.layer_lo >= setup.layer_hi || setup.layer_hi > n {

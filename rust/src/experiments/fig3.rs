@@ -97,7 +97,7 @@ pub(crate) fn distributed_epoch(
     reps: usize,
     workers: usize,
 ) -> anyhow::Result<(f64, u64)> {
-    let mut tc = bench_cfg(&spec.name, hidden, layers, reps);
+    let mut tc = bench_cfg(spec.name(), hidden, layers, reps);
     tc.backend = BackendKind::Native;
     let mut tr = SocketTransport::spawn(spec, hops, tc, workers, spawn_self_repro_worker)?;
     tr.measure = false;
@@ -121,7 +121,11 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
     } else {
         (8..=17).collect()
     };
-    let datasets_all: Vec<&str> = SMALL.iter().chain(LARGE.iter()).copied().collect();
+    // the benchmark suite, plus any on-disk datasets the registry names —
+    // real graphs ride the same speedup measurement with zero extra flags
+    let mut datasets_all: Vec<String> =
+        SMALL.iter().chain(LARGE.iter()).map(|s| s.to_string()).collect();
+    datasets_all.extend(super::on_disk_registry_names(cfg));
 
     let mut rows = Vec::new();
     let cores = host_cores();
@@ -134,7 +138,7 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
     if opts.distributed {
         println!("[fig3] --distributed: also measuring one worker process per layer");
     }
-    for ds_name in datasets_all {
+    for ds_name in &datasets_all {
         let ds = datasets::load(cfg, ds_name)?;
         for &l in &layer_counts {
             let (serial, parallel, sim, measured) = epoch_times(&ds, hidden, l, reps);

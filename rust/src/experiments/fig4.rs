@@ -167,8 +167,12 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
     let reps = if opts.quick { 1 } else { 2 };
     let worker_counts: Vec<usize> = vec![1, 2, 4, 8, 16];
 
+    // the paper's two large benchmarks, plus any on-disk registry datasets
+    let mut ds_names: Vec<String> = DATASETS.iter().map(|s| s.to_string()).collect();
+    ds_names.extend(super::on_disk_registry_names(cfg));
+
     let mut rows = Vec::new();
-    for ds_name in DATASETS {
+    for ds_name in &ds_names {
         let ds = datasets::load(cfg, ds_name)?;
         let (admm, admm_sim, measured) = admm_curve(&ds, hidden, layers, reps, &worker_counts);
         let mode = if measured { "measured" } else { "simulated" };

@@ -51,6 +51,18 @@ impl Default for ExpOptions {
     }
 }
 
+/// Names of the registry's on-disk datasets. The speedup harnesses
+/// (fig3/fig4) append these to their built-in benchmark lists, so adding
+/// an `{"kind": "on-disk", ...}` entry to `configs/datasets.json` is all
+/// it takes to run a real graph through the paper's measurements.
+pub(crate) fn on_disk_registry_names(cfg: &RootConfig) -> Vec<String> {
+    cfg.datasets
+        .iter()
+        .filter(|d| matches!(d, crate::config::DatasetSpec::OnDisk(_)))
+        .map(|d| d.name().to_string())
+        .collect()
+}
+
 /// Build the requested backend; XLA falls back to native per-op for shapes
 /// missing from the artifact manifest (logged).
 pub fn make_backend(cfg: &RootConfig, kind: BackendKind) -> Result<Arc<dyn ComputeBackend>> {

@@ -30,7 +30,7 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions, hidden: usize, tag: &str) -> any
     );
 
     for spec in &cfg.datasets {
-        let ds = datasets::load(cfg, &spec.name)?;
+        let ds = datasets::load(cfg, spec.name())?;
         let mut cells: Vec<String> = Vec::new();
         let mut csv_cells: Vec<String> = Vec::new();
         for method in METHODS {
@@ -39,7 +39,7 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions, hidden: usize, tag: &str) -> any
                 let acc = match method {
                     "pdADMM-G" | "pdADMM-G-Q" => {
                         let backend = make_backend(cfg, opts.backend)?;
-                        let mut tc = TrainConfig::new(&spec.name, hidden, 10, epochs);
+                        let mut tc = TrainConfig::new(spec.name(), hidden, 10, epochs);
                         tc.nu = cfg.admm.nu;
                         tc.rho = 0.1; // rho >> nu per Lemma 1's condition
                         tc.quant = if method == "pdADMM-G-Q" {
@@ -68,8 +68,12 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions, hidden: usize, tag: &str) -> any
             cells.push(format!("{mean:>9.3}±{std:.3}"));
             csv_cells.push(format!("{mean:.4},{std:.4}"));
         }
-        println!("{:<18} {}", spec.name, cells.iter().map(|c| format!("{c:>16}")).collect::<String>());
-        rows.push(format!("{},{}", spec.name, csv_cells.join(",")));
+        println!(
+            "{:<18} {}",
+            spec.name(),
+            cells.iter().map(|c| format!("{c:>16}")).collect::<String>()
+        );
+        rows.push(format!("{},{}", spec.name(), csv_cells.join(",")));
     }
 
     let header = format!(

@@ -16,31 +16,154 @@ pub struct Csr {
     pub values: Vec<f32>,
 }
 
+/// Two-pass streaming CSR constructor: the dataset ingestion path feeds
+/// edges straight off a file reader without ever materializing a
+/// `Vec<(u32, u32)>` (or per-node `Vec`s of neighbours).
+///
+/// Protocol — replay the same edge stream twice:
+///
+/// 1. [`CsrBuilder::count`] every edge (per-endpoint degree tally),
+/// 2. [`CsrBuilder::begin_fill`], then [`CsrBuilder::insert`] every edge
+///    (writes into the exact-capacity flat index array),
+/// 3. [`CsrBuilder::finish`] sorts each row, drops duplicates, and
+///    compacts — producing bit-identical output to
+///    [`Csr::from_undirected_edges`] on the same edge multiset.
+///
+/// Self-loops are dropped; out-of-range endpoints and a stream that
+/// changes between the two passes are reported as errors, never panics
+/// (on-disk inputs are untrusted).
+pub struct CsrBuilder {
+    n: usize,
+    /// Pass 1: per-node incident-edge tally; after `begin_fill`, the
+    /// immutable per-row capacity.
+    counts: Vec<usize>,
+    /// Row start offsets (valid after `begin_fill`).
+    offsets: Vec<usize>,
+    /// Per-row write cursor during pass 2.
+    cursor: Vec<usize>,
+    indices: Vec<u32>,
+    filling: bool,
+}
+
+impl CsrBuilder {
+    pub fn new(n: usize) -> CsrBuilder {
+        CsrBuilder {
+            n,
+            counts: vec![0; n],
+            offsets: Vec::new(),
+            cursor: Vec::new(),
+            indices: Vec::new(),
+            filling: false,
+        }
+    }
+
+    fn check(&self, a: u32, b: u32) -> anyhow::Result<()> {
+        if (a as usize) >= self.n || (b as usize) >= self.n {
+            return Err(anyhow::anyhow!(
+                "edge out of range: ({a}, {b}) with {} nodes",
+                self.n
+            ));
+        }
+        Ok(())
+    }
+
+    /// Pass 1: tally one undirected edge.
+    pub fn count(&mut self, a: u32, b: u32) -> anyhow::Result<()> {
+        debug_assert!(!self.filling, "count() after begin_fill()");
+        self.check(a, b)?;
+        if a != b {
+            self.counts[a as usize] += 1;
+            self.counts[b as usize] += 1;
+        }
+        Ok(())
+    }
+
+    /// Switch to pass 2: allocate the flat index array from the tallies.
+    pub fn begin_fill(&mut self) {
+        let mut offsets = Vec::with_capacity(self.n + 1);
+        let mut total = 0usize;
+        offsets.push(0usize);
+        for &c in &self.counts {
+            total += c;
+            offsets.push(total);
+        }
+        self.indices = vec![0u32; total];
+        self.cursor = offsets[..self.n].to_vec();
+        self.offsets = offsets;
+        self.filling = true;
+    }
+
+    /// Pass 2: store one undirected edge (both directions).
+    pub fn insert(&mut self, a: u32, b: u32) -> anyhow::Result<()> {
+        debug_assert!(self.filling, "insert() before begin_fill()");
+        self.check(a, b)?;
+        if a == b {
+            return Ok(());
+        }
+        for (x, y) in [(a as usize, b), (b as usize, a)] {
+            if self.cursor[x] >= self.offsets[x + 1] {
+                return Err(anyhow::anyhow!(
+                    "edge stream grew between passes (node {x} exceeded its tally)"
+                ));
+            }
+            self.indices[self.cursor[x]] = y;
+            self.cursor[x] += 1;
+        }
+        Ok(())
+    }
+
+    /// Sort rows, drop duplicate neighbours, compact, and emit the CSR.
+    pub fn finish(mut self) -> anyhow::Result<Csr> {
+        for i in 0..self.n {
+            if self.cursor[i] != self.offsets[i + 1] {
+                return Err(anyhow::anyhow!(
+                    "edge stream shrank between passes (node {i}: {} of {} tallied entries)",
+                    self.cursor[i] - self.offsets[i],
+                    self.offsets[i + 1] - self.offsets[i]
+                ));
+            }
+        }
+        let mut indptr = Vec::with_capacity(self.n + 1);
+        indptr.push(0usize);
+        let mut write = 0usize;
+        for i in 0..self.n {
+            let (s, e) = (self.offsets[i], self.offsets[i + 1]);
+            self.indices[s..e].sort_unstable();
+            let mut prev: Option<u32> = None;
+            for k in s..e {
+                let v = self.indices[k];
+                if prev != Some(v) {
+                    // write <= k always: dedup only ever shrinks rows
+                    self.indices[write] = v;
+                    write += 1;
+                    prev = Some(v);
+                }
+            }
+            indptr.push(write);
+        }
+        self.indices.truncate(write);
+        let values = vec![1.0; write];
+        Ok(Csr { n: self.n, indptr, indices: self.indices, values })
+    }
+}
+
 impl Csr {
     /// Build a symmetric unweighted adjacency from undirected edges;
-    /// duplicates and self-loops in the input are dropped.
+    /// duplicates and self-loops in the input are dropped. In-memory
+    /// convenience over [`CsrBuilder`] (same two-pass construction, same
+    /// output); panics on out-of-range edges since slices are
+    /// programmer-supplied — file ingestion uses the builder directly and
+    /// gets errors instead.
     pub fn from_undirected_edges(n: usize, edges: &[(u32, u32)]) -> Csr {
-        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
-        for &(a, b) in edges {
-            let (a, b) = (a as usize, b as usize);
-            assert!(a < n && b < n, "edge out of range");
-            if a == b {
-                continue;
-            }
-            adj[a].push(b as u32);
-            adj[b].push(a as u32);
+        let mut b = CsrBuilder::new(n);
+        for &(x, y) in edges {
+            b.count(x, y).expect("edge out of range");
         }
-        let mut indptr = Vec::with_capacity(n + 1);
-        let mut indices = Vec::new();
-        indptr.push(0);
-        for row in adj.iter_mut() {
-            row.sort_unstable();
-            row.dedup();
-            indices.extend_from_slice(row);
-            indptr.push(indices.len());
+        b.begin_fill();
+        for &(x, y) in edges {
+            b.insert(x, y).expect("edge out of range");
         }
-        let values = vec![1.0; indices.len()];
-        Csr { n, indptr, indices, values }
+        b.finish().expect("two identical passes over a slice")
     }
 
     /// Number of stored entries (2x the undirected edge count).
@@ -209,5 +332,70 @@ mod tests {
     #[should_panic(expected = "edge out of range")]
     fn rejects_out_of_range_edges() {
         Csr::from_undirected_edges(2, &[(0, 5)]);
+    }
+
+    #[test]
+    fn builder_matches_slice_constructor() {
+        use crate::tensor::rng::Pcg32;
+        let mut rng = Pcg32::seeded(404);
+        let n = 50u32;
+        // random multigraph with duplicates and self loops
+        let edges: Vec<(u32, u32)> = (0..400)
+            .map(|_| (rng.below(n), rng.below(n)))
+            .collect();
+        let want = Csr::from_undirected_edges(n as usize, &edges);
+        let mut b = CsrBuilder::new(n as usize);
+        for &(x, y) in &edges {
+            b.count(x, y).unwrap();
+        }
+        b.begin_fill();
+        for &(x, y) in &edges {
+            b.insert(x, y).unwrap();
+        }
+        let got = b.finish().unwrap();
+        assert_eq!(got.indptr, want.indptr);
+        assert_eq!(got.indices, want.indices);
+        assert_eq!(got.values, want.values);
+        assert!(got.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn builder_errors_instead_of_panicking() {
+        let mut b = CsrBuilder::new(3);
+        assert!(b.count(0, 7).is_err(), "out-of-range must error");
+        assert!(b.count(0, 1).is_ok());
+        b.begin_fill();
+        assert!(b.insert(9, 0).is_err());
+        assert!(b.insert(0, 1).is_ok());
+        // inserting more than was tallied errors (stream grew)
+        assert!(b.insert(0, 2).is_err());
+    }
+
+    #[test]
+    fn builder_detects_shrunk_second_pass() {
+        let mut b = CsrBuilder::new(4);
+        b.count(0, 1).unwrap();
+        b.count(2, 3).unwrap();
+        b.begin_fill();
+        b.insert(0, 1).unwrap();
+        // (2,3) never inserted
+        let err = b.finish().unwrap_err().to_string();
+        assert!(err.contains("shrank"), "{err}");
+    }
+
+    #[test]
+    fn builder_handles_empty_and_isolated() {
+        // zero nodes
+        let mut b0 = CsrBuilder::new(0);
+        b0.begin_fill();
+        let g0 = b0.finish().unwrap();
+        assert_eq!((g0.n, g0.nnz()), (0, 0));
+        // nodes but no edges
+        let mut b = CsrBuilder::new(5);
+        b.begin_fill();
+        let g = b.finish().unwrap();
+        assert_eq!(g.n, 5);
+        assert_eq!(g.nnz(), 0);
+        assert_eq!(g.degrees(), vec![0; 5]);
     }
 }

@@ -1,12 +1,20 @@
-//! The nine-benchmark registry (substrate S4): turns a `DatasetSpec` into a
-//! ready-to-train `Dataset` — SBM graph, renormalized operator, multi-hop
+//! The dataset registry (substrate S4): turns a `DatasetSpec` into a
+//! ready-to-train `Dataset` — graph, renormalized operator, multi-hop
 //! augmented features, one-hot labels and train/val/test splits.
 //!
-//! Generation is deterministic in the spec's seed, and memoised per process
-//! (the experiment harnesses reuse datasets across many runs).
+//! Two sources share one assembly path ([`assemble`], so their numerics
+//! are bitwise-identical given identical raw parts):
+//!
+//! * **Synthetic** — the SBM generator; deterministic in the spec's seed.
+//! * **On-disk** — the `graph.edges` + `meta.json` ingestion format,
+//!   streamed by [`crate::graph::io`].
+//!
+//! Loads are memoised per process by registry name (the experiment
+//! harnesses reuse datasets across many runs).
 
-use crate::config::{DatasetSpec, RootConfig};
+use crate::config::{DatasetSpec, RootConfig, SyntheticSpec};
 use crate::graph::augment::augment;
+use crate::graph::csr::Csr;
 use crate::graph::generator::{self, SbmSpec};
 use crate::tensor::matrix::Mat;
 use crate::tensor::rng::Pcg32;
@@ -55,8 +63,29 @@ impl Dataset {
     }
 }
 
-/// Build a dataset from its spec (pure function of the spec).
-pub fn build(spec: &DatasetSpec, hops: usize, threads: usize) -> Dataset {
+/// The pre-augmentation ingredients of a dataset — exactly what the
+/// on-disk format serializes and what [`assemble`] consumes. Everything
+/// downstream of a `RawDataset` is a pure function of it, which is what
+/// makes export → reload bitwise-faithful.
+pub struct RawDataset {
+    pub name: String,
+    /// Raw symmetric adjacency (no self loops, unweighted).
+    pub adjacency: Csr,
+    /// Node features, nodes-major `(|V|, d)`.
+    pub features_nd: Mat,
+    /// Observed labels, one per node, in `0..classes`.
+    pub labels: Vec<usize>,
+    pub classes: usize,
+    /// Sorted, disjoint split index sets.
+    pub train_idx: Vec<usize>,
+    pub val_idx: Vec<usize>,
+    pub test_idx: Vec<usize>,
+}
+
+/// Generate the raw parts of a synthetic benchmark (pure in the seed):
+/// SBM graph + features + noisy labels from the generator stream, splits
+/// from an independent split stream.
+pub fn synthetic_raw(spec: &SyntheticSpec) -> RawDataset {
     let g = generator::generate(&SbmSpec {
         nodes: spec.nodes,
         classes: spec.classes,
@@ -67,9 +96,6 @@ pub fn build(spec: &DatasetSpec, hops: usize, threads: usize) -> Dataset {
         label_noise: spec.label_noise,
         seed: spec.seed,
     });
-    let at = g.adjacency.renormalized();
-    let x = augment(&at, &g.features_nd, hops, threads);
-
     let n = spec.nodes;
     let mut order: Vec<usize> = (0..n).collect();
     let mut rng = Pcg32::new(spec.seed, 0x5711f5); // split stream
@@ -79,33 +105,63 @@ pub fn build(spec: &DatasetSpec, hops: usize, threads: usize) -> Dataset {
         v.sort_unstable();
         v
     };
-    let train_idx = take(0, spec.train);
-    let val_idx = take(spec.train, spec.val);
-    let test_idx = take(spec.train + spec.val, spec.test);
+    RawDataset {
+        name: spec.name.clone(),
+        train_idx: take(0, spec.train),
+        val_idx: take(spec.train, spec.val),
+        test_idx: take(spec.train + spec.val, spec.test),
+        adjacency: g.adjacency,
+        features_nd: g.features_nd,
+        labels: g.labels,
+        classes: spec.classes,
+    }
+}
 
-    let mut y = Mat::zeros(spec.classes, n);
-    for (v, &c) in g.labels.iter().enumerate() {
+/// Renormalize, augment, one-hot and mask: the shared assembly from raw
+/// parts to a trainable `Dataset`. Every numeric downstream of this point
+/// is identical for the synthetic and on-disk paths.
+pub fn assemble(raw: RawDataset, hops: usize, threads: usize) -> Dataset {
+    let at = raw.adjacency.renormalized();
+    let x = augment(&at, &raw.features_nd, hops, threads);
+    let n = raw.features_nd.rows;
+
+    let mut y = Mat::zeros(raw.classes, n);
+    for (v, &c) in raw.labels.iter().enumerate() {
         *y.at_mut(c, v) = 1.0;
     }
     let mut maskn = Mat::zeros(1, n);
-    let inv = 1.0 / train_idx.len().max(1) as f32;
-    for &v in &train_idx {
+    let inv = 1.0 / raw.train_idx.len().max(1) as f32;
+    for &v in &raw.train_idx {
         maskn.data[v] = inv;
     }
 
     Dataset {
-        name: spec.name.clone(),
+        name: raw.name,
         input_dim: x.rows,
-        edges_stored: g.adjacency.nnz(),
+        edges_stored: raw.adjacency.nnz(),
         x: Arc::new(x),
         y_onehot: Arc::new(y),
         maskn_train: Arc::new(maskn),
-        labels: Arc::new(g.labels),
-        train_idx: Arc::new(train_idx),
-        val_idx: Arc::new(val_idx),
-        test_idx: Arc::new(test_idx),
-        classes: spec.classes,
+        labels: Arc::new(raw.labels),
+        train_idx: Arc::new(raw.train_idx),
+        val_idx: Arc::new(raw.val_idx),
+        test_idx: Arc::new(raw.test_idx),
+        classes: raw.classes,
         nodes: n,
+    }
+}
+
+/// Build a dataset from its spec. Synthetic specs are pure functions of
+/// the spec and cannot fail; on-disk specs stream `graph.edges` +
+/// `meta.json` from the spec's directory (and verify the content hash
+/// when the spec pins one).
+pub fn build(spec: &DatasetSpec, hops: usize, threads: usize) -> anyhow::Result<Dataset> {
+    match spec {
+        DatasetSpec::Synthetic(s) => Ok(assemble(synthetic_raw(s), hops, threads)),
+        DatasetSpec::OnDisk(o) => {
+            let raw = crate::graph::io::load_raw(&o.dir, o.sha256.as_deref())?;
+            Ok(assemble(raw, hops, threads))
+        }
     }
 }
 
@@ -124,7 +180,7 @@ pub fn load(cfg: &RootConfig, name: &str) -> anyhow::Result<Dataset> {
         }
     }
     let spec = cfg.dataset(name)?;
-    let ds = build(spec, cfg.hops, crate::tensor::ops::default_threads());
+    let ds = build(spec, cfg.hops, crate::tensor::ops::default_threads())?;
     cache().lock().unwrap().insert(name.to_string(), ds.clone());
     Ok(ds)
 }
@@ -134,7 +190,7 @@ mod tests {
     use super::*;
 
     fn tiny_spec() -> DatasetSpec {
-        DatasetSpec {
+        DatasetSpec::Synthetic(SyntheticSpec {
             name: "tiny".into(),
             nodes: 120,
             avg_degree: 6.0,
@@ -147,12 +203,12 @@ mod tests {
             feature_signal: 1.2,
             label_noise: 0.0,
             seed: 7,
-        }
+        })
     }
 
     #[test]
     fn builds_consistent_shapes() {
-        let ds = build(&tiny_spec(), 4, 2);
+        let ds = build(&tiny_spec(), 4, 2).unwrap();
         assert_eq!(ds.x.shape(), (32, 120));
         assert_eq!(ds.y_onehot.shape(), (3, 120));
         assert_eq!(ds.maskn_train.shape(), (1, 120));
@@ -163,7 +219,7 @@ mod tests {
 
     #[test]
     fn splits_are_disjoint() {
-        let ds = build(&tiny_spec(), 2, 1);
+        let ds = build(&tiny_spec(), 2, 1).unwrap();
         let mut all: Vec<usize> = ds
             .train_idx
             .iter()
@@ -179,7 +235,7 @@ mod tests {
 
     #[test]
     fn onehot_columns_sum_to_one() {
-        let ds = build(&tiny_spec(), 2, 1);
+        let ds = build(&tiny_spec(), 2, 1).unwrap();
         for v in 0..ds.nodes {
             let s: f32 = (0..ds.classes).map(|c| ds.y_onehot.at(c, v)).sum();
             assert_eq!(s, 1.0);
@@ -188,7 +244,7 @@ mod tests {
 
     #[test]
     fn maskn_sums_to_one_over_train() {
-        let ds = build(&tiny_spec(), 2, 1);
+        let ds = build(&tiny_spec(), 2, 1).unwrap();
         let s: f32 = ds.maskn_train.data.iter().sum();
         assert!((s - 1.0).abs() < 1e-5);
         for &v in ds.train_idx.iter() {
@@ -198,7 +254,7 @@ mod tests {
 
     #[test]
     fn accuracy_of_perfect_and_wrong_logits() {
-        let ds = build(&tiny_spec(), 2, 1);
+        let ds = build(&tiny_spec(), 2, 1).unwrap();
         // perfect logits: one-hot * 10
         let perfect = ds.y_onehot.scale(10.0);
         assert_eq!(ds.test_accuracy(&perfect), 1.0);
@@ -216,5 +272,16 @@ mod tests {
         assert!(Arc::ptr_eq(&a.x, &b.x), "expected cache hit");
         assert_eq!(a.nodes, 850);
         assert_eq!(a.input_dim, 4 * 384);
+    }
+
+    #[test]
+    fn missing_on_disk_dir_errors_cleanly() {
+        let spec = DatasetSpec::OnDisk(crate::config::OnDiskSpec {
+            name: "ghost".into(),
+            dir: std::path::PathBuf::from("/nonexistent/pdadmm-ghost"),
+            sha256: None,
+        });
+        let err = build(&spec, 2, 1).err().expect("missing dir rejected").to_string();
+        assert!(err.contains("ghost") || err.contains("nonexistent"), "{err}");
     }
 }

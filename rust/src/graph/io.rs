@@ -1,0 +1,672 @@
+//! On-disk dataset ingestion (format `pdadmm-dataset-v1`).
+//!
+//! A dataset directory holds exactly two files:
+//!
+//! * **`graph.edges`** — plain-text undirected edge list, one edge per
+//!   line as two 0-based node ids separated by whitespace or a comma
+//!   (`12 57`, `12,57`, `12\t57` all parse). Blank lines and lines
+//!   starting with `#` are skipped. Duplicate edges and self-loops are
+//!   dropped, matching [`Csr::from_undirected_edges`]. The file is
+//!   streamed twice through [`CsrBuilder`] — degree tally, then fill —
+//!   so the adjacency is built **without ever materializing an edge
+//!   vector**.
+//! * **`meta.json`** — everything else, parsed by the streaming visitor
+//!   reader ([`crate::util::json_stream`]; no DOM is built even for
+//!   megabyte feature arrays):
+//!
+//! ```json
+//! {
+//!   "format": "pdadmm-dataset-v1",
+//!   "name": "my-graph",
+//!   "nodes": 4, "classes": 2, "feat_dim": 3,
+//!   "features": [[0.1, -1.5, 2.0], ...],   // nodes × feat_dim, row-major
+//!   "labels": [0, 1, 1, 0],                // one class id per node
+//!   "splits": {"train": [0, 1], "val": [2], "test": [3]}
+//! }
+//! ```
+//!
+//! Ordering rule: `nodes` and `feat_dim` must appear **before**
+//! `features` (the loader allocates the feature matrix up front — that is
+//! what lets it run in one streaming pass). Unknown keys are ignored for
+//! forward compatibility. All structural problems — missing keys, length
+//! mismatches, out-of-range labels/indices/edges, overlapping splits —
+//! are reported as errors with context, never panics: on-disk inputs are
+//! untrusted.
+//!
+//! **Content pinning.** [`dir_sha256`] hashes both files (name,
+//! little-endian byte length, bytes — in the fixed order `meta.json`,
+//! `graph.edges`) into one SHA-256. `OnDiskSpec.sha256` carries it
+//! through configs and the distributed SETUP frame, so every worker
+//! process proves it rebuilt the coordinator's exact dataset before
+//! training starts.
+//!
+//! **Round-trip guarantee.** [`export`] writes floats with Rust's
+//! shortest-round-trip formatting; `f32 → decimal → f64 → f32` is exact
+//! for such strings, and the loader shares the numeric path of
+//! [`crate::graph::datasets::assemble`] with the synthetic builder — so
+//! export → reload reproduces the
+//! in-memory dataset bit for bit (asserted by
+//! `tests/integration_dataset_io.rs`, including 3-epoch training traces
+//! on all three schedules).
+
+use crate::config::SyntheticSpec;
+use crate::graph::csr::{Csr, CsrBuilder};
+use crate::graph::datasets::{synthetic_raw, RawDataset};
+use crate::tensor::matrix::Mat;
+use crate::util::json::Json;
+use crate::util::json_stream::{parse_events, PathSeg, Scalar};
+use crate::util::sha256::{hex, Sha256};
+use anyhow::{anyhow, Context, Result};
+use std::fs;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// The format tag written to (and accepted from) `meta.json`.
+pub const FORMAT_TAG: &str = "pdadmm-dataset-v1";
+
+const META_FILE: &str = "meta.json";
+const EDGES_FILE: &str = "graph.edges";
+
+// ---------------------------------------------------------------------------
+// hashing
+
+/// Content hash of a dataset directory: SHA-256 over, for each of
+/// `meta.json` then `graph.edges`: the file name, a NUL, the byte length
+/// (u64 LE), and the raw bytes.
+pub fn dir_sha256(dir: &Path) -> Result<String> {
+    let mut h = Sha256::new();
+    for fname in [META_FILE, EDGES_FILE] {
+        let path = dir.join(fname);
+        let bytes = fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        h.update(fname.as_bytes());
+        h.update(&[0]);
+        h.update(&(bytes.len() as u64).to_le_bytes());
+        h.update(&bytes);
+    }
+    Ok(hex(&h.finalize()))
+}
+
+// ---------------------------------------------------------------------------
+// export
+
+/// Write `raw` into `dir` in the `pdadmm-dataset-v1` format and return
+/// the directory's content hash. Overwrites existing dataset files.
+pub fn export(raw: &RawDataset, dir: &Path) -> Result<String> {
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    write_edges(&raw.adjacency, &dir.join(EDGES_FILE))?;
+    write_meta(raw, &dir.join(META_FILE))?;
+    dir_sha256(dir)
+}
+
+/// Generate a synthetic benchmark and export it — the bridge from the
+/// SBM registry to the on-disk world (and the integration tests' way of
+/// producing a dataset whose reload must be bitwise-identical).
+pub fn export_synthetic(spec: &SyntheticSpec, dir: &Path) -> Result<String> {
+    export(&synthetic_raw(spec), dir)
+}
+
+fn write_edges(adj: &Csr, path: &Path) -> Result<()> {
+    let file = fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# {FORMAT_TAG}: one undirected edge per line, 0-based \"u v\"")?;
+    for i in 0..adj.n {
+        let (cols, _) = adj.row(i);
+        for &j in cols {
+            // upper triangle only: the loader re-symmetrizes
+            if (j as usize) > i {
+                writeln!(w, "{i} {j}")?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn write_meta(raw: &RawDataset, path: &Path) -> Result<()> {
+    let (n, d) = raw.features_nd.shape();
+    if raw.labels.len() != n {
+        return Err(anyhow!("{} labels for {n} nodes", raw.labels.len()));
+    }
+    let file = fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    write!(
+        w,
+        "{{\"format\":{},\"name\":{},\"nodes\":{n},\"classes\":{},\"feat_dim\":{d},",
+        Json::str(FORMAT_TAG).to_string_compact(),
+        Json::str(&raw.name).to_string_compact(),
+        raw.classes
+    )?;
+    w.write_all(b"\"features\":[")?;
+    for i in 0..n {
+        if i > 0 {
+            w.write_all(b",")?;
+        }
+        w.write_all(b"[")?;
+        for (j, &v) in raw.features_nd.row(i).iter().enumerate() {
+            if !v.is_finite() {
+                return Err(anyhow!("non-finite feature at node {i} dim {j}: {v}"));
+            }
+            if j > 0 {
+                w.write_all(b",")?;
+            }
+            // shortest round-trip f32 formatting: reload is bit-exact
+            write!(w, "{v}")?;
+        }
+        w.write_all(b"]")?;
+    }
+    w.write_all(b"],\"labels\":[")?;
+    for (i, &l) in raw.labels.iter().enumerate() {
+        if i > 0 {
+            w.write_all(b",")?;
+        }
+        write!(w, "{l}")?;
+    }
+    w.write_all(b"],\"splits\":{")?;
+    for (si, (key, idx)) in [
+        ("train", &raw.train_idx),
+        ("val", &raw.val_idx),
+        ("test", &raw.test_idx),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        if si > 0 {
+            w.write_all(b",")?;
+        }
+        write!(w, "\"{key}\":[")?;
+        for (i, &v) in idx.iter().enumerate() {
+            if i > 0 {
+                w.write_all(b",")?;
+            }
+            write!(w, "{v}")?;
+        }
+        w.write_all(b"]")?;
+    }
+    w.write_all(b"}}")?;
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// load
+
+/// Load the raw parts of an on-disk dataset. When `expect_sha256` is
+/// given, the directory's content hash must match byte for byte before
+/// anything is parsed.
+pub fn load_raw(dir: &Path, expect_sha256: Option<&str>) -> Result<RawDataset> {
+    if let Some(want) = expect_sha256 {
+        let got = dir_sha256(dir)?;
+        if !got.eq_ignore_ascii_case(want) {
+            return Err(anyhow!(
+                "dataset {} content hash mismatch: expected {want}, found {got} \
+                 (the files changed since the hash was pinned)",
+                dir.display()
+            ));
+        }
+    }
+    let meta = load_meta(&dir.join(META_FILE))?;
+    let adjacency = load_edges(&dir.join(EDGES_FILE), meta.nodes)?;
+    meta.into_raw(adjacency)
+}
+
+/// Parsed contents of `meta.json` before graph attachment + validation.
+struct Meta {
+    name: Option<String>,
+    nodes: usize,
+    classes: usize,
+    feat_dim: usize,
+    features: Mat,
+    feat_seen: usize,
+    labels: Vec<usize>,
+    train: Vec<usize>,
+    val: Vec<usize>,
+    test: Vec<usize>,
+}
+
+/// A scalar event that must be a non-negative integer (dimension, label,
+/// split index), with a callback-friendly error.
+fn dim(v: Scalar<'_>, what: &str) -> std::result::Result<usize, String> {
+    v.as_usize().ok_or_else(|| format!("{what} must be a non-negative integer"))
+}
+
+/// Set a dimension key exactly once (a redefinition after the feature
+/// matrix has been sized from the old value would unsound the bounds
+/// checks — reject it outright).
+fn set_dim(slot: &mut usize, v: Scalar<'_>, what: &str) -> std::result::Result<(), String> {
+    if *slot != usize::MAX {
+        return Err(format!("duplicate key {what:?}"));
+    }
+    *slot = dim(v, what)?;
+    Ok(())
+}
+
+fn load_meta(path: &Path) -> Result<Meta> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let meta_len = bytes.len();
+    let mut m = Meta {
+        name: None,
+        nodes: usize::MAX,
+        classes: usize::MAX,
+        feat_dim: usize::MAX,
+        features: Mat::zeros(0, 0),
+        feat_seen: 0,
+        labels: Vec::new(),
+        train: Vec::new(),
+        val: Vec::new(),
+        test: Vec::new(),
+    };
+    parse_events(&bytes, |path, v| {
+        match path {
+            [PathSeg::Key(k)] => match k.as_str() {
+                "format" => {
+                    let tag = v.as_str().ok_or("format must be a string")?;
+                    if tag != FORMAT_TAG {
+                        return Err(format!(
+                            "unsupported dataset format {tag:?} (this build reads {FORMAT_TAG:?})"
+                        ));
+                    }
+                }
+                "name" => m.name = Some(v.as_str().ok_or("name must be a string")?.to_string()),
+                "nodes" => set_dim(&mut m.nodes, v, "nodes")?,
+                "classes" => set_dim(&mut m.classes, v, "classes")?,
+                "feat_dim" => set_dim(&mut m.feat_dim, v, "feat_dim")?,
+                _ => {} // unknown top-level keys: forward compatibility
+            },
+            [PathSeg::Key(k), PathSeg::Index(i), PathSeg::Index(j)]
+                if k.as_str() == "features" =>
+            {
+                if m.features.is_empty() && m.feat_seen == 0 {
+                    if m.nodes == usize::MAX || m.feat_dim == usize::MAX {
+                        return Err(
+                            "\"features\" must come after \"nodes\" and \"feat_dim\"".into()
+                        );
+                    }
+                    // untrusted dims: bound the allocation by the manifest
+                    // size itself (every feature value costs >= 1 input
+                    // byte), which also rules out a rows*cols overflow
+                    let cells = m.nodes.checked_mul(m.feat_dim).filter(|&c| c <= meta_len);
+                    if cells.is_none() {
+                        return Err(format!(
+                            "claimed features size {}x{} exceeds the manifest ({meta_len} bytes)",
+                            m.nodes, m.feat_dim
+                        ));
+                    }
+                    m.features = Mat::zeros(m.nodes, m.feat_dim);
+                }
+                let x = v.as_f64().ok_or("features must be numbers")?;
+                if !x.is_finite() {
+                    return Err(format!("non-finite feature value {x} at ({i}, {j})"));
+                }
+                if *i >= m.nodes {
+                    return Err(format!("feature row {i} out of range ({} nodes)", m.nodes));
+                }
+                if *j >= m.feat_dim {
+                    return Err(format!(
+                        "feature column {j} out of range (feat_dim {})",
+                        m.feat_dim
+                    ));
+                }
+                m.features.data[i * m.feat_dim + j] = x as f32;
+                m.feat_seen += 1;
+            }
+            [PathSeg::Key(k), PathSeg::Index(_)] if k.as_str() == "labels" => {
+                m.labels.push(dim(v, "labels")?);
+            }
+            [PathSeg::Key(s), PathSeg::Key(which), PathSeg::Index(_)]
+                if s.as_str() == "splits" =>
+            {
+                let slot = match which.as_str() {
+                    "train" => &mut m.train,
+                    "val" => &mut m.val,
+                    "test" => &mut m.test,
+                    other => return Err(format!("unknown split {other:?}")),
+                };
+                slot.push(dim(v, "split indices")?);
+            }
+            _ => {} // unknown nested keys: forward compatibility
+        }
+        Ok(())
+    })
+    .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    if m.nodes == usize::MAX || m.classes == usize::MAX || m.feat_dim == usize::MAX {
+        return Err(anyhow!(
+            "{}: missing required key(s): needs nodes, classes, feat_dim",
+            path.display()
+        ));
+    }
+    if m.nodes == 0 || m.classes == 0 || m.feat_dim == 0 {
+        return Err(anyhow!(
+            "{}: nodes, classes and feat_dim must all be positive",
+            path.display()
+        ));
+    }
+    // an all-empty features array never allocates in the callback; the
+    // positivity check above means a valid manifest always has one
+    if m.features.is_empty() {
+        return Err(anyhow!("{}: missing or empty \"features\"", path.display()));
+    }
+    Ok(m)
+}
+
+impl Meta {
+    /// Validate the cross-field invariants and produce the raw dataset.
+    fn into_raw(mut self, adjacency: Csr) -> Result<RawDataset> {
+        let n = self.nodes;
+        // the matrix was allocated nodes x feat_dim, so its length IS the
+        // expected cell count (and cannot overflow, unlike n * feat_dim)
+        if self.feat_seen != self.features.len() {
+            return Err(anyhow!(
+                "features hold {} values, expected nodes*feat_dim = {}",
+                self.feat_seen,
+                self.features.len()
+            ));
+        }
+        if self.labels.len() != n {
+            return Err(anyhow!("{} labels for {n} nodes", self.labels.len()));
+        }
+        if let Some((i, &l)) = self.labels.iter().enumerate().find(|(_, &l)| l >= self.classes)
+        {
+            return Err(anyhow!(
+                "label {l} at node {i} out of range ({} classes)",
+                self.classes
+            ));
+        }
+        if self.train.is_empty() {
+            return Err(anyhow!("the train split is empty"));
+        }
+        let mut seen = vec![false; n];
+        for (which, idx) in [
+            ("train", &mut self.train),
+            ("val", &mut self.val),
+            ("test", &mut self.test),
+        ] {
+            idx.sort_unstable();
+            for &v in idx.iter() {
+                if v >= n {
+                    return Err(anyhow!("{which} split index {v} out of range ({n} nodes)"));
+                }
+                if seen[v] {
+                    return Err(anyhow!("node {v} appears in more than one split slot"));
+                }
+                seen[v] = true;
+            }
+        }
+        Ok(RawDataset {
+            name: self.name.unwrap_or_else(|| "on-disk".to_string()),
+            adjacency,
+            features_nd: self.features,
+            labels: self.labels,
+            classes: self.classes,
+            train_idx: self.train,
+            val_idx: self.val,
+            test_idx: self.test,
+        })
+    }
+}
+
+/// Stream `graph.edges` twice — tally, then fill — directly into CSR
+/// construction. Parse problems carry the 1-based line number.
+fn load_edges(path: &Path, nodes: usize) -> Result<Csr> {
+    let mut b = CsrBuilder::new(nodes);
+    for_each_edge(path, |a, bb, lineno| {
+        b.count(a, bb).with_context(|| format!("{}:{lineno}", path.display()))
+    })?;
+    b.begin_fill();
+    for_each_edge(path, |a, bb, lineno| {
+        b.insert(a, bb).with_context(|| format!("{}:{lineno}", path.display()))
+    })?;
+    b.finish().with_context(|| format!("{}", path.display()))
+}
+
+/// One pass over the edge file; the line buffer is reused across lines.
+fn for_each_edge(
+    path: &Path,
+    mut f: impl FnMut(u32, u32, usize) -> Result<()>,
+) -> Result<()> {
+    let file = fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut line = String::new();
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        let got = r
+            .read_line(&mut line)
+            .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+        if got == 0 {
+            return Ok(());
+        }
+        lineno += 1;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let (a, b) = parse_edge(t)
+            .with_context(|| format!("{}:{lineno}: {t:?}", path.display()))?;
+        f(a, b, lineno)?;
+    }
+}
+
+/// Parse one `u v` / `u,v` edge line (already trimmed, non-empty).
+fn parse_edge(t: &str) -> Result<(u32, u32)> {
+    let mut it: Box<dyn Iterator<Item = &str>> = if t.contains(',') {
+        Box::new(t.split(',').map(str::trim).filter(|s| !s.is_empty()))
+    } else {
+        Box::new(t.split_whitespace())
+    };
+    let a = it.next().ok_or_else(|| anyhow!("expected two node ids"))?;
+    let b = it.next().ok_or_else(|| anyhow!("expected two node ids"))?;
+    if it.next().is_some() {
+        return Err(anyhow!("expected exactly two node ids per line"));
+    }
+    let a: u32 = a.parse().map_err(|e| anyhow!("bad node id {a:?}: {e}"))?;
+    let b: u32 = b.parse().map_err(|e| anyhow!("bad node id {b:?}: {e}"))?;
+    Ok((a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SyntheticSpec;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("pdadmm_io_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn tiny() -> SyntheticSpec {
+        SyntheticSpec {
+            name: "io-tiny".into(),
+            nodes: 40,
+            avg_degree: 4.0,
+            classes: 2,
+            feat_dim: 3,
+            train: 16,
+            val: 12,
+            test: 12,
+            homophily_ratio: 6.0,
+            feature_signal: 1.0,
+            label_noise: 0.0,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn export_reload_raw_parts_are_bitwise_equal() {
+        let dir = tmpdir("roundtrip");
+        let spec = tiny();
+        let sha = export_synthetic(&spec, &dir).unwrap();
+        assert_eq!(sha.len(), 64);
+        let want = synthetic_raw(&spec);
+        let got = load_raw(&dir, Some(&sha)).unwrap();
+        assert_eq!(got.name, "io-tiny");
+        assert_eq!(got.adjacency.indptr, want.adjacency.indptr);
+        assert_eq!(got.adjacency.indices, want.adjacency.indices);
+        assert_eq!(got.features_nd.data, want.features_nd.data);
+        assert_eq!(got.labels, want.labels);
+        assert_eq!(got.train_idx, want.train_idx);
+        assert_eq!(got.val_idx, want.val_idx);
+        assert_eq!(got.test_idx, want.test_idx);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sha_mismatch_is_refused() {
+        let dir = tmpdir("sha");
+        let sha = export_synthetic(&tiny(), &dir).unwrap();
+        let mut wrong = sha.clone();
+        let flip = if wrong.ends_with('0') { '1' } else { '0' };
+        wrong.pop();
+        wrong.push(flip);
+        let err = load_raw(&dir, Some(&wrong)).err().expect("mismatch refused").to_string();
+        assert!(err.contains("hash mismatch"), "{err}");
+        // and edits to the files change the hash
+        let edges = dir.join("graph.edges");
+        let mut text = fs::read_to_string(&edges).unwrap();
+        text.push_str("0 1\n");
+        fs::write(&edges, text).unwrap();
+        assert_ne!(dir_sha256(&dir).unwrap(), sha);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn edge_lines_accept_whitespace_and_commas() {
+        let dir = tmpdir("edgefmt");
+        fs::write(
+            dir.join("graph.edges"),
+            "# comment\n0 1\n\n1,2\n2\t3\n  3 , 0  \n",
+        )
+        .unwrap();
+        let g = load_edges(&dir.join("graph.edges"), 4).unwrap();
+        assert_eq!(g.nnz(), 8); // 4 undirected edges
+        assert!(g.is_symmetric(0.0));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_edges_error_with_line_numbers() {
+        let dir = tmpdir("edgebad");
+        for (body, needle) in [
+            ("0 1\n1 2 3\n", "exactly two"),
+            ("0 1\nx y\n", "bad node id"),
+            ("0 1\n5 0\n", "out of range"),
+            ("0\n", "two node ids"),
+        ] {
+            fs::write(dir.join("graph.edges"), body).unwrap();
+            let err = format!("{:#}", load_edges(&dir.join("graph.edges"), 3).unwrap_err());
+            assert!(err.contains(needle), "{body:?}: {err}");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn meta_validation_catches_structural_lies() {
+        let dir = tmpdir("metabad");
+        let cases: [(&str, &str); 6] = [
+            // features before dims
+            (
+                r#"{"features": [[1]], "nodes": 1, "classes": 1, "feat_dim": 1,
+                   "labels": [0], "splits": {"train": [0], "val": [], "test": []}}"#,
+                "after",
+            ),
+            // label out of range
+            (
+                r#"{"nodes": 2, "classes": 1, "feat_dim": 1, "features": [[1], [2]],
+                   "labels": [0, 3], "splits": {"train": [0], "val": [1], "test": []}}"#,
+                "out of range",
+            ),
+            // overlapping splits
+            (
+                r#"{"nodes": 2, "classes": 1, "feat_dim": 1, "features": [[1], [2]],
+                   "labels": [0, 0], "splits": {"train": [0], "val": [0], "test": []}}"#,
+                "more than one split",
+            ),
+            // wrong feature count
+            (
+                r#"{"nodes": 2, "classes": 1, "feat_dim": 2, "features": [[1, 2], [3]],
+                   "labels": [0, 0], "splits": {"train": [0], "val": [], "test": []}}"#,
+                "expected nodes*feat_dim",
+            ),
+            // empty train
+            (
+                r#"{"nodes": 1, "classes": 1, "feat_dim": 1, "features": [[1]],
+                   "labels": [0], "splits": {"train": [], "val": [0], "test": []}}"#,
+                "train split is empty",
+            ),
+            // wrong format tag
+            (
+                r#"{"format": "someone-elses-v9", "nodes": 1, "classes": 1,
+                   "feat_dim": 1, "features": [[1]], "labels": [0],
+                   "splits": {"train": [0], "val": [], "test": []}}"#,
+                "unsupported dataset format",
+            ),
+        ];
+        for (body, needle) in cases {
+            fs::write(dir.join("meta.json"), body).unwrap();
+            fs::write(dir.join("graph.edges"), "").unwrap();
+            let err = load_raw(&dir, None).err().expect("structural lie rejected");
+            let err = format!("{err:#}");
+            assert!(err.contains(needle), "wanted {needle:?} in: {err}");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hostile_meta_dimensions_error_instead_of_panicking() {
+        let dir = tmpdir("hostile");
+        fs::write(dir.join("graph.edges"), "").unwrap();
+        let cases: [(&str, &str); 4] = [
+            // duplicate feat_dim widened after the matrix was sized: the
+            // old bounds check would pass and index out of range
+            (
+                r#"{"nodes": 1, "classes": 1, "feat_dim": 1, "features": [[0]],
+                   "feat_dim": 2, "features": [[1, 2]], "labels": [0],
+                   "splits": {"train": [0], "val": [], "test": []}}"#,
+                "duplicate key",
+            ),
+            // a 90-byte manifest claiming a multi-terabyte feature matrix
+            (
+                r#"{"nodes": 4000000000000, "classes": 1, "feat_dim": 1000000,
+                   "features": [[0]], "labels": [0],
+                   "splits": {"train": [0], "val": [], "test": []}}"#,
+                "exceeds the manifest",
+            ),
+            // nodes * feat_dim overflows usize
+            (
+                r#"{"nodes": 9007199254740992, "classes": 1,
+                   "feat_dim": 9007199254740992, "features": [[0]],
+                   "labels": [0], "splits": {"train": [0], "val": [], "test": []}}"#,
+                "exceeds the manifest",
+            ),
+            // 1e999 parses to +inf: reject at ingestion, matching export
+            (
+                r#"{"nodes": 1, "classes": 1, "feat_dim": 1, "features": [[1e999]],
+                   "labels": [0], "splits": {"train": [0], "val": [], "test": []}}"#,
+                "non-finite feature",
+            ),
+        ];
+        for (body, needle) in cases {
+            fs::write(dir.join("meta.json"), body).unwrap();
+            let r = std::panic::catch_unwind(|| load_raw(&dir, None));
+            let err = r
+                .unwrap_or_else(|_| panic!("panicked on {needle:?} case"))
+                .err()
+                .expect("hostile meta must be rejected");
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "wanted {needle:?} in: {msg}");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_meta_is_a_parse_error_not_a_panic() {
+        let dir = tmpdir("metatrunc");
+        fs::write(dir.join("meta.json"), r#"{"nodes": 3, "features": [[1, 2"#).unwrap();
+        fs::write(dir.join("graph.edges"), "").unwrap();
+        let err = load_raw(&dir, None).err().expect("truncated meta rejected");
+        let err = format!("{err:#}");
+        assert!(err.contains("byte") || err.contains("end of input"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

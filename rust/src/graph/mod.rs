@@ -1,12 +1,14 @@
 //! Graph substrate (S3-S5): sparse adjacency, the renormalized operator
 //! Ã = (D+I)^{-1/2}(A+I)(D+I)^{-1/2}, the multi-hop feature augmentation
 //! X = [H; HÃ; HÃ²; HÃ³] that defines a GA-MLP, the SBM synthetic dataset
-//! generator, and the nine-benchmark registry.
+//! generator, the on-disk edge-list/manifest ingestion format, and the
+//! dataset registry.
 
 pub mod augment;
 pub mod csr;
 pub mod datasets;
 pub mod generator;
+pub mod io;
 
-pub use csr::Csr;
+pub use csr::{Csr, CsrBuilder};
 pub use datasets::Dataset;

@@ -59,6 +59,20 @@
 //! with `--distributed`, the socket runtime) on multi-core hosts and
 //! otherwise use the phase-wise makespan simulator
 //! ([`coordinator::trainer::phase_makespan_ms`]).
+//!
+//! # Datasets — synthetic and on-disk
+//!
+//! [`config::DatasetSpec`] is either `Synthetic` (the SBM benchmark
+//! generator) or `OnDisk` (a `graph.edges` + `meta.json` directory; format
+//! spec in [`graph::io`]). Ingestion streams: the edge list goes through
+//! the two-pass [`graph::csr::CsrBuilder`] without materializing an edge
+//! vector, and the manifest through the SAX-style visitor reader
+//! [`util::json_stream`] without building a DOM. Both sources share
+//! [`graph::datasets::assemble`], so an exported synthetic dataset reloads
+//! bitwise-identically — including its training traces on all three
+//! schedules (`tests/integration_dataset_io.rs`). On-disk specs pin a
+//! SHA-256 content hash that the distributed SETUP frame carries to every
+//! worker process.
 
 pub mod admm;
 pub mod backend;

@@ -62,13 +62,52 @@ fn cmd_worker(args: &Args) -> Result<()> {
     }
 }
 
+/// Resolve the dataset selection: `--dataset <name>` looks up the
+/// registry (synthetic or on-disk); `--dataset-dir <path>` loads an ad
+/// hoc on-disk dataset, pinning its content hash right here so the
+/// distributed SETUP frame ships `path + sha256` and every worker
+/// verifies it rebuilt the same bytes. Returns the spec plus whether it
+/// came from the registry (registry loads stay memoised).
+fn resolve_dataset_spec(
+    cfg: &RootConfig,
+    args: &Args,
+) -> Result<(pdadmm_g::config::DatasetSpec, bool)> {
+    match (args.flags.get("dataset"), args.flags.get("dataset-dir")) {
+        (Some(_), Some(_)) => Err(anyhow::anyhow!(
+            "--dataset and --dataset-dir are mutually exclusive"
+        )),
+        (Some(name), None) => Ok((cfg.dataset(name)?.clone(), true)),
+        (None, Some(dir)) => {
+            // absolutize before pinning: the SETUP frame ships this path
+            // to worker processes whose cwd may differ
+            let dir = std::path::PathBuf::from(dir);
+            let dir = std::fs::canonicalize(&dir).map_err(|e| {
+                anyhow::anyhow!("resolving --dataset-dir {}: {e}", dir.display())
+            })?;
+            let sha = pdadmm_g::graph::io::dir_sha256(&dir)?;
+            let name = dir
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap_or("on-disk")
+                .to_string();
+            Ok((
+                pdadmm_g::config::DatasetSpec::OnDisk(pdadmm_g::config::OnDiskSpec {
+                    name,
+                    dir,
+                    sha256: Some(sha),
+                }),
+                false,
+            ))
+        }
+        (None, None) => Err(anyhow::anyhow!(
+            "--dataset <name> or --dataset-dir <path> is required"
+        )),
+    }
+}
+
 fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
-    let dataset = args
-        .flags
-        .get("dataset")
-        .ok_or_else(|| anyhow::anyhow!("--dataset is required"))?
-        .to_string();
-    let ds = datasets::load(cfg, &dataset)?;
+    let (spec, from_registry) = resolve_dataset_spec(cfg, args)?;
+    let dataset = spec.name().to_string();
     let mut tc = TrainConfig::new(
         &dataset,
         args.flags.get_or("hidden", 100usize)?,
@@ -130,10 +169,14 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
         if !tc.greedy_stages.is_empty() {
             return Err(anyhow::anyhow!("--greedy is not supported in distributed mode"));
         }
-        let spec = cfg.dataset(&dataset)?.clone();
         return train_distributed(cfg, &spec, tc, dist_workers, workers_at, args);
     }
 
+    let ds = if from_registry {
+        datasets::load(cfg, &dataset)?
+    } else {
+        datasets::build(&spec, cfg.hops, pdadmm_g::tensor::ops::default_threads())?
+    };
     let backend = experiments::make_backend(cfg, tc.backend)?;
 
     println!(
@@ -203,12 +246,12 @@ fn train_distributed(
     };
     println!(
         "training {method} on {} (distributed: {} worker processes): L={layers} h={hidden} quant={quant_label}",
-        spec.name,
+        spec.name(),
         tr.workers(),
     );
     let mut log = pdadmm_g::metrics::TrainLog {
         method,
-        dataset: spec.name.clone(),
+        dataset: spec.name().to_string(),
         backend: "native".into(),
         quant: quant_label,
         layers,
@@ -301,38 +344,45 @@ fn cmd_exp(cfg: &RootConfig, args: &Args) -> Result<()> {
 
 fn cmd_datasets(cfg: &RootConfig) -> Result<()> {
     println!(
-        "{:<18} {:>7} {:>9} {:>7} {:>6} {:>6} {:>13} {:>10}",
-        "dataset", "nodes", "edges", "classes", "feat", "n0", "train/val/test", "homophily"
+        "{:<18} {:<9} {:>7} {:>9} {:>7} {:>6} {:>6} {:>13} {:>10}",
+        "dataset", "source", "nodes", "edges", "classes", "feat", "n0", "train/val/test",
+        "homophily"
     );
     for spec in &cfg.datasets {
-        let ds = datasets::load(cfg, &spec.name)?;
+        let ds = datasets::load(cfg, spec.name())?;
+        // empirical homophily is recomputable for synthetic specs only —
+        // the loaded Dataset does not retain the raw adjacency
+        let (source, homophily) = match spec {
+            pdadmm_g::config::DatasetSpec::Synthetic(s) => {
+                let g = pdadmm_g::graph::generator::generate(
+                    &pdadmm_g::graph::generator::SbmSpec {
+                        nodes: s.nodes,
+                        classes: s.classes,
+                        avg_degree: s.avg_degree,
+                        homophily_ratio: s.homophily_ratio,
+                        feat_dim: 1,
+                        feature_signal: 0.0,
+                        label_noise: 0.0,
+                        seed: s.seed,
+                    },
+                );
+                let h = pdadmm_g::graph::generator::edge_homophily(&g.adjacency, &g.labels);
+                ("synthetic", format!("{h:>9.3}"))
+            }
+            pdadmm_g::config::DatasetSpec::OnDisk(_) => ("on-disk", format!("{:>9}", "-")),
+        };
         println!(
-            "{:<18} {:>7} {:>9} {:>7} {:>6} {:>6} {:>5}/{}/{} {:>9.3}",
-            spec.name,
+            "{:<18} {:<9} {:>7} {:>9} {:>7} {:>6} {:>6} {:>5}/{}/{} {homophily}",
+            spec.name(),
+            source,
             ds.nodes,
             ds.edges_stored / 2,
             ds.classes,
-            spec.feat_dim,
+            ds.input_dim / cfg.hops,
             ds.input_dim,
             ds.train_idx.len(),
             ds.val_idx.len(),
             ds.test_idx.len(),
-            {
-                // quick empirical homophily recomputation
-                let g = pdadmm_g::graph::generator::generate(
-                    &pdadmm_g::graph::generator::SbmSpec {
-                        nodes: spec.nodes,
-                        classes: spec.classes,
-                        avg_degree: spec.avg_degree,
-                        homophily_ratio: spec.homophily_ratio,
-                        feat_dim: 1,
-                        feature_signal: 0.0,
-                        label_noise: 0.0,
-                        seed: spec.seed,
-                    },
-                );
-                pdadmm_g::graph::generator::edge_homophily(&g.adjacency, &g.labels)
-            }
         );
     }
     Ok(())

@@ -190,12 +190,12 @@ pub fn train_baseline(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::DatasetSpec;
+    use crate::config::{DatasetSpec, SyntheticSpec};
     use crate::graph::datasets;
 
     fn tiny_ds() -> Dataset {
         datasets::build(
-            &DatasetSpec {
+            &DatasetSpec::Synthetic(SyntheticSpec {
                 name: "tiny".into(),
                 nodes: 96,
                 avg_degree: 6.0,
@@ -208,10 +208,11 @@ mod tests {
                 feature_signal: 1.5,
                 label_noise: 0.0,
                 seed: 31,
-            },
+            }),
             2,
             1,
         )
+        .unwrap()
     }
 
     #[test]

@@ -1,0 +1,649 @@
+//! Event/visitor streaming JSON reader (the dataset-ingestion hot path).
+//!
+//! [`crate::util::json`] is a DOM parser: it materializes every value as a
+//! [`Json`](crate::util::json::Json) node, which is fine for configs but
+//! pathological for dataset manifests whose `features`/`labels` arrays
+//! hold millions of numbers (one enum + one `Vec` cell per element). This
+//! module is the complementary SAX-style reader: it walks the document
+//! once and invokes a callback per **scalar**, carrying the full key/index
+//! path — no intermediate tree, no per-value allocation beyond the path
+//! stack itself (key `String`s and the escape scratch buffer are reused
+//! across events).
+//!
+//! The visitor shape follows `json-iterator-reader` (see `/root/related`):
+//!
+//! ```
+//! use pdadmm_g::util::json_stream::{parse_events, PathSeg, Scalar};
+//! let mut nodes = None;
+//! parse_events(br#"{"meta": {"nodes": 42}}"#, |path, v| {
+//!     if let [PathSeg::Key(a), PathSeg::Key(b)] = path {
+//!         if a.as_str() == "meta" && b.as_str() == "nodes" {
+//!             nodes = v.as_f64();
+//!         }
+//!     }
+//!     Ok(())
+//! }).unwrap();
+//! assert_eq!(nodes, Some(42.0));
+//! ```
+//!
+//! Guarantees:
+//!
+//! * **Never panics** on malformed input — truncated documents, bad
+//!   escapes, unpaired surrogates, `NaN`/`Infinity` literals, garbage
+//!   bytes and invalid UTF-8 all surface as [`ParseError`] with the byte
+//!   offset of the offending input (the fuzz-style corpus in
+//!   `tests/property_json_stream.rs` holds this line).
+//! * **No recursion** — container nesting lives on an explicit stack, so
+//!   a megabyte of `[[[[…` is a deep path, not a stack overflow.
+//! * The callback can abort parsing by returning `Err(msg)`; the error is
+//!   positioned at the scalar that triggered it.
+//!
+//! Limitations (by design, matching the scalar-event model): empty
+//! containers produce no events, so a consumer cannot distinguish
+//! `{"a": {}}` from `{}` — dataset manifests never need to.
+
+use crate::util::json::ParseError;
+
+/// One step of the path from the document root to the current scalar.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PathSeg {
+    /// Object member key (escape sequences already decoded).
+    Key(String),
+    /// Array position, 0-based.
+    Index(usize),
+}
+
+impl PathSeg {
+    /// The key text, if this segment is an object key.
+    pub fn as_key(&self) -> Option<&str> {
+        match self {
+            PathSeg::Key(k) => Some(k),
+            PathSeg::Index(_) => None,
+        }
+    }
+}
+
+/// A scalar value event. Strings borrow from the input (or the decoder's
+/// scratch buffer when they contain escapes) — copy if you need to keep
+/// them past the callback.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scalar<'a> {
+    Str(&'a str),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+impl<'a> Scalar<'a> {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Scalar::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&'a str> {
+        match *self {
+            Scalar::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The value as a non-negative integer, if it is one exactly
+    /// (rejects fractions, negatives, and anything above 2^53).
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Scalar::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x <= 9.007_199_254_740_992e15 => {
+                Some(*x as usize)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Parse `input` and invoke `cb(path, scalar)` once per scalar value, in
+/// document order. Returns the first error — either the parser's own
+/// (malformed JSON) or the callback's (`Err(msg)` aborts, positioned at
+/// the current value).
+pub fn parse_events<F>(input: &[u8], cb: F) -> Result<(), ParseError>
+where
+    F: FnMut(&[PathSeg], Scalar<'_>) -> Result<(), String>,
+{
+    StreamParser {
+        bytes: input,
+        pos: 0,
+        path: Vec::new(),
+        stack: Vec::new(),
+        scratch: String::new(),
+        cb,
+    }
+    .run()
+}
+
+/// Container kind on the explicit nesting stack.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Frame {
+    Obj,
+    Arr,
+}
+
+/// What the main loop expects next.
+enum State {
+    /// A value (document start, after `[`, after `,` in an array, after
+    /// a `key:`).
+    Value,
+    /// An object member key (after `{` or after `,` in an object).
+    Key,
+    /// Just finished a value; look for `,` / closing bracket / EOF.
+    After,
+}
+
+/// Result of lexing a string: a borrowed slice of the input (no escapes)
+/// or "use the scratch buffer" (escapes were decoded there).
+enum StrTok {
+    Borrowed(usize, usize),
+    Scratch,
+}
+
+struct StreamParser<'a, F> {
+    bytes: &'a [u8],
+    pos: usize,
+    path: Vec<PathSeg>,
+    stack: Vec<Frame>,
+    scratch: String,
+    cb: F,
+}
+
+impl<'a, F> StreamParser<'a, F>
+where
+    F: FnMut(&[PathSeg], Scalar<'_>) -> Result<(), String>,
+{
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        ParseError { pos: self.pos, msg: msg.into() }
+    }
+
+    fn err_at(&self, pos: usize, msg: impl Into<String>) -> ParseError {
+        ParseError { pos, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn run(&mut self) -> Result<(), ParseError> {
+        let mut state = State::Value;
+        loop {
+            self.skip_ws();
+            match state {
+                State::Value => match self.peek() {
+                    Some(b'{') => {
+                        self.pos += 1;
+                        self.skip_ws();
+                        if self.peek() == Some(b'}') {
+                            self.pos += 1;
+                            state = State::After;
+                        } else {
+                            self.stack.push(Frame::Obj);
+                            state = State::Key;
+                        }
+                    }
+                    Some(b'[') => {
+                        self.pos += 1;
+                        self.skip_ws();
+                        if self.peek() == Some(b']') {
+                            self.pos += 1;
+                            state = State::After;
+                        } else {
+                            self.stack.push(Frame::Arr);
+                            self.path.push(PathSeg::Index(0));
+                            state = State::Value;
+                        }
+                    }
+                    Some(b'"') => {
+                        let start = self.pos;
+                        let tok = self.lex_string()?;
+                        self.emit_str(start, tok)?;
+                        state = State::After;
+                    }
+                    Some(c) if c == b'-' || c.is_ascii_digit() => {
+                        let start = self.pos;
+                        let x = self.lex_number()?;
+                        self.emit(start, Scalar::Num(x))?;
+                        state = State::After;
+                    }
+                    Some(b't') => {
+                        let start = self.pos;
+                        self.lex_lit("true")?;
+                        self.emit(start, Scalar::Bool(true))?;
+                        state = State::After;
+                    }
+                    Some(b'f') => {
+                        let start = self.pos;
+                        self.lex_lit("false")?;
+                        self.emit(start, Scalar::Bool(false))?;
+                        state = State::After;
+                    }
+                    Some(b'n') => {
+                        let start = self.pos;
+                        self.lex_lit("null")?;
+                        self.emit(start, Scalar::Null)?;
+                        state = State::After;
+                    }
+                    Some(b'N') | Some(b'I') => {
+                        return Err(self.err("NaN/Infinity are not valid JSON"));
+                    }
+                    Some(c) => {
+                        return Err(self.err(format!("unexpected byte {:#04x} before value", c)));
+                    }
+                    None => return Err(self.err("unexpected end of input (expected a value)")),
+                },
+                State::Key => {
+                    if self.peek() != Some(b'"') {
+                        return Err(self.err("expected a string key"));
+                    }
+                    let tok = self.lex_string()?;
+                    let key = match tok {
+                        StrTok::Borrowed(a, b) => self.utf8(a, b)?.to_string(),
+                        StrTok::Scratch => self.scratch.clone(),
+                    };
+                    self.skip_ws();
+                    if self.peek() != Some(b':') {
+                        return Err(self.err("expected ':' after object key"));
+                    }
+                    self.pos += 1;
+                    self.path.push(PathSeg::Key(key));
+                    state = State::Value;
+                }
+                State::After => match self.stack.last() {
+                    None => {
+                        self.skip_ws();
+                        if self.pos != self.bytes.len() {
+                            return Err(self.err("trailing data after the document"));
+                        }
+                        return Ok(());
+                    }
+                    Some(Frame::Obj) => {
+                        // the finished member's key is the path tail
+                        self.path.pop();
+                        match self.peek() {
+                            Some(b',') => {
+                                self.pos += 1;
+                                self.skip_ws();
+                                state = State::Key;
+                            }
+                            Some(b'}') => {
+                                self.pos += 1;
+                                self.stack.pop();
+                                state = State::After;
+                            }
+                            Some(_) => return Err(self.err("expected ',' or '}'")),
+                            None => return Err(self.err("unexpected end of input in object")),
+                        }
+                    }
+                    Some(Frame::Arr) => match self.peek() {
+                        Some(b',') => {
+                            self.pos += 1;
+                            if let Some(PathSeg::Index(i)) = self.path.last_mut() {
+                                *i += 1;
+                            }
+                            state = State::Value;
+                        }
+                        Some(b']') => {
+                            self.pos += 1;
+                            self.path.pop();
+                            self.stack.pop();
+                            state = State::After;
+                        }
+                        Some(_) => return Err(self.err("expected ',' or ']'")),
+                        None => return Err(self.err("unexpected end of input in array")),
+                    },
+                },
+            }
+        }
+    }
+
+    fn emit(&mut self, at: usize, v: Scalar<'_>) -> Result<(), ParseError> {
+        (self.cb)(&self.path, v).map_err(|msg| self.err_at(at, msg))
+    }
+
+    /// Emit a string scalar without copying: borrow from the input when
+    /// the literal had no escapes, from the scratch buffer otherwise.
+    fn emit_str(&mut self, at: usize, tok: StrTok) -> Result<(), ParseError> {
+        match tok {
+            StrTok::Borrowed(a, b) => {
+                let s = match std::str::from_utf8(&self.bytes[a..b]) {
+                    Ok(s) => s,
+                    Err(_) => return Err(self.err_at(a, "string is not valid utf-8")),
+                };
+                (self.cb)(&self.path, Scalar::Str(s)).map_err(|msg| self.err_at(at, msg))
+            }
+            StrTok::Scratch => (self.cb)(&self.path, Scalar::Str(&self.scratch))
+                .map_err(|msg| self.err_at(at, msg)),
+        }
+    }
+
+    fn utf8(&self, a: usize, b: usize) -> Result<&'a str, ParseError> {
+        std::str::from_utf8(&self.bytes[a..b])
+            .map_err(|_| self.err_at(a, "string is not valid utf-8"))
+    }
+
+    fn lex_lit(&mut self, word: &str) -> Result<(), ParseError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {word}")))
+        }
+    }
+
+    /// Lex a string literal past the opening quote. Escape-free strings
+    /// are returned as an input range; strings with escapes are decoded
+    /// into the reusable scratch buffer.
+    fn lex_string(&mut self) -> Result<StrTok, ParseError> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.pos += 1;
+        let body_start = self.pos;
+        // fast path: scan for the closing quote with no escapes
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let end = self.pos;
+                    self.pos += 1;
+                    return Ok(StrTok::Borrowed(body_start, end));
+                }
+                Some(b'\\') => break, // slow path below
+                Some(c) if c < 0x20 => {
+                    return Err(self.err("raw control byte in string"));
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+        // slow path: copy the prefix, then decode escapes into scratch
+        self.scratch.clear();
+        let prefix = self.utf8(body_start, self.pos)?;
+        self.scratch.push_str(prefix);
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(StrTok::Scratch);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let c = match self.peek() {
+                        Some(b'"') => '"',
+                        Some(b'\\') => '\\',
+                        Some(b'/') => '/',
+                        Some(b'n') => '\n',
+                        Some(b't') => '\t',
+                        Some(b'r') => '\r',
+                        Some(b'b') => '\u{8}',
+                        Some(b'f') => '\u{c}',
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let cp = self.lex_u_escape()?;
+                            self.scratch.push(cp);
+                            continue;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    };
+                    self.scratch.push(c);
+                    self.pos += 1;
+                }
+                Some(c) if c < 0x20 => {
+                    return Err(self.err("raw control byte in string"));
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar
+                    let start = self.pos;
+                    let mut end = start + 1;
+                    while end < self.bytes.len() && (self.bytes[end] & 0xc0) == 0x80 {
+                        end += 1;
+                    }
+                    let s = self.utf8(start, end)?;
+                    let ch = s.chars().next().unwrap();
+                    self.scratch.push(ch);
+                    self.pos = start + ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    /// Lex the four hex digits after `\u` (cursor past the `u`), handling
+    /// surrogate pairs; errors on truncation and unpaired surrogates.
+    fn lex_u_escape(&mut self) -> Result<char, ParseError> {
+        let hi = self.lex_hex4()?;
+        if (0xD800..0xDC00).contains(&hi) {
+            // high surrogate: require \uDC00..\uDFFF right after
+            if self.bytes[self.pos..].first() != Some(&b'\\')
+                || self.bytes.get(self.pos + 1) != Some(&b'u')
+            {
+                return Err(self.err("unpaired high surrogate"));
+            }
+            self.pos += 2;
+            let lo = self.lex_hex4()?;
+            if !(0xDC00..0xE000).contains(&lo) {
+                return Err(self.err("invalid low surrogate"));
+            }
+            let cp = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+            char::from_u32(cp).ok_or_else(|| self.err("invalid surrogate pair"))
+        } else if (0xDC00..0xE000).contains(&hi) {
+            Err(self.err("unpaired low surrogate"))
+        } else {
+            char::from_u32(hi).ok_or_else(|| self.err("invalid \\u escape"))
+        }
+    }
+
+    fn lex_hex4(&mut self) -> Result<u32, ParseError> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let mut v = 0u32;
+        for i in 0..4 {
+            let d = match self.bytes[self.pos + i] {
+                c @ b'0'..=b'9' => (c - b'0') as u32,
+                c @ b'a'..=b'f' => (c - b'a' + 10) as u32,
+                c @ b'A'..=b'F' => (c - b'A' + 10) as u32,
+                _ => return Err(self.err("bad hex digit in \\u escape")),
+            };
+            v = v * 16 + d;
+        }
+        self.pos += 4;
+        Ok(v)
+    }
+
+    /// Lex a number with the strict JSON grammar (no leading zeros, no
+    /// bare `-`/`.`), then parse as f64. Out-of-range magnitudes saturate
+    /// to ±inf per `f64::from_str` — consumers validate finiteness where
+    /// they need it.
+    fn lex_number(&mut self) -> Result<f64, ParseError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        // integer part: 0 | [1-9][0-9]*
+        match self.peek() {
+            Some(b'0') => {
+                self.pos += 1;
+                if matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    return Err(self.err("leading zeros are not valid JSON"));
+                }
+            }
+            Some(c) if c.is_ascii_digit() => {
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(self.err("expected a digit")),
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected a digit after '.'"));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected a digit in the exponent"));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        s.parse::<f64>().map_err(|_| self.err_at(start, "bad number"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(src: &str) -> Result<Vec<(Vec<PathSeg>, String)>, ParseError> {
+        let mut out = Vec::new();
+        parse_events(src.as_bytes(), |path, v| {
+            out.push((path.to_vec(), format!("{v:?}")));
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    #[test]
+    fn scalars_at_top_level() {
+        assert_eq!(collect("42").unwrap(), vec![(vec![], "Num(42.0)".into())]);
+        assert_eq!(collect("null").unwrap(), vec![(vec![], "Null".into())]);
+        assert_eq!(
+            collect(r#""hi""#).unwrap(),
+            vec![(vec![], "Str(\"hi\")".into())]
+        );
+    }
+
+    #[test]
+    fn nested_paths() {
+        let got = collect(r#"{"a": [1, {"b": true}], "c": null}"#).unwrap();
+        let k = |s: &str| PathSeg::Key(s.to_string());
+        assert_eq!(
+            got,
+            vec![
+                (vec![k("a"), PathSeg::Index(0)], "Num(1.0)".into()),
+                (vec![k("a"), PathSeg::Index(1), k("b")], "Bool(true)".into()),
+                (vec![k("c")], "Null".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn empty_containers_emit_nothing() {
+        assert_eq!(collect("{}").unwrap(), vec![]);
+        assert_eq!(collect(r#"{"a": [], "b": {}}"#).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn string_escapes_decode() {
+        let got = collect(r#"["a\nb", "Aé", "😀"]"#).unwrap();
+        assert_eq!(got[0].1, "Str(\"a\\nb\")");
+        assert_eq!(got[1].1, "Str(\"Aé\")");
+        assert_eq!(got[2].1, "Str(\"😀\")");
+    }
+
+    #[test]
+    fn rejects_malformed_with_positions() {
+        for (src, must_contain) in [
+            ("", "end of input"),
+            ("{", "key"),
+            ("[1,]", "value"),
+            ("{\"a\":}", "value"),
+            ("tru", "true"),
+            ("1 2", "trailing"),
+            ("\"open", "unterminated"),
+            ("01", "leading zero"),
+            ("1.", "digit"),
+            ("-", "digit"),
+            ("NaN", "nan"),
+            ("Infinity", "infinity"),
+            (r#""\ud800x""#, "surrogate"),
+            (r#""\udc00""#, "surrogate"),
+            (r#""\uZZZZ""#, "hex"),
+        ] {
+            let err = collect(src).expect_err(src);
+            assert!(
+                err.msg.to_lowercase().contains(must_contain),
+                "{src:?}: {} (wanted {must_contain:?})",
+                err.msg
+            );
+            assert!(err.pos <= src.len());
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_iterative() {
+        let depth = 100_000;
+        let mut src = String::new();
+        for _ in 0..depth {
+            src.push('[');
+        }
+        src.push('1');
+        for _ in 0..depth {
+            src.push(']');
+        }
+        let mut seen = 0;
+        parse_events(src.as_bytes(), |path, _| {
+            seen = path.len();
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, depth);
+        // truncated version errors cleanly too
+        let half = &src.as_bytes()[..depth + 1];
+        assert!(parse_events(half, |_, _| Ok(())).is_err());
+    }
+
+    #[test]
+    fn callback_errors_abort_with_position() {
+        let err = collect_abort(r#"{"a": [1, 2, 3]}"#);
+        assert_eq!(err.msg, "stop here");
+        // positioned at the second array element
+        assert_eq!(err.pos, 10);
+    }
+
+    fn collect_abort(src: &str) -> ParseError {
+        parse_events(src.as_bytes(), |path, _| {
+            if path.last() == Some(&PathSeg::Index(1)) {
+                Err("stop here".into())
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap_err()
+    }
+
+    #[test]
+    fn agrees_with_dom_parser_on_configs() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+        let text = std::fs::read(root.join("configs/datasets.json")).unwrap();
+        let mut count = 0usize;
+        parse_events(&text, |_, _| {
+            count += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert!(count > 50, "expected a rich config, saw {count} scalars");
+        // the DOM parser accepts the same document
+        crate::util::json::parse(std::str::from_utf8(&text).unwrap()).unwrap();
+    }
+}

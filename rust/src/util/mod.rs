@@ -1,10 +1,13 @@
 //! Offline substrates the crate ecosystem would normally provide:
-//! scoped-thread parallel loops, JSON, a micro-bench harness, and a
-//! property-testing mini-framework (DESIGN.md S6/S18/S19).
+//! scoped-thread parallel loops, JSON (DOM and streaming), SHA-256, a
+//! micro-bench harness, and a property-testing mini-framework
+//! (DESIGN.md S6/S18/S19).
 
 pub mod bench;
 pub mod json;
+pub mod json_stream;
 pub mod prop;
+pub mod sha256;
 pub mod threads;
 
 /// Format a byte count human-readably (metrics & experiment output).

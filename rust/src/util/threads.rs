@@ -401,6 +401,58 @@ mod tests {
     }
 
     #[test]
+    fn block_partition_edge_cases() {
+        // zero layers: one degenerate empty block (callers clamp worker
+        // counts to >= 1 layer before spawning processes)
+        assert_eq!(block_partition(0, 3), vec![(0, 0)]);
+        assert_eq!(block_partition(0, 0), vec![(0, 0)]);
+        // one layer: always exactly one block regardless of workers
+        assert_eq!(block_partition(1, 1), vec![(0, 1)]);
+        assert_eq!(block_partition(1, 16), vec![(0, 1)]);
+        // more workers than layers: clamped, one layer per block
+        assert_eq!(block_partition(3, 7), vec![(0, 1), (1, 2), (2, 3)]);
+        // zero workers behaves as one
+        assert_eq!(block_partition(4, 0), vec![(0, 4)]);
+    }
+
+    #[test]
+    fn lpt_edge_cases() {
+        // no jobs: empty assignment, zero makespan
+        let (assignment, makespan) = lpt_assignment(&[], 4);
+        assert!(assignment.is_empty());
+        assert_eq!(makespan, 0.0);
+        // one job lands on one worker and defines the makespan
+        let (assignment, makespan) = lpt_assignment(&[2.5], 8);
+        assert_eq!(assignment, vec![0]);
+        assert!((makespan - 2.5).abs() < 1e-12);
+        // zero workers behaves as one: everything serializes
+        let (assignment, makespan) = lpt_assignment(&[1.0, 2.0, 3.0], 0);
+        assert!(assignment.iter().all(|&w| w == 0));
+        assert!((makespan - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lpt_equal_cost_ties_are_deterministic() {
+        // four identical jobs on two workers: the sort is stable, so ties
+        // keep job order — heaviest-first placement alternates bins and
+        // the split is perfectly balanced
+        let (a1, m1) = lpt_assignment(&[1.0; 4], 2);
+        let (a2, m2) = lpt_assignment(&[1.0; 4], 2);
+        assert_eq!(a1, a2, "tie-breaking must be deterministic");
+        assert!((m1 - 2.0).abs() < 1e-12, "makespan {m1}");
+        assert_eq!(m1.to_bits(), m2.to_bits());
+        let per_bin_0 = a1.iter().filter(|&&w| w == 0).count();
+        assert_eq!(per_bin_0, 2, "{a1:?}");
+        // ties with enough workers spread across distinct bins
+        let (a3, m3) = lpt_assignment(&[3.0; 3], 5);
+        let mut bins = a3.clone();
+        bins.sort_unstable();
+        bins.dedup();
+        assert_eq!(bins.len(), 3, "{a3:?}");
+        assert!((m3 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn lpt_balances_skewed_jobs() {
         // round-robin would bin {4,3} vs {3,2} (makespan 7); LPT gets 6.
         let (assignment, makespan) = lpt_assignment(&[4.0, 3.0, 3.0, 2.0], 2);

@@ -1,0 +1,285 @@
+//! Dataset ingestion, end to end: a synthetic benchmark exported to the
+//! on-disk format (`graph.edges` + `meta.json`) must reload through the
+//! streaming parsers into a **bitwise-identical** dataset — same CSR,
+//! features, labels and splits — and train to bitwise-identical 3-epoch
+//! traces on all three schedules (serial, pooled, distributed over real
+//! re-exec'd worker processes, which receive only `path + sha256` in the
+//! SETUP frame and rebuild the dataset from disk themselves).
+//!
+//! Also covers the tiny checked-in fixture under
+//! `tests/fixtures/tiny_ondisk/` (the CI ingestion smoke) and the
+//! loader's refusal of structurally broken directories.
+
+use pdadmm_g::backend::NativeBackend;
+use pdadmm_g::config::{
+    BackendKind, DatasetSpec, OnDiskSpec, QuantMode, ScheduleMode, SyntheticSpec, TrainConfig,
+};
+use pdadmm_g::coordinator::transport::SocketTransport;
+use pdadmm_g::coordinator::Trainer;
+use pdadmm_g::graph::datasets::{self, Dataset};
+use pdadmm_g::graph::io;
+use pdadmm_g::metrics::EpochRecord;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+const HOPS: usize = 2;
+const EPOCHS: usize = 3;
+
+fn tiny_spec() -> SyntheticSpec {
+    SyntheticSpec {
+        name: "io-roundtrip".into(),
+        nodes: 90,
+        avg_degree: 6.0,
+        classes: 3,
+        feat_dim: 8,
+        train: 45,
+        val: 20,
+        test: 25,
+        homophily_ratio: 8.0,
+        feature_signal: 1.5,
+        label_noise: 0.1,
+        seed: 13,
+    }
+}
+
+/// A per-test scratch directory (absolute, so worker processes can open
+/// it after receiving the path over the SETUP frame).
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pdadmm_dsio_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn base_cfg(name: &str) -> TrainConfig {
+    let mut tc = TrainConfig::new(name, 10, 3, EPOCHS);
+    tc.nu = 0.01;
+    tc.rho = 1.0;
+    tc.quant = QuantMode::PQ { bits: 4 };
+    tc.quant_block = 64;
+    tc.seed = 3;
+    tc.backend = BackendKind::Native;
+    tc
+}
+
+fn trace(ds: Dataset, schedule: ScheduleMode) -> Vec<EpochRecord> {
+    let mut tc = base_cfg(&ds.name);
+    tc.schedule = schedule;
+    let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc);
+    (0..EPOCHS).map(|_| t.run_epoch()).collect()
+}
+
+fn assert_traces_identical(tag: &str, a: &[EpochRecord], b: &[EpochRecord]) {
+    assert_eq!(a.len(), b.len(), "{tag}: epoch count");
+    for (ra, rb) in a.iter().zip(b) {
+        let e = ra.epoch;
+        assert_eq!(ra.comm_bytes, rb.comm_bytes, "{tag}: comm bytes diverged at epoch {e}");
+        assert_eq!(
+            ra.objective.to_bits(),
+            rb.objective.to_bits(),
+            "{tag}: objective diverged at epoch {e}: {} vs {}",
+            ra.objective,
+            rb.objective
+        );
+        assert_eq!(
+            ra.residual.to_bits(),
+            rb.residual.to_bits(),
+            "{tag}: residual diverged at epoch {e}"
+        );
+        for (name, x, y) in [
+            ("train", ra.train_acc, rb.train_acc),
+            ("val", ra.val_acc, rb.val_acc),
+            ("test", ra.test_acc, rb.test_acc),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: {name} acc diverged at epoch {e}");
+        }
+    }
+}
+
+/// Spawn this test binary as a worker process (same re-exec trick as
+/// `integration_schedule_parity`).
+fn spawn_test_worker(addr: &str) -> anyhow::Result<Child> {
+    let exe = std::env::current_exe()?;
+    Ok(Command::new(exe)
+        .args(["worker_reentry", "--exact", "--nocapture"])
+        .env("PDADMM_TEST_WORKER_CONNECT", addr)
+        .stdout(Stdio::null())
+        .spawn()?)
+}
+
+/// Re-entry point for worker processes: a no-op pass in a normal run.
+#[test]
+fn worker_reentry() {
+    if let Ok(addr) = std::env::var("PDADMM_TEST_WORKER_CONNECT") {
+        pdadmm_g::coordinator::worker::connect(&addr).expect("worker session");
+    }
+}
+
+#[test]
+fn exported_dataset_reloads_bitwise_identical() {
+    let dir = scratch("reload");
+    let spec = tiny_spec();
+    let sha = io::export_synthetic(&spec, &dir).expect("export");
+    let mem = datasets::build(&DatasetSpec::Synthetic(spec), HOPS, 1).unwrap();
+    let disk = datasets::build(
+        &DatasetSpec::OnDisk(OnDiskSpec {
+            name: "io-roundtrip".into(),
+            dir: dir.clone(),
+            sha256: Some(sha),
+        }),
+        HOPS,
+        1,
+    )
+    .expect("reload through the streaming parsers");
+
+    assert_eq!(disk.nodes, mem.nodes);
+    assert_eq!(disk.classes, mem.classes);
+    assert_eq!(disk.input_dim, mem.input_dim);
+    assert_eq!(disk.edges_stored, mem.edges_stored);
+    assert_eq!(disk.x.data, mem.x.data, "augmented features must be bit-identical");
+    assert_eq!(disk.y_onehot.data, mem.y_onehot.data);
+    assert_eq!(disk.maskn_train.data, mem.maskn_train.data);
+    assert_eq!(*disk.labels, *mem.labels);
+    assert_eq!(*disk.train_idx, *mem.train_idx);
+    assert_eq!(*disk.val_idx, *mem.val_idx);
+    assert_eq!(*disk.test_idx, *mem.test_idx);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn training_traces_match_across_source_and_all_three_schedules() {
+    let dir = scratch("trace");
+    let spec = tiny_spec();
+    let sha = io::export_synthetic(&spec, &dir).expect("export");
+    let on_disk = DatasetSpec::OnDisk(OnDiskSpec {
+        name: "io-roundtrip".into(),
+        dir: dir.clone(),
+        sha256: Some(sha),
+    });
+    let mem_ds = datasets::build(&DatasetSpec::Synthetic(spec), HOPS, 1).unwrap();
+    let disk_ds = datasets::build(&on_disk, HOPS, 1).unwrap();
+
+    // in-process: serial and pooled, from both sources
+    let reference = trace(mem_ds.clone(), ScheduleMode::Serial);
+    assert_traces_identical(
+        "mem serial vs disk serial",
+        &reference,
+        &trace(disk_ds.clone(), ScheduleMode::Serial),
+    );
+    assert_traces_identical(
+        "mem serial vs disk pool",
+        &reference,
+        &trace(disk_ds, ScheduleMode::Parallel),
+    );
+
+    // distributed: 2 real worker processes rebuild the dataset from the
+    // path+hash in the SETUP frame, nothing else
+    let cfg = base_cfg("io-roundtrip");
+    let mut tr = SocketTransport::spawn(&on_disk, HOPS, cfg, 2, spawn_test_worker)
+        .expect("spawn socket transport on an on-disk spec");
+    let dist: Vec<EpochRecord> =
+        (0..EPOCHS).map(|_| tr.run_epoch().expect("distributed epoch")).collect();
+    tr.shutdown().expect("shutdown");
+    assert_traces_identical("mem serial vs disk distributed", &reference, &dist);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn distributed_workers_refuse_a_tampered_dataset() {
+    let dir = scratch("tamper");
+    let sha = io::export_synthetic(&tiny_spec(), &dir).expect("export");
+    // coordinator pins the hash, then the bytes change under it
+    let edges = dir.join("graph.edges");
+    let mut text = std::fs::read_to_string(&edges).unwrap();
+    text.push_str("0 1\n");
+    std::fs::write(&edges, text).unwrap();
+    let on_disk = DatasetSpec::OnDisk(OnDiskSpec {
+        name: "io-roundtrip".into(),
+        dir: dir.clone(),
+        sha256: Some(sha),
+    });
+    // the coordinator itself rebuilds the dataset during the handshake and
+    // must already refuse the mismatch
+    let err = SocketTransport::spawn(&on_disk, HOPS, base_cfg("io-roundtrip"), 2, spawn_test_worker)
+        .err()
+        .expect("hash mismatch must fail the setup");
+    assert!(format!("{err:#}").contains("hash mismatch"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checked_in_fixture_ingests() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_ondisk");
+    let ds = datasets::build(
+        &DatasetSpec::OnDisk(OnDiskSpec { name: "tiny-ondisk".into(), dir, sha256: None }),
+        HOPS,
+        1,
+    )
+    .expect("fixture ingestion");
+    assert_eq!(ds.name, "tiny-ondisk");
+    assert_eq!(ds.nodes, 6);
+    assert_eq!(ds.classes, 2);
+    assert_eq!(ds.input_dim, HOPS * 2);
+    // 7 unique undirected edges after dropping the duplicate and self loop
+    assert_eq!(ds.edges_stored, 14);
+    assert_eq!(*ds.labels, vec![0, 0, 0, 1, 1, 1]);
+    assert_eq!(*ds.train_idx, vec![0, 3]);
+    assert_eq!(*ds.val_idx, vec![1, 4]);
+    assert_eq!(*ds.test_idx, vec![2, 5]);
+    // hop-0 block of the augmentation is exactly the raw features,
+    // transposed: meta.json values must land untouched
+    assert_eq!(ds.x.at(0, 0), 1.5);
+    assert_eq!(ds.x.at(1, 0), -0.25);
+    assert_eq!(ds.x.at(0, 5), -0.5);
+    assert_eq!(ds.x.at(1, 5), 1.25);
+    // and it trains: one epoch on the fixture stays finite
+    let mut tc = base_cfg("tiny-ondisk");
+    tc.hidden = 4;
+    tc.quant = QuantMode::None;
+    tc.quant_block = 0;
+    let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc);
+    let rec = t.run_epoch();
+    assert!(rec.objective.is_finite(), "objective {}", rec.objective);
+}
+
+#[test]
+fn broken_directories_error_cleanly() {
+    // missing files
+    let empty = scratch("empty");
+    let err = datasets::build(
+        &DatasetSpec::OnDisk(OnDiskSpec {
+            name: "broken".into(),
+            dir: empty.clone(),
+            sha256: None,
+        }),
+        HOPS,
+        1,
+    )
+    .err()
+    .expect("empty dir must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("meta.json"), "{msg}");
+    // an edge that names a node beyond `nodes`
+    let dir = scratch("badedge");
+    std::fs::write(
+        dir.join("meta.json"),
+        r#"{"format": "pdadmm-dataset-v1", "name": "b", "nodes": 2, "classes": 2,
+           "feat_dim": 1, "features": [[0.5], [1.5]], "labels": [0, 1],
+           "splits": {"train": [0], "val": [1], "test": []}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("graph.edges"), "0 1\n1 9\n").unwrap();
+    let err = datasets::build(
+        &DatasetSpec::OnDisk(OnDiskSpec { name: "b".into(), dir: dir.clone(), sha256: None }),
+        HOPS,
+        1,
+    )
+    .err()
+    .expect("out-of-range edge must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("out of range") && msg.contains(":2"), "{msg}");
+    for d in [empty, dir] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -4,14 +4,14 @@
 //! quantization.
 
 use pdadmm_g::backend::NativeBackend;
-use pdadmm_g::config::{DatasetSpec, QuantMode, ScheduleMode, TrainConfig};
+use pdadmm_g::config::{DatasetSpec, QuantMode, ScheduleMode, SyntheticSpec, TrainConfig};
 use pdadmm_g::coordinator::Trainer;
 use pdadmm_g::graph::datasets::{self, Dataset};
 use std::sync::Arc;
 
 fn ds() -> Dataset {
     datasets::build(
-        &DatasetSpec {
+        &DatasetSpec::Synthetic(SyntheticSpec {
             name: "qtest".into(),
             nodes: 200,
             avg_degree: 8.0,
@@ -24,10 +24,11 @@ fn ds() -> Dataset {
             feature_signal: 1.5,
             label_noise: 0.0,
             seed: 77,
-        },
+        }),
         3,
         2,
     )
+    .unwrap()
 }
 
 fn run(quant: QuantMode, epochs: usize) -> (u64, f64, f64) {

@@ -10,7 +10,9 @@
 //! no-op pass during a normal test run).
 
 use pdadmm_g::backend::NativeBackend;
-use pdadmm_g::config::{BackendKind, DatasetSpec, QuantMode, ScheduleMode, TrainConfig};
+use pdadmm_g::config::{
+    BackendKind, DatasetSpec, QuantMode, ScheduleMode, SyntheticSpec, TrainConfig,
+};
 use pdadmm_g::coordinator::transport::{InProcessTransport, SocketTransport, Transport};
 use pdadmm_g::coordinator::Trainer;
 use pdadmm_g::graph::datasets;
@@ -22,7 +24,7 @@ const HOPS: usize = 2;
 const EPOCHS: usize = 3;
 
 fn tiny_spec() -> DatasetSpec {
-    DatasetSpec {
+    DatasetSpec::Synthetic(SyntheticSpec {
         name: "tiny".into(),
         nodes: 90,
         avg_degree: 6.0,
@@ -35,7 +37,7 @@ fn tiny_spec() -> DatasetSpec {
         feature_signal: 1.5,
         label_noise: 0.0,
         seed: 13,
-    }
+    })
 }
 
 fn base_cfg(quant: QuantMode, block: u32, stochastic: bool, seed: u64) -> TrainConfig {
@@ -51,7 +53,7 @@ fn base_cfg(quant: QuantMode, block: u32, stochastic: bool, seed: u64) -> TrainC
 }
 
 fn run_inproc(cfg: &TrainConfig, schedule: ScheduleMode) -> (Vec<EpochRecord>, Trainer) {
-    let ds = datasets::build(&tiny_spec(), HOPS, 1);
+    let ds = datasets::build(&tiny_spec(), HOPS, 1).expect("synthetic build");
     let mut tc = cfg.clone();
     tc.schedule = schedule;
     let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc);
@@ -185,7 +187,7 @@ fn parity_one_process_per_layer() {
 #[test]
 fn transport_trait_drives_both_runtimes() {
     let cfg = base_cfg(QuantMode::PQ { bits: 8 }, 0, false, 3);
-    let ds = datasets::build(&tiny_spec(), HOPS, 1);
+    let ds = datasets::build(&tiny_spec(), HOPS, 1).expect("synthetic build");
     let mut inproc_cfg = cfg.clone();
     inproc_cfg.schedule = ScheduleMode::Serial;
     let trainer = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, inproc_cfg);

@@ -6,7 +6,7 @@
 
 use pdadmm_g::admm::updates;
 use pdadmm_g::backend::NativeBackend;
-use pdadmm_g::config::{DatasetSpec, QuantMode, ScheduleMode, TrainConfig};
+use pdadmm_g::config::{DatasetSpec, QuantMode, ScheduleMode, SyntheticSpec, TrainConfig};
 use pdadmm_g::coordinator::quant::{self, Codec};
 use pdadmm_g::coordinator::Trainer;
 use pdadmm_g::graph::datasets::{self, Dataset};
@@ -20,7 +20,7 @@ fn random_ds(rng: &mut Pcg32, size: usize) -> Dataset {
     let nodes = 60 + 10 * (size % 8);
     let classes = 2 + (rng.below(3) as usize);
     datasets::build(
-        &DatasetSpec {
+        &DatasetSpec::Synthetic(SyntheticSpec {
             name: format!("prop{size}"),
             nodes,
             avg_degree: 5.0 + rng.next_f32() as f64 * 4.0,
@@ -33,10 +33,11 @@ fn random_ds(rng: &mut Pcg32, size: usize) -> Dataset {
             feature_signal: 1.2,
             label_noise: 0.0,
             seed: rng.next_u64(),
-        },
+        }),
         2,
         1,
     )
+    .unwrap()
 }
 
 fn random_trainer(rng: &mut Pcg32, size: usize, quant: QuantMode) -> Trainer {
