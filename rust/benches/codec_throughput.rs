@@ -5,6 +5,7 @@
 //!
 //! Set `PDADMM_BENCH_QUICK=1` (CI smoke) to shrink budgets and shapes.
 
+use pdadmm_g::coordinator::adapt::{self, BoundaryInput, BoundaryKind, BoundaryStats};
 use pdadmm_g::coordinator::quant::{self, Codec, Encoded};
 use pdadmm_g::tensor::matrix::Mat;
 use pdadmm_g::tensor::rng::Pcg32;
@@ -79,4 +80,67 @@ fn main() {
         });
         b.note_throughput((m.len() * 4) as u64);
     }
+
+    // the adaptive wire form: v2 (per-message bit-width) header round-trip
+    // must not cost measurable throughput over the legacy layout.
+    b.group(&format!("versioned (v2) header round-trip, {h}x{v}"));
+    for codec in [Codec::Uniform { bits: 8 }, Codec::Uniform { bits: 4 }] {
+        let mut dst = Mat::zeros(h, v);
+        b.bench(&format!("{} v2 into", codec.label()), || {
+            std::hint::black_box(quant::transfer_versioned_into(codec, &m, &mut dst));
+        });
+        b.note_throughput((m.len() * 4) as u64);
+    }
+
+    // Adaptive bit allocation: solver throughput on a 10-layer chain's 18
+    // boundaries, plus the wire-volume comparison the controller
+    // guarantees — the planned epoch (payload + versioned headers) must
+    // cost no more bytes than fixed pq4's epoch.
+    b.group("adaptive bit allocation (18 boundaries, 4.0 bits/elt budget)");
+    let layers = 10usize;
+    let mut boundaries: Vec<BoundaryInput> = Vec::new();
+    let mk_stats = |i: usize, n: u64| BoundaryStats {
+        n,
+        lo: 0.0,
+        hi: 0.5 + (i % 5) as f32 * 2.0, // varied ranges: bits should skew
+        mean: 0.0,
+        var: 0.1 + (i % 3) as f64,
+        residual: (i % 4) as f64 * n as f64 * 0.01,
+    };
+    let n_per = if quick { 64_000u64 } else { 512_000u64 };
+    for l in 1..layers {
+        boundaries.push(BoundaryInput {
+            kind: BoundaryKind::P,
+            layer: l,
+            stats: mk_stats(l, n_per),
+        });
+    }
+    for l in 0..layers - 1 {
+        boundaries.push(BoundaryInput {
+            kind: BoundaryKind::Q,
+            layer: l,
+            stats: mk_stats(l + layers, n_per),
+        });
+    }
+    b.bench("solve_bits", || {
+        std::hint::black_box(adapt::solve_bits(&boundaries, 4.0).unwrap());
+    });
+    let bits = adapt::solve_bits(&boundaries, 4.0).unwrap();
+    let per_message = |n: u64, w: u8, versioned: bool| -> u64 {
+        Codec::Uniform { bits: w }.wire_bytes_for(n as usize) + versioned as u64
+    };
+    let adaptive_bytes: u64 =
+        boundaries.iter().zip(&bits).map(|(bd, &w)| per_message(bd.stats.n, w, true)).sum();
+    let fixed_pq4_bytes: u64 =
+        boundaries.iter().map(|bd| per_message(bd.stats.n, 4, false)).sum();
+    println!(
+        "  adaptive epoch wire {} B vs fixed pq4 {} B ({:+.2}%)",
+        adaptive_bytes,
+        fixed_pq4_bytes,
+        100.0 * (adaptive_bytes as f64 / fixed_pq4_bytes as f64 - 1.0)
+    );
+    assert!(
+        adaptive_bytes <= fixed_pq4_bytes,
+        "budget guarantee violated: adaptive {adaptive_bytes} B > fixed pq4 {fixed_pq4_bytes} B"
+    );
 }

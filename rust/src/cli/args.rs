@@ -81,8 +81,9 @@ USAGE:
   repro train   --dataset <name> | --dataset-dir <path>
                 [--hidden N] [--layers N] [--epochs N]
                 [--nu F] [--rho F] [--seed N] [--backend native|xla]
-                [--quant none|int-delta|p<bits>|pq<bits>]   (bits 1..=16)
+                [--quant none|int-delta|adaptive|p<bits>|pq<bits>]  (bits 1..=16)
                 [--quant-bits N] [--quant-block N] [--stochastic]
+                [--quant-budget F] [--adapt-interval N]  # adaptive only
                 [--schedule serial|parallel] [--workers N]
                 [--assign round-robin|block|lpt]
                 [--distributed N]           # spawn N localhost worker processes
@@ -105,6 +106,12 @@ spec in README \"On-disk datasets\"). Its content hash is pinned at load
 time and shipped to distributed workers, which refuse to train on
 different bytes. Registry entries in configs/datasets.json may also be
 on-disk: {\"kind\": \"on-disk\", \"name\": ..., \"dir\": ..., \"sha256\": ...}.
+
+--quant adaptive gives every p/q boundary its own 1..=16-bit width under
+a --quant-budget bits-per-element target (default 4.0), re-planned every
+--adapt-interval epochs (default 5) from per-layer boundary statistics.
+With an integral budget b >= 2 it is guaranteed to use no more comm
+bytes than the fixed pq<b> codec; see README \"Adaptive quantization\".
 ";
 
 #[cfg(test)]

@@ -319,6 +319,12 @@ pub struct TrainConfig {
     pub quant_block: u32,
     /// Use stochastic (unbiased) rounding on the uniform wire codecs.
     pub quant_stochastic: bool,
+    /// `QuantMode::Adaptive` only: global bits-per-element target the
+    /// per-boundary allocation must stay under (1.0..=16.0).
+    pub quant_budget: f32,
+    /// `QuantMode::Adaptive` only: re-solve the bit assignment every this
+    /// many epochs from the latest boundary statistics (>= 1).
+    pub adapt_interval: usize,
     /// Worker threads for the parallel schedule (0 = one per layer).
     pub workers: usize,
     /// Layer→worker assignment policy when `workers` < layers.
@@ -343,6 +349,8 @@ impl TrainConfig {
             quant: QuantMode::None,
             quant_block: 0,
             quant_stochastic: false,
+            quant_budget: 4.0,
+            adapt_interval: 5,
             workers: 0,
             assign: WorkerAssign::RoundRobin,
             schedule: ScheduleMode::Parallel,
@@ -369,6 +377,8 @@ impl TrainConfig {
             ("quant", Json::str(self.quant.wire_str())),
             ("quant_block", Json::num(self.quant_block as f64)),
             ("quant_stochastic", Json::Bool(self.quant_stochastic)),
+            ("quant_budget", Json::num(self.quant_budget as f64)),
+            ("adapt_interval", Json::num(self.adapt_interval as f64)),
             ("workers", Json::num(self.workers as f64)),
             ("assign", Json::str(self.assign.label())),
             ("schedule", Json::str(self.schedule.label())),
@@ -404,6 +414,11 @@ impl TrainConfig {
             .req("quant_stochastic")?
             .as_bool()
             .ok_or_else(|| anyhow!("quant_stochastic must be a bool"))?;
+        tc.quant_budget = num("quant_budget")? as f32;
+        tc.adapt_interval = num("adapt_interval")? as usize;
+        if tc.quant == QuantMode::Adaptive {
+            check_adaptive_config(tc.quant_budget, tc.adapt_interval)?;
+        }
         tc.workers = num("workers")? as usize;
         tc.assign = text("assign")?.parse()?;
         tc.schedule = text("schedule")?.parse()?;
@@ -459,6 +474,12 @@ pub enum QuantMode {
     P { bits: u8 },
     /// Uniform affine quantization of both p and q (1..=16 bits).
     PQ { bits: u8 },
+    /// AdaQP-style adaptive allocation: every p/q boundary gets its own
+    /// 1..=16-bit width, re-planned every `TrainConfig::adapt_interval`
+    /// epochs from per-layer boundary statistics under the global
+    /// `TrainConfig::quant_budget` bits-per-element target (see
+    /// [`crate::coordinator::adapt`]).
+    Adaptive,
 }
 
 impl QuantMode {
@@ -468,6 +489,7 @@ impl QuantMode {
             QuantMode::IntDelta => "int-delta".into(),
             QuantMode::P { bits } => format!("p@{bits}"),
             QuantMode::PQ { bits } => format!("pq@{bits}"),
+            QuantMode::Adaptive => "adaptive".into(),
         }
     }
 
@@ -476,7 +498,7 @@ impl QuantMode {
     }
 
     pub fn quantizes_q(&self) -> bool {
-        matches!(self, QuantMode::PQ { .. })
+        matches!(self, QuantMode::PQ { .. } | QuantMode::Adaptive)
     }
 
     /// The `FromStr`-parseable spelling (unlike [`QuantMode::label`], which
@@ -488,6 +510,7 @@ impl QuantMode {
             QuantMode::IntDelta => "int-delta".into(),
             QuantMode::P { bits } => format!("p{bits}"),
             QuantMode::PQ { bits } => format!("pq{bits}"),
+            QuantMode::Adaptive => "adaptive".into(),
         }
     }
 
@@ -507,12 +530,31 @@ impl QuantMode {
         match self {
             QuantMode::P { .. } => Ok(QuantMode::P { bits }),
             QuantMode::PQ { .. } => Ok(QuantMode::PQ { bits }),
+            QuantMode::Adaptive => Err(anyhow!(
+                "adaptive mode allocates per-layer widths itself; tune \
+                 --quant-budget/--adapt-interval instead of --quant-bits"
+            )),
             other => Err(anyhow!(
                 "--quant-bits only applies to the p/pq uniform modes, not {:?}",
                 other.label()
             )),
         }
     }
+}
+
+/// Validity rules for the adaptive-allocation knobs, shared by the CLI and
+/// the distributed SETUP deserializer so a bad budget/interval can never
+/// reach the trainer (same config-time contract as [`check_uniform_bits`]).
+pub fn check_adaptive_config(budget: f32, interval: usize) -> Result<()> {
+    if !budget.is_finite() || !(1.0..=16.0).contains(&budget) {
+        return Err(anyhow!(
+            "adaptive quantization budget must be 1.0..=16.0 bits/element, got {budget}"
+        ));
+    }
+    if interval == 0 {
+        return Err(anyhow!("adaptive re-plan interval must be >= 1 epoch"));
+    }
+    Ok(())
 }
 
 /// The single validity rule for uniform wire widths — shared by QuantMode
@@ -541,6 +583,7 @@ impl std::str::FromStr for QuantMode {
         match s {
             "none" => Ok(QuantMode::None),
             "int-delta" => Ok(QuantMode::IntDelta),
+            "adaptive" => Ok(QuantMode::Adaptive),
             _ => {
                 if let Some(rest) = s.strip_prefix("pq") {
                     Ok(QuantMode::PQ { bits: parse_bits(rest)? })
@@ -548,7 +591,8 @@ impl std::str::FromStr for QuantMode {
                     Ok(QuantMode::P { bits: parse_bits(rest)? })
                 } else {
                     Err(anyhow!(
-                        "quant must be none|int-delta|p<bits>|pq<bits> (bits 1..=16), got {s:?}"
+                        "quant must be none|int-delta|adaptive|p<bits>|pq<bits> \
+                         (bits 1..=16), got {s:?}"
                     ))
                 }
             }
@@ -673,6 +717,28 @@ mod tests {
         assert!("q8".parse::<QuantMode>().is_err());
         assert!(QuantMode::PQ { bits: 8 }.quantizes_q());
         assert!(!QuantMode::P { bits: 8 }.quantizes_q());
+        assert_eq!("adaptive".parse::<QuantMode>().unwrap(), QuantMode::Adaptive);
+        assert!(QuantMode::Adaptive.quantizes_p());
+        assert!(QuantMode::Adaptive.quantizes_q());
+        assert_eq!(QuantMode::Adaptive.bits(), None);
+        assert_eq!(QuantMode::Adaptive.wire_str(), "adaptive");
+    }
+
+    #[test]
+    fn adaptive_config_is_validated() {
+        assert!(QuantMode::Adaptive.with_bits(4).is_err());
+        assert!(check_adaptive_config(4.0, 5).is_ok());
+        assert!(check_adaptive_config(1.0, 1).is_ok());
+        assert!(check_adaptive_config(0.5, 5).is_err());
+        assert!(check_adaptive_config(17.0, 5).is_err());
+        assert!(check_adaptive_config(f32::NAN, 5).is_err());
+        assert!(check_adaptive_config(4.0, 0).is_err());
+        // the SETUP deserializer enforces the same rules
+        let mut tc = TrainConfig::new("t", 8, 3, 2);
+        tc.quant = QuantMode::Adaptive;
+        tc.quant_budget = 0.25;
+        let text = tc.to_json().to_string_compact();
+        assert!(TrainConfig::from_json(&crate::util::json::parse(&text).unwrap()).is_err());
     }
 
     #[test]
@@ -703,6 +769,8 @@ mod tests {
         tc.backend = BackendKind::Native;
         tc.quant = QuantMode::PQ { bits: 4 };
         tc.quant_block = 512;
+        tc.quant_budget = 3.5;
+        tc.adapt_interval = 7;
         tc.workers = 3;
         tc.assign = WorkerAssign::Lpt;
         tc.schedule = ScheduleMode::Serial;
@@ -720,6 +788,8 @@ mod tests {
         assert_eq!(back.quant, tc.quant);
         assert_eq!(back.quant_block, tc.quant_block);
         assert_eq!(back.quant_stochastic, tc.quant_stochastic);
+        assert_eq!(back.quant_budget.to_bits(), tc.quant_budget.to_bits());
+        assert_eq!(back.adapt_interval, tc.adapt_interval);
         assert_eq!(back.workers, tc.workers);
         assert_eq!(back.assign, tc.assign);
         assert_eq!(back.schedule, tc.schedule);

@@ -1,0 +1,781 @@
+//! Adaptive per-layer bit-width allocation (substrate S13): the
+//! `--quant adaptive` controller behind [`crate::config::QuantMode::Adaptive`].
+//!
+//! The fixed pq<k> codecs spend the same k bits on every boundary of every
+//! epoch. AdaQP's observation (PAPERS.md) is that a *global* bits-per-element
+//! budget dominates any fixed setting when the bits are spent where they
+//! matter — boundaries whose tensors have wide ranges, high variance, or a
+//! large ADMM constraint residual. pdADMM-G's six-phase structure hands us
+//! exactly those statistics for free: every `p_l` / `q_l` passes through one
+//! producer per epoch, and the constraint residual `||p_{l+1} - q_l||²` is
+//! computable right after phase Q.
+//!
+//! # The allocation problem
+//!
+//! For boundaries `i = 1..B` with `n_i` elements each (`N = Σ n_i`) and a
+//! budget of `budget` bits per element, choose widths `b_i ∈ 1..=16`
+//! maximizing the estimated error reduction subject to
+//!
+//! ```text
+//! Σ n_i·b_i ≤ max(N, ⌊budget·N⌋ − R),   R = 16·B bits
+//! ```
+//!
+//! `R` reserves the per-message overhead of the versioned wire header
+//! (+1 byte) and the payload's ceil-to-byte rounding (≤ +1 byte), which
+//! makes the bound *physical*: for an **integral** budget `b ≥ 2` over
+//! boundaries of ≥ 16 elements (any real tensor), an adaptive epoch —
+//! version bytes and byte-rounding included — costs no more wire bytes
+//! than the fixed `pq<b>` codec, every single epoch, never "≤ on
+//! average". Fractional budgets are bounded by `⌊budget·N⌋` total bits
+//! (a 4.5-bit budget may legitimately exceed pq4's volume — the budget
+//! itself is the contract); at the degenerate 1.0 budget every boundary
+//! already sits at the 1-bit floor and only the version bytes remain
+//! above fixed pq1.
+//!
+//! The per-boundary error model is the uniform-quantization bound
+//!
+//! ```text
+//! err_i(b) = (1 + w_i) · n_i · step_i(b)² / 12,   step_i(b) = range_i / (2^b − 1)
+//! w_i      = var_i + residual_i / n_i
+//! ```
+//!
+//! (`w_i` adds the two per-element second moments: spread of the boundary
+//! tensor and mean-squared constraint violation). `err_i` is convex and
+//! decreasing in `b`, so greedy bit-by-bit allocation — always grant the
+//! next bit to the boundary with the largest error drop per bit spent — is
+//! exact for this separable concave knapsack. The per-bit cost is `n_i`
+//! bits and the total drop is proportional to `n_i`, so the greedy score is
+//! simply the *per-element* drop; ties are pinned to the earliest boundary
+//! in the canonical order (all P boundaries by layer, then all Q
+//! boundaries by layer), making the solver a pure deterministic function
+//! of its inputs.
+//!
+//! # Schedule parity
+//!
+//! All three runtimes (serial, pool, distributed) produce bitwise-identical
+//! plans because every piece is deterministic and computed from
+//! schedule-invariant values:
+//!
+//! * stats are taken from the *pre-encode* update tensors and the *decoded*
+//!   (adopted) p/q pairs — identical across schedules by the phase-kernel
+//!   parity argument of [`crate::coordinator::phases`];
+//! * each boundary has exactly one producer, so each statistic is computed
+//!   once, by one site, in index order (no cross-thread reduction);
+//! * the solver itself runs once per re-plan: in-process inside the
+//!   [`Trainer`](crate::coordinator::trainer::Trainer), cross-process on
+//!   the coordinator only — workers receive the solved assignment as a
+//!   PLAN frame ([`QuantPlan::to_payload`]) and apply it verbatim.
+//!
+//! Re-plan timing: with `interval = k`, the plan solved from epoch `m·k`'s
+//! statistics takes effect at epoch `m·k + 1` (the initial plan comes from
+//! solving a flat prior over the actual boundary shapes, so the budget
+//! bound holds from epoch 1).
+
+use crate::admm::state::LayerState;
+use crate::tensor::matrix::Mat;
+use anyhow::{anyhow, Result};
+
+/// Smallest / largest grantable uniform wire width.
+pub const MIN_BITS: u8 = 1;
+pub const MAX_BITS: u8 = 16;
+
+/// Wire-overhead reservation per boundary per epoch, in bits: 8 for the
+/// versioned header byte + 8 for the payload's ceil-to-byte rounding.
+pub const RESERVE_BITS_PER_BOUNDARY: u64 = 16;
+
+/// PLAN frame payload version (`QuantPlan::to_payload`).
+pub const PLAN_VERSION: u8 = 1;
+
+/// Which boundary message an entry describes: `P` = the `p_l` tensor
+/// traveling backward to layer `l-1`'s owner (exists for `l >= 1`), `Q` =
+/// the `q_l` tensor traveling forward to layer `l+1`'s owner (`l < L-1`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BoundaryKind {
+    P,
+    Q,
+}
+
+impl BoundaryKind {
+    fn wire_tag(self) -> u8 {
+        match self {
+            BoundaryKind::P => 0,
+            BoundaryKind::Q => 1,
+        }
+    }
+
+    fn from_wire_tag(t: u8) -> Result<BoundaryKind> {
+        match t {
+            0 => Ok(BoundaryKind::P),
+            1 => Ok(BoundaryKind::Q),
+            other => Err(anyhow!("unknown boundary kind tag {other}")),
+        }
+    }
+}
+
+/// One epoch's statistics of one boundary tensor. All accumulation is
+/// sequential f64 in element-index order, over *finite* values only
+/// (mirroring the codec's `finite_affine` range rule), so the same tensor
+/// always yields the same bits regardless of schedule or thread count.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BoundaryStats {
+    /// Total elements (including non-finite ones — this is the wire size).
+    pub n: u64,
+    /// Finite minimum (0 when the tensor has no finite values).
+    pub lo: f32,
+    /// Finite maximum (0 when the tensor has no finite values).
+    pub hi: f32,
+    /// Mean over finite values.
+    pub mean: f64,
+    /// Population variance over finite values.
+    pub var: f64,
+    /// `||p_{l+1} - q_l||²` of this boundary's constraint (filled after
+    /// phase Q; stored on the Q entry, mirrored onto the P entry of the
+    /// same inter-layer boundary at solve time).
+    pub residual: f64,
+}
+
+impl BoundaryStats {
+    /// Deterministic two-pass statistics of a tensor.
+    pub fn of(m: &Mat) -> BoundaryStats {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        let mut sum = 0.0f64;
+        let mut finite = 0u64;
+        for &v in &m.data {
+            if v.is_finite() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+                sum += v as f64;
+                finite += 1;
+            }
+        }
+        if finite == 0 {
+            lo = 0.0;
+            hi = 0.0;
+        }
+        let mean = if finite > 0 { sum / finite as f64 } else { 0.0 };
+        let mut var = 0.0f64;
+        if finite > 0 {
+            for &v in &m.data {
+                if v.is_finite() {
+                    let d = v as f64 - mean;
+                    var += d * d;
+                }
+            }
+            var /= finite as f64;
+        }
+        BoundaryStats { n: m.len() as u64, lo, hi, mean, var, residual: 0.0 }
+    }
+
+    /// Finite value range (0 for constant or all-non-finite tensors).
+    /// Computed in f64: `hi - lo` of two finite f32s can overflow f32
+    /// (e.g. ±2e38), and an infinite range would poison the solver's
+    /// marginal gains with NaN.
+    pub fn range(&self) -> f64 {
+        (self.hi as f64 - self.lo as f64).max(0.0)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.n == 0 {
+            return Err(anyhow!("boundary with 0 elements"));
+        }
+        if !self.lo.is_finite() || !self.hi.is_finite() || self.hi < self.lo {
+            return Err(anyhow!("boundary range [{}, {}] is not finite", self.lo, self.hi));
+        }
+        if !self.mean.is_finite() || !self.var.is_finite() || self.var < 0.0 {
+            return Err(anyhow!("boundary mean/variance not finite: {} / {}", self.mean, self.var));
+        }
+        if !self.residual.is_finite() || self.residual < 0.0 {
+            return Err(anyhow!("boundary residual {} is not finite", self.residual));
+        }
+        Ok(())
+    }
+}
+
+/// `||a - b||_F²` accumulated sequentially in f64 — the per-boundary ADMM
+/// residual, computed identically by every schedule (the owner of layer `l`
+/// holds both the adopted `q_l` and the adopted `p_{l+1}`).
+pub fn boundary_residual_sq(p_next: &Mat, q: &Mat) -> f64 {
+    debug_assert_eq!(p_next.shape(), q.shape(), "boundary constraint shape mismatch");
+    let mut acc = 0.0f64;
+    for (&a, &b) in p_next.data.iter().zip(&q.data) {
+        let d = a as f64 - b as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// One boundary's input to the allocation solver.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundaryInput {
+    pub kind: BoundaryKind,
+    pub layer: usize,
+    pub stats: BoundaryStats,
+}
+
+/// Estimated total squared quantization error of a boundary at `bits`
+/// width — the solver's objective term, exposed so the property suite can
+/// pin its monotonicity. `(1 + w) · n · step²/12` with
+/// `w = var + residual/n`; monotone non-increasing in `bits`.
+pub fn err_bound(s: &BoundaryStats, bits: u8) -> f64 {
+    let bits = bits.clamp(MIN_BITS, MAX_BITS);
+    let levels = ((1u32 << bits) - 1) as f64;
+    let step = s.range() / levels;
+    let w = s.var + s.residual / s.n.max(1) as f64;
+    (1.0 + w) * s.n as f64 * step * step / 12.0
+}
+
+/// Per-element error drop of granting `bits -> bits + 1` — the greedy
+/// score (total drop / cost in bits; the `n` factors cancel).
+fn marginal_gain(s: &BoundaryStats, bits: u8) -> f64 {
+    (err_bound(s, bits) - err_bound(s, bits + 1)) / s.n.max(1) as f64
+}
+
+/// Solve the bit-budget assignment: widths in `MIN_BITS..=MAX_BITS` per
+/// boundary, `Σ n_i·b_i ≤ max(N, ⌊budget·N⌋ − 16·B)` guaranteed (the
+/// wire-overhead reservation is subtracted from the grantable headroom,
+/// never from the mandatory 1-bit floor — see the module doc for when
+/// this implies "≤ fixed pq" bytes). Deterministic: ties go to the
+/// earliest boundary in the given order. Errors (never panics) on empty
+/// input, zero-sized or non-finite boundaries, and budgets below the
+/// 1-bit/element minimum.
+pub fn solve_bits(boundaries: &[BoundaryInput], budget: f64) -> Result<Vec<u8>> {
+    if boundaries.is_empty() {
+        return Err(anyhow!("adaptive allocation over 0 boundaries (need >= 2 layers)"));
+    }
+    if !budget.is_finite() || budget <= 0.0 {
+        return Err(anyhow!("adaptive budget must be a positive number, got {budget}"));
+    }
+    for b in boundaries {
+        b.stats
+            .validate()
+            .map_err(|e| anyhow!("{:?} boundary at layer {}: {e}", b.kind, b.layer))?;
+    }
+    let n_total: u64 = boundaries.iter().map(|b| b.stats.n).sum();
+    let total_bits = (budget * n_total as f64).floor() as u64;
+    if total_bits < n_total {
+        return Err(anyhow!(
+            "budget {budget} bits/element cannot cover the {}-bit/element minimum",
+            MIN_BITS
+        ));
+    }
+    let reserve = RESERVE_BITS_PER_BOUNDARY * boundaries.len() as u64;
+    // The reservation only shrinks headroom; the 1-bit minimum is always
+    // grantable once total_bits >= n_total.
+    let mut rem = (total_bits - n_total).saturating_sub(reserve);
+    let mut bits = vec![MIN_BITS; boundaries.len()];
+    loop {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, b) in boundaries.iter().enumerate() {
+            if bits[i] >= MAX_BITS || b.stats.n > rem {
+                continue;
+            }
+            let g = marginal_gain(&b.stats, bits[i]);
+            if g <= 0.0 {
+                continue; // constant boundary: 1 bit already encodes it exactly
+            }
+            let better = match best {
+                None => true,
+                Some((bg, _)) => g > bg, // ties keep the earlier boundary
+            };
+            if better {
+                best = Some((g, i));
+            }
+        }
+        match best {
+            Some((_, i)) => {
+                bits[i] += 1;
+                rem -= boundaries[i].stats.n;
+            }
+            None => break,
+        }
+    }
+    Ok(bits)
+}
+
+/// A solved per-layer width assignment: `p_bits[l]` for the `p_l` message
+/// (`l >= 1`; slot 0 is 0 — `p_1 = X` never travels) and `q_bits[l]` for
+/// the `q_l` message (`l < L-1`; the last slot is 0).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuantPlan {
+    pub p_bits: Vec<u8>,
+    pub q_bits: Vec<u8>,
+}
+
+impl QuantPlan {
+    /// A flat plan (every boundary at `bits`) — the fixed-mode shape, used
+    /// by tests and as a documentation baseline.
+    pub fn uniform(layers: usize, bits: u8) -> QuantPlan {
+        let mut p_bits = vec![bits; layers];
+        let mut q_bits = vec![bits; layers];
+        if layers > 0 {
+            p_bits[0] = 0;
+            q_bits[layers - 1] = 0;
+        }
+        QuantPlan { p_bits, q_bits }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.p_bits.len()
+    }
+
+    /// Wire width of the `p_l` message (valid for `1 <= l < layers`).
+    pub fn p_bits(&self, layer: usize) -> u8 {
+        let b = self.p_bits[layer];
+        debug_assert!(b >= 1, "p_{layer} has no planned width");
+        b.clamp(MIN_BITS, MAX_BITS)
+    }
+
+    /// Wire width of the `q_l` message (valid for `l < layers - 1`).
+    pub fn q_bits(&self, layer: usize) -> u8 {
+        let b = self.q_bits[layer];
+        debug_assert!(b >= 1, "q_{layer} has no planned width");
+        b.clamp(MIN_BITS, MAX_BITS)
+    }
+
+    /// PLAN frame payload:
+    /// `version: u8 = 1 ‖ layers: u32 LE ‖ p_bits × layers ‖ q_bits × layers`.
+    pub fn to_payload(&self) -> Vec<u8> {
+        let l = self.p_bits.len();
+        let mut out = Vec::with_capacity(5 + 2 * l);
+        out.push(PLAN_VERSION);
+        out.extend_from_slice(&(l as u32).to_le_bytes());
+        out.extend_from_slice(&self.p_bits);
+        out.extend_from_slice(&self.q_bits);
+        out
+    }
+
+    /// Parse and validate a PLAN frame payload (clean errors on version /
+    /// length / width violations — never panics on untrusted bytes).
+    pub fn from_payload(payload: &[u8]) -> Result<QuantPlan> {
+        if payload.len() < 5 {
+            return Err(anyhow!("PLAN payload of {} bytes is too short", payload.len()));
+        }
+        if payload[0] != PLAN_VERSION {
+            return Err(anyhow!(
+                "unsupported PLAN version {} (expected {PLAN_VERSION})",
+                payload[0]
+            ));
+        }
+        let l = u32::from_le_bytes([payload[1], payload[2], payload[3], payload[4]]) as usize;
+        if l < 2 || l > 1 << 16 {
+            return Err(anyhow!("PLAN for {l} layers is out of range"));
+        }
+        if payload.len() != 5 + 2 * l {
+            return Err(anyhow!(
+                "PLAN payload is {} bytes, expected {} for {l} layers",
+                payload.len(),
+                5 + 2 * l
+            ));
+        }
+        let p_bits = payload[5..5 + l].to_vec();
+        let q_bits = payload[5 + l..].to_vec();
+        let check = |slot: &str, l: usize, b: u8, active: bool| -> Result<()> {
+            let ok = if active { (MIN_BITS..=MAX_BITS).contains(&b) } else { b == 0 };
+            if ok {
+                Ok(())
+            } else {
+                Err(anyhow!("PLAN {slot}_{l} width {b} is invalid"))
+            }
+        };
+        for (i, &b) in p_bits.iter().enumerate() {
+            check("p", i, b, i >= 1)?;
+        }
+        for (i, &b) in q_bits.iter().enumerate() {
+            check("q", i, b, i + 1 < l)?;
+        }
+        Ok(QuantPlan { p_bits, q_bits })
+    }
+}
+
+/// Bytes per serialized STATS entry:
+/// `kind u8 ‖ layer u32 ‖ n u64 ‖ lo f32 ‖ hi f32 ‖ mean f64 ‖ var f64 ‖ residual f64`.
+const STATS_ENTRY_BYTES: usize = 1 + 4 + 8 + 4 + 4 + 8 + 8 + 8;
+
+/// The adaptive-quantization controller: collects per-boundary statistics
+/// over an epoch, re-solves the assignment on schedule, and (de)serializes
+/// the STATS / PLAN frames of the distributed runtime. The in-process
+/// trainer owns one and does everything locally; in distributed mode every
+/// worker owns one (collect + apply) and the coordinator owns one
+/// (absorb + solve + broadcast).
+pub struct AdaptController {
+    layers: usize,
+    budget: f64,
+    interval: usize,
+    /// Canonical boundary order: P entries for layers `1..L`, then Q
+    /// entries for layers `0..L-1`, with their element counts.
+    template: Vec<(BoundaryKind, usize, u64)>,
+    /// This epoch's collected stats, parallel to `template`.
+    pending: Vec<Option<BoundaryStats>>,
+    /// The width assignment in force.
+    pub plan: QuantPlan,
+    /// Completed re-plans (observable for tests and logs).
+    pub replans: usize,
+}
+
+impl AdaptController {
+    /// Build the controller for a freshly initialized layer chain. The
+    /// initial plan solves the same budget problem over a flat prior
+    /// (range 1, variance 1, residual 0 on every boundary), so the byte
+    /// bound holds from the very first epoch and every process of a
+    /// distributed run derives the identical plan from its identical
+    /// chain.
+    pub fn new(layers: &[LayerState], budget: f32, interval: usize) -> Result<AdaptController> {
+        crate::config::check_adaptive_config(budget, interval)?;
+        let n_layers = layers.len();
+        if n_layers < 2 {
+            return Err(anyhow!("adaptive quantization needs >= 2 layers, got {n_layers}"));
+        }
+        let mut template = Vec::with_capacity(2 * n_layers - 2);
+        for (l, layer) in layers.iter().enumerate().skip(1) {
+            template.push((BoundaryKind::P, l, layer.p.len() as u64));
+        }
+        for (l, layer) in layers.iter().enumerate().take(n_layers - 1) {
+            let q = layer.q.as_ref().ok_or_else(|| anyhow!("hidden layer {l} missing q"))?;
+            template.push((BoundaryKind::Q, l, q.len() as u64));
+        }
+        let budget = budget as f64;
+        let flat: Vec<BoundaryInput> = template
+            .iter()
+            .map(|&(kind, layer, n)| BoundaryInput {
+                kind,
+                layer,
+                stats: BoundaryStats { n, lo: 0.0, hi: 1.0, mean: 0.5, var: 1.0, residual: 0.0 },
+            })
+            .collect();
+        let bits = solve_bits(&flat, budget)?;
+        let plan = Self::assemble_plan(n_layers, &template, &bits);
+        let pending = vec![None; template.len()];
+        Ok(AdaptController {
+            layers: n_layers,
+            budget,
+            interval,
+            template,
+            pending,
+            plan,
+            replans: 0,
+        })
+    }
+
+    fn assemble_plan(
+        layers: usize,
+        template: &[(BoundaryKind, usize, u64)],
+        bits: &[u8],
+    ) -> QuantPlan {
+        let mut plan = QuantPlan { p_bits: vec![0; layers], q_bits: vec![0; layers] };
+        for (&(kind, layer, _), &b) in template.iter().zip(bits) {
+            match kind {
+                BoundaryKind::P => plan.p_bits[layer] = b,
+                BoundaryKind::Q => plan.q_bits[layer] = b,
+            }
+        }
+        plan
+    }
+
+    /// Whether the epoch being run (1-based) ends in a re-plan — i.e.
+    /// whether its boundary statistics will actually be read. Collection
+    /// sites skip the two stat passes (and workers ship empty STATS
+    /// frames) on every other epoch; all schedules share the same epoch
+    /// counter, so the gate cannot break parity.
+    pub fn wants_stats(&self, epoch: usize) -> bool {
+        epoch % self.interval == 0
+    }
+
+    fn idx(&self, kind: BoundaryKind, layer: usize) -> Result<usize> {
+        match kind {
+            BoundaryKind::P if (1..self.layers).contains(&layer) => Ok(layer - 1),
+            BoundaryKind::Q if layer + 1 < self.layers => Ok(self.layers - 1 + layer),
+            _ => Err(anyhow!("no {kind:?} boundary at layer {layer} of {}", self.layers)),
+        }
+    }
+
+    /// Record the statistics of this epoch's `p_l` message (the pre-encode
+    /// update tensor).
+    pub fn note_p(&mut self, layer: usize, m: &Mat) {
+        let i = self.idx(BoundaryKind::P, layer).expect("p boundary index");
+        self.pending[i] = Some(BoundaryStats::of(m));
+    }
+
+    /// Record the statistics of this epoch's `q_l` message.
+    pub fn note_q(&mut self, layer: usize, m: &Mat) {
+        let i = self.idx(BoundaryKind::Q, layer).expect("q boundary index");
+        self.pending[i] = Some(BoundaryStats::of(m));
+    }
+
+    /// Record the constraint residual `||p_{l+1} - q_l||²` of boundary `l`
+    /// (must follow `note_q(l, ..)` within the epoch).
+    pub fn note_residual(&mut self, layer: usize, residual_sq: f64) {
+        let i = self.idx(BoundaryKind::Q, layer).expect("q boundary index");
+        let e = self.pending[i].as_mut().expect("note_residual before note_q");
+        e.residual = residual_sq;
+    }
+
+    /// Close epoch `epoch` (1-based, post-increment): on re-plan epochs
+    /// (`epoch % interval == 0`) solve a new assignment from the collected
+    /// stats; always clears the collection window. Returns whether the
+    /// plan changed hands (the distributed coordinator broadcasts a PLAN
+    /// frame exactly when this is true).
+    pub fn end_epoch(&mut self, epoch: usize) -> Result<bool> {
+        let due = epoch % self.interval == 0;
+        if due {
+            let mut inputs = Vec::with_capacity(self.template.len());
+            for (i, &(kind, layer, _)) in self.template.iter().enumerate() {
+                let mut stats = self.pending[i].ok_or_else(|| {
+                    anyhow!("re-plan at epoch {epoch}: missing stats for {kind:?} boundary {layer}")
+                })?;
+                if kind == BoundaryKind::P {
+                    // the P message of layer l shares the constraint
+                    // p_l = q_{l-1}; its residual lives on the Q entry
+                    let qi = self.idx(BoundaryKind::Q, layer - 1)?;
+                    stats.residual = self.pending[qi]
+                        .ok_or_else(|| anyhow!("missing q stats for boundary {}", layer - 1))?
+                        .residual;
+                }
+                inputs.push(BoundaryInput { kind, layer, stats });
+            }
+            let bits = solve_bits(&inputs, self.budget)?;
+            self.plan = Self::assemble_plan(self.layers, &self.template, &bits);
+            self.replans += 1;
+        }
+        self.pending.fill(None);
+        Ok(due)
+    }
+
+    /// Drain this epoch's collected stats into a STATS frame payload
+    /// (`count: u32 LE ‖ entries`) — the worker side. Only boundaries this
+    /// process produced are present; the coordinator merges the union.
+    pub fn stats_payload(&mut self) -> Vec<u8> {
+        let entries: Vec<(BoundaryKind, usize, BoundaryStats)> = self
+            .template
+            .iter()
+            .zip(&mut self.pending)
+            .filter_map(|(&(kind, layer, _), e)| e.take().map(|s| (kind, layer, s)))
+            .collect();
+        let mut out = Vec::with_capacity(4 + entries.len() * STATS_ENTRY_BYTES);
+        out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+        for (kind, layer, s) in entries {
+            out.push(kind.wire_tag());
+            out.extend_from_slice(&(layer as u32).to_le_bytes());
+            out.extend_from_slice(&s.n.to_le_bytes());
+            out.extend_from_slice(&s.lo.to_le_bytes());
+            out.extend_from_slice(&s.hi.to_le_bytes());
+            out.extend_from_slice(&s.mean.to_le_bytes());
+            out.extend_from_slice(&s.var.to_le_bytes());
+            out.extend_from_slice(&s.residual.to_le_bytes());
+        }
+        out
+    }
+
+    /// Merge one worker's STATS payload into the collection window — the
+    /// coordinator side. Duplicate or out-of-range boundaries are clean
+    /// errors (each boundary has exactly one producer).
+    pub fn absorb_stats_payload(&mut self, payload: &[u8]) -> Result<()> {
+        if payload.len() < 4 {
+            return Err(anyhow!("STATS payload of {} bytes is too short", payload.len()));
+        }
+        let count = u32::from_le_bytes(payload[..4].try_into().unwrap()) as usize;
+        if payload.len() != 4 + count * STATS_ENTRY_BYTES {
+            return Err(anyhow!(
+                "STATS payload is {} bytes, expected {} for {count} entries",
+                payload.len(),
+                4 + count * STATS_ENTRY_BYTES
+            ));
+        }
+        let mut pos = 4usize;
+        for _ in 0..count {
+            let e = &payload[pos..pos + STATS_ENTRY_BYTES];
+            pos += STATS_ENTRY_BYTES;
+            let kind = BoundaryKind::from_wire_tag(e[0])?;
+            let layer = u32::from_le_bytes(e[1..5].try_into().unwrap()) as usize;
+            let s = BoundaryStats {
+                n: u64::from_le_bytes(e[5..13].try_into().unwrap()),
+                lo: f32::from_le_bytes(e[13..17].try_into().unwrap()),
+                hi: f32::from_le_bytes(e[17..21].try_into().unwrap()),
+                mean: f64::from_le_bytes(e[21..29].try_into().unwrap()),
+                var: f64::from_le_bytes(e[29..37].try_into().unwrap()),
+                residual: f64::from_le_bytes(e[37..45].try_into().unwrap()),
+            };
+            let i = self.idx(kind, layer)?;
+            if self.pending[i].is_some() {
+                return Err(anyhow!("duplicate stats for {kind:?} boundary {layer}"));
+            }
+            self.pending[i] = Some(s);
+        }
+        Ok(())
+    }
+
+    /// The current plan as a PLAN frame payload.
+    pub fn plan_payload(&self) -> Vec<u8> {
+        self.plan.to_payload()
+    }
+
+    /// Replace the plan from a coordinator's PLAN frame — the worker side.
+    pub fn apply_plan_payload(&mut self, payload: &[u8]) -> Result<()> {
+        let plan = QuantPlan::from_payload(payload)?;
+        if plan.layers() != self.layers {
+            return Err(anyhow!(
+                "PLAN for {} layers does not match this run's {}",
+                plan.layers(),
+                self.layers
+            ));
+        }
+        self.plan = plan;
+        self.replans += 1;
+        Ok(())
+    }
+
+    /// Total planned payload bits per epoch under the current plan.
+    pub fn planned_bits(&self) -> u64 {
+        self.template
+            .iter()
+            .map(|&(kind, layer, n)| {
+                let b = match kind {
+                    BoundaryKind::P => self.plan.p_bits[layer],
+                    BoundaryKind::Q => self.plan.q_bits[layer],
+                };
+                n * b as u64
+            })
+            .sum()
+    }
+
+    /// Total boundary elements per epoch (the budget denominator).
+    pub fn boundary_elems(&self) -> u64 {
+        self.template.iter().map(|&(_, _, n)| n).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg32;
+
+    fn stats(n: u64, range: f32, var: f64, residual: f64) -> BoundaryStats {
+        BoundaryStats { n, lo: 0.0, hi: range, mean: range as f64 / 2.0, var, residual }
+    }
+
+    fn chain(nodes: usize) -> Vec<LayerState> {
+        let mut rng = Pcg32::seeded(5);
+        let x = Mat::randn(6, nodes, 1.0, &mut rng);
+        crate::admm::state::init_chain(&[6, 5, 5, 3], &x, 11, 0.4, 1)
+    }
+
+    #[test]
+    fn stats_of_is_deterministic_and_finite_only() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, f32::NAN, 3.0, f32::INFINITY, 2.0]);
+        let s = BoundaryStats::of(&m);
+        assert_eq!(s.n, 6);
+        assert_eq!(s.lo, 1.0);
+        assert_eq!(s.hi, 3.0);
+        assert_eq!(s.mean, 2.0);
+        assert!(s.var > 0.0 && s.var.is_finite());
+        assert_eq!(BoundaryStats::of(&m), s);
+        // all-non-finite: clean zeros, no NaNs
+        let bad = Mat::from_vec(1, 2, vec![f32::NAN, f32::INFINITY]);
+        let sb = BoundaryStats::of(&bad);
+        assert_eq!((sb.lo, sb.hi), (0.0, 0.0));
+        assert_eq!(sb.var, 0.0);
+    }
+
+    #[test]
+    fn controller_initial_plan_respects_budget_from_epoch_one() {
+        let layers = chain(40);
+        let c = AdaptController::new(&layers, 4.0, 2).unwrap();
+        let n = c.boundary_elems();
+        assert!(c.planned_bits() <= (4.0 * n as f64).floor() as u64);
+        // every active slot has a valid width
+        for l in 1..3 {
+            assert!((1..=16).contains(&c.plan.p_bits(l)));
+        }
+        for l in 0..2 {
+            assert!((1..=16).contains(&c.plan.q_bits(l)));
+        }
+        assert_eq!(c.plan.p_bits[0], 0);
+        assert_eq!(c.plan.q_bits[2], 0);
+    }
+
+    #[test]
+    fn controller_replans_on_interval_and_clears_window() {
+        let layers = chain(40);
+        let mut c = AdaptController::new(&layers, 4.0, 2).unwrap();
+        let note_all = |c: &mut AdaptController, layers: &[LayerState]| {
+            for l in 1..layers.len() {
+                c.note_p(l, &layers[l].p);
+            }
+            for l in 0..layers.len() - 1 {
+                let q = layers[l].q.as_ref().unwrap();
+                c.note_q(l, q);
+                c.note_residual(l, boundary_residual_sq(&layers[l + 1].p, q));
+            }
+        };
+        note_all(&mut c, &layers);
+        assert!(!c.end_epoch(1).unwrap(), "epoch 1 of interval 2 must not re-plan");
+        assert_eq!(c.replans, 0);
+        note_all(&mut c, &layers);
+        assert!(c.end_epoch(2).unwrap());
+        assert_eq!(c.replans, 1);
+        let n = c.boundary_elems();
+        assert!(c.planned_bits() <= (4.0 * n as f64).floor() as u64);
+        // the window was cleared: an immediate re-plan has no stats
+        assert!(c.end_epoch(4).is_err());
+    }
+
+    #[test]
+    fn stats_and_plan_payloads_round_trip_between_controllers() {
+        let layers = chain(40);
+        let mut worker = AdaptController::new(&layers, 4.0, 1).unwrap();
+        let mut coord = AdaptController::new(&layers, 4.0, 1).unwrap();
+        assert_eq!(worker.plan, coord.plan, "identical chains derive identical initial plans");
+        for l in 1..layers.len() {
+            worker.note_p(l, &layers[l].p);
+        }
+        for l in 0..layers.len() - 1 {
+            let q = layers[l].q.as_ref().unwrap();
+            worker.note_q(l, q);
+            worker.note_residual(l, boundary_residual_sq(&layers[l + 1].p, q));
+        }
+        let payload = worker.stats_payload();
+        coord.absorb_stats_payload(&payload).unwrap();
+        assert!(coord.end_epoch(1).unwrap());
+        let plan_bytes = coord.plan_payload();
+        worker.apply_plan_payload(&plan_bytes).unwrap();
+        assert_eq!(worker.plan, coord.plan);
+        // duplicates are rejected
+        let mut coord2 = AdaptController::new(&layers, 4.0, 1).unwrap();
+        let mut w2 = AdaptController::new(&layers, 4.0, 1).unwrap();
+        w2.note_p(1, &layers[1].p);
+        let p2 = w2.stats_payload();
+        coord2.absorb_stats_payload(&p2).unwrap();
+        assert!(coord2.absorb_stats_payload(&p2).is_err());
+    }
+
+    #[test]
+    fn extreme_finite_ranges_do_not_poison_the_solver() {
+        // hi - lo of two finite f32s can overflow f32 to +inf; the f64
+        // range keeps every gain finite so the greedy stays well-ordered.
+        let wide =
+            BoundaryStats { n: 100, lo: -2.0e38, hi: 2.0e38, mean: 0.0, var: 1.0, residual: 0.0 };
+        assert!(wide.range().is_finite());
+        for b in MIN_BITS..=MAX_BITS {
+            assert!(err_bound(&wide, b).is_finite(), "bits {b}");
+        }
+        let boundaries = vec![
+            BoundaryInput { kind: BoundaryKind::P, layer: 1, stats: wide },
+            BoundaryInput { kind: BoundaryKind::P, layer: 2, stats: stats(100, 1.0, 1.0, 0.0) },
+        ];
+        let bits = solve_bits(&boundaries, 4.0).unwrap();
+        assert!(bits.iter().all(|&b| (MIN_BITS..=MAX_BITS).contains(&b)), "{bits:?}");
+        assert!(bits[0] >= bits[1], "the wide boundary should win bits: {bits:?}");
+    }
+
+    #[test]
+    fn solver_spends_bits_on_the_hot_boundary() {
+        let boundaries = vec![
+            BoundaryInput { kind: BoundaryKind::P, layer: 1, stats: stats(1000, 10.0, 4.0, 100.0) },
+            BoundaryInput { kind: BoundaryKind::P, layer: 2, stats: stats(1000, 0.1, 0.01, 0.0) },
+        ];
+        let bits = solve_bits(&boundaries, 4.0).unwrap();
+        assert!(bits[0] > bits[1], "hot boundary must out-rank the quiet one: {bits:?}");
+        let spent: u64 = boundaries.iter().zip(&bits).map(|(b, &w)| b.stats.n * w as u64).sum();
+        assert!(spent <= 4 * 2000);
+    }
+}

@@ -71,6 +71,15 @@ impl CommMeter {
         self.count(kind, bytes);
     }
 
+    /// [`CommMeter::transfer_into`] with the v2 (per-message bit-width)
+    /// wire header — the adaptive-quantization hot path. Values decode
+    /// identically to the legacy layout; the metered size includes the
+    /// version byte, so Fig. 5 totals stay physically honest.
+    pub fn transfer_versioned_into(&self, kind: Kind, codec: Codec, m: &Mat, dst: &mut Mat) {
+        let bytes = quant::transfer_versioned_into(codec, m, dst);
+        self.count(kind, bytes);
+    }
+
     /// Record a transfer whose encoding the caller performed itself. The
     /// distributed runtime keeps the [`quant::Encoded`] buffer alive as the
     /// physical frame payload, so it cannot go through `transfer_into`;

@@ -4,11 +4,14 @@
 //! protocol.
 //!
 //! * [`phases`] — the six per-layer subproblem kernels every runtime runs.
+//! * [`adapt`] — the adaptive per-layer bit-width controller
+//!   (`--quant adaptive`): boundary statistics → budgeted bit assignment.
 //! * [`trainer`] — the in-process coordinator (serial / pooled-thread).
 //! * [`transport`] — the [`transport::Transport`] abstraction: the framed
 //!   Unix-socket/TCP runtime next to the in-process one.
 //! * [`worker`] — the `repro worker` process serving one layer block.
 
+pub mod adapt;
 pub mod channel;
 pub mod greedy;
 pub mod phases;

@@ -18,6 +18,7 @@
 use crate::admm::state::{self, LayerRole, LayerState};
 use crate::backend::ComputeBackend;
 use crate::config::{QuantMode, TrainConfig};
+use crate::coordinator::adapt::QuantPlan;
 use crate::coordinator::quant::Codec;
 use crate::graph::datasets::Dataset;
 use crate::tensor::matrix::Mat;
@@ -131,8 +132,10 @@ pub fn u_update(backend: &dyn ComputeBackend, c: &LayerState, p_next: &Mat, rho:
 /// affine when `quant_block > 0`, stochastic rounding when requested, plain
 /// whole-tensor uniform otherwise. The block+stochastic combination has no
 /// wire format and is rejected by the CLI; if both are set
-/// programmatically, block-wise wins.
-fn uniform_codec(cfg: &TrainConfig, bits: u8) -> Codec {
+/// programmatically, block-wise wins. Public because the adaptive
+/// controller builds per-layer codecs from planned widths through the
+/// same rule.
+pub fn uniform_codec(cfg: &TrainConfig, bits: u8) -> Codec {
     if cfg.quant_block > 0 {
         Codec::BlockUniform { bits, block: cfg.quant_block }
     } else if cfg.quant_stochastic {
@@ -142,8 +145,19 @@ fn uniform_codec(cfg: &TrainConfig, bits: u8) -> Codec {
     }
 }
 
+/// The bit width every boundary starts from in adaptive mode when no plan
+/// is available (`⌊budget⌋` clamped to the wire's 1..=16) — only a
+/// fallback; live adaptive transfers use [`p_codec_at`] / [`q_codec_at`]
+/// with the solved [`QuantPlan`].
+fn budget_floor_bits(cfg: &TrainConfig) -> u8 {
+    (cfg.quant_budget.floor() as i64).clamp(1, 16) as u8
+}
+
 /// Wire codec for p transfers under `cfg` (shared by the trainer and the
-/// socket workers — both ends derive it from the same config).
+/// socket workers — both ends derive it from the same config). For the
+/// fixed modes this is the whole story; adaptive runs route every
+/// transfer through [`p_codec_at`] with the live per-layer plan, and this
+/// function only supplies the budget-floor fallback width.
 pub fn p_codec(cfg: &TrainConfig) -> Codec {
     match cfg.quant {
         QuantMode::None => Codec::None,
@@ -151,14 +165,36 @@ pub fn p_codec(cfg: &TrainConfig) -> Codec {
         // the wire carries lossless 1-byte indices.
         QuantMode::IntDelta => Codec::paper_int_delta(),
         QuantMode::P { bits } | QuantMode::PQ { bits } => uniform_codec(cfg, bits),
+        QuantMode::Adaptive => uniform_codec(cfg, budget_floor_bits(cfg)),
     }
 }
 
-/// Wire codec for q transfers under `cfg`.
+/// Wire codec for q transfers under `cfg` (see [`p_codec`] for the
+/// adaptive-mode caveat).
 pub fn q_codec(cfg: &TrainConfig) -> Codec {
     match cfg.quant {
         QuantMode::PQ { bits } => uniform_codec(cfg, bits),
+        QuantMode::Adaptive => uniform_codec(cfg, budget_floor_bits(cfg)),
         _ => Codec::None,
+    }
+}
+
+/// Per-layer wire codec for the `p_layer` message: the plan's width under
+/// adaptive quantization, the fixed [`p_codec`] otherwise. Every transfer
+/// site of every schedule (trainer, worker send, worker mailbox decode)
+/// selects through this one function, so the three runtimes cannot drift.
+pub fn p_codec_at(cfg: &TrainConfig, plan: Option<&QuantPlan>, layer: usize) -> Codec {
+    match (cfg.quant, plan) {
+        (QuantMode::Adaptive, Some(pl)) => uniform_codec(cfg, pl.p_bits(layer)),
+        _ => p_codec(cfg),
+    }
+}
+
+/// Per-layer wire codec for the `q_layer` message (see [`p_codec_at`]).
+pub fn q_codec_at(cfg: &TrainConfig, plan: Option<&QuantPlan>, layer: usize) -> Codec {
+    match (cfg.quant, plan) {
+        (QuantMode::Adaptive, Some(pl)) => uniform_codec(cfg, pl.q_bits(layer)),
+        _ => q_codec(cfg),
     }
 }
 
@@ -243,5 +279,33 @@ mod tests {
         assert_eq!(q_codec(&cfg), Codec::None);
         cfg.quant = QuantMode::IntDelta;
         assert_eq!(p_codec(&cfg), Codec::paper_int_delta());
+    }
+
+    #[test]
+    fn per_layer_selectors_follow_the_plan_in_adaptive_mode() {
+        let (_, mut cfg) = tiny_cfg();
+        cfg.quant = QuantMode::Adaptive;
+        cfg.quant_budget = 4.0;
+        let plan = QuantPlan {
+            p_bits: vec![0, 6, 3],
+            q_bits: vec![5, 2, 0],
+        };
+        assert_eq!(p_codec_at(&cfg, Some(&plan), 1), Codec::Uniform { bits: 6 });
+        assert_eq!(p_codec_at(&cfg, Some(&plan), 2), Codec::Uniform { bits: 3 });
+        assert_eq!(q_codec_at(&cfg, Some(&plan), 0), Codec::Uniform { bits: 5 });
+        assert_eq!(q_codec_at(&cfg, Some(&plan), 1), Codec::Uniform { bits: 2 });
+        // block-wise scaling composes with planned widths
+        cfg.quant_block = 64;
+        assert_eq!(
+            q_codec_at(&cfg, Some(&plan), 0),
+            Codec::BlockUniform { bits: 5, block: 64 }
+        );
+        cfg.quant_block = 0;
+        // without a plan the budget-floor fallback applies
+        assert_eq!(p_codec(&cfg), Codec::Uniform { bits: 4 });
+        assert_eq!(q_codec_at(&cfg, None, 0), Codec::Uniform { bits: 4 });
+        // fixed modes ignore the plan argument entirely
+        cfg.quant = QuantMode::PQ { bits: 8 };
+        assert_eq!(p_codec_at(&cfg, Some(&plan), 1), Codec::Uniform { bits: 8 });
     }
 }

@@ -27,7 +27,8 @@
 //! # Wire format
 //!
 //! Every transfer is `header ‖ payload`, accounted exactly (no hardcoded
-//! fudge): [`Encoded::wire_bytes`] equals [`Codec::wire_bytes_for`].
+//! fudge): [`Encoded::wire_bytes`] equals [`Codec::wire_bytes_for`]
+//! (legacy headers; versioned headers add exactly one byte — see below).
 //!
 //! Common header: `rows: u32 LE ‖ cols: u32 LE` (8 bytes). Then per codec:
 //!
@@ -44,6 +45,39 @@
 //! `⌊j/8⌋`. For `bits ∈ {8, 16}` this coincides with the obvious u8 / LE
 //! u16 array (and takes a fused fast path). Block boundaries are *not*
 //! byte-aligned for sub-byte widths; the stream is continuous.
+//!
+//! # Versioned headers (spec v2 — per-message bit-width)
+//!
+//! Adaptive quantization ([`crate::coordinator::adapt`]) gives every
+//! boundary its own width, re-planned mid-run, so its messages carry the
+//! width explicitly. A *versioned* uniform-family header inserts one
+//! leading byte into the per-codec header:
+//!
+//! ```text
+//! ver: u8 = 0x82 ‖ bits: u8 ‖ …      (Uniform / Stochastic)
+//! ver: u8 = 0x82 ‖ bits: u8 ‖ block: u32 ‖ …   (BlockUniform)
+//! ```
+//!
+//! `ver` has the high bit ([`WIRE_VERSION_FLAG`]) set and the low bits
+//! carrying the version number (2, i.e. [`WIRE_V2`]). Because legal legacy
+//! widths are `1..=16`, the flag bit makes the two layouts
+//! self-distinguishing: [`read_wire`] decodes **old fixed-width frames
+//! unchanged** (first header byte in `1..=16`, width must match the
+//! configured codec), decodes v2 frames at the *message's own* width
+//! (1..=16, may differ from the configured width — the adaptive plan is
+//! authoritative upstream), and rejects unknown versions (flag set, value
+//! ≠ 2) with a clean error. `None` / `IntDelta` have no versioned form
+//! ([`encode_versioned_into`] leaves them on the legacy layout).
+//!
+//! Versioned encodings cost exactly `+1` byte over the table above, and
+//! that byte is part of [`Encoded::wire_bytes`] — the adaptive bit-budget
+//! solver reserves per-message overhead so budgeted runs stay under the
+//! equivalent fixed-width wire volume *including* this byte.
+//!
+//! Distributed re-plans travel as PLAN frames whose payload is
+//! `version: u8 = 1 ‖ layers: u32 LE ‖ p_bits × layers ‖ q_bits × layers`
+//! (one width byte per layer slot, 0 = no message at that slot; see
+//! [`crate::coordinator::adapt::QuantPlan::to_payload`]).
 //!
 //! # Non-finite and degenerate inputs
 //!
@@ -185,7 +219,9 @@ impl Codec {
         }
     }
 
-    /// Analytic total wire size; [`Encoded::wire_bytes`] always matches.
+    /// Analytic total wire size of a **legacy** encoding;
+    /// [`Encoded::wire_bytes`] always matches for [`encode`], and is
+    /// exactly one byte larger for [`encode_versioned`] (the v2 header).
     pub fn wire_bytes_for(&self, n: usize) -> u64 {
         self.header_bytes(n) + self.payload_bytes(n)
     }
@@ -195,12 +231,22 @@ fn check_bits(bits: u8) -> Result<()> {
     crate::config::check_uniform_bits(bits).map(|_| ())
 }
 
+/// High bit of the first per-codec header byte: set = versioned header
+/// (legal legacy widths are 1..=16, so the bit is unambiguous).
+pub const WIRE_VERSION_FLAG: u8 = 0x80;
+
+/// The v2 uniform-family header marker: flag bit + version 2.
+pub const WIRE_V2: u8 = WIRE_VERSION_FLAG | 2;
+
 /// An encoded tensor as it would cross the network.
 pub struct Encoded {
     pub payload: Vec<u8>,
     rows: usize,
     cols: usize,
     codec: Codec,
+    /// Uniform-family frames only: emit the v2 header (leading [`WIRE_V2`]
+    /// byte) so the message carries its own bit-width.
+    versioned: bool,
     /// Per-block `(min, step)` affine parameters. Whole-tensor codecs
     /// (`IntDelta`, `Uniform`, `Stochastic`) carry exactly one entry;
     /// `None` carries none.
@@ -210,7 +256,14 @@ pub struct Encoded {
 impl Encoded {
     /// An empty scratch value for [`encode_into`] reuse.
     pub fn empty() -> Encoded {
-        Encoded { payload: Vec::new(), rows: 0, cols: 0, codec: Codec::None, params: Vec::new() }
+        Encoded {
+            payload: Vec::new(),
+            rows: 0,
+            cols: 0,
+            codec: Codec::None,
+            versioned: false,
+            params: Vec::new(),
+        }
     }
 
     pub fn codec(&self) -> Codec {
@@ -221,9 +274,17 @@ impl Encoded {
         (self.rows, self.cols)
     }
 
-    /// Exact wire size in bytes: payload + the per-codec header.
+    /// Whether this encoding carries the v2 (per-message bit-width) header.
+    pub fn versioned(&self) -> bool {
+        self.versioned
+    }
+
+    /// Exact wire size in bytes: payload + the per-codec header (+1 for
+    /// the v2 version byte).
     pub fn wire_bytes(&self) -> u64 {
-        self.codec.header_bytes(self.rows * self.cols) + self.payload.len() as u64
+        self.codec.header_bytes(self.rows * self.cols)
+            + self.payload.len() as u64
+            + self.versioned as u64
     }
 
     /// Serialize to the documented wire layout (`rows ‖ cols ‖ per-codec
@@ -240,12 +301,18 @@ impl Encoded {
                 out.extend_from_slice(&step.to_le_bytes());
             }
             Codec::Uniform { bits } | Codec::Stochastic { bits } => {
+                if self.versioned {
+                    out.push(WIRE_V2);
+                }
                 out.push(bits);
                 let (lo, step) = self.params[0];
                 out.extend_from_slice(&lo.to_le_bytes());
                 out.extend_from_slice(&step.to_le_bytes());
             }
             Codec::BlockUniform { bits, block } => {
+                if self.versioned {
+                    out.push(WIRE_V2);
+                }
                 out.push(bits);
                 out.extend_from_slice(&block.to_le_bytes());
                 for &(lo, step) in &self.params {
@@ -295,11 +362,40 @@ fn wire_f32(buf: &[u8], pos: &mut usize, what: &str) -> Result<f32> {
     Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
 }
 
+/// Read the first uniform-family header byte: either a legacy width
+/// (1..=16, must match the configured `bits`) or a [`WIRE_V2`] marker
+/// followed by the message's own width (any valid 1..=16 — adaptive
+/// messages are self-describing). Unknown versions are clean errors.
+fn wire_uniform_bits(buf: &[u8], pos: &mut usize, bits: u8) -> Result<(u8, bool)> {
+    let first = wire_u8(buf, pos, "bits")?;
+    if first & WIRE_VERSION_FLAG != 0 {
+        if first != WIRE_V2 {
+            return Err(anyhow!(
+                "unsupported tensor wire header version {} (this build reads v2)",
+                first & !WIRE_VERSION_FLAG
+            ));
+        }
+        let wb = wire_u8(buf, pos, "per-message bits")?;
+        crate::config::check_uniform_bits(wb)?;
+        Ok((wb, true))
+    } else {
+        if first != bits {
+            return Err(anyhow!(
+                "wire width {first} does not match configured {bits}-bit codec"
+            ));
+        }
+        Ok((first, false))
+    }
+}
+
 /// Parse a buffer produced by [`Encoded::write_wire`] under `codec` (known
 /// out of band: both ends of a distributed run derive it from the shared
 /// config). Every size and codec parameter is validated — truncated input,
 /// trailing bytes, oversized shapes and mismatched widths/blocks all
-/// return errors; this function never panics on untrusted bytes.
+/// return errors; this function never panics on untrusted bytes. Both
+/// header layouts decode: legacy fixed-width frames must match `codec`'s
+/// width exactly, while v2 frames decode at the per-message width their
+/// header carries (the returned [`Encoded::codec`] reflects it).
 pub fn read_wire(codec: Codec, buf: &[u8]) -> Result<Encoded> {
     codec.validate()?;
     let mut pos = 0usize;
@@ -311,6 +407,8 @@ pub fn read_wire(codec: Codec, buf: &[u8]) -> Result<Encoded> {
     }
     let n = n64 as usize;
     let mut params: Vec<(f32, f32)> = Vec::new();
+    let mut effective = codec;
+    let mut versioned = false;
     match codec {
         Codec::None => {}
         Codec::IntDelta { .. } => {
@@ -319,25 +417,26 @@ pub fn read_wire(codec: Codec, buf: &[u8]) -> Result<Encoded> {
             params.push((lo, step));
         }
         Codec::Uniform { bits } | Codec::Stochastic { bits } => {
-            let wb = wire_u8(buf, &mut pos, "bits")?;
-            if wb != bits {
-                return Err(anyhow!("wire width {wb} does not match configured {bits}-bit codec"));
-            }
+            let (wb, ver) = wire_uniform_bits(buf, &mut pos, bits)?;
+            versioned = ver;
+            effective = match codec {
+                Codec::Stochastic { .. } => Codec::Stochastic { bits: wb },
+                _ => Codec::Uniform { bits: wb },
+            };
             let lo = wire_f32(buf, &mut pos, "min")?;
             let step = wire_f32(buf, &mut pos, "step")?;
             params.push((lo, step));
         }
         Codec::BlockUniform { bits, block } => {
-            let wb = wire_u8(buf, &mut pos, "bits")?;
-            if wb != bits {
-                return Err(anyhow!("wire width {wb} does not match configured {bits}-bit codec"));
-            }
+            let (wb, ver) = wire_uniform_bits(buf, &mut pos, bits)?;
+            versioned = ver;
             let wblock = wire_u32(buf, &mut pos, "block")?;
             if wblock != block {
                 return Err(anyhow!(
                     "wire block size {wblock} does not match configured block {block}"
                 ));
             }
+            effective = Codec::BlockUniform { bits: wb, block };
             let blocks = n.div_ceil(block.max(1) as usize);
             params.reserve(blocks);
             for _ in 0..blocks {
@@ -347,11 +446,12 @@ pub fn read_wire(codec: Codec, buf: &[u8]) -> Result<Encoded> {
             }
         }
     }
-    let payload = wire_take(buf, &mut pos, codec.payload_bytes(n) as usize, "payload")?.to_vec();
+    let payload =
+        wire_take(buf, &mut pos, effective.payload_bytes(n) as usize, "payload")?.to_vec();
     if pos != buf.len() {
         return Err(anyhow!("tensor wire has {} trailing bytes", buf.len() - pos));
     }
-    Ok(Encoded { payload, rows, cols, codec, params })
+    Ok(Encoded { payload, rows, cols, codec: effective, versioned, params })
 }
 
 // ---------------------------------------------------------------------------
@@ -572,6 +672,7 @@ pub fn encode_into(codec: Codec, m: &Mat, enc: &mut Encoded) {
     enc.rows = m.rows;
     enc.cols = m.cols;
     enc.codec = codec;
+    enc.versioned = false;
     enc.payload.clear();
     enc.params.clear();
     match codec {
@@ -634,6 +735,24 @@ pub fn encode_into(codec: Codec, m: &Mat, enc: &mut Encoded) {
 pub fn encode(codec: Codec, m: &Mat) -> Encoded {
     let mut enc = Encoded::empty();
     encode_into(codec, m, &mut enc);
+    enc
+}
+
+/// Like [`encode_into`], but uniform-family encodings carry the v2
+/// (per-message bit-width) header — the adaptive-quantization wire form.
+/// `None` / `IntDelta` have no versioned layout and stay legacy.
+pub fn encode_versioned_into(codec: Codec, m: &Mat, enc: &mut Encoded) {
+    encode_into(codec, m, enc);
+    enc.versioned = matches!(
+        codec,
+        Codec::Uniform { .. } | Codec::Stochastic { .. } | Codec::BlockUniform { .. }
+    );
+}
+
+/// Allocating convenience wrapper over [`encode_versioned_into`].
+pub fn encode_versioned(codec: Codec, m: &Mat) -> Encoded {
+    let mut enc = Encoded::empty();
+    encode_versioned_into(codec, m, &mut enc);
     enc
 }
 
@@ -710,6 +829,18 @@ pub fn transfer_into(codec: Codec, m: &Mat, dst: &mut Mat) -> u64 {
     SCRATCH.with(|s| {
         let mut enc = s.borrow_mut();
         encode_into(codec, m, &mut enc);
+        decode_into(&enc, dst);
+        enc.wire_bytes()
+    })
+}
+
+/// [`transfer_into`] with the v2 (per-message bit-width) header — the
+/// adaptive transfer primitive. The decoded values are identical to the
+/// legacy path; only the accounted header grows by the version byte.
+pub fn transfer_versioned_into(codec: Codec, m: &Mat, dst: &mut Mat) -> u64 {
+    SCRATCH.with(|s| {
+        let mut enc = s.borrow_mut();
+        encode_versioned_into(codec, m, &mut enc);
         decode_into(&enc, dst);
         enc.wire_bytes()
     })
@@ -1050,6 +1181,117 @@ mod tests {
         huge[..4].copy_from_slice(&u32::MAX.to_le_bytes());
         huge[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(read_wire(Codec::None, &huge).is_err());
+    }
+
+    #[test]
+    fn versioned_wire_round_trips_every_uniform_width() {
+        // Spec v2: the header carries the message's own width; it must
+        // survive the round trip for every Uniform{1..=16} variant.
+        let mut rng = Pcg32::seeded(21);
+        let m = Mat::randn(7, 13, 2.0, &mut rng); // 91 elements
+        for bits in 1..=16u8 {
+            let codec = Codec::Uniform { bits };
+            let enc = encode_versioned(codec, &m);
+            assert!(enc.versioned());
+            // exactly one byte over the legacy layout
+            assert_eq!(enc.wire_bytes(), codec.wire_bytes_for(m.len()) + 1, "bits {bits}");
+            let wire = enc.to_wire();
+            assert_eq!(wire.len() as u64, enc.wire_bytes());
+            assert_eq!(wire[8], WIRE_V2, "bits {bits}: missing version byte");
+            assert_eq!(wire[9], bits, "bits {bits}: per-message width lost");
+            let back = read_wire(codec, &wire).unwrap();
+            assert!(back.versioned());
+            assert_eq!(back.codec(), codec, "bits {bits}");
+            assert_eq!(decode(&back).data, decode(&enc).data, "bits {bits}");
+        }
+        // block-wise and stochastic variants carry the v2 header too
+        for codec in [
+            Codec::BlockUniform { bits: 3, block: 32 },
+            Codec::Stochastic { bits: 5 },
+        ] {
+            let enc = encode_versioned(codec, &m);
+            let back = read_wire(codec, &enc.to_wire()).unwrap();
+            assert_eq!(back.codec(), codec);
+            assert_eq!(decode(&back).data, decode(&enc).data, "codec {codec:?}");
+        }
+    }
+
+    #[test]
+    fn versioned_wire_decodes_at_the_message_width() {
+        // Adaptive re-plans change widths mid-run: a v2 message decodes at
+        // the width in ITS header even when the configured codec differs.
+        let mut rng = Pcg32::seeded(22);
+        let m = Mat::randn(6, 9, 1.0, &mut rng);
+        let enc4 = encode_versioned(Codec::Uniform { bits: 4 }, &m);
+        let back = read_wire(Codec::Uniform { bits: 8 }, &enc4.to_wire()).unwrap();
+        assert_eq!(back.codec(), Codec::Uniform { bits: 4 });
+        assert_eq!(decode(&back).data, decode(&enc4).data);
+    }
+
+    #[test]
+    fn legacy_fixed_width_frames_still_decode() {
+        // Pre-v2 frames (no version byte) parse byte-for-byte as before,
+        // including the strict width match.
+        let mut rng = Pcg32::seeded(23);
+        let m = Mat::randn(5, 11, 1.5, &mut rng);
+        for codec in [
+            Codec::Uniform { bits: 4 },
+            Codec::Uniform { bits: 16 },
+            Codec::BlockUniform { bits: 3, block: 16 },
+            Codec::Stochastic { bits: 8 },
+        ] {
+            let enc = encode(codec, &m);
+            assert!(!enc.versioned());
+            let wire = enc.to_wire();
+            let back = read_wire(codec, &wire).unwrap();
+            assert!(!back.versioned());
+            assert_eq!(decode(&back).data, decode(&enc).data, "codec {codec:?}");
+        }
+        // legacy frames still enforce the configured width
+        let wire = encode(Codec::Uniform { bits: 8 }, &m).to_wire();
+        assert!(read_wire(Codec::Uniform { bits: 4 }, &wire).is_err());
+    }
+
+    #[test]
+    fn unknown_wire_versions_are_clean_errors() {
+        let mut rng = Pcg32::seeded(24);
+        let m = Mat::randn(4, 4, 1.0, &mut rng);
+        let codec = Codec::Uniform { bits: 4 };
+        let mut wire = encode_versioned(codec, &m).to_wire();
+        assert_eq!(wire[8], WIRE_V2);
+        wire[8] = WIRE_VERSION_FLAG | 3; // a future version this build can't read
+        let err = read_wire(codec, &wire).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+        // an invalid per-message width is rejected, not decoded
+        let mut wire = encode_versioned(codec, &m).to_wire();
+        wire[9] = 17;
+        assert!(read_wire(codec, &wire).is_err());
+        // truncating right after the version byte errors cleanly
+        let wire = encode_versioned(codec, &m).to_wire();
+        assert!(read_wire(codec, &wire[..9]).is_err());
+    }
+
+    #[test]
+    fn versioned_transfer_matches_legacy_values_exactly() {
+        // The version byte is pure framing: decoded tensors are bitwise
+        // the ones the legacy path produces, and the metered size is +1.
+        let mut rng = Pcg32::seeded(25);
+        let m = Mat::randn(12, 18, 2.0, &mut rng);
+        for codec in [
+            Codec::Uniform { bits: 4 },
+            Codec::BlockUniform { bits: 4, block: 64 },
+            Codec::Stochastic { bits: 8 },
+        ] {
+            let (legacy, legacy_bytes) = transfer(codec, &m);
+            let mut dst = Mat::zeros(1, 1);
+            let ver_bytes = transfer_versioned_into(codec, &m, &mut dst);
+            assert_eq!(dst.data, legacy.data, "codec {codec:?}");
+            assert_eq!(ver_bytes, legacy_bytes + 1, "codec {codec:?}");
+        }
+        // None has no versioned form: identical bytes, no marker
+        let (_, none_legacy) = transfer(Codec::None, &m);
+        let mut dst = Mat::zeros(1, 1);
+        assert_eq!(transfer_versioned_into(Codec::None, &m, &mut dst), none_legacy);
     }
 
     #[test]

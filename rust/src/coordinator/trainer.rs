@@ -25,6 +25,7 @@ use crate::admm::state::{self, LayerState};
 use crate::admm::updates::zlast_lr;
 use crate::backend::ComputeBackend;
 use crate::config::{QuantMode, ScheduleMode, TrainConfig, WorkerAssign};
+use crate::coordinator::adapt::{self, AdaptController};
 use crate::coordinator::channel::{CommMeter, Kind};
 use crate::coordinator::phases;
 use crate::coordinator::quant::Codec;
@@ -55,6 +56,10 @@ pub struct Trainer {
     /// Built on the first epoch and reused for every phase dispatch; its
     /// spawn counter is the regression hook for "no threads per epoch".
     pub pool: Option<WorkerPool>,
+    /// Adaptive-quantization controller (`--quant adaptive` only): collects
+    /// per-boundary statistics each epoch and re-solves the per-layer bit
+    /// assignment every `cfg.adapt_interval` epochs.
+    pub adapt: Option<AdaptController>,
 }
 
 /// The **phase-wise** simulated parallel epoch time, from per-phase,
@@ -116,6 +121,7 @@ impl Trainer {
     pub fn new(backend: Arc<dyn ComputeBackend>, ds: Dataset, cfg: TrainConfig) -> Trainer {
         let threads = crate::tensor::ops::default_threads();
         let layers = phases::build_chain(&ds, &cfg, threads);
+        let adapt = Self::build_adapt(&cfg, &layers);
         Trainer {
             backend,
             ds,
@@ -128,13 +134,30 @@ impl Trainer {
             last_phase_layer_secs: Vec::new(),
             last_layer_secs: Vec::new(),
             pool: None,
+            adapt,
         }
     }
 
-    /// Replace the layer chain (greedy layerwise stacking).
+    /// The adaptive controller for a fresh chain, when the config asks for
+    /// one. Budget/interval are validated at config time (CLI and SETUP
+    /// deserializer), so failure here is a programming error.
+    fn build_adapt(cfg: &TrainConfig, layers: &[LayerState]) -> Option<AdaptController> {
+        if cfg.quant != QuantMode::Adaptive {
+            return None;
+        }
+        Some(
+            AdaptController::new(layers, cfg.quant_budget, cfg.adapt_interval)
+                .expect("adaptive quantization config is validated at config time"),
+        )
+    }
+
+    /// Replace the layer chain (greedy layerwise stacking). A new chain
+    /// means new boundary shapes: the adaptive plan restarts from its
+    /// budget prior.
     pub fn set_layers(&mut self, layers: Vec<LayerState>) {
         self.layers = layers;
         self.cfg.layers = self.layers.len();
+        self.adapt = Self::build_adapt(&self.cfg, &self.layers);
     }
 
     fn n_workers(&self) -> usize {
@@ -261,12 +284,28 @@ impl Trainer {
         // p_l travels to worker l-1 (it is needed there for q/u updates):
         // route through the meter; all consumers adopt the decoded tensor.
         // `transfer_into` decodes straight into the layer's existing p
-        // buffer — no per-transfer allocation in the phase loop.
+        // buffer — no per-transfer allocation in the phase loop. Adaptive
+        // runs pick each layer's planned width (and note the pre-encode
+        // stats the next re-plan feeds on) and use the v2 wire header.
         let p_codec = phases::p_codec(&self.cfg);
+        let running_epoch = self.epoch + 1; // run_epoch increments at the end
         for (l, out) in new_ps.into_iter().enumerate() {
             if let Some((p, tau)) = out {
+                let codec = match self.adapt.as_mut() {
+                    Some(a) => {
+                        if a.wants_stats(running_epoch) {
+                            a.note_p(l, &p);
+                        }
+                        phases::p_codec_at(&self.cfg, Some(&a.plan), l)
+                    }
+                    None => p_codec,
+                };
                 let dst = &mut self.layers[l].p;
-                self.meter.transfer_into(Kind::P, p_codec, &p, dst);
+                if self.adapt.is_some() {
+                    self.meter.transfer_versioned_into(Kind::P, codec, &p, dst);
+                } else {
+                    self.meter.transfer_into(Kind::P, codec, &p, dst);
+                }
                 self.layers[l].tau = tau;
             }
         }
@@ -350,8 +389,33 @@ impl Trainer {
                 // every consumer (including the owner) adopts the decoded
                 // grid value, which is exactly the paper's q-quantized
                 // variant (Appendix B).
+                let codec = match self.adapt.as_mut() {
+                    Some(a) => {
+                        if a.wants_stats(running_epoch) {
+                            a.note_q(l, &q);
+                        }
+                        phases::q_codec_at(&self.cfg, Some(&a.plan), l)
+                    }
+                    None => q_codec,
+                };
                 let dst = self.layers[l].q.get_or_insert_with(|| crate::Mat::zeros(0, 0));
-                self.meter.transfer_into(Kind::Q, q_codec, &q, dst);
+                if self.adapt.is_some() {
+                    self.meter.transfer_versioned_into(Kind::Q, codec, &q, dst);
+                } else {
+                    self.meter.transfer_into(Kind::Q, codec, &q, dst);
+                }
+            }
+        }
+        // the adaptive allocator's third signal: this epoch's constraint
+        // residual ||p_{l+1} - q_l||² per boundary, from the freshly
+        // adopted (decoded) tensors — identical in every schedule.
+        if let Some(a) = self.adapt.as_mut() {
+            if a.wants_stats(running_epoch) {
+                for l in 0..n_layers - 1 {
+                    let q = self.layers[l].q.as_ref().expect("hidden q");
+                    let r = adapt::boundary_residual_sq(&self.layers[l + 1].p, q);
+                    a.note_residual(l, r);
+                }
             }
         }
         phase_ms[4] = pt.elapsed().as_secs_f64() * 1e3;
@@ -389,6 +453,15 @@ impl Trainer {
         }
         let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.epoch += 1;
+
+        // Adaptive re-plan barrier: on interval epochs the solver turns
+        // this epoch's boundary stats into next epoch's bit assignment —
+        // the same schedule the distributed coordinator follows with its
+        // PLAN broadcast. In-process every boundary was noted above, so a
+        // failure here is a logic bug, not a runtime condition.
+        if let Some(a) = self.adapt.as_mut() {
+            a.end_epoch(self.epoch).expect("in-process adaptive re-plan has complete stats");
+        }
 
         let comm = self.meter.take();
         let mut rec = EpochRecord {
@@ -688,6 +761,58 @@ mod tests {
             serial_ms / legacy_ms,
             serial_ms / correct_ms
         );
+    }
+
+    fn adaptive_trainer(schedule: ScheduleMode, interval: usize) -> Trainer {
+        let ds = tiny_ds();
+        let mut cfg = TrainConfig::new("tiny", 10, 3, 15);
+        cfg.nu = 0.01;
+        cfg.rho = 1.0;
+        cfg.quant = QuantMode::Adaptive;
+        cfg.quant_budget = 4.0;
+        cfg.adapt_interval = interval;
+        cfg.schedule = schedule;
+        cfg.seed = 3;
+        Trainer::new(Arc::new(NativeBackend::single_thread()), ds, cfg)
+    }
+
+    #[test]
+    fn adaptive_parallel_equals_serial_with_midrun_replan() {
+        let mut a = adaptive_trainer(ScheduleMode::Serial, 2);
+        let mut b = adaptive_trainer(ScheduleMode::Parallel, 2);
+        for _ in 0..4 {
+            let ra = a.run_epoch();
+            let rb = b.run_epoch();
+            assert_eq!(ra.comm_bytes, rb.comm_bytes, "adaptive comm bytes diverged");
+        }
+        // both schedules re-planned twice (epochs 2 and 4) to one plan
+        assert_eq!(a.adapt.as_ref().unwrap().replans, 2);
+        assert_eq!(b.adapt.as_ref().unwrap().replans, 2);
+        assert_eq!(a.adapt.as_ref().unwrap().plan, b.adapt.as_ref().unwrap().plan);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.w.data, lb.w.data, "W diverged at layer {}", la.index);
+            assert_eq!(la.z.data, lb.z.data, "z diverged at layer {}", la.index);
+            assert_eq!(la.p.data, lb.p.data, "p diverged at layer {}", la.index);
+        }
+    }
+
+    #[test]
+    fn adaptive_comm_never_exceeds_the_fixed_budget_width() {
+        // The budget guarantee: adaptive@4 puts no more bytes on the wire
+        // than fixed pq4, every single epoch (warm-up included), because
+        // the solver reserves the versioned-header overhead up front.
+        let mut fixed = trainer(QuantMode::PQ { bits: 4 }, ScheduleMode::Serial);
+        let mut ada = adaptive_trainer(ScheduleMode::Serial, 2);
+        for e in 0..5 {
+            let rf = fixed.run_epoch();
+            let ra = ada.run_epoch();
+            assert!(
+                ra.comm_bytes <= rf.comm_bytes,
+                "epoch {e}: adaptive {} > fixed pq4 {}",
+                ra.comm_bytes,
+                rf.comm_bytes
+            );
+        }
     }
 
     #[test]

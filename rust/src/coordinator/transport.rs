@@ -44,7 +44,8 @@
 
 use crate::admm::state::LayerState;
 use crate::backend::{ComputeBackend, NativeBackend};
-use crate::config::{BackendKind, DatasetSpec, TrainConfig};
+use crate::config::{BackendKind, DatasetSpec, QuantMode, TrainConfig};
+use crate::coordinator::adapt::AdaptController;
 use crate::coordinator::channel::CommSnapshot;
 use crate::coordinator::phases;
 use crate::coordinator::quant::{self, Codec};
@@ -96,6 +97,14 @@ pub mod frame_kind {
     pub const SHUTDOWN: u8 = 11;
     /// Worker → coordinator: fatal error (utf-8 message).
     pub const ERROR: u8 = 12;
+    /// Worker → coordinator (adaptive runs, before SNAPSHOT): this
+    /// epoch's boundary statistics
+    /// (`count: u32 LE ‖ entries`; see [`crate::coordinator::adapt`]).
+    pub const STATS: u8 = 13;
+    /// Coordinator → worker (adaptive runs, re-plan epochs): the new
+    /// per-layer bit assignment
+    /// ([`crate::coordinator::adapt::QuantPlan::to_payload`]).
+    pub const PLAN: u8 = 14;
 }
 
 /// VAR tag: a p tensor (travels to the owner of layer `l-1`).
@@ -390,6 +399,10 @@ pub struct SocketTransport {
     backend: Arc<dyn ComputeBackend>,
     epoch: usize,
     synced: bool,
+    /// Adaptive-quantization controller (`--quant adaptive` only): merges
+    /// the workers' STATS frames, re-solves on interval epochs, and
+    /// broadcasts the resulting PLAN frame before the next epoch.
+    adapt: Option<AdaptController>,
     /// Evaluate objective/accuracy every epoch (disable for pure timing —
     /// measured epochs add one state upload per worker).
     pub measure: bool,
@@ -524,6 +537,14 @@ impl SocketTransport {
         let threads = crate::tensor::ops::default_threads();
         let ds = datasets::build(spec, hops, threads)?;
         let mirror = phases::build_chain(&ds, &cfg, threads);
+        // same chain, same budget, same solver as every worker process:
+        // the coordinator's initial plan is bitwise the one the workers
+        // derive for themselves from their SETUP frames
+        let adapt = if cfg.quant == QuantMode::Adaptive {
+            Some(AdaptController::new(&mirror, cfg.quant_budget, cfg.adapt_interval)?)
+        } else {
+            None
+        };
         let blocks = block_partition(mirror.len(), conns.len());
         if blocks.len() != conns.len() {
             return Err(anyhow!(
@@ -566,6 +587,7 @@ impl SocketTransport {
             backend: Arc::new(NativeBackend::default()),
             epoch: 0,
             synced: true,
+            adapt,
             measure: true,
         })
     }
@@ -628,12 +650,29 @@ impl SocketTransport {
             }
             phase_ms[ph as usize] = pt.elapsed().as_secs_f64() * 1e3;
         }
-        // epoch end: aggregate the per-worker communication meters
+        // epoch end: aggregate the per-worker communication meters (and,
+        // under adaptive quantization, the per-worker boundary stats —
+        // each worker sends STATS immediately before its SNAPSHOT)
         let mut comm = CommSnapshot::default();
         for conn in &mut self.conns {
             conn.send(frame_kind::EPOCH_END, &[])?;
         }
         for w in 0..self.conns.len() {
+            if self.adapt.is_some() {
+                let (k, payload) = self.conns[w].recv()?;
+                match k {
+                    frame_kind::STATS => {
+                        self.adapt.as_mut().unwrap().absorb_stats_payload(&payload)?
+                    }
+                    frame_kind::ERROR => {
+                        return Err(anyhow!(
+                            "worker {w} failed at epoch end: {}",
+                            String::from_utf8_lossy(&payload)
+                        ));
+                    }
+                    other => return Err(anyhow!("expected STATS from worker {w}, got {other}")),
+                }
+            }
             let (k, payload) = self.conns[w].recv()?;
             match k {
                 frame_kind::SNAPSHOT => comm.add(&parse_snapshot(&payload)?),
@@ -647,6 +686,18 @@ impl SocketTransport {
             }
         }
         self.epoch += 1;
+        // adaptive re-plan barrier, on the identical schedule as the
+        // in-process trainer; on interval epochs every worker receives the
+        // newly solved assignment before its next PHASE frame (frames are
+        // ordered per connection, so the plan is in force for epoch+1)
+        if let Some(a) = self.adapt.as_mut() {
+            if a.end_epoch(self.epoch)? {
+                let payload = a.plan_payload();
+                for conn in &mut self.conns {
+                    conn.send(frame_kind::PLAN, &payload)?;
+                }
+            }
+        }
         let mut rec = EpochRecord {
             epoch: self.epoch,
             epoch_ms: t0.elapsed().as_secs_f64() * 1e3,

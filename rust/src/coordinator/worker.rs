@@ -20,7 +20,8 @@
 use crate::admm::state::{self, LayerState};
 use crate::admm::updates::zlast_lr;
 use crate::backend::{ComputeBackend, NativeBackend};
-use crate::config::{BackendKind, TrainConfig};
+use crate::config::{BackendKind, QuantMode, TrainConfig};
+use crate::coordinator::adapt::{self, AdaptController};
 use crate::coordinator::channel::{CommMeter, Kind};
 use crate::coordinator::phases;
 use crate::coordinator::quant::{self, Codec};
@@ -60,6 +61,7 @@ fn serve(mut conn: Conn) -> Result<()> {
         let (k, payload) = conn.recv().context("waiting for a coordinator frame")?;
         let outcome = match k {
             frame_kind::VAR => st.apply_var(&payload),
+            frame_kind::PLAN => st.apply_plan(&payload),
             frame_kind::PHASE => {
                 if payload.len() != 1 {
                     Err(anyhow!("PHASE frame needs exactly 1 byte"))
@@ -69,8 +71,17 @@ fn serve(mut conn: Conn) -> Result<()> {
                 }
             }
             frame_kind::EPOCH_END => {
-                let snap = st.meter.take();
-                conn.send(frame_kind::SNAPSHOT, &transport::snapshot_payload(&snap))
+                // adaptive runs ship this epoch's boundary stats ahead of
+                // the comm snapshot; the coordinator merges them and (on
+                // interval epochs) answers with a PLAN frame
+                let stats = match st.adapt.as_mut() {
+                    Some(a) => conn.send(frame_kind::STATS, &a.stats_payload()),
+                    None => Ok(()),
+                };
+                stats.and_then(|_| {
+                    let snap = st.meter.take();
+                    conn.send(frame_kind::SNAPSHOT, &transport::snapshot_payload(&snap))
+                })
             }
             frame_kind::EVAL => st
                 .send_state(&mut conn)
@@ -100,6 +111,10 @@ struct WorkerState {
     epoch: usize,
     /// Phase-B cached `W @ p` per owned layer (consumed by phase Z).
     wps: Vec<Option<Mat>>,
+    /// Adaptive-quantization state (`--quant adaptive` only): the live
+    /// per-layer plan (replaced by coordinator PLAN frames) plus this
+    /// block's boundary statistics, shipped at every EPOCH_END.
+    adapt: Option<AdaptController>,
 }
 
 impl WorkerState {
@@ -121,6 +136,14 @@ impl WorkerState {
                 setup.layer_hi
             ));
         }
+        // built from the full (pre-trim) chain, so every process of the
+        // run derives the identical initial plan from identical shapes
+        let adapt = if setup.cfg.quant == QuantMode::Adaptive {
+            let c = &setup.cfg;
+            Some(AdaptController::new(&layers, c.quant_budget, c.adapt_interval)?)
+        } else {
+            None
+        };
         Ok(WorkerState {
             // one compute thread per worker process: model parallelism comes
             // from the processes themselves (numerics are thread-invariant)
@@ -133,7 +156,16 @@ impl WorkerState {
             meter: CommMeter::new(),
             epoch: 0,
             wps: (0..n).map(|_| None).collect(),
+            adapt,
         })
+    }
+
+    /// Replace the live bit assignment from a coordinator PLAN frame.
+    fn apply_plan(&mut self, payload: &[u8]) -> Result<()> {
+        self.adapt
+            .as_mut()
+            .ok_or_else(|| anyhow!("PLAN frame outside adaptive quantization mode"))?
+            .apply_plan_payload(payload)
     }
 
     /// Drop the tensors of non-owned layers — except the neighbor
@@ -171,10 +203,13 @@ impl WorkerState {
         if layer >= self.layers.len() {
             return Err(anyhow!("VAR for unknown layer {layer}"));
         }
+        let plan = self.adapt.as_ref().map(|a| &a.plan);
         let (codec, dst) = match var {
-            transport::VAR_P => (phases::p_codec(&self.cfg), &mut self.layers[layer].p),
+            transport::VAR_P => {
+                (phases::p_codec_at(&self.cfg, plan, layer), &mut self.layers[layer].p)
+            }
             transport::VAR_Q => (
-                phases::q_codec(&self.cfg),
+                phases::q_codec_at(&self.cfg, plan, layer),
                 self.layers[layer].q.get_or_insert_with(|| Mat::zeros(0, 0)),
             ),
             transport::VAR_U => {
@@ -190,6 +225,8 @@ impl WorkerState {
     /// Commit an owned layer's outbound tensor: encode once with the wire
     /// codec, meter the exact wire bytes, adopt the decoded value locally,
     /// and — iff `boundary` — ship the same encoding as a VAR frame.
+    /// Adaptive runs emit the v2 (per-message bit-width) header, exactly
+    /// like the in-process meter, so byte totals match across runtimes.
     #[allow(clippy::too_many_arguments)]
     fn commit_transfer(
         &mut self,
@@ -201,7 +238,11 @@ impl WorkerState {
         value: &Mat,
         boundary: bool,
     ) -> Result<()> {
-        let enc = quant::encode(codec, value);
+        let enc = if self.adapt.is_some() {
+            quant::encode_versioned(codec, value)
+        } else {
+            quant::encode(codec, value)
+        };
         self.meter.record(kind, enc.wire_bytes());
         let dst = match var {
             transport::VAR_P => &mut self.layers[layer].p,
@@ -232,7 +273,6 @@ impl WorkerState {
         let n = self.layers.len();
         match ph {
             0 => {
-                let codec = phases::p_codec(&self.cfg);
                 let mut outs: Vec<(usize, Mat, f32)> = Vec::new();
                 for l in self.lo..self.hi {
                     if l == 0 {
@@ -251,7 +291,17 @@ impl WorkerState {
                     );
                     outs.push((l, cand, tau));
                 }
+                let running_epoch = self.epoch + 1; // incremented after phase U
                 for (l, cand, tau) in outs {
+                    // pre-encode stats feed the coordinator's next re-plan
+                    // (collected only on epochs whose window is read)
+                    if let Some(a) = self.adapt.as_mut() {
+                        if a.wants_stats(running_epoch) {
+                            a.note_p(l, &cand);
+                        }
+                    }
+                    let codec =
+                        phases::p_codec_at(&self.cfg, self.adapt.as_ref().map(|a| &a.plan), l);
                     // p_l travels to the owner of layer l-1; that owner is
                     // another process only at the block boundary.
                     let boundary = l == self.lo;
@@ -311,7 +361,6 @@ impl WorkerState {
                 }
             }
             4 => {
-                let codec = phases::q_codec(&self.cfg);
                 let mut outs: Vec<(usize, Mat)> = Vec::new();
                 for l in self.lo..self.hi {
                     if l + 1 == n {
@@ -326,10 +375,36 @@ impl WorkerState {
                     );
                     outs.push((l, q));
                 }
+                let running_epoch = self.epoch + 1; // incremented after phase U
                 for (l, q) in outs {
+                    if let Some(a) = self.adapt.as_mut() {
+                        if a.wants_stats(running_epoch) {
+                            a.note_q(l, &q);
+                        }
+                    }
+                    let codec =
+                        phases::q_codec_at(&self.cfg, self.adapt.as_ref().map(|a| &a.plan), l);
                     // q_l travels forward to the owner of layer l+1
                     let boundary = l + 1 == self.hi;
                     self.commit_transfer(conn, Kind::Q, transport::VAR_Q, l, codec, &q, boundary)?;
+                }
+                // constraint residuals of the owned boundaries, from the
+                // adopted (decoded) tensors — the same values the
+                // in-process trainer computes, in the same order
+                if let Some(a) = self.adapt.as_mut() {
+                    if a.wants_stats(running_epoch) {
+                        for l in self.lo..self.hi {
+                            if l + 1 == n {
+                                continue;
+                            }
+                            let q = self.layers[l]
+                                .q
+                                .as_ref()
+                                .ok_or_else(|| anyhow!("layer {l} missing q after phase Q"))?;
+                            let r = adapt::boundary_residual_sq(&self.layers[l + 1].p, q);
+                            a.note_residual(l, r);
+                        }
+                    }
                 }
             }
             5 => {

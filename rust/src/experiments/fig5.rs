@@ -13,6 +13,13 @@
 //! `(min, step)` per 512 elements) and pq@2/b512. Block-wise scaling is
 //! what keeps the coarse widths usable on tensors with outlier rows — the
 //! AdaQP-style message quantization the ISSUE/ROADMAP point at.
+//!
+//! The `adaptive` column is the AdaQP-style allocator end to end
+//! ([`crate::coordinator::adapt`]): a 4-bit/element budget spent where
+//! boundary range/variance/residual is high, re-planned every 5 epochs.
+//! Its wire volume is guaranteed ≤ the fixed pq@4 row (the solver reserves
+//! the versioned-header overhead), while the uneven widths track accuracy
+//! closer to pq@8.
 
 use super::{make_backend, ExpOptions};
 use crate::config::{QuantMode, RootConfig, ScheduleMode, TrainConfig};
@@ -24,7 +31,7 @@ use crate::util::fmt_bytes;
 pub const DATASETS: [&str; 3] = ["citeseer", "pubmed", "coauthor-cs"];
 
 /// (mode, block): block = 0 means whole-tensor `(min, step)`.
-pub const CASES: [(QuantMode, u32); 9] = [
+pub const CASES: [(QuantMode, u32); 10] = [
     (QuantMode::None, 0),
     (QuantMode::P { bits: 16 }, 0),
     (QuantMode::P { bits: 8 }, 0),
@@ -33,8 +40,14 @@ pub const CASES: [(QuantMode, u32); 9] = [
     (QuantMode::PQ { bits: 4 }, 0),
     (QuantMode::PQ { bits: 4 }, 512),
     (QuantMode::PQ { bits: 2 }, 512),
+    (QuantMode::Adaptive, 0),
     (QuantMode::IntDelta, 0),
 ];
+
+/// The adaptive column's knobs: a 4-bit/element budget (comparable to the
+/// fixed pq@4 rows) re-planned every 5 epochs.
+pub const ADAPTIVE_BUDGET: f32 = 4.0;
+pub const ADAPTIVE_INTERVAL: usize = 5;
 
 fn case_label(quant: QuantMode, block: u32) -> String {
     if block > 0 {
@@ -60,6 +73,8 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
             tc.rho = 1.0;
             tc.quant = quant;
             tc.quant_block = block;
+            tc.quant_budget = ADAPTIVE_BUDGET;
+            tc.adapt_interval = ADAPTIVE_INTERVAL;
             tc.schedule = ScheduleMode::Parallel;
             let mut trainer = Trainer::new(backend, ds.clone(), tc);
             let log = trainer.run();

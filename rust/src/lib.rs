@@ -33,6 +33,14 @@
 //! block-wise `(min, step)` scaling; `--stochastic` selects unbiased
 //! stochastic rounding for the convergence experiments.
 //!
+//! `--quant adaptive` goes beyond the paper's fixed widths: every p/q
+//! boundary gets its own 1–16-bit width under a `--quant-budget`
+//! bits-per-element target, re-planned every `--adapt-interval` epochs
+//! from per-layer boundary statistics ([`coordinator::adapt`]); messages
+//! then carry their width in the v2 wire header. With an integral budget
+//! `b ≥ 2` the epoch wire volume is guaranteed ≤ fixed `pq<b>`'s, and the
+//! plan is identical across all three schedules.
+//!
 //! # Execution model — three schedules, one set of kernels
 //!
 //! Algorithm 1's six phases (P, W, B, Z, Q, U) always execute the

@@ -132,10 +132,25 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
              format has no block-wise stochastic variant (pick one)"
         ));
     }
-    if (tc.quant_stochastic || tc.quant_block > 0) && tc.quant.bits().is_none() {
+    let uniform_family = tc.quant.bits().is_some() || tc.quant == QuantMode::Adaptive;
+    if (tc.quant_stochastic || tc.quant_block > 0) && !uniform_family {
         return Err(anyhow::anyhow!(
-            "--stochastic/--quant-block only apply to the p/pq uniform modes, \
-             not {:?}",
+            "--stochastic/--quant-block only apply to the p/pq uniform modes \
+             and adaptive, not {:?}",
+            tc.quant.label()
+        ));
+    }
+    // Adaptive allocation knobs, validated up front like every other
+    // quantization flag (the same rules gate the distributed SETUP frame).
+    tc.quant_budget = args.flags.get_or("quant-budget", 4.0f32)?;
+    tc.adapt_interval = args.flags.get_or("adapt-interval", 5usize)?;
+    if tc.quant == QuantMode::Adaptive {
+        pdadmm_g::config::check_adaptive_config(tc.quant_budget, tc.adapt_interval)?;
+    } else if args.flags.get("quant-budget").is_some()
+        || args.flags.get("adapt-interval").is_some()
+    {
+        return Err(anyhow::anyhow!(
+            "--quant-budget/--adapt-interval only apply to --quant adaptive, not {:?}",
             tc.quant.label()
         ));
     }

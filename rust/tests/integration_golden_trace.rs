@@ -1,10 +1,12 @@
-//! Golden-trace regression: a fixed-seed 5-epoch training run on the tiny
+//! Golden-trace regression: fixed-seed 5-epoch training runs on the tiny
 //! SBM benchmark, pinned bit-for-bit (f64 bit patterns of the objective /
 //! residual plus the metered byte totals), so future refactors cannot
-//! silently change numerics. See `tests/golden/README.md` for the bless
-//! workflow: writing the golden file requires an **explicit**
-//! `PDADMM_BLESS=1` — a missing file is a hard failure in CI (never
-//! silently self-blessed) and a loud skip locally.
+//! silently change numerics. Two traces are pinned: the block-wise pq4
+//! codec path and the adaptive (`--quant adaptive`) path including a
+//! mid-run re-plan. See `tests/golden/README.md` for the bless workflow:
+//! writing the golden files requires an **explicit** `PDADMM_BLESS=1` — a
+//! missing file is a hard failure in CI (never silently self-blessed) and
+//! a loud skip locally.
 
 use pdadmm_g::backend::NativeBackend;
 use pdadmm_g::config::{
@@ -17,8 +19,8 @@ use std::sync::Arc;
 
 const EPOCHS: usize = 5;
 
-fn golden_path() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/tiny_sbm_trace.csv")
+fn golden_path(file: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(file)
 }
 
 /// One epoch's pinned quantities.
@@ -29,7 +31,7 @@ struct TracePoint {
     comm_bytes: u64,
 }
 
-fn run_trace(schedule: ScheduleMode) -> Vec<TracePoint> {
+fn run_trace(schedule: ScheduleMode, adaptive: bool) -> Vec<TracePoint> {
     let spec = DatasetSpec::Synthetic(SyntheticSpec {
         name: "tiny-golden".into(),
         nodes: 90,
@@ -51,9 +53,18 @@ fn run_trace(schedule: ScheduleMode) -> Vec<TracePoint> {
     tc.seed = 3;
     tc.schedule = schedule;
     tc.backend = BackendKind::Native;
-    // exercise the codec path the paper's Fig. 5 meters: block-wise pq4
-    tc.quant = QuantMode::PQ { bits: 4 };
-    tc.quant_block = 64;
+    if adaptive {
+        // the adaptive comm path end to end: budget 4 bits/elt, re-plans
+        // after epochs 2 and 4, so the pinned trace crosses two PLAN
+        // solves and three distinct width assignments
+        tc.quant = QuantMode::Adaptive;
+        tc.quant_budget = 4.0;
+        tc.adapt_interval = 2;
+    } else {
+        // exercise the codec path the paper's Fig. 5 meters: block-wise pq4
+        tc.quant = QuantMode::PQ { bits: 4 };
+        tc.quant_block = 64;
+    }
     let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc);
     (0..EPOCHS)
         .map(|_| {
@@ -67,10 +78,10 @@ fn run_trace(schedule: ScheduleMode) -> Vec<TracePoint> {
         .collect()
 }
 
-fn render(trace: &[TracePoint]) -> String {
-    let mut out = String::from(
-        "# golden trace: tiny SBM (90 nodes, K=2), L=3 h=10, pq4-b64, nu=0.01 rho=1.0, seed 3\n\
-         # f64 bit patterns in hex; regenerate by deleting this file and rerunning the test\n\
+fn render(header: &str, trace: &[TracePoint]) -> String {
+    let mut out = format!(
+        "# golden trace: {header}\n\
+         # f64 bit patterns in hex; regenerate with PDADMM_BLESS=1 (see tests/golden/README.md)\n\
          epoch,objective_bits,residual_bits,comm_bytes\n",
     );
     for (e, p) in trace.iter().enumerate() {
@@ -85,17 +96,18 @@ fn render(trace: &[TracePoint]) -> String {
     out
 }
 
-#[test]
-fn golden_trace_replay_is_bitwise_stable() {
-    let a = run_trace(ScheduleMode::Serial);
-    let b = run_trace(ScheduleMode::Serial);
+/// Shared harness: replay determinism + serial↔pool parity always; then
+/// bless (explicit only) or compare the committed golden file.
+fn check_golden(file: &str, header: &str, adaptive: bool) {
+    let a = run_trace(ScheduleMode::Serial, adaptive);
+    let b = run_trace(ScheduleMode::Serial, adaptive);
     assert_eq!(a, b, "same-process replay must be deterministic");
     // the pooled schedule replays the identical trace (schedule parity)
-    let c = run_trace(ScheduleMode::Parallel);
+    let c = run_trace(ScheduleMode::Parallel, adaptive);
     assert_eq!(a, c, "pooled schedule must replay the serial trace bitwise");
 
-    let path = golden_path();
-    let rendered = render(&a);
+    let path = golden_path(file);
+    let rendered = render(header, &a);
     let blessing = std::env::var("PDADMM_BLESS").map(|v| v == "1").unwrap_or(false);
     if blessing {
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
@@ -131,5 +143,24 @@ fn golden_trace_replay_is_bitwise_stable() {
          numeric change is intentional, re-bless with PDADMM_BLESS=1 and \
          commit the regenerated trace",
         path.display()
+    );
+}
+
+#[test]
+fn golden_trace_replay_is_bitwise_stable() {
+    check_golden(
+        "tiny_sbm_trace.csv",
+        "tiny SBM (90 nodes, K=2), L=3 h=10, pq4-b64, nu=0.01 rho=1.0, seed 3",
+        false,
+    );
+}
+
+#[test]
+fn adaptive_golden_trace_replay_is_bitwise_stable() {
+    check_golden(
+        "tiny_sbm_adaptive_trace.csv",
+        "tiny SBM (90 nodes, K=2), L=3 h=10, adaptive budget=4.0 interval=2, \
+         nu=0.01 rho=1.0, seed 3",
+        true,
     );
 }

@@ -47,6 +47,10 @@ fn base_cfg(quant: QuantMode, block: u32, stochastic: bool, seed: u64) -> TrainC
     tc.quant = quant;
     tc.quant_block = block;
     tc.quant_stochastic = stochastic;
+    // adaptive runs re-plan after epoch 2, so the 3-epoch parity window
+    // spans a mid-run PLAN broadcast (fixed modes ignore these fields)
+    tc.quant_budget = 4.0;
+    tc.adapt_interval = 2;
     tc.seed = seed;
     tc.backend = BackendKind::Native;
     tc
@@ -172,6 +176,27 @@ fn parity_stochastic() {
     parity_case(QuantMode::PQ { bits: 8 }, 0, true);
 }
 
+/// Adaptive quantization across all three schedules: identical records,
+/// identical comm bytes (the v2 per-message headers included) and
+/// bit-identical final state over 2 seeds — with `adapt_interval = 2` the
+/// 3-epoch window contains a mid-run re-plan, so epoch 3 runs under a
+/// solved (non-prior) plan that distributed workers received as a PLAN
+/// frame while the in-process schedules solved it locally.
+#[test]
+fn parity_adaptive() {
+    parity_case(QuantMode::Adaptive, 0, false);
+}
+
+/// Adaptive allocation composes with block-wise `(min, step)` scaling:
+/// the planned per-layer widths ride the BlockUniform wire format.
+#[test]
+fn parity_adaptive_blockwise() {
+    let cfg = base_cfg(QuantMode::Adaptive, 128, false, 7);
+    let (serial, _) = run_inproc(&cfg, ScheduleMode::Serial);
+    let (dist, _) = run_distributed(&cfg, 2);
+    assert_records_identical("adaptive/b128 x2 workers", &serial, &dist);
+}
+
 /// A distributed run with more workers than the 2-process parity cases:
 /// one process per layer, byte totals still identical to serial.
 #[test]
@@ -213,8 +238,8 @@ fn transport_trait_drives_both_runtimes() {
 }
 
 /// CI's distributed-loopback smoke (2 workers, 2 epochs on the cora-scale
-/// benchmark), gated like `PDADMM_BENCH_QUICK`: set `PDADMM_DIST_SMOKE=1`
-/// to run it.
+/// benchmark, fixed pq4 then `--quant adaptive` with an epoch-2 re-plan),
+/// gated like `PDADMM_BENCH_QUICK`: set `PDADMM_DIST_SMOKE=1` to run it.
 #[test]
 fn distributed_loopback_smoke() {
     if std::env::var("PDADMM_DIST_SMOKE").is_err() {
@@ -223,20 +248,24 @@ fn distributed_loopback_smoke() {
     }
     let root = pdadmm_g::config::RootConfig::load_default().expect("repo config");
     let spec = root.dataset("cora").expect("cora spec").clone();
-    let mut tc = TrainConfig::new("cora", 32, 4, 2);
-    tc.nu = 0.01;
-    tc.rho = 1.0;
-    tc.backend = BackendKind::Native;
-    tc.quant = QuantMode::PQ { bits: 4 };
-    let mut tr = SocketTransport::spawn(&spec, root.hops, tc, 2, spawn_test_worker)
-        .expect("spawn smoke transport");
-    let mut last = None;
-    for _ in 0..2 {
-        last = Some(tr.run_epoch().expect("smoke epoch"));
+    for quant in [QuantMode::PQ { bits: 4 }, QuantMode::Adaptive] {
+        let mut tc = TrainConfig::new("cora", 32, 4, 2);
+        tc.nu = 0.01;
+        tc.rho = 1.0;
+        tc.backend = BackendKind::Native;
+        tc.quant = quant;
+        tc.quant_budget = 4.0;
+        tc.adapt_interval = 1; // epoch 2 runs under a freshly solved plan
+        let mut tr = SocketTransport::spawn(&spec, root.hops, tc, 2, spawn_test_worker)
+            .expect("spawn smoke transport");
+        let mut last = None;
+        for _ in 0..2 {
+            last = Some(tr.run_epoch().expect("smoke epoch"));
+        }
+        let rec = last.unwrap();
+        assert!(rec.objective.is_finite(), "{quant:?}: objective {}", rec.objective);
+        assert!(rec.comm_bytes > 0, "{quant:?}");
+        assert_eq!(tr.workers(), 2);
+        tr.shutdown().expect("smoke shutdown");
     }
-    let rec = last.unwrap();
-    assert!(rec.objective.is_finite(), "objective {}", rec.objective);
-    assert!(rec.comm_bytes > 0);
-    assert_eq!(tr.workers(), 2);
-    tr.shutdown().expect("smoke shutdown");
 }

@@ -1,0 +1,266 @@
+//! Property suite for the adaptive bit-allocation solver
+//! (`coordinator::adapt`): budget safety, pinned determinism, error-bound
+//! monotonicity, and clean degenerate-input handling — the invariants the
+//! schedule-parity guarantee leans on.
+
+use pdadmm_g::coordinator::adapt::{
+    self, err_bound, solve_bits, AdaptController, BoundaryInput, BoundaryKind, BoundaryStats,
+    QuantPlan, MAX_BITS, MIN_BITS, RESERVE_BITS_PER_BOUNDARY,
+};
+use pdadmm_g::coordinator::quant::Codec;
+use pdadmm_g::prop_assert;
+use pdadmm_g::tensor::matrix::Mat;
+use pdadmm_g::tensor::rng::Pcg32;
+use pdadmm_g::util::prop::Prop;
+
+fn stats(n: u64, range: f32, var: f64, residual: f64) -> BoundaryStats {
+    BoundaryStats { n, lo: 0.0, hi: range, mean: range as f64 / 2.0, var, residual }
+}
+
+/// A random but valid boundary set: `2..=size+2` boundaries with varied
+/// element counts, ranges, variances and residuals.
+fn random_boundaries(rng: &mut Pcg32, size: usize) -> Vec<BoundaryInput> {
+    let count = 2 + size.min(14);
+    (0..count)
+        .map(|i| {
+            let n = 50 + rng.below(5000) as u64;
+            let range = 0.01 + rng.next_f32() * 20.0;
+            let var = rng.next_f32() as f64 * 4.0;
+            let residual = rng.next_f32() as f64 * n as f64;
+            let (kind, layer) =
+                if i % 2 == 0 { (BoundaryKind::P, 1 + i / 2) } else { (BoundaryKind::Q, i / 2) };
+            BoundaryInput { kind, layer, stats: stats(n, range, var, residual) }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_total_bits_never_exceed_budget() {
+    Prop::default().check("allocation stays under the budget", |rng, size| {
+        let boundaries = random_boundaries(rng, size);
+        let budget = 1.0 + rng.next_f32() as f64 * 11.0;
+        let bits = solve_bits(&boundaries, budget).map_err(|e| e.to_string())?;
+        prop_assert!(bits.len() == boundaries.len(), "one width per boundary");
+        for &b in &bits {
+            prop_assert!((MIN_BITS..=MAX_BITS).contains(&b), "width {b} out of range");
+        }
+        let n_total: u64 = boundaries.iter().map(|b| b.stats.n).sum();
+        let spent: u64 = boundaries.iter().zip(&bits).map(|(b, &w)| b.stats.n * w as u64).sum();
+        let ceiling = (budget * n_total as f64).floor() as u64;
+        prop_assert!(
+            spent <= ceiling,
+            "spent {spent} bits over the {ceiling}-bit budget ({budget} bits/elt, N={n_total})"
+        );
+        // the exact enforced invariant: the wire-overhead reservation is
+        // carved out of the headroom, never out of the 1-bit floor
+        let reserve = RESERVE_BITS_PER_BOUNDARY * boundaries.len() as u64;
+        let tight = std::cmp::max(n_total, ceiling.saturating_sub(reserve));
+        prop_assert!(spent <= tight, "spent {spent} bits over the reserved ceiling {tight}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_integral_budgets_beat_fixed_width_wire_bytes() {
+    // The physical guarantee the docs state: for an integral budget
+    // b >= 2, a planned epoch — v2 version bytes and payload rounding
+    // included — costs no more wire bytes than the fixed pq<b> codec.
+    Prop::default().check("adaptive epoch <= fixed pq<b> epoch", |rng, size| {
+        let boundaries = random_boundaries(rng, size);
+        let b = 2 + rng.below(7) as u8; // integral budgets 2..=8
+        let bits = solve_bits(&boundaries, b as f64).map_err(|e| e.to_string())?;
+        let message = |n: u64, w: u8, versioned: bool| -> u64 {
+            Codec::Uniform { bits: w }.wire_bytes_for(n as usize) + versioned as u64
+        };
+        let adaptive: u64 =
+            boundaries.iter().zip(&bits).map(|(bd, &w)| message(bd.stats.n, w, true)).sum();
+        let fixed: u64 = boundaries.iter().map(|bd| message(bd.stats.n, b, false)).sum();
+        prop_assert!(
+            adaptive <= fixed,
+            "budget {b}: adaptive epoch {adaptive} B > fixed pq{b} {fixed} B ({bits:?})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_assignment_is_deterministic_with_pinned_ties() {
+    Prop::default().check("equal inputs, equal (and tie-pinned) outputs", |rng, size| {
+        let boundaries = random_boundaries(rng, size);
+        let budget = 1.5 + rng.next_f32() as f64 * 8.0;
+        let a = solve_bits(&boundaries, budget).map_err(|e| e.to_string())?;
+        let b = solve_bits(&boundaries, budget).map_err(|e| e.to_string())?;
+        prop_assert!(a == b, "same input solved twice diverged: {a:?} vs {b:?}");
+        // fully identical stats: ties must break toward earlier boundaries,
+        // so widths are non-increasing in canonical order
+        let n = boundaries[0].stats.n;
+        let equal: Vec<BoundaryInput> = boundaries
+            .iter()
+            .map(|bd| BoundaryInput { stats: stats(n, 1.0, 1.0, 0.0), ..*bd })
+            .collect();
+        let tie = solve_bits(&equal, budget).map_err(|e| e.to_string())?;
+        for w in tie.windows(2) {
+            prop_assert!(
+                w[0] >= w[1],
+                "pinned tie-break must favor earlier boundaries, got {tie:?}"
+            );
+        }
+        prop_assert!(
+            tie == solve_bits(&equal, budget).map_err(|e| e.to_string())?,
+            "tie case not deterministic"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_error_bound_monotone_in_allocated_bits() {
+    Prop::default().check("err_bound(b+1) <= err_bound(b)", |rng, size| {
+        let boundaries = random_boundaries(rng, size);
+        for bd in &boundaries {
+            for b in MIN_BITS..MAX_BITS {
+                let e0 = err_bound(&bd.stats, b);
+                let e1 = err_bound(&bd.stats, b + 1);
+                prop_assert!(
+                    e1 <= e0 && e0.is_finite() && e1 >= 0.0,
+                    "err bound not monotone at {b} bits: {e0} -> {e1} ({:?})",
+                    bd.stats
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn degenerate_inputs_error_cleanly_instead_of_panicking() {
+    // 0 boundaries (a 0/1-layer model has no p/q messages)
+    assert!(solve_bits(&[], 4.0).is_err());
+    // budget below 1 bit/element cannot cover the minimum width
+    let one = vec![BoundaryInput {
+        kind: BoundaryKind::P,
+        layer: 1,
+        stats: stats(1000, 2.0, 1.0, 0.0),
+    }];
+    assert!(solve_bits(&one, 0.5).is_err());
+    assert!(solve_bits(&one, 0.999).is_err());
+    assert!(solve_bits(&one, f64::NAN).is_err());
+    assert!(solve_bits(&one, -4.0).is_err());
+    // zero-sized and non-finite boundaries are rejected, not divided by
+    let zero_n = vec![BoundaryInput {
+        kind: BoundaryKind::P,
+        layer: 1,
+        stats: stats(0, 1.0, 1.0, 0.0),
+    }];
+    assert!(solve_bits(&zero_n, 4.0).is_err());
+    let bad = vec![BoundaryInput {
+        kind: BoundaryKind::P,
+        layer: 1,
+        stats: BoundaryStats { n: 10, lo: 0.0, hi: f32::NAN, mean: 0.0, var: 1.0, residual: 0.0 },
+    }];
+    assert!(solve_bits(&bad, 4.0).is_err());
+    let neg_var = vec![BoundaryInput {
+        kind: BoundaryKind::P,
+        layer: 1,
+        stats: BoundaryStats { n: 10, lo: 0.0, hi: 1.0, mean: 0.0, var: -1.0, residual: 0.0 },
+    }];
+    assert!(solve_bits(&neg_var, 4.0).is_err());
+}
+
+#[test]
+fn all_constant_boundaries_settle_at_the_minimum_width() {
+    // range 0: one bit already round-trips the constant exactly, so the
+    // solver must neither panic (no 0/0 in the gain) nor waste budget.
+    let boundaries: Vec<BoundaryInput> = (1..4)
+        .map(|l| BoundaryInput {
+            kind: BoundaryKind::P,
+            layer: l,
+            stats: stats(500, 0.0, 0.0, 0.0),
+        })
+        .collect();
+    let bits = solve_bits(&boundaries, 8.0).unwrap();
+    assert_eq!(bits, vec![MIN_BITS; 3]);
+    for bd in &boundaries {
+        assert_eq!(err_bound(&bd.stats, MIN_BITS), 0.0);
+    }
+    // a single hot boundary among constants takes the whole headroom
+    let mut mixed = boundaries.clone();
+    mixed[1].stats = stats(500, 10.0, 4.0, 50.0);
+    let bits = solve_bits(&mixed, 4.0).unwrap();
+    assert_eq!(bits[0], MIN_BITS);
+    assert_eq!(bits[2], MIN_BITS);
+    assert!(bits[1] > 4, "hot boundary should absorb the constant ones' budget: {bits:?}");
+}
+
+#[test]
+fn prop_assignment_is_scale_invariant() {
+    // Scaling every boundary range by a power of two multiplies every
+    // greedy gain by exactly the same f64 factor, so the grant sequence —
+    // ties included — must be identical. A schedule-parity safety net: the
+    // plan depends on the *relative* boundary statistics only.
+    Prop::default().check("uniform range scaling preserves the plan", |rng, size| {
+        let boundaries = random_boundaries(rng, size);
+        let budget = 1.5 + rng.next_f32() as f64 * 8.0;
+        let base = solve_bits(&boundaries, budget).map_err(|e| e.to_string())?;
+        let scaled: Vec<BoundaryInput> = boundaries
+            .iter()
+            .map(|bd| {
+                let mut s = bd.stats;
+                s.lo *= 4.0;
+                s.hi *= 4.0;
+                BoundaryInput { stats: s, ..*bd }
+            })
+            .collect();
+        let plan = solve_bits(&scaled, budget).map_err(|e| e.to_string())?;
+        prop_assert!(plan == base, "range scaling changed the plan: {base:?} -> {plan:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_payload_round_trips_and_rejects_corruption() {
+    let plan = QuantPlan { p_bits: vec![0, 6, 3, 8], q_bits: vec![5, 2, 16, 0] };
+    let payload = plan.to_payload();
+    assert_eq!(QuantPlan::from_payload(&payload).unwrap(), plan);
+    // unknown version
+    let mut bad = payload.clone();
+    bad[0] = 9;
+    assert!(QuantPlan::from_payload(&bad).is_err());
+    // truncation and trailing garbage
+    assert!(QuantPlan::from_payload(&payload[..payload.len() - 1]).is_err());
+    let mut long = payload.clone();
+    long.push(0);
+    assert!(QuantPlan::from_payload(&long).is_err());
+    // out-of-range widths and misplaced zeros
+    let mut wide = payload.clone();
+    wide[6] = 17; // p_bits[1]
+    assert!(QuantPlan::from_payload(&wide).is_err());
+    let mut hole = payload.clone();
+    hole[7] = 0; // p_bits[2] must be active
+    assert!(QuantPlan::from_payload(&hole).is_err());
+    assert!(QuantPlan::from_payload(&[]).is_err());
+}
+
+#[test]
+fn controller_window_requires_complete_stats() {
+    // A re-plan with a missing boundary is a protocol error, not a panic —
+    // the distributed coordinator surfaces it instead of silently solving
+    // from half the chain.
+    let mut rng = Pcg32::seeded(3);
+    let x = Mat::randn(6, 30, 1.0, &mut rng);
+    let layers = pdadmm_g::admm::state::init_chain(&[6, 5, 5, 3], &x, 7, 0.4, 1);
+    let mut c = AdaptController::new(&layers, 4.0, 1).unwrap();
+    c.note_p(1, &layers[1].p); // only one of the six boundaries
+    assert!(c.end_epoch(1).is_err());
+    // a complete window solves fine
+    let mut c = AdaptController::new(&layers, 4.0, 1).unwrap();
+    for l in 1..layers.len() {
+        c.note_p(l, &layers[l].p);
+    }
+    for l in 0..layers.len() - 1 {
+        let q = layers[l].q.as_ref().unwrap();
+        c.note_q(l, q);
+        c.note_residual(l, adapt::boundary_residual_sq(&layers[l + 1].p, q));
+    }
+    assert!(c.end_epoch(1).unwrap());
+}
