@@ -81,6 +81,49 @@ fn main() {
         b.note_throughput((m.len() * 4) as u64);
     }
 
+    // fused quantization epilogue: the producer hands over the range it
+    // folded while writing the tensor, so the encoder skips its
+    // whole-tensor scan. Bitwise-identical payloads by construction.
+    b.group(&format!("fused-range encode (epilogue) vs cold encode, {h}x{v}"));
+    let range = quant::RangeStats::of(&m.data);
+    for codec in [Codec::Uniform { bits: 8 }, Codec::Uniform { bits: 4 }] {
+        let mut scratch = Encoded::empty();
+        b.bench(&format!("{} fused", codec.label()), || {
+            quant::encode_hot_into(codec, false, &m, Some(&range), &mut scratch);
+            std::hint::black_box(&scratch);
+        });
+        b.note_throughput((m.len() * 4) as u64);
+        b.bench(&format!("{} cold", codec.label()), || {
+            quant::encode_into(codec, &m, &mut scratch);
+            std::hint::black_box(&scratch);
+        });
+        b.note_throughput((m.len() * 4) as u64);
+        let mut hot = Encoded::empty();
+        let mut cold = Encoded::empty();
+        quant::encode_hot_into(codec, false, &m, Some(&range), &mut hot);
+        quant::encode_into(codec, &m, &mut cold);
+        assert_eq!(hot.to_wire(), cold.to_wire(), "fused encode diverged: {codec:?}");
+    }
+
+    // the streaming producer form: rows are generated, range-folded and
+    // encoded in one pass (what a matmul epilogue sees).
+    b.group(&format!("encode_rows_into (streaming produce+encode), {h}x{v}"));
+    let mut out = Mat::zeros(1, 1);
+    let mut scratch = Encoded::empty();
+    b.bench("uniform8 streamed", || {
+        quant::encode_rows_into(
+            Codec::Uniform { bits: 8 },
+            false,
+            h,
+            v,
+            |i, row| row.copy_from_slice(&m.data[i * v..(i + 1) * v]),
+            &mut out,
+            &mut scratch,
+        );
+        std::hint::black_box(&scratch);
+    });
+    b.note_throughput((m.len() * 4) as u64);
+
     // the adaptive wire form: v2 (per-message bit-width) header round-trip
     // must not cost measurable throughput over the legacy layout.
     b.group(&format!("versioned (v2) header round-trip, {h}x{v}"));

@@ -1,45 +1,143 @@
-//! Matmul kernel benchmarks: the native backend's hot loops at the layer
-//! shapes of the experiment suite, plus thread-scaling of the blocked
-//! kernel. (§Perf L3 / native-roofline reference.)
+//! Matmul kernel benchmarks + the recorded bench trajectory.
+//!
+//! Measures the blocked GEMM (all three orientations), its thread scaling,
+//! the fused linear/residual epilogues, and the fused quantization-encode
+//! epilogue, then writes a machine-readable `BENCH_kernels.json` snapshot
+//! (shapes, GFLOP/s, GB/s, host info) and gates on regression:
+//!
+//! * hard floor — blocked f32 GEMM must beat the naive triple-loop f64
+//!   reference by >= 4x on 512^3 (>= 2.5x in quick mode, where budgets are
+//!   too small for stable medians);
+//! * baseline — the blocked/naive ratio must stay within 20% (50% quick) of
+//!   the committed `BENCH_kernels.json`. The ratio is machine-normalized:
+//!   both kernels run on the same host, so CI hardware variance cancels.
+//!
+//! `PDADMM_BENCH_QUICK=1` shrinks budgets (CI smoke); `PDADMM_BENCH_OUT`
+//! redirects the JSON snapshot (CI writes an artifact copy instead of
+//! touching the committed baseline). Refresh the baseline in place with
+//! plain `cargo bench --bench tensor_ops`.
 
+use pdadmm_g::coordinator::quant::{self, Codec, Encoded, RangeStats};
 use pdadmm_g::tensor::matrix::Mat;
 use pdadmm_g::tensor::ops;
 use pdadmm_g::tensor::rng::Pcg32;
 use pdadmm_g::util::bench::Bencher;
+use pdadmm_g::util::json::{self, Json};
+use std::path::PathBuf;
+
+/// The pre-rewrite reference kernel: naive triple loop, f64 accumulation,
+/// no blocking, no SIMD-friendly layout. Both the NaN-correctness tests and
+/// the speedup denominator measure against this.
+fn naive_matmul_f64(a: &Mat, b: &Mat, out: &mut Mat) {
+    let (m, k) = a.shape();
+    let n = b.cols;
+    for i in 0..m {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for (kk, &av) in arow.iter().enumerate().take(k) {
+                acc += av as f64 * b.data[kk * n + j] as f64;
+            }
+            *o = acc as f32;
+        }
+    }
+}
+
+fn repo_file(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}
 
 fn main() {
+    let quick = std::env::var("PDADMM_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let budget = if quick { 80 } else { 900 };
     let mut rng = Pcg32::seeded(1);
-    let mut b = Bencher::with_budget(800);
+    let mut b = Bencher::with_budget(budget);
+    let mut gemm_records: Vec<Json> = Vec::new();
+    let mut record = |name: &str, m: usize, k: usize, n: usize, t: usize, gflops: f64| {
+        gemm_records.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("n", Json::num(n as f64)),
+            ("threads", Json::num(t as f64)),
+            ("gflops", Json::num(gflops)),
+        ]));
+    };
 
+    // ---- the acceptance pair: naive f64 reference vs blocked, 512^3 ----
+    let s = 512usize;
+    let a = Mat::randn(s, s, 1.0, &mut rng);
+    let x = Mat::randn(s, s, 1.0, &mut rng);
+    let flops512 = 2.0 * (s as f64).powi(3);
+    b.group("512^3: naive f64 reference vs blocked kernel");
+    let mut scratch = Mat::zeros(s, s);
+    let naive_gflops = {
+        let res = b.bench("naive f64 triple loop", || {
+            naive_matmul_f64(&a, &x, &mut scratch);
+            std::hint::black_box(&scratch);
+        });
+        res.gflops(flops512)
+    };
+    b.note_gflops(flops512);
+    let blocked_gflops = {
+        let res = b.bench("blocked matmul t1", || {
+            std::hint::black_box(ops::matmul(&a, &x, 1));
+        });
+        res.gflops(flops512)
+    };
+    b.note_gflops(flops512);
+    record("naive_f64", s, s, s, 1, naive_gflops);
+    record("matmul", s, s, s, 1, blocked_gflops);
+    let orients: [(&str, fn(&Mat, &Mat, usize) -> Mat); 2] =
+        [("matmul_nt", ops::matmul_nt), ("matmul_tn", ops::matmul_tn)];
+    for (name, f) in orients {
+        let res = b.bench(&format!("blocked {name} t1"), || {
+            std::hint::black_box(f(&a, &x, 1));
+        });
+        let g = res.gflops(flops512);
+        b.note_gflops(flops512);
+        record(name, s, s, s, 1, g);
+    }
+
+    // ---- the per-layer hot shapes of the experiment suite ----
     b.group("matmul A(h,h) @ B(h,V) — the per-layer hot shape");
-    for (h, v) in [(100usize, 2000usize), (256, 2000), (512, 3600)] {
+    let shapes: &[(usize, usize)] =
+        if quick { &[(256, 2000)] } else { &[(100, 2000), (256, 2000), (512, 3600)] };
+    for &(h, v) in shapes {
         let a = Mat::randn(h, h, 1.0, &mut rng);
         let x = Mat::randn(h, v, 1.0, &mut rng);
         let flops = 2.0 * h as f64 * h as f64 * v as f64;
         for t in [1usize, 4] {
-            b.bench(&format!("matmul {h}x{h}x{v} t{t}"), || {
+            let res = b.bench(&format!("matmul {h}x{h}x{v} t{t}"), || {
                 std::hint::black_box(ops::matmul(&a, &x, t));
             });
+            let g = res.gflops(flops);
             b.note_gflops(flops);
+            record("matmul", h, h, v, t, g);
         }
     }
 
-    b.group("gradient matmuls (r p^T and W^T r)");
-    let h = 256;
-    let v = 2000;
-    let r = Mat::randn(h, v, 1.0, &mut rng);
-    let p = Mat::randn(h, v, 1.0, &mut rng);
-    let w = Mat::randn(h, h, 1.0, &mut rng);
-    b.bench("matmul_nt r@p^T 256x2000", || {
-        std::hint::black_box(ops::matmul_nt(&r, &p, 1));
-    });
-    b.note_gflops(2.0 * h as f64 * h as f64 * v as f64);
-    b.bench("matmul_tn W^T@r 256x2000", || {
-        std::hint::black_box(ops::matmul_tn(&w, &r, 1));
-    });
-    b.note_gflops(2.0 * h as f64 * h as f64 * v as f64);
+    // ---- thread scaling through the persistent intra-op pool ----
+    b.group("thread scaling, 512x512x3600 (persistent pool dispatch)");
+    let a = Mat::randn(512, 512, 1.0, &mut rng);
+    let x = Mat::randn(512, 3600, 1.0, &mut rng);
+    let flops = 2.0 * 512.0 * 512.0 * 3600.0;
+    let threads: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8, 16] };
+    for &t in threads {
+        let res = b.bench(&format!("matmul t{t}"), || {
+            std::hint::black_box(ops::matmul(&a, &x, t));
+        });
+        let g = res.gflops(flops);
+        b.note_gflops(flops);
+        record("matmul", 512, 512, 3600, t, g);
+    }
 
+    // ---- fused linear/residual epilogues ----
     b.group("fused epilogues (linear / residual vs unfused)");
+    let (h, v) = (256usize, 2000usize);
+    let w = Mat::randn(h, h, 1.0, &mut rng);
+    let p = Mat::randn(h, v, 1.0, &mut rng);
     let bb = Mat::randn(h, 1, 1.0, &mut rng);
     let z = Mat::randn(h, v, 1.0, &mut rng);
     b.bench("linear fused", || {
@@ -53,13 +151,109 @@ fn main() {
         std::hint::black_box(z.sub(&m));
     });
 
-    b.group("thread scaling, 512x512x3600");
-    let a = Mat::randn(512, 512, 1.0, &mut rng);
-    let x = Mat::randn(512, 3600, 1.0, &mut rng);
-    for t in [1usize, 2, 4, 8, 16] {
-        b.bench(&format!("matmul t{t}"), || {
-            std::hint::black_box(ops::matmul(&a, &x, t));
-        });
-        b.note_gflops(2.0 * 512.0 * 512.0 * 3600.0);
+    // ---- fused quantization-encode epilogue: range fold skips a scan ----
+    b.group(&format!("boundary encode {h}x{v}: prefolded range vs cold scan"));
+    let m = Mat::randn(h, v, 2.0, &mut rng);
+    let raw_bytes = (m.len() * 4) as u64;
+    let range = RangeStats::of(&m.data);
+    let mut encode_records: Vec<Json> = Vec::new();
+    for codec in
+        [Codec::Uniform { bits: 8 }, Codec::Uniform { bits: 4 }, Codec::Stochastic { bits: 8 }]
+    {
+        let mut enc = Encoded::empty();
+        let fused = {
+            let res = b.bench(&format!("{} fused", codec.label()), || {
+                quant::encode_hot_into(codec, false, &m, Some(&range), &mut enc);
+                std::hint::black_box(&enc);
+            });
+            res.gbps(raw_bytes)
+        };
+        b.note_throughput(raw_bytes);
+        let unfused = {
+            let res = b.bench(&format!("{} cold", codec.label()), || {
+                quant::encode_into(codec, &m, &mut enc);
+                std::hint::black_box(&enc);
+            });
+            res.gbps(raw_bytes)
+        };
+        b.note_throughput(raw_bytes);
+        // correctness backstop: the fused path is a pure optimization
+        let mut hot = Encoded::empty();
+        let mut cold = Encoded::empty();
+        quant::encode_hot_into(codec, false, &m, Some(&range), &mut hot);
+        quant::encode_into(codec, &m, &mut cold);
+        assert_eq!(hot.to_wire(), cold.to_wire(), "fused encode diverged: {codec:?}");
+        encode_records.push(Json::obj(vec![
+            ("codec", Json::str(codec.label())),
+            ("rows", Json::num(h as f64)),
+            ("cols", Json::num(v as f64)),
+            ("fused_gbps", Json::num(fused)),
+            ("cold_gbps", Json::num(unfused)),
+        ]));
     }
+
+    // ---- the recorded trajectory + regression gate ----
+    let ratio = blocked_gflops / naive_gflops;
+    let (hard_floor, baseline_frac) = if quick { (2.5, 0.5) } else { (4.0, 0.8) };
+    println!(
+        "\n512^3 blocked {blocked_gflops:.2} GFLOP/s vs naive f64 {naive_gflops:.2} GFLOP/s \
+         = {ratio:.1}x (floor {hard_floor}x)"
+    );
+
+    let snapshot = Json::obj(vec![
+        ("schema", Json::str("pdadmm-bench-kernels-v1")),
+        ("mode", Json::str(if quick { "quick" } else { "full" })),
+        (
+            "provenance",
+            Json::str(format!(
+                "cargo bench --bench tensor_ops ({})",
+                if quick { "quick mode" } else { "full budget" }
+            )),
+        ),
+        (
+            "host",
+            Json::obj(vec![
+                ("os", Json::str(std::env::consts::OS)),
+                ("arch", Json::str(std::env::consts::ARCH)),
+                ("cores", Json::num(pdadmm_g::util::threads::host_cores() as f64)),
+            ]),
+        ),
+        ("naive_512_gflops", Json::num(naive_gflops)),
+        ("blocked_512_gflops", Json::num(blocked_gflops)),
+        ("blocked_over_naive", Json::num(ratio)),
+        ("gemm", Json::Arr(gemm_records)),
+        ("encode", Json::Arr(encode_records)),
+    ]);
+    let out_path = std::env::var("PDADMM_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| repo_file("BENCH_kernels.json"));
+    std::fs::write(&out_path, snapshot.to_string_pretty() + "\n")
+        .unwrap_or_else(|e| panic!("writing {}: {e}", out_path.display()));
+    println!("wrote {}", out_path.display());
+
+    // gate 1: the committed baseline ratio (machine-normalized; >20%
+    // regression fails in full mode, >50% in quick mode)
+    let baseline_path = repo_file("BENCH_kernels.json");
+    match json::parse_file(&baseline_path) {
+        Ok(base) => {
+            if let Some(base_ratio) = base.get("blocked_over_naive").and_then(Json::as_f64) {
+                let floor = baseline_frac * base_ratio;
+                println!(
+                    "baseline ratio {base_ratio:.1}x -> regression floor {floor:.1}x \
+                     ({baseline_frac}x of baseline)"
+                );
+                assert!(
+                    ratio >= floor,
+                    "GEMM regression: blocked/naive {ratio:.2}x < {floor:.2}x \
+                     ({baseline_frac} x committed baseline {base_ratio:.2}x)"
+                );
+            }
+        }
+        Err(e) => println!("no committed baseline at {} ({e}); skipping", baseline_path.display()),
+    }
+    // gate 2: the absolute acceptance floor
+    assert!(
+        ratio >= hard_floor,
+        "blocked GEMM only {ratio:.2}x over the naive f64 reference (need >= {hard_floor}x)"
+    );
 }

@@ -5,6 +5,7 @@
 //! divergence against the compiled HLO artifacts). `threads` controls the
 //! matmul parallelism — layer workers pass 1.
 
+use crate::coordinator::quant::RangeStats;
 use crate::tensor::matrix::Mat;
 use crate::tensor::ops;
 
@@ -149,6 +150,24 @@ pub fn q_update(p_next: &Mat, u: &Mat, z: &Mat, nu: f32, rho: f32) -> Mat {
         out.data[i] = (rho * p_next.data[i] + u.data[i] + nu * z.data[i].max(0.0)) * inv;
     }
     out
+}
+
+/// [`q_update`] with the quantization epilogue's range fold fused into the
+/// producing loop: q is a boundary tensor (it crosses the wire right after
+/// this update), so its encode range is accumulated while each value is
+/// still in registers instead of in a second full pass. The fold is a
+/// plain finite min/max, so the values — and the downstream encode bytes —
+/// are bitwise the unfused ones.
+pub fn q_update_scan(p_next: &Mat, u: &Mat, z: &Mat, nu: f32, rho: f32) -> (Mat, RangeStats) {
+    let inv = 1.0 / (rho + nu);
+    let mut out = Mat::zeros(u.rows, u.cols);
+    let mut range = RangeStats::new();
+    for i in 0..u.len() {
+        let v = (rho * p_next.data[i] + u.data[i] + nu * z.data[i].max(0.0)) * inv;
+        out.data[i] = v;
+        range.observe_one(v);
+    }
+    (out, range)
 }
 
 /// Appendix A.6: u <- u + rho (p_{l+1} - q).
@@ -325,6 +344,19 @@ mod tests {
             let want = nu * (q.data[i] - z.data[i].max(0.0));
             assert!((u1.data[i] - want).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn q_update_scan_is_bitwise_q_update_plus_scan() {
+        // q_update is elementwise: p_next, u and z share a shape
+        let (p, _w, _b, _z, z, u) = setup(6, 5, 12, 4);
+        let (nu, rho) = (0.3f32, 0.9f32);
+        let want = q_update(&p, &u, &z, nu, rho);
+        let (got, range) = q_update_scan(&p, &u, &z, nu, rho);
+        assert_eq!(got.data, want.data);
+        let fresh = RangeStats::of(&want.data);
+        assert_eq!(range.bounds().0.to_bits(), fresh.bounds().0.to_bits());
+        assert_eq!(range.bounds().1.to_bits(), fresh.bounds().1.to_bits());
     }
 
     #[test]

@@ -15,6 +15,7 @@ mod xla_backend;
 pub use native::NativeBackend;
 pub use xla_backend::XlaBackend;
 
+use crate::coordinator::quant::RangeStats;
 use crate::tensor::matrix::Mat;
 
 /// Everything the ADMM coordinator and baseline optimizers need per step.
@@ -96,6 +97,24 @@ pub trait ComputeBackend: Send + Sync {
     fn z_update_last(&self, m: &Mat, z_old: &Mat, y: &Mat, maskn: &Mat, nu: f32, lr: f32) -> Mat;
 
     fn q_update(&self, p_next: &Mat, u: &Mat, z: &Mat, nu: f32, rho: f32) -> Mat;
+
+    /// Phase-Q update with the quantization epilogue's range fold: q is a
+    /// boundary tensor, so the coordinator wants its encode range without
+    /// a second full pass. The default computes then scans (correct for
+    /// any backend); the native backend fuses the fold into the producing
+    /// loop. Either way the returned stats match a fresh scan bitwise.
+    fn q_update_scan(
+        &self,
+        p_next: &Mat,
+        u: &Mat,
+        z: &Mat,
+        nu: f32,
+        rho: f32,
+    ) -> (Mat, RangeStats) {
+        let q = self.q_update(p_next, u, z, nu, rho);
+        let range = RangeStats::of(&q.data);
+        (q, range)
+    }
 
     fn u_update(&self, u: &Mat, p_next: &Mat, q: &Mat, rho: f32) -> Mat;
 

@@ -104,6 +104,18 @@ impl ComputeBackend for NativeBackend {
         u::q_update(p_next, u_, z, nu, rho)
     }
 
+    fn q_update_scan(
+        &self,
+        p_next: &Mat,
+        u_: &Mat,
+        z: &Mat,
+        nu: f32,
+        rho: f32,
+    ) -> (Mat, crate::coordinator::quant::RangeStats) {
+        // Truly fused: the encode range folds inside the producing loop.
+        u::q_update_scan(p_next, u_, z, nu, rho)
+    }
+
     fn u_update(&self, u_: &Mat, p_next: &Mat, q: &Mat, rho: f32) -> Mat {
         u::u_update(u_, p_next, q, rho)
     }

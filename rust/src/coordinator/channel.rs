@@ -18,7 +18,7 @@
 //! [`CommMeter::transfer_into`] decodes into a caller-owned tensor and the
 //! encode scratch is a per-thread buffer inside the quant module.
 
-use crate::coordinator::quant::{self, Codec};
+use crate::coordinator::quant::{self, Codec, RangeStats};
 use crate::tensor::matrix::Mat;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -77,6 +77,25 @@ impl CommMeter {
     /// version byte, so Fig. 5 totals stay physically honest.
     pub fn transfer_versioned_into(&self, kind: Kind, codec: Codec, m: &Mat, dst: &mut Mat) {
         let bytes = quant::transfer_versioned_into(codec, m, dst);
+        self.count(kind, bytes);
+    }
+
+    /// The fused-epilogue transfer: one call covers both wire layouts
+    /// (`versioned` selects the v2 header where the codec supports it) and
+    /// accepts the encode range the update phase already folded, so the
+    /// encoder skips its whole-tensor range pass. `range: None` degrades
+    /// to the exact behaviour of
+    /// [`CommMeter::transfer_into`] / [`CommMeter::transfer_versioned_into`].
+    pub fn transfer_hot_into(
+        &self,
+        kind: Kind,
+        codec: Codec,
+        versioned: bool,
+        m: &Mat,
+        range: Option<&RangeStats>,
+        dst: &mut Mat,
+    ) {
+        let bytes = quant::transfer_hot_into(codec, versioned, m, range, dst);
         self.count(kind, bytes);
     }
 
@@ -212,6 +231,34 @@ mod tests {
         });
         assert_eq!(meter.transfers(), 64);
         assert_eq!(meter.q_bytes(), 64 * (16 * 4 + 8));
+    }
+
+    #[test]
+    fn transfer_hot_matches_the_unfused_paths_bytes_and_values() {
+        let mut rng = Pcg32::seeded(11);
+        let m = Mat::randn(13, 21, 1.3, &mut rng);
+        let range = RangeStats::of(&m.data);
+        for codec in [
+            Codec::None,
+            Codec::Uniform { bits: 6 },
+            Codec::BlockUniform { bits: 4, block: 32 },
+            Codec::Stochastic { bits: 8 },
+        ] {
+            for versioned in [false, true] {
+                let cold = CommMeter::new();
+                let hot = CommMeter::new();
+                let mut want = Mat::zeros(1, 1);
+                if versioned {
+                    cold.transfer_versioned_into(Kind::P, codec, &m, &mut want);
+                } else {
+                    cold.transfer_into(Kind::P, codec, &m, &mut want);
+                }
+                let mut got = Mat::zeros(1, 1);
+                hot.transfer_hot_into(Kind::P, codec, versioned, &m, Some(&range), &mut got);
+                assert_eq!(want.data, got.data, "codec {codec:?} versioned {versioned}");
+                assert_eq!(cold.p_bytes(), hot.p_bytes(), "codec {codec:?} versioned {versioned}");
+            }
+        }
     }
 
     #[test]

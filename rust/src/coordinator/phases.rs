@@ -19,7 +19,7 @@ use crate::admm::state::{self, LayerRole, LayerState};
 use crate::backend::ComputeBackend;
 use crate::config::{QuantMode, TrainConfig};
 use crate::coordinator::adapt::QuantPlan;
-use crate::coordinator::quant::Codec;
+use crate::coordinator::quant::{Codec, RangeStats};
 use crate::graph::datasets::Dataset;
 use crate::tensor::matrix::Mat;
 
@@ -61,6 +61,25 @@ pub fn p_update(
         );
     }
     (cand, tau)
+}
+
+/// [`p_update`] plus the quantization epilogue's range scan of the accepted
+/// step, taken while the candidate is still cache-hot. The scan is the
+/// same finite-min/max fold [`crate::coordinator::quant::encode_hot_into`]
+/// consumes, so the subsequent boundary encode skips its whole-tensor
+/// range pass. Returns `(p_next, tau, range)`.
+pub fn p_update_scanned(
+    backend: &dyn ComputeBackend,
+    cur: &LayerState,
+    q_prev: &Mat,
+    u_prev: &Mat,
+    nu: f32,
+    rho: f32,
+    quant: QuantMode,
+) -> (Mat, f32, RangeStats) {
+    let (cand, tau) = p_update(backend, cur, q_prev, u_prev, nu, rho, quant);
+    let range = RangeStats::of(&cand.data);
+    (cand, tau, range)
 }
 
 /// Phase W: the backtracked w-subproblem for one layer (local).
@@ -120,6 +139,20 @@ pub fn q_update(
     rho: f32,
 ) -> Mat {
     backend.q_update(p_next, c.u.as_ref().expect("hidden u"), &c.z, nu, rho)
+}
+
+/// [`q_update`] with the fused encode-range scan: q is a boundary tensor,
+/// so its encode range is folded by the backend while q is produced (the
+/// native backend fuses the fold into the producing loop; other backends
+/// scan immediately after). Returns `(q, range)`.
+pub fn q_update_scanned(
+    backend: &dyn ComputeBackend,
+    c: &LayerState,
+    p_next: &Mat,
+    nu: f32,
+    rho: f32,
+) -> (Mat, RangeStats) {
+    backend.q_update_scan(p_next, c.u.as_ref().expect("hidden u"), &c.z, nu, rho)
 }
 
 /// Phase U: the dual ascent step (layers `l < L` only).

@@ -466,19 +466,72 @@ struct Affine {
     max_idx: f32,
 }
 
-/// `(min, step)` over the *finite* values of `vals` for a `levels`-point
-/// grid. A degenerate range (no finite values, or a constant) gets
-/// `step = 1` and `max_idx = 0`: every element — including ±∞ — maps to
-/// index 0 and decodes to `lo` exactly.
-fn finite_affine(vals: &[f32], levels: u32) -> Affine {
-    let mut lo = f32::INFINITY;
-    let mut hi = f32::NEG_INFINITY;
-    for &v in vals {
-        if v.is_finite() {
-            lo = lo.min(v);
-            hi = hi.max(v);
+/// Order-insensitive finite min/max accumulator — the fused-epilogue
+/// counterpart of the scan inside [`finite_affine`]. A producer kernel
+/// folds its outputs through [`RangeStats::observe`] while they are still
+/// cache-hot; [`encode_hot_into`] then reuses the fold instead of a second
+/// full-tensor pass. Min/max folds are insensitive to evaluation order, so
+/// the fused path is **bitwise identical** to encode-after-the-fact.
+#[derive(Clone, Copy, Debug)]
+pub struct RangeStats {
+    lo: f32,
+    hi: f32,
+}
+
+impl Default for RangeStats {
+    fn default() -> Self {
+        RangeStats::new()
+    }
+}
+
+impl RangeStats {
+    pub fn new() -> RangeStats {
+        RangeStats { lo: f32::INFINITY, hi: f32::NEG_INFINITY }
+    }
+
+    /// Scan a full slice (for producers without a natural fold site).
+    pub fn of(vals: &[f32]) -> RangeStats {
+        let mut s = RangeStats::new();
+        s.observe(vals);
+        s
+    }
+
+    /// Fold a batch of produced values — same finite-only filter as
+    /// [`finite_affine`]'s internal scan.
+    #[inline]
+    pub fn observe(&mut self, vals: &[f32]) {
+        for &v in vals {
+            self.observe_one(v);
         }
     }
+
+    /// Fold one produced value.
+    #[inline(always)]
+    pub fn observe_one(&mut self, v: f32) {
+        if v.is_finite() {
+            self.lo = self.lo.min(v);
+            self.hi = self.hi.max(v);
+        }
+    }
+
+    /// Merge a partial accumulator (chunked producers).
+    pub fn merge(&mut self, other: &RangeStats) {
+        self.lo = self.lo.min(other.lo);
+        self.hi = self.hi.max(other.hi);
+    }
+
+    /// `(lo, hi)` over the observed finite values (inf/-inf when empty).
+    pub fn bounds(&self) -> (f32, f32) {
+        (self.lo, self.hi)
+    }
+}
+
+/// Affine grid parameters from an accumulated finite range. A degenerate
+/// range (no finite values, or a constant) gets `step = 1` and
+/// `max_idx = 0`: every element — including ±∞ — maps to index 0 and
+/// decodes to `lo` exactly.
+fn affine_from_range(r: &RangeStats, levels: u32) -> Affine {
+    let (mut lo, mut hi) = (r.lo, r.hi);
     if !lo.is_finite() || !hi.is_finite() {
         lo = 0.0;
         hi = 0.0;
@@ -489,6 +542,12 @@ fn finite_affine(vals: &[f32], levels: u32) -> Affine {
     } else {
         Affine { lo, step: 1.0, inv: 1.0, max_idx: 0.0 }
     }
+}
+
+/// `(min, step)` over the *finite* values of `vals` for a `levels`-point
+/// grid (see [`affine_from_range`] for the degenerate-range policy).
+fn finite_affine(vals: &[f32], levels: u32) -> Affine {
+    affine_from_range(&RangeStats::of(vals), levels)
 }
 
 /// Nearest-grid index. NaN maps to 0 (`clamp` propagates NaN, the
@@ -668,7 +727,23 @@ impl<'a> BitReader<'a> {
 /// Encode a tensor for transmission into a reusable [`Encoded`] buffer
 /// (clears and refills `enc`; no allocation once capacities are warm).
 pub fn encode_into(codec: Codec, m: &Mat, enc: &mut Encoded) {
+    encode_ranged_into(codec, m, Option::None, enc);
+}
+
+/// The encode core. `range`, when supplied by a fused producer, replaces
+/// the whole-tensor scan of the uniform-family codecs; block-wise codecs
+/// scan per block (the data is cache-hot either way) and `None`/`IntDelta`
+/// need no range. Payload bytes are bitwise identical with or without a
+/// supplied range.
+fn encode_ranged_into(codec: Codec, m: &Mat, range: Option<&RangeStats>, enc: &mut Encoded) {
     debug_assert!(codec.validate().is_ok(), "unvalidated codec {codec:?}");
+    debug_assert!(
+        range.is_none_or(|r| {
+            let f = RangeStats::of(&m.data);
+            (f.lo.to_bits(), f.hi.to_bits()) == (r.lo.to_bits(), r.hi.to_bits())
+        }),
+        "fused RangeStats disagrees with a fresh scan"
+    );
     enc.rows = m.rows;
     enc.cols = m.cols;
     enc.codec = codec;
@@ -701,7 +776,10 @@ pub fn encode_into(codec: Codec, m: &Mat, enc: &mut Encoded) {
         }
         Codec::Uniform { bits } | Codec::Stochastic { bits } => {
             let bits = u32::from(bits.clamp(1, 16));
-            let a = finite_affine(&m.data, 1u32 << bits);
+            let a = match range {
+                Some(r) => affine_from_range(r, 1u32 << bits),
+                Option::None => finite_affine(&m.data, 1u32 << bits),
+            };
             enc.params.push((a.lo, a.step));
             enc.payload.reserve(codec.payload_bytes(m.len()) as usize);
             let mut rng;
@@ -754,6 +832,57 @@ pub fn encode_versioned(codec: Codec, m: &Mat) -> Encoded {
     let mut enc = Encoded::empty();
     encode_versioned_into(codec, m, &mut enc);
     enc
+}
+
+/// Fused-epilogue encode: a producer kernel hands over the [`RangeStats`]
+/// it folded while writing `m`, and the uniform-family scan is skipped —
+/// the tensor is only touched once more, for quantization, while still
+/// cache-hot. `versioned` selects the v2 per-message header exactly as
+/// [`encode_versioned_into`] does (`None`/`IntDelta` stay legacy).
+/// Passing `range = None` falls back to an internal scan; payload bytes
+/// are bitwise identical either way.
+pub fn encode_hot_into(
+    codec: Codec,
+    versioned: bool,
+    m: &Mat,
+    range: Option<&RangeStats>,
+    enc: &mut Encoded,
+) {
+    encode_ranged_into(codec, m, range, enc);
+    enc.versioned = versioned
+        && matches!(
+            codec,
+            Codec::Uniform { .. } | Codec::Stochastic { .. } | Codec::BlockUniform { .. }
+        );
+}
+
+/// Stream rows into `out` through `produce(i, row)` while folding the
+/// finite range, then encode the finished tensor cache-hot — the
+/// epilogue-friendly streaming form of [`encode_into`] for producers that
+/// build their output row by row (matmul epilogues, phase updates).
+pub fn encode_rows_into<F>(
+    codec: Codec,
+    versioned: bool,
+    rows: usize,
+    cols: usize,
+    mut produce: F,
+    out: &mut Mat,
+    enc: &mut Encoded,
+) where
+    F: FnMut(usize, &mut [f32]),
+{
+    out.rows = rows;
+    out.cols = cols;
+    if out.data.len() != rows * cols {
+        out.data.resize(rows * cols, 0.0);
+    }
+    let mut range = RangeStats::new();
+    for i in 0..rows {
+        let row = out.row_mut(i);
+        produce(i, row);
+        range.observe(row);
+    }
+    encode_hot_into(codec, versioned, out, Some(&range), enc);
 }
 
 /// Decode into a reusable tensor (resized to the encoded shape; grid values
@@ -841,6 +970,24 @@ pub fn transfer_versioned_into(codec: Codec, m: &Mat, dst: &mut Mat) -> u64 {
     SCRATCH.with(|s| {
         let mut enc = s.borrow_mut();
         encode_versioned_into(codec, m, &mut enc);
+        decode_into(&enc, dst);
+        enc.wire_bytes()
+    })
+}
+
+/// Fused round-trip: [`transfer_into`] / [`transfer_versioned_into`] with
+/// a producer-supplied [`RangeStats`] so the encode skips its scan pass.
+/// Bitwise identical decoded values and wire bytes.
+pub fn transfer_hot_into(
+    codec: Codec,
+    versioned: bool,
+    m: &Mat,
+    range: Option<&RangeStats>,
+    dst: &mut Mat,
+) -> u64 {
+    SCRATCH.with(|s| {
+        let mut enc = s.borrow_mut();
+        encode_hot_into(codec, versioned, m, range, &mut enc);
         decode_into(&enc, dst);
         enc.wire_bytes()
     })
@@ -1305,5 +1452,101 @@ mod tests {
         let payload = (100u64 * 3).div_ceil(8);
         assert_eq!(enc.wire_bytes(), header + payload);
         assert_eq!(codec.wire_bytes_for(100), header + payload);
+    }
+
+    #[test]
+    fn range_stats_fold_matches_scan_and_merges() {
+        let mut rng = Pcg32::seeded(30);
+        let mut m = Mat::randn(8, 33, 3.0, &mut rng);
+        *m.at_mut(2, 5) = f32::NAN;
+        *m.at_mut(7, 0) = f32::INFINITY;
+        let whole = RangeStats::of(&m.data);
+        // element-by-element fold and chunked merge agree bitwise
+        let mut one = RangeStats::new();
+        for &v in &m.data {
+            one.observe_one(v);
+        }
+        let mut merged = RangeStats::new();
+        for chunk in m.data.chunks(7) {
+            merged.merge(&RangeStats::of(chunk));
+        }
+        for s in [one, merged] {
+            assert_eq!(s.bounds().0.to_bits(), whole.bounds().0.to_bits());
+            assert_eq!(s.bounds().1.to_bits(), whole.bounds().1.to_bits());
+        }
+        // degenerate: nothing observed -> inf bounds, degenerate affine
+        let empty = RangeStats::new();
+        assert_eq!(empty.bounds(), (f32::INFINITY, f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn fused_range_encode_is_bitwise_identical() {
+        // the fused epilogue (producer-supplied RangeStats) must produce
+        // byte-for-byte the wire of encode-after-the-fact, for every codec
+        // family, legacy and v2 framing alike
+        let mut rng = Pcg32::seeded(31);
+        let mut m = Mat::randn(24, 37, 2.0, &mut rng);
+        *m.at_mut(0, 1) = f32::NEG_INFINITY; // exercise the finite filter
+        let stats = RangeStats::of(&m.data);
+        for codec in [
+            Codec::None,
+            Codec::Uniform { bits: 4 },
+            Codec::Uniform { bits: 8 },
+            Codec::BlockUniform { bits: 4, block: 64 },
+            Codec::Stochastic { bits: 8 },
+        ] {
+            for versioned in [false, true] {
+                let want = if versioned { encode_versioned(codec, &m) } else { encode(codec, &m) };
+                let mut got = Encoded::empty();
+                encode_hot_into(codec, versioned, &m, Some(&stats), &mut got);
+                assert_eq!(got.to_wire(), want.to_wire(), "codec {codec:?} v{versioned}");
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_hot_matches_unfused_transfers() {
+        let mut rng = Pcg32::seeded(32);
+        let m = Mat::randn(13, 29, 1.5, &mut rng);
+        let stats = RangeStats::of(&m.data);
+        for codec in [Codec::Uniform { bits: 6 }, Codec::Stochastic { bits: 5 }] {
+            let mut want = Mat::zeros(1, 1);
+            let want_bytes = transfer_into(codec, &m, &mut want);
+            let mut got = Mat::zeros(1, 1);
+            let got_bytes = transfer_hot_into(codec, false, &m, Some(&stats), &mut got);
+            assert_eq!(got.data, want.data, "codec {codec:?}");
+            assert_eq!(got_bytes, want_bytes);
+            let want_vbytes = transfer_versioned_into(codec, &m, &mut want);
+            let got_vbytes = transfer_hot_into(codec, true, &m, Some(&stats), &mut got);
+            assert_eq!(got.data, want.data, "codec {codec:?} v2");
+            assert_eq!(got_vbytes, want_vbytes);
+        }
+    }
+
+    #[test]
+    fn encode_rows_streams_and_matches_post_hoc() {
+        let mut rng = Pcg32::seeded(33);
+        let src = Mat::randn(19, 23, 2.0, &mut rng);
+        for codec in [
+            Codec::Uniform { bits: 8 },
+            Codec::BlockUniform { bits: 4, block: 32 },
+            Codec::Stochastic { bits: 8 },
+        ] {
+            let want = encode(codec, &src);
+            let mut out = Mat::zeros(1, 1);
+            let mut enc = Encoded::empty();
+            encode_rows_into(
+                codec,
+                false,
+                src.rows,
+                src.cols,
+                |i, row| row.copy_from_slice(src.row(i)),
+                &mut out,
+                &mut enc,
+            );
+            assert_eq!(out.shape(), src.shape());
+            assert_eq!(out.data, src.data);
+            assert_eq!(enc.to_wire(), want.to_wire(), "codec {codec:?}");
+        }
     }
 }

@@ -28,7 +28,7 @@ use crate::config::{QuantMode, ScheduleMode, TrainConfig, WorkerAssign};
 use crate::coordinator::adapt::{self, AdaptController};
 use crate::coordinator::channel::{CommMeter, Kind};
 use crate::coordinator::phases;
-use crate::coordinator::quant::Codec;
+use crate::coordinator::quant::{Codec, RangeStats};
 use crate::graph::datasets::Dataset;
 use crate::metrics::{EpochRecord, TrainLog};
 use crate::util::threads::{lpt_assignment, WorkerPool};
@@ -89,7 +89,8 @@ pub fn phase_makespan_ms(phase_layer_secs: &[Vec<f64>], workers: usize) -> f64 {
             totals[l] += t;
         }
     }
-    let (assign, _) = lpt_assignment(&totals, workers);
+    let (assign, _) =
+        lpt_assignment(&totals, workers).expect("measured layer times are always finite");
     let mut makespan = 0.0;
     for ph in phase_layer_secs {
         let mut bins = vec![0.0f64; workers];
@@ -209,7 +210,9 @@ impl Trainer {
                 if self.last_layer_secs.len() == n_layers
                     && self.last_layer_secs.iter().any(|&t| t > 0.0)
                 {
-                    lpt_assignment(&self.last_layer_secs, workers).0
+                    lpt_assignment(&self.last_layer_secs, workers)
+                        .expect("measured layer times are always finite")
+                        .0
                 } else {
                     round_robin()
                 }
@@ -262,35 +265,39 @@ impl Trainer {
         // ---- phase P: p_l^{k+1} for l >= 2, in parallel ----
         let pt = Instant::now();
         let layers = &self.layers;
-        let new_ps: Vec<Option<(crate::Mat, f32)>> = dispatch(pool, n_layers, &assignment, |l| {
-            if l == 0 {
-                return None; // p_1 = X is fixed
-            }
-            let start = Instant::now();
-            let cur = &layers[l];
-            let prev = &layers[l - 1];
-            let out = phases::p_update(
-                backend.as_ref(),
-                cur,
-                prev.q.as_ref().expect("prev layer has q"),
-                prev.u.as_ref().expect("prev layer has u"),
-                nu,
-                rho,
-                quant,
-            );
-            clock(0, l, start);
-            Some(out)
-        });
+        let new_ps: Vec<Option<(crate::Mat, f32, RangeStats)>> =
+            dispatch(pool, n_layers, &assignment, |l| {
+                if l == 0 {
+                    return None; // p_1 = X is fixed
+                }
+                let start = Instant::now();
+                let cur = &layers[l];
+                let prev = &layers[l - 1];
+                let out = phases::p_update_scanned(
+                    backend.as_ref(),
+                    cur,
+                    prev.q.as_ref().expect("prev layer has q"),
+                    prev.u.as_ref().expect("prev layer has u"),
+                    nu,
+                    rho,
+                    quant,
+                );
+                clock(0, l, start);
+                Some(out)
+            });
         // p_l travels to worker l-1 (it is needed there for q/u updates):
         // route through the meter; all consumers adopt the decoded tensor.
-        // `transfer_into` decodes straight into the layer's existing p
-        // buffer — no per-transfer allocation in the phase loop. Adaptive
+        // `transfer_hot_into` decodes straight into the layer's existing p
+        // buffer — no per-transfer allocation in the phase loop — and
+        // reuses the encode range the update phase folded while p was
+        // cache-hot, so the encoder skips its whole-tensor scan. Adaptive
         // runs pick each layer's planned width (and note the pre-encode
         // stats the next re-plan feeds on) and use the v2 wire header.
         let p_codec = phases::p_codec(&self.cfg);
+        let versioned = self.adapt.is_some();
         let running_epoch = self.epoch + 1; // run_epoch increments at the end
         for (l, out) in new_ps.into_iter().enumerate() {
-            if let Some((p, tau)) = out {
+            if let Some((p, tau, range)) = out {
                 let codec = match self.adapt.as_mut() {
                     Some(a) => {
                         if a.wants_stats(running_epoch) {
@@ -301,11 +308,7 @@ impl Trainer {
                     None => p_codec,
                 };
                 let dst = &mut self.layers[l].p;
-                if self.adapt.is_some() {
-                    self.meter.transfer_versioned_into(Kind::P, codec, &p, dst);
-                } else {
-                    self.meter.transfer_into(Kind::P, codec, &p, dst);
-                }
+                self.meter.transfer_hot_into(Kind::P, codec, versioned, &p, Some(&range), dst);
                 self.layers[l].tau = tau;
             }
         }
@@ -373,22 +376,30 @@ impl Trainer {
         // ---- phase Q: q_l from the received p_{l+1} (l < L) ----
         let pt = Instant::now();
         let layers = &self.layers;
-        let new_qs: Vec<Option<crate::Mat>> = dispatch(pool, n_layers, &assignment, |l| {
-            if l + 1 == n_layers {
-                return None;
-            }
-            let start = Instant::now();
-            let out = phases::q_update(backend.as_ref(), &layers[l], &layers[l + 1].p, nu, rho);
-            clock(4, l, start);
-            Some(out)
-        });
+        let new_qs: Vec<Option<(crate::Mat, RangeStats)>> =
+            dispatch(pool, n_layers, &assignment, |l| {
+                if l + 1 == n_layers {
+                    return None;
+                }
+                let start = Instant::now();
+                let out = phases::q_update_scanned(
+                    backend.as_ref(),
+                    &layers[l],
+                    &layers[l + 1].p,
+                    nu,
+                    rho,
+                );
+                clock(4, l, start);
+                Some(out)
+            });
         let q_codec = phases::q_codec(&self.cfg);
         for (l, q) in new_qs.into_iter().enumerate() {
-            if let Some(q) = q {
+            if let Some((q, range)) = q {
                 // q_l travels forward to worker l+1; with PQ quantization
                 // every consumer (including the owner) adopts the decoded
                 // grid value, which is exactly the paper's q-quantized
-                // variant (Appendix B).
+                // variant (Appendix B). The encode range was folded inside
+                // the q-producing loop (the fused epilogue).
                 let codec = match self.adapt.as_mut() {
                     Some(a) => {
                         if a.wants_stats(running_epoch) {
@@ -399,11 +410,7 @@ impl Trainer {
                     None => q_codec,
                 };
                 let dst = self.layers[l].q.get_or_insert_with(|| crate::Mat::zeros(0, 0));
-                if self.adapt.is_some() {
-                    self.meter.transfer_versioned_into(Kind::Q, codec, &q, dst);
-                } else {
-                    self.meter.transfer_into(Kind::Q, codec, &q, dst);
-                }
+                self.meter.transfer_hot_into(Kind::Q, codec, versioned, &q, Some(&range), dst);
             }
         }
         // the adaptive allocator's third signal: this epoch's constraint

@@ -24,7 +24,7 @@ use crate::config::{BackendKind, QuantMode, TrainConfig};
 use crate::coordinator::adapt::{self, AdaptController};
 use crate::coordinator::channel::{CommMeter, Kind};
 use crate::coordinator::phases;
-use crate::coordinator::quant::{self, Codec};
+use crate::coordinator::quant::{self, Codec, RangeStats};
 use crate::coordinator::transport::{self, frame_kind, Conn, DistSetup};
 use crate::graph::datasets::{self, Dataset};
 use crate::tensor::matrix::Mat;
@@ -227,6 +227,8 @@ impl WorkerState {
     /// and — iff `boundary` — ship the same encoding as a VAR frame.
     /// Adaptive runs emit the v2 (per-message bit-width) header, exactly
     /// like the in-process meter, so byte totals match across runtimes.
+    /// `range`, when the phase kernel folded one, feeds the fused encode
+    /// epilogue (payload bytes are bitwise identical either way).
     #[allow(clippy::too_many_arguments)]
     fn commit_transfer(
         &mut self,
@@ -236,13 +238,11 @@ impl WorkerState {
         layer: usize,
         codec: Codec,
         value: &Mat,
+        range: Option<&RangeStats>,
         boundary: bool,
     ) -> Result<()> {
-        let enc = if self.adapt.is_some() {
-            quant::encode_versioned(codec, value)
-        } else {
-            quant::encode(codec, value)
-        };
+        let mut enc = quant::Encoded::empty();
+        quant::encode_hot_into(codec, self.adapt.is_some(), value, range, &mut enc);
         self.meter.record(kind, enc.wire_bytes());
         let dst = match var {
             transport::VAR_P => &mut self.layers[layer].p,
@@ -273,14 +273,14 @@ impl WorkerState {
         let n = self.layers.len();
         match ph {
             0 => {
-                let mut outs: Vec<(usize, Mat, f32)> = Vec::new();
+                let mut outs: Vec<(usize, Mat, f32, RangeStats)> = Vec::new();
                 for l in self.lo..self.hi {
                     if l == 0 {
                         continue; // p_1 = X is fixed
                     }
                     let cur = &self.layers[l];
                     let prev = &self.layers[l - 1];
-                    let (cand, tau) = phases::p_update(
+                    let (cand, tau, range) = phases::p_update_scanned(
                         self.backend.as_ref(),
                         cur,
                         prev.q.as_ref().ok_or_else(|| anyhow!("layer {} missing q", l - 1))?,
@@ -289,10 +289,10 @@ impl WorkerState {
                         rho,
                         self.cfg.quant,
                     );
-                    outs.push((l, cand, tau));
+                    outs.push((l, cand, tau, range));
                 }
                 let running_epoch = self.epoch + 1; // incremented after phase U
-                for (l, cand, tau) in outs {
+                for (l, cand, tau, range) in outs {
                     // pre-encode stats feed the coordinator's next re-plan
                     // (collected only on epochs whose window is read)
                     if let Some(a) = self.adapt.as_mut() {
@@ -312,6 +312,7 @@ impl WorkerState {
                         l,
                         codec,
                         &cand,
+                        Some(&range),
                         boundary,
                     )?;
                     self.layers[l].tau = tau;
@@ -361,22 +362,22 @@ impl WorkerState {
                 }
             }
             4 => {
-                let mut outs: Vec<(usize, Mat)> = Vec::new();
+                let mut outs: Vec<(usize, Mat, RangeStats)> = Vec::new();
                 for l in self.lo..self.hi {
                     if l + 1 == n {
                         continue; // the last layer has no q
                     }
-                    let q = phases::q_update(
+                    let (q, range) = phases::q_update_scanned(
                         self.backend.as_ref(),
                         &self.layers[l],
                         &self.layers[l + 1].p,
                         nu,
                         rho,
                     );
-                    outs.push((l, q));
+                    outs.push((l, q, range));
                 }
                 let running_epoch = self.epoch + 1; // incremented after phase U
-                for (l, q) in outs {
+                for (l, q, range) in outs {
                     if let Some(a) = self.adapt.as_mut() {
                         if a.wants_stats(running_epoch) {
                             a.note_q(l, &q);
@@ -386,7 +387,16 @@ impl WorkerState {
                         phases::q_codec_at(&self.cfg, self.adapt.as_ref().map(|a| &a.plan), l);
                     // q_l travels forward to the owner of layer l+1
                     let boundary = l + 1 == self.hi;
-                    self.commit_transfer(conn, Kind::Q, transport::VAR_Q, l, codec, &q, boundary)?;
+                    self.commit_transfer(
+                        conn,
+                        Kind::Q,
+                        transport::VAR_Q,
+                        l,
+                        codec,
+                        &q,
+                        Some(&range),
+                        boundary,
+                    )?;
                 }
                 // constraint residuals of the owned boundaries, from the
                 // adopted (decoded) tensors — the same values the
@@ -431,6 +441,7 @@ impl WorkerState {
                         l,
                         Codec::None,
                         &u,
+                        Option::None,
                         boundary,
                     )?;
                 }

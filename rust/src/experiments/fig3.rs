@@ -26,7 +26,7 @@ use crate::coordinator::trainer::{phase_makespan_ms, Trainer};
 use crate::coordinator::transport::{spawn_self_repro_worker, SocketTransport};
 use crate::graph::datasets;
 use crate::metrics::write_csv_table;
-use crate::util::threads::host_cores;
+use crate::util::threads::effective_cores;
 use std::sync::Arc;
 
 pub const SMALL: [&str; 4] = ["cora", "pubmed", "amazon-computers", "coauthor-cs"];
@@ -67,7 +67,7 @@ fn epoch_times(
     let serial = serial / reps as f64;
     let sim = sim / reps as f64;
 
-    let measured = host_cores() >= 2;
+    let measured = effective_cores() >= 2;
     let parallel = if measured {
         let mut tc = bench_cfg(&ds.name, hidden, layers, reps);
         tc.schedule = ScheduleMode::Parallel;
@@ -128,7 +128,7 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
     datasets_all.extend(super::on_disk_registry_names(cfg));
 
     let mut rows = Vec::new();
-    let cores = host_cores();
+    let cores = effective_cores();
     let par_source = if cores >= 2 {
         "measured on the worker pool"
     } else {

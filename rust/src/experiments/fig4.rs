@@ -25,7 +25,7 @@ use crate::graph::datasets::{self, Dataset};
 use crate::metrics::write_csv_table;
 use crate::optim::{Optimizer, OptimizerKind};
 use crate::tensor::matrix::Mat;
-use crate::util::threads::host_cores;
+use crate::util::threads::effective_cores;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -57,7 +57,7 @@ fn admm_curve(
     }
     let sim: Vec<f64> = sim.iter().map(|t| t / reps as f64).collect();
 
-    let measured = host_cores() >= 2;
+    let measured = effective_cores() >= 2;
     let epoch = if measured {
         let mut out = Vec::with_capacity(workers.len());
         for &w in workers {

@@ -264,8 +264,12 @@ impl Mat {
     }
 
     // -- matmul facade (delegates to ops) ----------------------------------
+    //
+    // All three orientations run the blocked, packed GEMM core in `ops`
+    // (bitwise thread-count-invariant); the thread count comes from
+    // `ops::default_threads` (CLI override, else effective host cores).
 
-    /// `self @ other`, thread count chosen by the ops module default.
+    /// `self @ other`.
     pub fn matmul(&self, other: &Mat) -> Mat {
         ops::matmul(self, other, ops::default_threads())
     }

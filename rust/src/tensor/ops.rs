@@ -1,33 +1,51 @@
 //! Blocked, thread-parallel matmul kernels (substrate S1, hot path).
 //!
-//! Layout conventions match the paper's shapes: activations are
-//! `(features, |V|)` so the node dimension is contiguous; all three matmul
-//! orientations needed by the ADMM updates stream memory row-major:
+//! All three orientations needed by the ADMM updates share one
+//! register-blocked, cache-tiled GEMM core ([`gemm_chunk`]): operands are
+//! gathered into zero-padded k-major micro-panels — A into [`MR`]-lane
+//! panels, B into [`NR`]-lane panels — and a branch-free `MR x NR`
+//! micro-kernel accumulates into a local register tile that LLVM
+//! autovectorizes. The orientations differ only in how packing walks
+//! memory:
 //!
-//! * `matmul`    — `A @ B`    (i,k,j loop: AXPY over rows of B)
-//! * `matmul_nt` — `A @ B^T`  (dot products of rows)
-//! * `matmul_tn` — `A^T @ B`  (k-major AXPY accumulation)
+//! * [`matmul`]    — `A @ B`:   A packs rows with a transpose, B directly
+//! * [`matmul_nt`] — `A @ B^T`: both operands read contiguous k
+//! * [`matmul_tn`] — `A^T @ B`: A packs k-slices contiguously, B directly
+//!
+//! Determinism: each output element accumulates its k-terms in k-tile
+//! order, sequentially within a tile — a function of the global k index
+//! only, never of the executing thread or of the row's position inside a
+//! chunk — so results are bitwise identical for every thread count
+//! (`thread_count_does_not_change_results`, the schedule-parity suite).
+//! Padded panel lanes occupy accumulator slots that are discarded at
+//! writeback, so they never perturb valid outputs. There are no
+//! data-dependent skips: a `0 x NaN/Inf` term poisons the output exactly
+//! as in the f64 naive reference instead of being silently dropped.
 //!
 //! Threading is explicit: the coordinator's layer workers run these with
-//! `threads = 1` so model-parallel speedup measurements (Figs. 3/4) are not
-//! confounded by nested intra-op parallelism, while the serial schedule and
-//! preprocessing use all cores.
+//! `threads = 1` so model-parallel speedup measurements (Figs. 3/4) are
+//! not confounded by nested intra-op parallelism; multi-threaded calls
+//! dispatch row chunks onto the persistent intra-op pool in
+//! `util::threads` (no OS-thread spawns per call).
 
 use crate::tensor::matrix::Mat;
 use crate::util::threads::parallel_chunks;
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
 
-/// Default worker count for the facade methods on `Mat` (0 = autodetect).
+/// Default worker count for the facade methods on `Mat`: the CLI
+/// `--threads` override when set, otherwise the host's effective core
+/// count (`util::threads::effective_cores`, which honors the documented
+/// `PDADMM_MAX_THREADS` cap). There is no other, silent cap — kernels and
+/// the experiment planners decide from the same number.
 pub fn default_threads() -> usize {
     let t = DEFAULT_THREADS.load(Ordering::Relaxed);
     if t != 0 {
         return t;
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get().min(16))
-        .unwrap_or(1)
+    crate::util::threads::effective_cores()
 }
 
 /// Override the process-wide default (CLI `--threads`).
@@ -35,91 +53,211 @@ pub fn set_default_threads(t: usize) {
     DEFAULT_THREADS.store(t, Ordering::Relaxed);
 }
 
-/// Tile of the k-dimension kept hot in L1/L2 while sweeping B's rows.
-const KBLOCK: usize = 256;
+/// Micro-kernel register tile: `MR x NR` outputs held in locals. 4 x 16
+/// f32 accumulators fit comfortably in 16 SIMD registers with room for
+/// the broadcast A value and the B row.
+pub const MR: usize = 4;
+/// Micro-kernel lane width: one 64-byte cache line of C per row.
+pub const NR: usize = 16;
+/// k-tile: terms accumulated per packed-panel pass (A panel rows stay in
+/// L1 while the micro-kernel streams B).
+pub const KC: usize = 256;
+/// Row block: A rows packed per pass (`MC x KC` floats ~ 128 KiB, L2).
+pub const MC: usize = 128;
+/// Column block: B columns packed per pass (`KC x NC` floats ~ 1 MiB,
+/// shared cache; each NR-wide B micro-panel is ~16 KiB, L1).
+pub const NC: usize = 1024;
+
+thread_local! {
+    // Packed-panel scratch, reused across calls. Packing runs on the
+    // worker that owns the row chunk, so buffers never cross threads.
+    static PACK_A: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    static PACK_B: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// `C_tile += A_panel @ B_panel` over `kt` k-terms. `apanel` is k-major
+/// `MR`-wide, `bpanel` k-major `NR`-wide; each accumulator slot sums its
+/// own k-sequence in order, which is what makes the kernel's rounding
+/// independent of threading and of panel position.
+#[inline(always)]
+fn microkernel(kt: usize, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (a, b) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)).take(kt) {
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let ar = a[r];
+            for (av, &bv) in accr.iter_mut().zip(b) {
+                *av += ar * bv;
+            }
+        }
+    }
+}
+
+/// Gather `W`-wide k-major micro-panels from `src` **rows** (src is
+/// `(lanes) x k` row-major; output lane `l` is src row `lane0 + l`): the
+/// transposing pack used for `matmul`'s A and `matmul_nt`'s B. Panels
+/// past `lanes` are zero-filled.
+fn pack_lanes_from_rows<const W: usize>(
+    dst: &mut [f32],
+    src: &Mat,
+    lane0: usize,
+    lanes: usize,
+    k0: usize,
+    kt: usize,
+) {
+    for (p, panel) in dst.chunks_exact_mut(kt * W).enumerate() {
+        for c in 0..W {
+            let lane = p * W + c;
+            if lane < lanes {
+                let srow = &src.row(lane0 + lane)[k0..k0 + kt];
+                for (kk, &v) in srow.iter().enumerate() {
+                    panel[kk * W + c] = v;
+                }
+            } else {
+                for kk in 0..kt {
+                    panel[kk * W + c] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Gather `W`-wide k-major micro-panels from `src` **columns** (src is
+/// `k x (lanes)` row-major; each k-slice is a contiguous copy): the
+/// direct pack used for B in `matmul`/`matmul_tn` and for `matmul_tn`'s
+/// A. Lanes past `lanes` are zero-filled.
+fn pack_lanes_from_cols<const W: usize>(
+    dst: &mut [f32],
+    src: &Mat,
+    lane0: usize,
+    lanes: usize,
+    k0: usize,
+    kt: usize,
+) {
+    for (p, panel) in dst.chunks_exact_mut(kt * W).enumerate() {
+        let lp = p * W;
+        let ln = W.min(lanes - lp);
+        for kk in 0..kt {
+            let srow = src.row(k0 + kk);
+            let d = &mut panel[kk * W..kk * W + W];
+            d[..ln].copy_from_slice(&srow[lane0 + lp..lane0 + lp + ln]);
+            for v in &mut d[ln..] {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// One thread's share of the blocked GEMM: compute the C rows held in
+/// `rows_out` (absolute rows start at `row0`), with the operand layouts
+/// abstracted behind `pack_a(dst, lane0, lanes, k0, kt)` /
+/// `pack_b(dst, lane0, lanes, k0, kt)`.
+fn gemm_chunk<PA, PB>(row0: usize, rows_out: &mut [f32], n: usize, k: usize, pack_a: PA, pack_b: PB)
+where
+    PA: Fn(&mut [f32], usize, usize, usize, usize),
+    PB: Fn(&mut [f32], usize, usize, usize, usize),
+{
+    let rows = rows_out.len() / n;
+    PACK_A.with(|pa| {
+        PACK_B.with(|pb| {
+            let apack = &mut *pa.borrow_mut();
+            let bpack = &mut *pb.borrow_mut();
+            apack.resize(MC * KC, 0.0);
+            bpack.resize(NC * KC, 0.0);
+            for jc in (0..n).step_by(NC) {
+                let jt = NC.min(n - jc);
+                let npanels = jt.div_ceil(NR);
+                for kc in (0..k).step_by(KC) {
+                    let kt = KC.min(k - kc);
+                    pack_b(&mut bpack[..npanels * NR * kt], jc, jt, kc, kt);
+                    for ic in (0..rows).step_by(MC) {
+                        let it = MC.min(rows - ic);
+                        let mpanels = it.div_ceil(MR);
+                        pack_a(&mut apack[..mpanels * MR * kt], row0 + ic, it, kc, kt);
+                        for pj in 0..npanels {
+                            let bpanel = &bpack[pj * NR * kt..(pj + 1) * NR * kt];
+                            let j0 = jc + pj * NR;
+                            let jn = NR.min(jc + jt - j0);
+                            for pi in 0..mpanels {
+                                let apanel = &apack[pi * MR * kt..(pi + 1) * MR * kt];
+                                let r0 = ic + pi * MR;
+                                let rm = MR.min(it - pi * MR);
+                                let mut acc = [[0.0f32; NR]; MR];
+                                microkernel(kt, apanel, bpanel, &mut acc);
+                                for (r, accr) in acc.iter().enumerate().take(rm) {
+                                    let off = (r0 + r) * n + j0;
+                                    let crow = &mut rows_out[off..off + jn];
+                                    for (cv, &av) in crow.iter_mut().zip(accr) {
+                                        *cv += av;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        })
+    });
+}
 
 /// `C = A @ B` — A:(m,k), B:(k,n).
 pub fn matmul(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch {:?}x{:?}", a.shape(), b.shape());
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut c = Mat::zeros(m, n);
+    if m == 0 || k == 0 || n == 0 {
+        return c;
+    }
     parallel_chunks(threads, m, &mut c.data, n, |i0, rows_out| {
-        for k0 in (0..k).step_by(KBLOCK) {
-            let k1 = (k0 + KBLOCK).min(k);
-            for (di, crow) in rows_out.chunks_mut(n).enumerate() {
-                let i = i0 + di;
-                let arow = a.row(i);
-                for kk in k0..k1 {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = b.row(kk);
-                    // Autovectorized AXPY: c[i,:] += a[i,kk] * b[kk,:]
-                    for (cv, &bv) in crow.iter_mut().zip(brow) {
-                        *cv += aik * bv;
-                    }
-                }
-            }
-        }
+        gemm_chunk(
+            i0,
+            rows_out,
+            n,
+            k,
+            |dst: &mut [f32], l0, ls, k0, kt| pack_lanes_from_rows::<MR>(dst, a, l0, ls, k0, kt),
+            |dst: &mut [f32], l0, ls, k0, kt| pack_lanes_from_cols::<NR>(dst, b, l0, ls, k0, kt),
+        );
     });
     c
 }
 
-/// `C = A @ B^T` — A:(m,k), B:(n,k). Row-row dot products.
+/// `C = A @ B^T` — A:(m,k), B:(n,k). Both packs read contiguous k.
 pub fn matmul_nt(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_nt inner-dim mismatch");
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut c = Mat::zeros(m, n);
+    if m == 0 || k == 0 || n == 0 {
+        return c;
+    }
     parallel_chunks(threads, m, &mut c.data, n, |i0, rows_out| {
-        for (di, crow) in rows_out.chunks_mut(n).enumerate() {
-            let arow = a.row(i0 + di);
-            for j in 0..n {
-                let brow = b.row(j);
-                let mut acc0 = 0.0f32;
-                let mut acc1 = 0.0f32;
-                let mut acc2 = 0.0f32;
-                let mut acc3 = 0.0f32;
-                let chunks = k / 4 * 4;
-                let mut kk = 0;
-                while kk < chunks {
-                    acc0 += arow[kk] * brow[kk];
-                    acc1 += arow[kk + 1] * brow[kk + 1];
-                    acc2 += arow[kk + 2] * brow[kk + 2];
-                    acc3 += arow[kk + 3] * brow[kk + 3];
-                    kk += 4;
-                }
-                let mut acc = acc0 + acc1 + acc2 + acc3;
-                while kk < k {
-                    acc += arow[kk] * brow[kk];
-                    kk += 1;
-                }
-                crow[j] = acc;
-            }
-        }
+        gemm_chunk(
+            i0,
+            rows_out,
+            n,
+            k,
+            |dst: &mut [f32], l0, ls, k0, kt| pack_lanes_from_rows::<MR>(dst, a, l0, ls, k0, kt),
+            |dst: &mut [f32], l0, ls, k0, kt| pack_lanes_from_rows::<NR>(dst, b, l0, ls, k0, kt),
+        );
     });
     c
 }
 
-/// `C = A^T @ B` — A:(k,m), B:(k,n). k-major accumulation.
+/// `C = A^T @ B` — A:(k,m), B:(k,n). A's pack is a contiguous k-slice
+/// copy (no transpose needed: A is already k-major).
 pub fn matmul_tn(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.rows, b.rows, "matmul_tn inner-dim mismatch");
     let (k, m, n) = (a.rows, a.cols, b.cols);
     let mut c = Mat::zeros(m, n);
+    if m == 0 || k == 0 || n == 0 {
+        return c;
+    }
     parallel_chunks(threads, m, &mut c.data, n, |i0, rows_out| {
-        for kk in 0..k {
-            let arow = a.row(kk);
-            let brow = b.row(kk);
-            for (di, crow) in rows_out.chunks_mut(n).enumerate() {
-                let aik = arow[i0 + di];
-                if aik == 0.0 {
-                    continue;
-                }
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += aik * bv;
-                }
-            }
-        }
+        gemm_chunk(
+            i0,
+            rows_out,
+            n,
+            k,
+            |dst: &mut [f32], l0, ls, k0, kt| pack_lanes_from_cols::<MR>(dst, a, l0, ls, k0, kt),
+            |dst: &mut [f32], l0, ls, k0, kt| pack_lanes_from_cols::<NR>(dst, b, l0, ls, k0, kt),
+        );
     });
     c
 }
@@ -240,5 +378,30 @@ mod tests {
         for t in [2, 5, 16] {
             assert_eq!(t1.data, matmul(&a, &b, t).data, "t={t}");
         }
+    }
+
+    #[test]
+    fn zero_times_nan_is_not_skipped() {
+        // the old kernels skipped `a == 0.0` terms, silently dropping
+        // 0 x NaN / 0 x Inf poison; the blocked kernels must propagate it
+        let mut a = Mat::zeros(3, 4);
+        let mut b = Mat::zeros(4, 2);
+        *b.at_mut(1, 0) = f32::NAN;
+        *b.at_mut(2, 1) = f32::INFINITY;
+        for orient in 0..3 {
+            let got = match orient {
+                0 => matmul(&a, &b, 1),
+                1 => matmul_tn(&a.transpose(), &b, 1),
+                _ => matmul_nt(&a, &b.transpose(), 1),
+            };
+            for i in 0..3 {
+                assert!(got.at(i, 0).is_nan(), "orient {orient} row {i}: {}", got.at(i, 0));
+                assert!(got.at(i, 1).is_nan(), "orient {orient} row {i}: {}", got.at(i, 1));
+            }
+        }
+        // sanity: finite inputs still produce finite outputs
+        *a.at_mut(0, 0) = 1.0;
+        let fin = matmul(&a, &Mat::zeros(4, 2), 1);
+        assert!(fin.data.iter().all(|v| v.is_finite()));
     }
 }

@@ -14,6 +14,16 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// GFLOP/s at the p50 iteration time (what the printed `↳` line shows).
+    pub fn gflops(&self, flops_per_iter: f64) -> f64 {
+        flops_per_iter / self.p50.as_secs_f64() / 1e9
+    }
+
+    /// GB/s at the p50 iteration time.
+    pub fn gbps(&self, bytes_per_iter: u64) -> f64 {
+        bytes_per_iter as f64 / self.p50.as_secs_f64() / 1e9
+    }
+
     pub fn row(&self) -> String {
         format!(
             "{:<48} {:>8}  min {:>12}  mean {:>12}  p50 {:>12}",
@@ -108,7 +118,7 @@ impl Bencher {
     /// Throughput helper: report GB/s next to a result.
     pub fn note_throughput(&self, bytes_per_iter: u64) {
         if let Some(last) = self.results.last() {
-            let gbps = bytes_per_iter as f64 / last.p50.as_secs_f64() / 1e9;
+            let gbps = last.gbps(bytes_per_iter);
             println!("{:<48} {:>8}  {:.2} GB/s", format!("  ↳ {}", last.name), "", gbps);
         }
     }
@@ -116,7 +126,7 @@ impl Bencher {
     /// GFLOP/s helper for matmul-shaped work.
     pub fn note_gflops(&self, flops_per_iter: f64) {
         if let Some(last) = self.results.last() {
-            let g = flops_per_iter / last.p50.as_secs_f64() / 1e9;
+            let g = last.gflops(flops_per_iter);
             println!("{:<48} {:>8}  {:.2} GFLOP/s", format!("  ↳ {}", last.name), "", g);
         }
     }

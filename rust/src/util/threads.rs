@@ -2,8 +2,10 @@
 //!
 //! Three tiers, matching who spawns what:
 //!
-//! * [`parallel_chunks`] — scoped row-chunked writes for the tensor
-//!   kernels (intra-op parallelism; layer workers pass `threads = 1`).
+//! * [`parallel_chunks`] — row-chunked writes for the tensor kernels
+//!   (intra-op parallelism; layer workers pass `threads = 1`). Dispatched
+//!   on a process-wide persistent [`WorkerPool`], so no OS threads are
+//!   spawned per matmul call.
 //! * [`parallel_map`] — scoped fork/join for one-shot sweeps (dataset
 //!   generation, baseline shards) where spawn cost is amortized by the
 //!   job size.
@@ -13,14 +15,37 @@
 //!   per iteration, so per-round thread spawns would dominate the small
 //!   subproblem updates; the pool replaces them with a condvar handshake.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of hardware threads available to this process (1 when detection
-/// fails). Experiments use this to decide between physically measuring the
-/// parallel schedule and falling back to the makespan simulator.
+/// fails). This is the raw detection; almost every caller wants
+/// [`effective_cores`], which also honors the documented cap override.
 pub fn host_cores() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The process-wide worker-thread budget: [`host_cores`] clamped by the
+/// optional `PDADMM_MAX_THREADS` environment cap (ignored unless it parses
+/// as an integer >= 1; read once and cached). This is the **single**
+/// helper shared by the kernel default (`ops::default_threads`) and the
+/// experiment planners' "physically measure vs simulate" decision, so both
+/// always see the same core count — there is no silent hard-coded cap.
+pub fn effective_cores() -> usize {
+    static CAP: OnceLock<Option<usize>> = OnceLock::new();
+    let cap = *CAP.get_or_init(|| parse_thread_cap(std::env::var("PDADMM_MAX_THREADS").ok()));
+    match cap {
+        Some(c) => host_cores().min(c),
+        None => host_cores(),
+    }
+}
+
+/// `PDADMM_MAX_THREADS` parser, split out so the policy is testable
+/// without mutating process environment: whitespace-trimmed integer,
+/// values < 1 (and garbage) mean "no cap".
+fn parse_thread_cap(raw: Option<String>) -> Option<usize> {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&c| c >= 1)
 }
 
 /// Longest-processing-time-first assignment of weighted jobs to `workers`
@@ -29,10 +54,18 @@ pub fn host_cores() -> usize {
 /// of job `j` and the makespan is the heaviest bin's total. The classic
 /// 4/3-approximation to minimum makespan — what the schedule simulator and
 /// the `lpt` worker-assignment policy share.
-pub fn lpt_assignment(times: &[f64], workers: usize) -> (Vec<usize>, f64) {
+///
+/// Job times must be finite: a NaN timing would make the heaviest-first
+/// order (and therefore the assignment and the reported makespan)
+/// unspecified, so non-finite inputs are rejected with an error instead
+/// of silently producing an arbitrary schedule.
+pub fn lpt_assignment(times: &[f64], workers: usize) -> anyhow::Result<(Vec<usize>, f64)> {
+    if let Some(j) = times.iter().position(|t| !t.is_finite()) {
+        anyhow::bail!("lpt_assignment: job {j} has non-finite time {}", times[j]);
+    }
     let workers = workers.max(1);
     let mut order: Vec<usize> = (0..times.len()).collect();
-    order.sort_by(|&a, &b| times[b].partial_cmp(&times[a]).unwrap_or(std::cmp::Ordering::Equal));
+    order.sort_by(|&a, &b| times[b].total_cmp(&times[a]));
     let mut bins = vec![0.0f64; workers];
     let mut assignment = vec![0usize; times.len()];
     for &j in &order {
@@ -46,7 +79,7 @@ pub fn lpt_assignment(times: &[f64], workers: usize) -> (Vec<usize>, f64) {
         bins[lightest] += times[j];
     }
     let makespan = bins.iter().cloned().fold(0.0, f64::max);
-    (assignment, makespan)
+    Ok((assignment, makespan))
 }
 
 /// Contiguous ownership blocks for the distributed runtime: `n` jobs
@@ -94,7 +127,21 @@ struct PoolShared {
     spawned: AtomicUsize,
 }
 
+thread_local! {
+    /// True on every thread that lives inside a [`WorkerPool`] (layer
+    /// workers and the intra-op pool alike). Nested [`parallel_chunks`]
+    /// calls run inline on such threads — both to make nested dispatch
+    /// deadlock-free by construction and to preserve the measurement
+    /// invariant that layer workers execute kernels single-threaded.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|f| f.get())
+}
+
 fn worker_loop(shared: &PoolShared, w: usize) {
+    IN_POOL_WORKER.with(|f| f.set(true));
     let mut seen = 0u64;
     loop {
         let task = {
@@ -254,35 +301,69 @@ impl Drop for WorkerPool {
     }
 }
 
-/// Split `out` (which holds `n_rows * row_width` elements) into per-thread
-/// contiguous row chunks and invoke `f(first_row, chunk)` concurrently.
+/// The process-wide intra-op pool backing [`parallel_chunks`]: spawned
+/// lazily on the first multi-threaded kernel call and reused for every one
+/// after. The six phases of Algorithm 1 issue O(layers) matmuls per epoch,
+/// so the per-call scoped OS-thread spawns this replaces used to dominate
+/// small shapes.
+static INTRA_POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+fn intra_pool() -> &'static WorkerPool {
+    INTRA_POOL.get_or_init(|| WorkerPool::new(effective_cores()))
+}
+
+/// Lifetime OS-thread count of the intra-op pool (regression hook: stays
+/// constant however many kernel calls run).
+pub fn intra_pool_spawned_threads() -> usize {
+    intra_pool().spawned_threads()
+}
+
+/// Split `out` (which holds `n_rows * row_width` elements) into contiguous
+/// row chunks and invoke `f(first_row, chunk)` concurrently on the
+/// persistent intra-op pool.
 ///
 /// `threads <= 1` (or a single row) runs inline — this is what the
 /// coordinator's layer workers use so model-parallel speedups are measured
-/// without nested parallelism.
+/// without nested parallelism; calls from *inside* any pool worker also
+/// run inline, enforcing that invariant structurally. Chunk boundaries
+/// depend only on `(threads, n_rows)`, never on the pool size, so a
+/// kernel's chunk decomposition is reproducible across machines.
 pub fn parallel_chunks<F>(threads: usize, n_rows: usize, out: &mut [f32], row_width: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
     assert_eq!(out.len(), n_rows * row_width, "output buffer shape mismatch");
     let threads = threads.max(1).min(n_rows.max(1));
-    if threads == 1 || n_rows <= 1 {
+    if threads == 1 || n_rows <= 1 || in_pool_worker() {
+        f(0, out);
+        return;
+    }
+    let pool = intra_pool();
+    if pool.workers() == 1 {
         f(0, out);
         return;
     }
     let rows_per = n_rows.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let mut rest = out;
-        let mut row0 = 0usize;
-        let fref = &f;
-        while row0 < n_rows {
-            let take = rows_per.min(n_rows - row0);
-            let (chunk, tail) = rest.split_at_mut(take * row_width);
-            rest = tail;
-            let start = row0;
-            scope.spawn(move || fref(start, chunk));
-            row0 += take;
-        }
+    let mut jobs: Vec<(usize, usize)> = Vec::with_capacity(threads);
+    let mut row0 = 0usize;
+    while row0 < n_rows {
+        let take = rows_per.min(n_rows - row0);
+        jobs.push((row0, take));
+        row0 += take;
+    }
+    let assignment: Vec<usize> = (0..jobs.len()).map(|j| j % pool.workers()).collect();
+    struct Base(*mut f32);
+    unsafe impl Sync for Base {}
+    let base = Base(out.as_mut_ptr());
+    pool.run(jobs.len(), &assignment, |j| {
+        let (start, take) = jobs[j];
+        // SAFETY: jobs hold pairwise-disjoint row ranges of `out`, each
+        // job has exactly one owner worker, and `run`'s barrier keeps the
+        // borrow alive (and unread) until every write has finished.
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(start * row_width), take * row_width)
+        };
+        f(start, chunk);
     });
 }
 
@@ -418,17 +499,29 @@ mod tests {
     #[test]
     fn lpt_edge_cases() {
         // no jobs: empty assignment, zero makespan
-        let (assignment, makespan) = lpt_assignment(&[], 4);
+        let (assignment, makespan) = lpt_assignment(&[], 4).unwrap();
         assert!(assignment.is_empty());
         assert_eq!(makespan, 0.0);
         // one job lands on one worker and defines the makespan
-        let (assignment, makespan) = lpt_assignment(&[2.5], 8);
+        let (assignment, makespan) = lpt_assignment(&[2.5], 8).unwrap();
         assert_eq!(assignment, vec![0]);
         assert!((makespan - 2.5).abs() < 1e-12);
         // zero workers behaves as one: everything serializes
-        let (assignment, makespan) = lpt_assignment(&[1.0, 2.0, 3.0], 0);
+        let (assignment, makespan) = lpt_assignment(&[1.0, 2.0, 3.0], 0).unwrap();
         assert!(assignment.iter().all(|&w| w == 0));
         assert!((makespan - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lpt_rejects_non_finite_times() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = lpt_assignment(&[1.0, bad, 2.0], 2).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains("non-finite"), "{msg}");
+            assert!(msg.contains("job 1"), "{msg}");
+        }
+        // finite inputs (including zeros) are unaffected
+        assert!(lpt_assignment(&[0.0, 1.0, 2.0], 2).is_ok());
     }
 
     #[test]
@@ -436,15 +529,15 @@ mod tests {
         // four identical jobs on two workers: the sort is stable, so ties
         // keep job order — heaviest-first placement alternates bins and
         // the split is perfectly balanced
-        let (a1, m1) = lpt_assignment(&[1.0; 4], 2);
-        let (a2, m2) = lpt_assignment(&[1.0; 4], 2);
+        let (a1, m1) = lpt_assignment(&[1.0; 4], 2).unwrap();
+        let (a2, m2) = lpt_assignment(&[1.0; 4], 2).unwrap();
         assert_eq!(a1, a2, "tie-breaking must be deterministic");
         assert!((m1 - 2.0).abs() < 1e-12, "makespan {m1}");
         assert_eq!(m1.to_bits(), m2.to_bits());
         let per_bin_0 = a1.iter().filter(|&&w| w == 0).count();
         assert_eq!(per_bin_0, 2, "{a1:?}");
         // ties with enough workers spread across distinct bins
-        let (a3, m3) = lpt_assignment(&[3.0; 3], 5);
+        let (a3, m3) = lpt_assignment(&[3.0; 3], 5).unwrap();
         let mut bins = a3.clone();
         bins.sort_unstable();
         bins.dedup();
@@ -455,7 +548,7 @@ mod tests {
     #[test]
     fn lpt_balances_skewed_jobs() {
         // round-robin would bin {4,3} vs {3,2} (makespan 7); LPT gets 6.
-        let (assignment, makespan) = lpt_assignment(&[4.0, 3.0, 3.0, 2.0], 2);
+        let (assignment, makespan) = lpt_assignment(&[4.0, 3.0, 3.0, 2.0], 2).unwrap();
         assert_eq!(assignment.len(), 4);
         assert!(assignment.iter().all(|&w| w < 2));
         assert!((makespan - 6.0).abs() < 1e-12, "makespan {makespan}");
@@ -463,7 +556,7 @@ mod tests {
 
     #[test]
     fn lpt_with_enough_workers_is_the_max_job() {
-        let (assignment, makespan) = lpt_assignment(&[1.0, 5.0, 2.0], 8);
+        let (assignment, makespan) = lpt_assignment(&[1.0, 5.0, 2.0], 8).unwrap();
         assert!((makespan - 5.0).abs() < 1e-12);
         // the three jobs land on three distinct workers
         let mut seen = assignment.clone();
@@ -536,5 +629,58 @@ mod tests {
         let got = pool.run(2, &[0, 1], |j| j + 10);
         assert_eq!(got, vec![10, 11]);
         assert_eq!(pool.spawned_threads(), 2);
+    }
+
+    #[test]
+    fn thread_cap_parsing_policy() {
+        assert_eq!(parse_thread_cap(None), None);
+        assert_eq!(parse_thread_cap(Some("".into())), None);
+        assert_eq!(parse_thread_cap(Some("zero".into())), None);
+        assert_eq!(parse_thread_cap(Some("0".into())), None);
+        assert_eq!(parse_thread_cap(Some("1".into())), Some(1));
+        assert_eq!(parse_thread_cap(Some(" 12 ".into())), Some(12));
+        // the effective count never exceeds detection and is at least 1
+        let eff = effective_cores();
+        assert!(eff >= 1 && eff <= host_cores());
+    }
+
+    #[test]
+    fn chunks_reuse_the_intra_pool() {
+        let n_rows = 64;
+        let width = 3;
+        let mut out = vec![0.0f32; n_rows * width];
+        parallel_chunks(4, n_rows, &mut out, width, |row0, chunk| {
+            for (di, row) in chunk.chunks_mut(width).enumerate() {
+                row.fill((row0 + di) as f32);
+            }
+        });
+        for i in 0..n_rows {
+            assert_eq!(out[i * width], i as f32);
+        }
+        // many more multi-threaded calls: zero new OS threads
+        let spawned0 = intra_pool_spawned_threads();
+        for _ in 0..16 {
+            parallel_chunks(8, n_rows, &mut out, width, |_, chunk| chunk.fill(1.0));
+        }
+        assert_eq!(intra_pool_spawned_threads(), spawned0);
+    }
+
+    #[test]
+    fn chunks_run_inline_on_pool_workers() {
+        // a kernel call issued from inside a layer worker must not
+        // re-enter the pool: exactly one chunk callback, covering all rows
+        let pool = WorkerPool::new(2);
+        let calls = AtomicUsize::new(0);
+        let got = pool.run(2, &[0, 1], |j| {
+            let mut out = vec![0.0f32; 40];
+            parallel_chunks(4, 10, &mut out, 4, |row0, chunk| {
+                calls.fetch_add(1, Ordering::SeqCst);
+                assert_eq!(row0, 0);
+                chunk.fill(j as f32 + 1.0);
+            });
+            out[39]
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 2, "one inline call per job");
+        assert_eq!(got, vec![1.0, 2.0]);
     }
 }
