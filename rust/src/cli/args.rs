@@ -84,7 +84,8 @@ USAGE:
                 [--quant none|int-delta|adaptive|p<bits>|pq<bits>]  (bits 1..=16)
                 [--quant-bits N] [--quant-block N] [--stochastic]
                 [--quant-budget F] [--adapt-interval N]  # adaptive only
-                [--schedule serial|parallel] [--workers N]
+                [--schedule serial|parallel|pipelined] [--workers N]
+                [--staleness N]             # pipelined only; default 0
                 [--assign round-robin|block|lpt]
                 [--distributed N]           # spawn N localhost worker processes
                 [--workers-at a:p,unix:/s]  # drive pre-started workers instead
@@ -106,6 +107,14 @@ spec in README \"On-disk datasets\"). Its content hash is pinned at load
 time and shipped to distributed workers, which refuse to train on
 different bytes. Registry entries in configs/datasets.json may also be
 on-disk: {\"kind\": \"on-disk\", \"name\": ..., \"dir\": ..., \"sha256\": ...}.
+
+--schedule pipelined replaces the six-phase barrier with a per-layer task
+graph: each layer advances to its next phase the moment its own
+dependencies are ready, and boundary tensors post the instant their layer
+finishes. --staleness N (default 0) bounds how many epochs a consumed
+neighbor boundary may lag; 0 is bitwise-identical to the barrier
+schedules, N >= 1 trades exactness for less waiting. See README
+\"Pipelined schedule\".
 
 --quant adaptive gives every p/q boundary its own 1..=16-bit width under
 a --quant-budget bits-per-element target (default 4.0), re-planned every

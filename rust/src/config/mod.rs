@@ -3,7 +3,7 @@
 //! training/run configs assembled by the CLI.
 
 use crate::util::json::{self, Json};
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One synthetic benchmark dataset (paper Table II, scaled per DESIGN.md §2).
@@ -330,6 +330,12 @@ pub struct TrainConfig {
     /// Layer→worker assignment policy when `workers` < layers.
     pub assign: WorkerAssign,
     pub schedule: ScheduleMode,
+    /// `ScheduleMode::Pipelined` only: how many epochs a consumed neighbor
+    /// boundary tensor may lag behind the consuming epoch. 0 (the default)
+    /// reproduces the barrier dataflow exactly — bitwise-identical records,
+    /// bytes and final state; N >= 1 lets a layer's Q/U proceed on a p up
+    /// to N epochs stale instead of waiting for the neighbor.
+    pub staleness: usize,
     /// Greedy layerwise stage plan; empty = train all layers at once.
     pub greedy_stages: Vec<usize>,
     pub zlast_prox_steps: usize,
@@ -354,6 +360,7 @@ impl TrainConfig {
             workers: 0,
             assign: WorkerAssign::RoundRobin,
             schedule: ScheduleMode::Parallel,
+            staleness: 0,
             greedy_stages: vec![],
             zlast_prox_steps: 24,
         }
@@ -382,6 +389,7 @@ impl TrainConfig {
             ("workers", Json::num(self.workers as f64)),
             ("assign", Json::str(self.assign.label())),
             ("schedule", Json::str(self.schedule.label())),
+            ("staleness", Json::num(self.staleness as f64)),
             (
                 "greedy_stages",
                 Json::Arr(self.greedy_stages.iter().map(|&s| Json::num(s as f64)).collect()),
@@ -422,6 +430,10 @@ impl TrainConfig {
         tc.workers = num("workers")? as usize;
         tc.assign = text("assign")?.parse()?;
         tc.schedule = text("schedule")?.parse()?;
+        tc.staleness = num("staleness")? as usize;
+        if tc.staleness > 0 && tc.schedule != ScheduleMode::Pipelined {
+            bail!("staleness > 0 requires the pipelined schedule");
+        }
         tc.greedy_stages = v
             .req("greedy_stages")?
             .as_arr()
@@ -604,9 +616,15 @@ impl std::str::FromStr for QuantMode {
 pub enum ScheduleMode {
     /// All layer updates on the caller thread (speedup baseline).
     Serial,
-    /// Phase dispatch over the persistent layer-worker pool (one pinned
-    /// OS thread per worker, spawned once per trainer).
+    /// Six-phase barrier dispatch over the persistent layer-worker pool
+    /// (one pinned OS thread per worker, spawned once per trainer).
     Parallel,
+    /// Per-layer task-graph execution on the same pool: a layer advances
+    /// to its next phase the moment its own dependencies are satisfied —
+    /// no global phase barriers. `TrainConfig::staleness` bounds how many
+    /// epochs a consumed neighbor boundary may lag (0 = bitwise-identical
+    /// to the barrier schedules).
+    Pipelined,
 }
 
 impl ScheduleMode {
@@ -615,6 +633,7 @@ impl ScheduleMode {
         match self {
             ScheduleMode::Serial => "serial",
             ScheduleMode::Parallel => "parallel",
+            ScheduleMode::Pipelined => "pipelined",
         }
     }
 }
@@ -663,7 +682,8 @@ impl std::str::FromStr for ScheduleMode {
         match s {
             "serial" => Ok(ScheduleMode::Serial),
             "parallel" => Ok(ScheduleMode::Parallel),
-            _ => Err(anyhow!("schedule must be serial|parallel, got {s:?}")),
+            "pipelined" => Ok(ScheduleMode::Pipelined),
+            _ => Err(anyhow!("schedule must be serial|parallel|pipelined, got {s:?}")),
         }
     }
 }
@@ -757,7 +777,31 @@ mod tests {
     fn backend_and_schedule_parsing() {
         assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
         assert_eq!("serial".parse::<ScheduleMode>().unwrap(), ScheduleMode::Serial);
+        assert_eq!("pipelined".parse::<ScheduleMode>().unwrap(), ScheduleMode::Pipelined);
+        assert_eq!(ScheduleMode::Pipelined.label(), "pipelined");
+        assert_eq!(
+            ScheduleMode::Pipelined.label().parse::<ScheduleMode>().unwrap(),
+            ScheduleMode::Pipelined
+        );
         assert!("gpu".parse::<BackendKind>().is_err());
+        assert!("async".parse::<ScheduleMode>().is_err());
+    }
+
+    #[test]
+    fn staleness_requires_the_pipelined_schedule() {
+        let mut tc = TrainConfig::new("cora", 16, 3, 2);
+        tc.schedule = ScheduleMode::Pipelined;
+        tc.staleness = 2;
+        let text = tc.to_json().to_string_compact();
+        let back = TrainConfig::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.staleness, 2);
+        assert_eq!(back.schedule, ScheduleMode::Pipelined);
+        // a stale bound without the pipelined schedule is rejected on the
+        // wire (the CLI enforces the same rule before a config is built)
+        tc.schedule = ScheduleMode::Parallel;
+        let text = tc.to_json().to_string_compact();
+        let err = TrainConfig::from_json(&crate::util::json::parse(&text).unwrap()).unwrap_err();
+        assert!(format!("{err}").contains("pipelined"), "{err}");
     }
 
     #[test]
@@ -773,7 +817,8 @@ mod tests {
         tc.adapt_interval = 7;
         tc.workers = 3;
         tc.assign = WorkerAssign::Lpt;
-        tc.schedule = ScheduleMode::Serial;
+        tc.schedule = ScheduleMode::Pipelined;
+        tc.staleness = 1;
         tc.greedy_stages = vec![2, 5, 7];
         let text = tc.to_json().to_string_compact();
         let back = TrainConfig::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
@@ -793,6 +838,7 @@ mod tests {
         assert_eq!(back.workers, tc.workers);
         assert_eq!(back.assign, tc.assign);
         assert_eq!(back.schedule, tc.schedule);
+        assert_eq!(back.staleness, tc.staleness);
         assert_eq!(back.greedy_stages, tc.greedy_stages);
         assert_eq!(back.zlast_prox_steps, tc.zlast_prox_steps);
     }

@@ -52,9 +52,9 @@
 //!
 //! # Schedule parity
 //!
-//! All three runtimes (serial, pool, distributed) produce bitwise-identical
-//! plans because every piece is deterministic and computed from
-//! schedule-invariant values:
+//! All runtimes (serial, pool, distributed, pipelined at staleness 0)
+//! produce bitwise-identical plans because every piece is deterministic
+//! and computed from schedule-invariant values:
 //!
 //! * stats are taken from the *pre-encode* update tensors and the *decoded*
 //!   (adopted) p/q pairs — identical across schedules by the phase-kernel
@@ -492,14 +492,29 @@ impl AdaptController {
     /// Record the statistics of this epoch's `p_l` message (the pre-encode
     /// update tensor).
     pub fn note_p(&mut self, layer: usize, m: &Mat) {
+        self.note_p_stats(layer, BoundaryStats::of(m));
+    }
+
+    /// [`AdaptController::note_p`] with pre-computed statistics. The
+    /// pipelined schedule computes [`BoundaryStats::of`] inside the layer
+    /// task (it is a pure function of the tensor) and applies the results
+    /// here in canonical layer order after the epoch joins, so the
+    /// controller itself is only ever touched from one thread.
+    pub fn note_p_stats(&mut self, layer: usize, stats: BoundaryStats) {
         let i = self.idx(BoundaryKind::P, layer).expect("p boundary index");
-        self.pending[i] = Some(BoundaryStats::of(m));
+        self.pending[i] = Some(stats);
     }
 
     /// Record the statistics of this epoch's `q_l` message.
     pub fn note_q(&mut self, layer: usize, m: &Mat) {
+        self.note_q_stats(layer, BoundaryStats::of(m));
+    }
+
+    /// [`AdaptController::note_q`] with pre-computed statistics (see
+    /// [`AdaptController::note_p_stats`]).
+    pub fn note_q_stats(&mut self, layer: usize, stats: BoundaryStats) {
         let i = self.idx(BoundaryKind::Q, layer).expect("q boundary index");
-        self.pending[i] = Some(BoundaryStats::of(m));
+        self.pending[i] = Some(stats);
     }
 
     /// Record the constraint residual `||p_{l+1} - q_l||²` of boundary `l`

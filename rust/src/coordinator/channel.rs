@@ -21,6 +21,7 @@
 use crate::coordinator::quant::{self, Codec, RangeStats};
 use crate::tensor::matrix::Mat;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Which ADMM variable a transfer carries (accounting dimension).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -166,6 +167,93 @@ impl CommSnapshot {
     }
 }
 
+/// A double-buffered, epoch-tagged boundary tensor for the pipelined
+/// schedule: the producing layer posts its freshly-committed p/q/u the
+/// instant it finishes (no phase barrier), and the consuming neighbor
+/// takes an [`Arc`] snapshot that stays valid even while the producer
+/// overwrites the buffer with the next epoch's value.
+///
+/// Tags are epoch version numbers under the init-chain convention: a
+/// value produced *during* epoch `e` carries tag `e + 1`, and the
+/// initialization-chain values carry tag 0. A consumer that needs the
+/// boundary no older than `min_tag` (its epoch minus the configured
+/// staleness bound) polls [`BoundaryBuf::try_snapshot`]; at staleness 0
+/// this reproduces the barrier schedule's dataflow exactly.
+///
+/// Publishing is allocation-free once warm: the two buffers rotate, and
+/// the retired one is rewritten in place whenever no consumer still
+/// holds a snapshot of it (checked via [`Arc::get_mut`]).
+#[derive(Debug)]
+pub struct BoundaryBuf {
+    inner: Mutex<BoundarySlot>,
+    cv: Condvar,
+}
+
+#[derive(Debug)]
+struct BoundarySlot {
+    cur: Arc<Mat>,
+    tag: u64,
+    /// The previously-published buffer, kept for in-place reuse.
+    spare: Option<Arc<Mat>>,
+}
+
+impl BoundaryBuf {
+    /// A buffer holding `init` at version `tag` (tag 0 for the
+    /// init-chain values every epoch-0 consumer reads).
+    pub fn new(init: Mat, tag: u64) -> Self {
+        BoundaryBuf {
+            inner: Mutex::new(BoundarySlot { cur: Arc::new(init), tag, spare: None }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Current version tag.
+    pub fn tag(&self) -> u64 {
+        self.inner.lock().unwrap().tag
+    }
+
+    /// Snapshot the boundary if its version is at least `min_tag`.
+    /// Non-blocking — the graph executor uses this to decide whether a
+    /// task is ready and moves on to another layer when it is not.
+    pub fn try_snapshot(&self, min_tag: u64) -> Option<(Arc<Mat>, u64)> {
+        let slot = self.inner.lock().unwrap();
+        (slot.tag >= min_tag).then(|| (Arc::clone(&slot.cur), slot.tag))
+    }
+
+    /// Block until the version reaches `min_tag` and snapshot it. Used
+    /// by tests and by consumers that have nothing else to run.
+    pub fn wait_at_least(&self, min_tag: u64) -> Arc<Mat> {
+        let mut slot = self.inner.lock().unwrap();
+        while slot.tag < min_tag {
+            slot = self.cv.wait(slot).unwrap();
+        }
+        Arc::clone(&slot.cur)
+    }
+
+    /// Publish `src` as version `tag`, waking every blocked consumer.
+    /// Tags must be non-decreasing; the producer-side task graph
+    /// guarantees that (one producer per boundary, epochs in order).
+    pub fn publish_from(&self, tag: u64, src: &Mat) {
+        let mut slot = self.inner.lock().unwrap();
+        debug_assert!(tag >= slot.tag, "boundary tag went backwards: {} -> {tag}", slot.tag);
+        let fresh = match slot.spare.take() {
+            Some(mut arc) => {
+                match Arc::get_mut(&mut arc) {
+                    // no consumer still holds it and shapes match: rewrite in place
+                    Some(m) if m.shape() == src.shape() => m.data.copy_from_slice(&src.data),
+                    _ => arc = Arc::new(src.clone()),
+                }
+                arc
+            }
+            None => Arc::new(src.clone()),
+        };
+        slot.spare = Some(std::mem::replace(&mut slot.cur, fresh));
+        slot.tag = tag;
+        drop(slot);
+        self.cv.notify_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +347,56 @@ mod tests {
                 assert_eq!(cold.p_bytes(), hot.p_bytes(), "codec {codec:?} versioned {versioned}");
             }
         }
+    }
+
+    #[test]
+    fn boundary_buf_versions_and_snapshots() {
+        let mut rng = Pcg32::seeded(21);
+        let a = Mat::randn(4, 3, 1.0, &mut rng);
+        let b = Mat::randn(4, 3, 1.0, &mut rng);
+        let buf = BoundaryBuf::new(a.clone(), 0);
+        assert_eq!(buf.tag(), 0);
+        // tag 0 satisfies min_tag 0 but not 1
+        let (snap0, tag0) = buf.try_snapshot(0).unwrap();
+        assert_eq!((snap0.data.clone(), tag0), (a.data.clone(), 0));
+        assert!(buf.try_snapshot(1).is_none());
+        buf.publish_from(1, &b);
+        let (snap1, tag1) = buf.try_snapshot(1).unwrap();
+        assert_eq!((snap1.data.clone(), tag1), (b.data.clone(), 1));
+        // the old snapshot is untouched by the publish
+        assert_eq!(snap0.data, a.data);
+    }
+
+    #[test]
+    fn boundary_buf_reuses_buffers_once_snapshots_drop() {
+        let buf = BoundaryBuf::new(Mat::zeros(8, 8), 0);
+        for tag in 1..=16u64 {
+            let m = Mat::from_fn(8, 8, |r, c| (tag as f32) + (r * 8 + c) as f32);
+            buf.publish_from(tag, &m);
+            let (snap, t) = buf.try_snapshot(tag).unwrap();
+            assert_eq!(t, tag);
+            assert_eq!(snap.data, m.data);
+            // snap drops here, so after two rounds both buffers recycle
+        }
+        assert_eq!(buf.tag(), 16);
+    }
+
+    #[test]
+    fn boundary_buf_wait_at_least_blocks_until_published() {
+        let buf = std::sync::Arc::new(BoundaryBuf::new(Mat::zeros(2, 2), 0));
+        let waiter = {
+            let buf = std::sync::Arc::clone(&buf);
+            std::thread::spawn(move || waiter_sum(&buf))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let mut m = Mat::zeros(2, 2);
+        m.data.iter_mut().for_each(|v| *v = 2.5);
+        buf.publish_from(3, &m);
+        assert_eq!(waiter.join().unwrap(), 10.0);
+    }
+
+    fn waiter_sum(buf: &BoundaryBuf) -> f32 {
+        buf.wait_at_least(3).data.iter().sum()
     }
 
     #[test]

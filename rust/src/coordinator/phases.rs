@@ -1,13 +1,14 @@
 //! The six per-layer subproblem updates of Algorithm 1, as runtime-agnostic
 //! kernels (substrate S12).
 //!
-//! Every schedule — the inline serial path, the pooled-thread dispatch, and
-//! the cross-process socket workers — executes *these* functions, so the
-//! three runtimes are bitwise-identical by construction: a schedule decides
-//! only *where* a layer's update runs and *how* its result travels, never
-//! what is computed. The schedule-parity integration test pins this down
-//! end-to-end (identical `EpochRecord` trajectories and identical metered
-//! byte totals across Serial, Parallel and Distributed).
+//! Every schedule — the inline serial path, the pooled-thread dispatch, the
+//! cross-process socket workers, and the pipelined task graph — executes
+//! *these* functions, so the runtimes are bitwise-identical by construction
+//! (pipelined: at staleness 0): a schedule decides only *where* a layer's
+//! update runs and *how* its result travels, never what is computed. The
+//! schedule-parity integration test pins this down end-to-end (identical
+//! `EpochRecord` trajectories and identical metered byte totals across
+//! Serial, Parallel, Distributed and Pipelined-s0).
 //!
 //! Also here: the wire-codec selectors ([`p_codec`] / [`q_codec`]) shared by
 //! the trainer and the remote workers (both sides of a socket must agree on
@@ -19,9 +20,127 @@ use crate::admm::state::{self, LayerRole, LayerState};
 use crate::backend::ComputeBackend;
 use crate::config::{QuantMode, TrainConfig};
 use crate::coordinator::adapt::QuantPlan;
+use crate::coordinator::channel::Kind;
 use crate::coordinator::quant::{Codec, RangeStats};
 use crate::graph::datasets::Dataset;
 use crate::tensor::matrix::Mat;
+
+/// The six phases of one Algorithm-1 iteration, in execution order. This is
+/// the index convention for every per-phase array in the codebase
+/// ([`crate::metrics::EpochRecord::phase_ms`], the trainer's per-phase layer
+/// timings, the wire's PHASE rounds) — index through [`Phase::index`]
+/// instead of bare integers so a phase cannot be mis-indexed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum Phase {
+    P = 0,
+    W = 1,
+    B = 2,
+    Z = 3,
+    Q = 4,
+    U = 5,
+}
+
+impl Phase {
+    pub const COUNT: usize = 6;
+
+    /// All phases in execution order.
+    pub const ALL: [Phase; Phase::COUNT] =
+        [Phase::P, Phase::W, Phase::B, Phase::Z, Phase::Q, Phase::U];
+
+    /// The phase's position in execution order (its array index).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`Phase::index`] (e.g. decoding a wire PHASE round).
+    pub fn from_index(i: usize) -> Option<Phase> {
+        Phase::ALL.get(i).copied()
+    }
+
+    /// Display name, consistent with [`crate::metrics::PHASE_NAMES`].
+    pub fn name(self) -> &'static str {
+        crate::metrics::PHASE_NAMES[self.index()]
+    }
+}
+
+/// Does `layer` (of an `n_layers` chain) run `phase` at all? Layer 0's
+/// input-side `p` is the fixed feature matrix `X` (no phase P), and the
+/// last layer has no output-side `q`/`u` (no phases Q and U).
+pub fn phase_applies(phase: Phase, layer: usize, n_layers: usize) -> bool {
+    match phase {
+        Phase::P => layer > 0,
+        Phase::Q | Phase::U => layer + 1 < n_layers,
+        Phase::W | Phase::B | Phase::Z => true,
+    }
+}
+
+/// One dependency of a [`LayerTask`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskDep {
+    /// The same layer's `phase` must have completed earlier **this** epoch
+    /// (the local chain P → W → B → Z → Q → U).
+    Local { phase: Phase },
+    /// A *neighbor* layer's boundary tensor: variable `var` of `layer`, as
+    /// produced `lag` epochs before the consuming epoch (`lag == 0`: this
+    /// epoch; `lag == 1`: the previous epoch). Under a staleness bound `S`
+    /// a value up to `S` additional epochs older is acceptable — the
+    /// freshness requirement at consuming epoch `e` is an epoch tag
+    /// `>= e + 1 - lag - S` (a value produced during epoch `k` carries tag
+    /// `k + 1`; init-chain values carry tag 0).
+    Boundary { var: Kind, layer: usize, lag: u64 },
+}
+
+/// One node of the per-epoch task graph: run `phase` on `layer` once every
+/// entry of `deps` is satisfied. Built by [`layer_tasks`] /
+/// [`epoch_tasks`]; executed by the trainer's pipelined graph loop and
+/// costed by the pipeline-makespan simulator.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerTask {
+    pub layer: usize,
+    pub phase: Phase,
+    pub deps: Vec<TaskDep>,
+}
+
+/// The task chain of one layer for one epoch, in execution order: its
+/// applicable phases, each carrying the local chain dependency plus the
+/// cross-layer boundary dependencies. Only two edges ever leave a layer:
+/// P(l) consumes `q_{l-1}`/`u_{l-1}` published the *previous* epoch
+/// (`lag == 1`, satisfied at epoch start), and Q(l)/U(l) consume `p_{l+1}`
+/// published *this* epoch (`lag == 0` — the only same-epoch cross-layer
+/// wait). Everything else is layer-local, which is exactly why the
+/// six-phase barrier is removable.
+pub fn layer_tasks(layer: usize, n_layers: usize) -> Vec<LayerTask> {
+    let mut out = Vec::with_capacity(Phase::COUNT);
+    let mut prev: Option<Phase> = None;
+    for phase in Phase::ALL {
+        if !phase_applies(phase, layer, n_layers) {
+            continue;
+        }
+        let mut deps = Vec::new();
+        if let Some(p) = prev {
+            deps.push(TaskDep::Local { phase: p });
+        }
+        match phase {
+            Phase::P => {
+                deps.push(TaskDep::Boundary { var: Kind::Q, layer: layer - 1, lag: 1 });
+                deps.push(TaskDep::Boundary { var: Kind::U, layer: layer - 1, lag: 1 });
+            }
+            Phase::Q | Phase::U => {
+                deps.push(TaskDep::Boundary { var: Kind::P, layer: layer + 1, lag: 0 });
+            }
+            Phase::W | Phase::B | Phase::Z => {}
+        }
+        out.push(LayerTask { layer, phase, deps });
+        prev = Some(phase);
+    }
+    out
+}
+
+/// The full per-epoch task graph, one chain per layer (see [`layer_tasks`]).
+pub fn epoch_tasks(n_layers: usize) -> Vec<Vec<LayerTask>> {
+    (0..n_layers).map(|l| layer_tasks(l, n_layers)).collect()
+}
 
 /// Phase P: the backtracked p-subproblem for one layer (`l >= 1`).
 /// `q_prev` / `u_prev` are layer `l-1`'s output-side variables (received
@@ -215,7 +334,7 @@ pub fn q_codec(cfg: &TrainConfig) -> Codec {
 /// Per-layer wire codec for the `p_layer` message: the plan's width under
 /// adaptive quantization, the fixed [`p_codec`] otherwise. Every transfer
 /// site of every schedule (trainer, worker send, worker mailbox decode)
-/// selects through this one function, so the three runtimes cannot drift.
+/// selects through this one function, so the runtimes cannot drift.
 pub fn p_codec_at(cfg: &TrainConfig, plan: Option<&QuantPlan>, layer: usize) -> Codec {
     match (cfg.quant, plan) {
         (QuantMode::Adaptive, Some(pl)) => uniform_codec(cfg, pl.p_bits(layer)),
@@ -279,6 +398,77 @@ mod tests {
         let mut cfg = TrainConfig::new("tiny", 6, 3, 1);
         cfg.seed = 9;
         (ds, cfg)
+    }
+
+    #[test]
+    fn phase_enum_matches_the_metrics_index_convention() {
+        assert_eq!(Phase::COUNT, crate::metrics::PHASE_NAMES.len());
+        for (i, ph) in Phase::ALL.iter().enumerate() {
+            assert_eq!(ph.index(), i);
+            assert_eq!(Phase::from_index(i), Some(*ph));
+            assert_eq!(ph.name(), crate::metrics::PHASE_NAMES[i]);
+        }
+        assert_eq!(Phase::from_index(Phase::COUNT), None);
+        assert_eq!(Phase::ALL[0], Phase::P);
+        assert_eq!(Phase::ALL[5], Phase::U);
+    }
+
+    #[test]
+    fn task_graph_has_the_paper_dependency_structure() {
+        let n = 4;
+        let graph = epoch_tasks(n);
+        assert_eq!(graph.len(), n);
+        // structural holes: layer 0 skips P, the last layer skips Q/U
+        assert_eq!(graph[0][0].phase, Phase::W);
+        assert_eq!(graph[n - 1].last().unwrap().phase, Phase::Z);
+        assert_eq!(graph[0].len(), 5);
+        assert_eq!(graph[1].len(), 6);
+        assert_eq!(graph[n - 1].len(), 4);
+        for (l, chain) in graph.iter().enumerate() {
+            for (i, task) in chain.iter().enumerate() {
+                assert_eq!(task.layer, l);
+                assert!(phase_applies(task.phase, l, n));
+                // the local chain edge links consecutive applicable phases
+                if i > 0 {
+                    assert!(task
+                        .deps
+                        .contains(&TaskDep::Local { phase: chain[i - 1].phase }));
+                }
+                // cross-layer edges: only P (previous epoch, lag 1) and
+                // Q/U (same epoch, lag 0) touch a neighbor
+                let boundary: Vec<&TaskDep> = task
+                    .deps
+                    .iter()
+                    .filter(|d| matches!(d, TaskDep::Boundary { .. }))
+                    .collect();
+                match task.phase {
+                    Phase::P => {
+                        assert_eq!(boundary.len(), 2);
+                        assert!(boundary.contains(&&TaskDep::Boundary {
+                            var: Kind::Q,
+                            layer: l - 1,
+                            lag: 1
+                        }));
+                        assert!(boundary.contains(&&TaskDep::Boundary {
+                            var: Kind::U,
+                            layer: l - 1,
+                            lag: 1
+                        }));
+                    }
+                    Phase::Q | Phase::U => {
+                        assert_eq!(
+                            boundary,
+                            vec![&TaskDep::Boundary { var: Kind::P, layer: l + 1, lag: 0 }]
+                        );
+                    }
+                    _ => assert!(boundary.is_empty(), "{:?} must be layer-local", task.phase),
+                }
+            }
+        }
+        // a single-layer chain degenerates to the local W/B/Z updates
+        let solo = epoch_tasks(1);
+        let phases: Vec<Phase> = solo[0].iter().map(|t| t.phase).collect();
+        assert_eq!(phases, vec![Phase::W, Phase::B, Phase::Z]);
     }
 
     #[test]

@@ -11,11 +11,20 @@
 //! bitwise-identical (asserted by property tests) — parallelism changes
 //! wall-clock only.
 //!
+//! `ScheduleMode::Pipelined` drops the six phase barriers entirely: each
+//! layer walks its own task chain (the [`phases::layer_tasks`] graph) and
+//! advances the moment its own dependencies are satisfied, consuming
+//! neighbor boundaries through epoch-tagged [`BoundaryBuf`]s with a
+//! `--staleness` bound on how many epochs a consumed boundary may lag.
+//! At staleness 0 the dependency structure reproduces the barrier
+//! dataflow exactly, so the pipelined schedule is bitwise-identical too.
+//!
 //! On hosts with >= 2 cores the pool realizes the parallel schedule
 //! physically and the speedup experiments report measured wall-clock. On
-//! single-core hosts they fall back to [`phase_makespan_ms`], which
-//! computes the schedule's true phase-barrier makespan from measured
-//! per-phase, per-layer compute times (`record_layer_times`).
+//! single-core hosts they fall back to [`phase_makespan_ms`] (barrier) /
+//! [`pipeline_makespan_ms`] (pipelined), which compute the schedules'
+//! true makespans from measured per-phase, per-layer compute times
+//! (`record_layer_times`).
 //!
 //! All cross-layer tensor movement goes through the byte-accounted
 //! [`CommMeter`] with the configured quantization codecs (pdADMM-G-Q).
@@ -25,13 +34,13 @@ use crate::admm::state::{self, LayerState};
 use crate::admm::updates::zlast_lr;
 use crate::backend::ComputeBackend;
 use crate::config::{QuantMode, ScheduleMode, TrainConfig, WorkerAssign};
-use crate::coordinator::adapt::{self, AdaptController};
-use crate::coordinator::channel::{CommMeter, Kind};
-use crate::coordinator::phases;
+use crate::coordinator::adapt::{self, AdaptController, BoundaryStats};
+use crate::coordinator::channel::{BoundaryBuf, CommMeter, Kind};
+use crate::coordinator::phases::{self, Phase, TaskDep};
 use crate::coordinator::quant::{Codec, RangeStats};
 use crate::graph::datasets::Dataset;
 use crate::metrics::{EpochRecord, TrainLog};
-use crate::util::threads::{lpt_assignment, WorkerPool};
+use crate::util::threads::{lpt_assignment, GraphNotify, GraphStep, WorkerPool};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -52,14 +61,83 @@ pub struct Trainer {
     pub last_phase_layer_secs: Vec<Vec<f64>>,
     /// layer -> compute seconds summed over the six phases (last epoch).
     pub last_layer_secs: Vec<f64>,
-    /// The persistent layer-worker pool (`ScheduleMode::Parallel` only).
-    /// Built on the first epoch and reused for every phase dispatch; its
-    /// spawn counter is the regression hook for "no threads per epoch".
+    /// The persistent layer-worker pool (`ScheduleMode::Parallel` and
+    /// `ScheduleMode::Pipelined`). Built on the first epoch and reused for
+    /// every phase dispatch / graph round; its spawn counter is the
+    /// regression hook for "no threads per epoch".
     pub pool: Option<WorkerPool>,
     /// Adaptive-quantization controller (`--quant adaptive` only): collects
     /// per-boundary statistics each epoch and re-solves the per-layer bit
     /// assignment every `cfg.adapt_interval` epochs.
     pub adapt: Option<AdaptController>,
+    /// The pipelined schedule's double-buffered boundary tensors (built on
+    /// the first pipelined epoch, reseeded whenever the layer chain or the
+    /// epoch counter moved without it).
+    pipeline: Option<PipelineState>,
+}
+
+/// Epoch-tagged boundary buffers for the pipelined schedule: `p[l]` holds
+/// layer `l`'s decoded p (consumed by layer `l-1`'s Q/U tasks), `q[l]` and
+/// `u[l]` its output-side q/u (consumed by layer `l+1`'s P task). A value
+/// produced during epoch `e` carries tag `e + 1`; the init-chain values
+/// carry the seed epoch's tag. The authoritative state stays in
+/// `Trainer::layers` — producers commit there first and publish a copy, so
+/// barrier and pipelined epochs can interleave freely.
+struct PipelineState {
+    /// The epoch whose start-of-epoch values the buffers hold (reseed
+    /// guard: must equal `Trainer::epoch` when a pipelined epoch starts).
+    epoch: u64,
+    p: Vec<BoundaryBuf>,
+    q: Vec<BoundaryBuf>,
+    u: Vec<BoundaryBuf>,
+}
+
+impl PipelineState {
+    fn seed(layers: &[LayerState], epoch: u64) -> PipelineState {
+        // Layers without a q/u (the last layer) get an empty placeholder;
+        // the task graph has no consumer for those slots.
+        let empty = || crate::Mat::zeros(0, 0);
+        PipelineState {
+            epoch,
+            p: layers.iter().map(|ls| BoundaryBuf::new(ls.p.clone(), epoch)).collect(),
+            q: layers
+                .iter()
+                .map(|ls| BoundaryBuf::new(ls.q.clone().unwrap_or_else(empty), epoch))
+                .collect(),
+            u: layers
+                .iter()
+                .map(|ls| BoundaryBuf::new(ls.u.clone().unwrap_or_else(empty), epoch))
+                .collect(),
+        }
+    }
+
+    /// The buffer a [`TaskDep::Boundary`] dep names.
+    fn buf(&self, var: Kind, layer: usize) -> &BoundaryBuf {
+        match var {
+            Kind::P => &self.p[layer],
+            Kind::Q => &self.q[layer],
+            Kind::U => &self.u[layer],
+        }
+    }
+}
+
+/// One layer's walk through its task chain during a pipelined epoch, plus
+/// the epilogue payloads its tasks hand back to the main thread (the
+/// adaptive controller is single-threaded; stats are pure functions of the
+/// tensors and get applied post-join in canonical layer order).
+#[derive(Default)]
+struct LayerCursor {
+    /// Index of the next task in this layer's `phases::layer_tasks` chain.
+    next: usize,
+    /// The exact `p_{l+1}` snapshot phase Q consumed — phase U reuses it
+    /// so the dual step pairs with the same primal the residual saw, even
+    /// when staleness lets a fresher p land in between.
+    p_snap: Option<Arc<crate::Mat>>,
+    /// Phase B's cached `W p`, consumed by phase Z.
+    wp: Option<crate::Mat>,
+    stats_p: Option<BoundaryStats>,
+    stats_q: Option<BoundaryStats>,
+    residual: Option<f64>,
 }
 
 /// The **phase-wise** simulated parallel epoch time, from per-phase,
@@ -102,6 +180,76 @@ pub fn phase_makespan_ms(phase_layer_secs: &[Vec<f64>], workers: usize) -> f64 {
     makespan * 1e3
 }
 
+/// The **pipelined** simulated epoch time from the same measured inputs as
+/// [`phase_makespan_ms`]: a greedy list-scheduling pass over the per-layer
+/// task graph (`phases::layer_tasks`) under the identical LPT layer→worker
+/// binning — repeatedly run the schedulable task with the earliest
+/// possible start, where phases Q and U of layer `l` become schedulable
+/// only once P of layer `l+1` finished (the graph's sole same-epoch
+/// cross-layer edge) and each layer's own chain runs in order on its
+/// pinned worker.
+///
+/// With `workers >= layers` this is exactly the task graph's critical-path
+/// length, which is provably `<=` the barrier makespan: every dependency
+/// path visits each phase at most once, so its length is bounded by the
+/// sum of per-phase maxima. With fewer workers greedy list scheduling
+/// carries no such guarantee (Graham's scheduling anomalies), which is why
+/// the regression test pins `workers >= layers`.
+pub fn pipeline_makespan_ms(phase_layer_secs: &[Vec<f64>], workers: usize) -> f64 {
+    let n = phase_layer_secs.first().map_or(0, |ph| ph.len());
+    if n == 0 || phase_layer_secs.len() != Phase::COUNT {
+        return 0.0;
+    }
+    let workers = workers.max(1);
+    let mut totals = vec![0.0f64; n];
+    for ph in phase_layer_secs {
+        for (l, &t) in ph.iter().enumerate() {
+            totals[l] += t;
+        }
+    }
+    let (assign, _) =
+        lpt_assignment(&totals, workers).expect("measured layer times are always finite");
+    let chains: Vec<Vec<Phase>> = (0..n)
+        .map(|l| Phase::ALL.into_iter().filter(|&ph| phases::phase_applies(ph, l, n)).collect())
+        .collect();
+    // finish time of P(l); layer 0's p is the fixed input, ready at t=0
+    let mut p_done: Vec<Option<f64>> = (0..n).map(|l| (l == 0).then_some(0.0)).collect();
+    let mut next = vec![0usize; n];
+    let mut wtime = vec![0.0f64; workers];
+    let total_tasks: usize = chains.iter().map(|c| c.len()).sum();
+    for _ in 0..total_tasks {
+        // earliest-start-first among schedulable tasks, ties to the
+        // lowest layer (deterministic)
+        let mut best: Option<(f64, usize)> = None;
+        for l in 0..n {
+            if next[l] >= chains[l].len() {
+                continue;
+            }
+            let ph = chains[l][next[l]];
+            let ready = match ph {
+                Phase::Q | Phase::U => match p_done[l + 1] {
+                    Some(t) => t,
+                    None => continue, // P(l+1) not scheduled yet
+                },
+                _ => 0.0,
+            };
+            let start = wtime[assign[l]].max(ready);
+            if best.is_none_or(|(s, _)| start < s) {
+                best = Some((start, l));
+            }
+        }
+        let (start, l) = best.expect("a task with no unmet deps always exists (P has none)");
+        let ph = chains[l][next[l]];
+        let end = start + phase_layer_secs[ph.index()][l];
+        wtime[assign[l]] = end;
+        if ph == Phase::P {
+            p_done[l] = Some(end);
+        }
+        next[l] += 1;
+    }
+    wtime.iter().cloned().fold(0.0, f64::max) * 1e3
+}
+
 /// Run `n` layer jobs: over the persistent pool under the epoch's fixed
 /// assignment (parallel schedule), or inline in index order (serial
 /// reference path). Jobs only read pre-phase state and write their own
@@ -136,6 +284,7 @@ impl Trainer {
             last_layer_secs: Vec::new(),
             pool: None,
             adapt,
+            pipeline: None,
         }
     }
 
@@ -159,12 +308,13 @@ impl Trainer {
         self.layers = layers;
         self.cfg.layers = self.layers.len();
         self.adapt = Self::build_adapt(&self.cfg, &self.layers);
+        self.pipeline = None; // new chain, new boundary shapes
     }
 
     fn n_workers(&self) -> usize {
         match self.cfg.schedule {
             ScheduleMode::Serial => 1,
-            ScheduleMode::Parallel => {
+            ScheduleMode::Parallel | ScheduleMode::Pipelined => {
                 if self.cfg.workers == 0 {
                     self.layers.len()
                 } else {
@@ -174,11 +324,12 @@ impl Trainer {
         }
     }
 
-    /// Create or resize the persistent worker pool (parallel schedule
-    /// only). This is the **only** place the runtime spawns threads; the
-    /// six phase dispatches of every epoch reuse the pool's workers.
+    /// Create or resize the persistent worker pool (parallel and pipelined
+    /// schedules). This is the **only** place the runtime spawns threads;
+    /// every phase dispatch / graph round of every epoch reuses the pool's
+    /// workers.
     fn ensure_pool(&mut self) {
-        if self.cfg.schedule != ScheduleMode::Parallel {
+        if self.cfg.schedule == ScheduleMode::Serial {
             return;
         }
         let want = self.n_workers().min(self.layers.len()).max(1);
@@ -196,7 +347,7 @@ impl Trainer {
     /// numerics — only which worker's wall-clock a layer lands on.
     fn layer_assignment(&self, n_layers: usize) -> Vec<usize> {
         let workers = match (&self.pool, self.cfg.schedule) {
-            (Some(p), ScheduleMode::Parallel) => p.workers(),
+            (Some(p), ScheduleMode::Parallel | ScheduleMode::Pipelined) => p.workers(),
             _ => 1,
         };
         let round_robin = || (0..n_layers).map(|l| l % workers).collect::<Vec<usize>>();
@@ -222,13 +373,16 @@ impl Trainer {
 
     /// One full Algorithm-1 iteration. Returns the epoch record.
     pub fn run_epoch(&mut self) -> EpochRecord {
+        if self.cfg.schedule == ScheduleMode::Pipelined {
+            return self.run_epoch_pipelined();
+        }
         let t0 = Instant::now();
         self.ensure_pool();
         let n_layers = self.layers.len();
         let assignment = self.layer_assignment(n_layers);
         let (nu, rho) = (self.cfg.nu, self.cfg.rho);
         use std::sync::atomic::{AtomicU64, Ordering as AtOrd};
-        let phase_ns: Vec<Vec<AtomicU64>> = (0..6)
+        let phase_ns: Vec<Vec<AtomicU64>> = (0..Phase::COUNT)
             .map(|_| (0..n_layers).map(|_| AtomicU64::new(0)).collect())
             .collect();
         // The lpt assignment policy feeds on measured layer times, so it
@@ -238,12 +392,13 @@ impl Trainer {
         let record = self.record_layer_times
             || (self.cfg.schedule == ScheduleMode::Parallel
                 && self.cfg.assign == WorkerAssign::Lpt);
-        let clock = |ph: usize, l: usize, start: Instant| {
+        let clock = |ph: Phase, l: usize, start: Instant| {
             if record {
-                phase_ns[ph][l].fetch_add(start.elapsed().as_nanos() as u64, AtOrd::Relaxed);
+                phase_ns[ph.index()][l]
+                    .fetch_add(start.elapsed().as_nanos() as u64, AtOrd::Relaxed);
             }
         };
-        let mut phase_ms = [0.0f64; 6];
+        let mut phase_ms = [0.0f64; Phase::COUNT];
 
         // Step sizes tau/theta: initialized from the Lipschitz upper bound
         // once, then adapted by backtracking every epoch (the Appendix-A
@@ -282,7 +437,7 @@ impl Trainer {
                     rho,
                     quant,
                 );
-                clock(0, l, start);
+                clock(Phase::P, l, start);
                 Some(out)
             });
         // p_l travels to worker l-1 (it is needed there for q/u updates):
@@ -312,7 +467,7 @@ impl Trainer {
                 self.layers[l].tau = tau;
             }
         }
-        phase_ms[0] = pt.elapsed().as_secs_f64() * 1e3;
+        phase_ms[Phase::P.index()] = pt.elapsed().as_secs_f64() * 1e3;
 
         // ---- phase W (local, backtracked like phase P) ----
         let pt = Instant::now();
@@ -320,14 +475,14 @@ impl Trainer {
         let new_ws: Vec<(crate::Mat, f32)> = dispatch(pool, n_layers, &assignment, |l| {
             let start = Instant::now();
             let out = phases::w_update(backend.as_ref(), &layers[l], nu);
-            clock(1, l, start);
+            clock(Phase::W, l, start);
             out
         });
         for (l, (w, theta)) in new_ws.into_iter().enumerate() {
             self.layers[l].w = w;
             self.layers[l].theta = theta;
         }
-        phase_ms[1] = pt.elapsed().as_secs_f64() * 1e3;
+        phase_ms[Phase::W.index()] = pt.elapsed().as_secs_f64() * 1e3;
 
         // ---- phase B (local) ----
         let pt = Instant::now();
@@ -338,7 +493,7 @@ impl Trainer {
             // closed form here and completes phase Z's pre-activation
             // below (b_update used to recompute the product from scratch).
             let out = phases::b_update(backend.as_ref(), &layers[l]);
-            clock(2, l, start);
+            clock(Phase::B, l, start);
             out
         });
         let mut wps: Vec<crate::Mat> = Vec::with_capacity(n_layers);
@@ -346,7 +501,7 @@ impl Trainer {
             self.layers[l].b = b;
             wps.push(wp);
         }
-        phase_ms[2] = pt.elapsed().as_secs_f64() * 1e3;
+        phase_ms[Phase::B.index()] = pt.elapsed().as_secs_f64() * 1e3;
 
         // ---- phase Z (local; reuses phase B's cached W p) ----
         let pt = Instant::now();
@@ -365,13 +520,13 @@ impl Trainer {
                 nu,
                 prox_lr,
             );
-            clock(3, l, start);
+            clock(Phase::Z, l, start);
             out
         });
         for (l, z) in new_zs.into_iter().enumerate() {
             self.layers[l].z = z;
         }
-        phase_ms[3] = pt.elapsed().as_secs_f64() * 1e3;
+        phase_ms[Phase::Z.index()] = pt.elapsed().as_secs_f64() * 1e3;
 
         // ---- phase Q: q_l from the received p_{l+1} (l < L) ----
         let pt = Instant::now();
@@ -389,7 +544,7 @@ impl Trainer {
                     nu,
                     rho,
                 );
-                clock(4, l, start);
+                clock(Phase::Q, l, start);
                 Some(out)
             });
         let q_codec = phases::q_codec(&self.cfg);
@@ -425,7 +580,7 @@ impl Trainer {
                 }
             }
         }
-        phase_ms[4] = pt.elapsed().as_secs_f64() * 1e3;
+        phase_ms[Phase::Q.index()] = pt.elapsed().as_secs_f64() * 1e3;
 
         // ---- phase U: duals + residuals (l < L) ----
         let pt = Instant::now();
@@ -436,7 +591,7 @@ impl Trainer {
             }
             let start = Instant::now();
             let out = phases::u_update(backend.as_ref(), &layers[l], &layers[l + 1].p, rho);
-            clock(5, l, start);
+            clock(Phase::U, l, start);
             Some(out)
         });
         for (l, u) in new_us.into_iter().enumerate() {
@@ -447,7 +602,7 @@ impl Trainer {
                 self.meter.transfer_into(Kind::U, Codec::None, &u, dst);
             }
         }
-        phase_ms[5] = pt.elapsed().as_secs_f64() * 1e3;
+        phase_ms[Phase::U.index()] = pt.elapsed().as_secs_f64() * 1e3;
 
         if record {
             self.last_phase_layer_secs = phase_ns
@@ -467,6 +622,254 @@ impl Trainer {
         // PLAN broadcast. In-process every boundary was noted above, so a
         // failure here is a logic bug, not a runtime condition.
         if let Some(a) = self.adapt.as_mut() {
+            a.end_epoch(self.epoch).expect("in-process adaptive re-plan has complete stats");
+        }
+
+        let comm = self.meter.take();
+        let mut rec = EpochRecord {
+            epoch: self.epoch,
+            epoch_ms: elapsed_ms,
+            phase_ms,
+            comm_bytes: comm.paper_bytes(),
+            ..Default::default()
+        };
+        if self.measure {
+            measure_record(&mut rec, self.backend.as_ref(), &self.layers, &self.ds, nu, rho);
+        }
+        rec
+    }
+
+    /// One Algorithm-1 iteration under the **pipelined** schedule: no
+    /// phase barriers. Each layer walks its own P→W→B→Z→Q→U task chain
+    /// (`phases::layer_tasks`) on its pinned pool worker and advances the
+    /// moment its own deps are satisfied; the only cross-layer waits are
+    /// the graph's `Boundary` deps, consumed through the epoch-tagged
+    /// [`BoundaryBuf`]s with the configured staleness bound. A boundary
+    /// produced with epoch-lag `g` is required at tag `e + 1 - g` and the
+    /// bound relaxes that by `cfg.staleness` epochs; at staleness 0 this
+    /// is exactly the barrier schedule's dataflow, so records, comm bytes,
+    /// and final state are bitwise-identical (asserted by the
+    /// `pipelined_staleness0_*` parity tests).
+    ///
+    /// Commit semantics mirror the barrier loops exactly — same kernels,
+    /// same fused-epilogue metered transfers, same decoded-value adoption
+    /// — but run inside the layer task, which then publishes the decoded
+    /// tensor for its neighbor the instant it lands. `phase_ms` has no
+    /// phase rounds to time, so it reports each phase's aggregate
+    /// per-layer task time instead (documented on [`EpochRecord`]).
+    fn run_epoch_pipelined(&mut self) -> EpochRecord {
+        let t0 = Instant::now();
+        self.ensure_pool();
+        let n_layers = self.layers.len();
+        let assignment = self.layer_assignment(n_layers);
+        let (nu, rho) = (self.cfg.nu, self.cfg.rho);
+        let epoch = self.epoch as u64;
+        let staleness = self.cfg.staleness as u64;
+
+        if self.epoch == 0 {
+            state::refresh_step_sizes(&mut self.layers, nu, rho, self.cfg.seed);
+        }
+        // (Re)seed the boundary buffers whenever they don't hold this
+        // epoch's start-of-epoch values: first pipelined epoch, a
+        // set_layers, or interleaved barrier-schedule epochs.
+        let stale = match &self.pipeline {
+            Some(st) => st.epoch != epoch || st.p.len() != n_layers,
+            None => true,
+        };
+        if stale {
+            self.pipeline = Some(PipelineState::seed(&self.layers, epoch));
+        }
+
+        // Adaptive quantization: snapshot the plan (it only changes at
+        // end_epoch, so every task sees the barrier schedule's view) and
+        // precompute the stats gate for this epoch.
+        let running_epoch = self.epoch + 1; // run_epoch increments at the end
+        let plan = self.adapt.as_ref().map(|a| a.plan.clone());
+        let wants = self.adapt.as_ref().is_some_and(|a| a.wants_stats(running_epoch));
+        let versioned = self.adapt.is_some();
+
+        let tasks = phases::epoch_tasks(n_layers);
+        let mut cursors: Vec<LayerCursor> =
+            (0..n_layers).map(|_| LayerCursor::default()).collect();
+        use std::sync::atomic::{AtomicU64, Ordering as AtOrd};
+        // Always clocked (one Instant + one atomic add per task): the
+        // aggregate feeds phase_ms, and last_phase_layer_secs when asked.
+        let phase_ns: Vec<Vec<AtomicU64>> = (0..Phase::COUNT)
+            .map(|_| (0..n_layers).map(|_| AtomicU64::new(0)).collect())
+            .collect();
+
+        {
+            let st = self.pipeline.as_ref().expect("seeded above");
+            let pool = self.pool.as_ref().expect("pipelined schedule builds a pool");
+            let backend = &self.backend;
+            let meter = &self.meter;
+            let cfg = &self.cfg;
+            let quant = self.cfg.quant;
+            let ds = &self.ds;
+            let prox_lr = zlast_lr(nu, ds.train_idx.len());
+            let plan = plan.as_ref();
+            let tasks = &tasks;
+            let phase_ns = &phase_ns;
+            let notify = GraphNotify::new();
+            // Required tag of a boundary dep produced with epoch-lag `g`.
+            let min_tag = |lag: u64| (epoch + 1).saturating_sub(lag + staleness);
+
+            struct LayerSlots(*mut LayerState);
+            unsafe impl Sync for LayerSlots {}
+            struct CursorSlots(*mut LayerCursor);
+            unsafe impl Sync for CursorSlots {}
+            let lslots = LayerSlots(self.layers.as_mut_ptr());
+            let cslots = CursorSlots(cursors.as_mut_ptr());
+
+            pool.run_graph(n_layers, &assignment, &notify, |l| {
+                // SAFETY: layer l's state and cursor are touched only by
+                // layer l's task chain, which runs entirely on l's single
+                // owner worker (run_graph's fixed assignment). Cross-layer
+                // data flows exclusively through the BoundaryBufs.
+                let layer = unsafe { &mut *lslots.0.add(l) };
+                let cur = unsafe { &mut *cslots.0.add(l) };
+                let chain = &tasks[l];
+                if cur.next >= chain.len() {
+                    return GraphStep::Done;
+                }
+                let task = &chain[cur.next];
+                // readiness straight off the task descriptor's deps
+                for dep in &task.deps {
+                    if let TaskDep::Boundary { var, layer: src, lag } = *dep {
+                        if st.buf(var, src).try_snapshot(min_tag(lag)).is_none() {
+                            return GraphStep::Blocked;
+                        }
+                    }
+                }
+                let start = Instant::now();
+                match task.phase {
+                    Phase::P => {
+                        // tags are monotone, so the dep check above keeps
+                        // these snapshots available
+                        let q_prev =
+                            st.q[l - 1].try_snapshot(min_tag(1)).expect("dep checked").0;
+                        let u_prev =
+                            st.u[l - 1].try_snapshot(min_tag(1)).expect("dep checked").0;
+                        let (p, tau, range) = phases::p_update_scanned(
+                            backend.as_ref(),
+                            layer,
+                            &q_prev,
+                            &u_prev,
+                            nu,
+                            rho,
+                            quant,
+                        );
+                        if wants {
+                            cur.stats_p = Some(BoundaryStats::of(&p)); // pre-encode
+                        }
+                        let codec = phases::p_codec_at(cfg, plan, l);
+                        meter.transfer_hot_into(
+                            Kind::P,
+                            codec,
+                            versioned,
+                            &p,
+                            Some(&range),
+                            &mut layer.p,
+                        );
+                        layer.tau = tau;
+                        st.p[l].publish_from(epoch + 1, &layer.p);
+                        notify.bump();
+                    }
+                    Phase::W => {
+                        let (w, theta) = phases::w_update(backend.as_ref(), layer, nu);
+                        layer.w = w;
+                        layer.theta = theta;
+                    }
+                    Phase::B => {
+                        let (b, wp) = phases::b_update(backend.as_ref(), layer);
+                        layer.b = b;
+                        cur.wp = Some(wp);
+                    }
+                    Phase::Z => {
+                        let wp = cur.wp.take().expect("phase B cached wp");
+                        layer.z = phases::z_update(
+                            backend.as_ref(),
+                            layer,
+                            &wp,
+                            &ds.y_onehot,
+                            &ds.maskn_train,
+                            nu,
+                            prox_lr,
+                        );
+                    }
+                    Phase::Q => {
+                        let p_next =
+                            st.p[l + 1].try_snapshot(min_tag(0)).expect("dep checked").0;
+                        let (q, range) =
+                            phases::q_update_scanned(backend.as_ref(), layer, &p_next, nu, rho);
+                        if wants {
+                            cur.stats_q = Some(BoundaryStats::of(&q)); // pre-encode
+                        }
+                        let codec = phases::q_codec_at(cfg, plan, l);
+                        let dst = layer.q.get_or_insert_with(|| crate::Mat::zeros(0, 0));
+                        meter.transfer_hot_into(Kind::Q, codec, versioned, &q, Some(&range), dst);
+                        if wants {
+                            cur.residual = Some(adapt::boundary_residual_sq(&p_next, dst));
+                        }
+                        cur.p_snap = Some(p_next);
+                        st.q[l].publish_from(epoch + 1, dst);
+                        notify.bump();
+                    }
+                    Phase::U => {
+                        // reuse phase Q's exact p snapshot (ADMM pairing)
+                        let p_next = cur.p_snap.take().expect("phase Q stored the p snapshot");
+                        let u = phases::u_update(backend.as_ref(), layer, &p_next, rho);
+                        let dst = layer.u.get_or_insert_with(|| crate::Mat::zeros(0, 0));
+                        meter.transfer_into(Kind::U, Codec::None, &u, dst);
+                        st.u[l].publish_from(epoch + 1, dst);
+                        notify.bump();
+                    }
+                }
+                phase_ns[task.phase.index()][l]
+                    .fetch_add(start.elapsed().as_nanos() as u64, AtOrd::Relaxed);
+                cur.next += 1;
+                GraphStep::Ran
+            });
+        }
+
+        let mut phase_ms = [0.0f64; Phase::COUNT];
+        for ph in Phase::ALL {
+            let ns: u64 = phase_ns[ph.index()].iter().map(|a| a.load(AtOrd::Relaxed)).sum();
+            phase_ms[ph.index()] = ns as f64 * 1e-6;
+        }
+        let record = self.record_layer_times || self.cfg.assign == WorkerAssign::Lpt;
+        if record {
+            self.last_phase_layer_secs = phase_ns
+                .iter()
+                .map(|ph| ph.iter().map(|a| a.load(AtOrd::Relaxed) as f64 * 1e-9).collect())
+                .collect();
+            self.last_layer_secs = (0..n_layers)
+                .map(|l| self.last_phase_layer_secs.iter().map(|ph| ph[l]).sum::<f64>())
+                .collect();
+        }
+        self.pipeline.as_mut().expect("seeded above").epoch = epoch + 1;
+        let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.epoch += 1;
+
+        // Apply the tasks' precomputed boundary stats in canonical layer
+        // order (identical to the barrier schedule's commit order), then
+        // run the same re-plan barrier.
+        if let Some(a) = self.adapt.as_mut() {
+            if wants {
+                for (l, cur) in cursors.iter_mut().enumerate() {
+                    if let Some(s) = cur.stats_p.take() {
+                        a.note_p_stats(l, s);
+                    }
+                }
+                for (l, cur) in cursors.iter_mut().enumerate() {
+                    if let Some(s) = cur.stats_q.take() {
+                        a.note_q_stats(l, s);
+                    }
+                    if let Some(r) = cur.residual.take() {
+                        a.note_residual(l, r);
+                    }
+                }
+            }
             a.end_epoch(self.epoch).expect("in-process adaptive re-plan has complete stats");
         }
 
@@ -768,6 +1171,201 @@ mod tests {
             serial_ms / legacy_ms,
             serial_ms / correct_ms
         );
+    }
+
+    /// Serial vs pipelined-at-staleness-0 must agree bit-for-bit, exactly
+    /// like the pool schedule: same per-epoch comm bytes, same final state.
+    fn assert_pipelined_s0_matches_serial(quant: QuantMode) {
+        let mut a = trainer(quant, ScheduleMode::Serial);
+        let mut b = trainer(quant, ScheduleMode::Pipelined);
+        for e in 0..4 {
+            let ra = a.run_epoch();
+            let rb = b.run_epoch();
+            assert_eq!(ra.comm_bytes, rb.comm_bytes, "{quant:?} epoch {e}");
+        }
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.w.data, lb.w.data, "W diverged at layer {}", la.index);
+            assert_eq!(la.z.data, lb.z.data, "z diverged at layer {}", la.index);
+            assert_eq!(la.p.data, lb.p.data, "p diverged at layer {}", la.index);
+            assert_eq!(
+                la.q.as_ref().map(|m| &m.data),
+                lb.q.as_ref().map(|m| &m.data),
+                "q diverged at layer {}",
+                la.index
+            );
+            assert_eq!(
+                la.u.as_ref().map(|m| &m.data),
+                lb.u.as_ref().map(|m| &m.data),
+                "u diverged at layer {}",
+                la.index
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_staleness0_equals_serial_fp32() {
+        assert_pipelined_s0_matches_serial(QuantMode::None);
+    }
+
+    #[test]
+    fn pipelined_staleness0_equals_serial_pq4() {
+        assert_pipelined_s0_matches_serial(QuantMode::PQ { bits: 4 });
+    }
+
+    #[test]
+    fn pipelined_staleness0_equals_serial_adaptive() {
+        let mut a = adaptive_trainer(ScheduleMode::Serial, 2);
+        let mut b = adaptive_trainer(ScheduleMode::Pipelined, 2);
+        for e in 0..4 {
+            let ra = a.run_epoch();
+            let rb = b.run_epoch();
+            assert_eq!(ra.comm_bytes, rb.comm_bytes, "adaptive epoch {e}");
+        }
+        // both re-planned twice (epochs 2 and 4) to the same plan
+        assert_eq!(b.adapt.as_ref().unwrap().replans, 2);
+        assert_eq!(a.adapt.as_ref().unwrap().plan, b.adapt.as_ref().unwrap().plan);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.w.data, lb.w.data, "W diverged at layer {}", la.index);
+            assert_eq!(la.z.data, lb.z.data, "z diverged at layer {}", la.index);
+            assert_eq!(la.p.data, lb.p.data, "p diverged at layer {}", la.index);
+        }
+    }
+
+    #[test]
+    fn pipelined_fewer_workers_than_layers_still_identical() {
+        // two workers own the three layers: a worker must scan past its
+        // blocked layer instead of sleeping on it (the executor's
+        // deadlock regression), and staleness 0 stays exact
+        let mut a = trainer(QuantMode::None, ScheduleMode::Serial);
+        let mut b = trainer(QuantMode::None, ScheduleMode::Pipelined);
+        b.cfg.workers = 2;
+        for _ in 0..4 {
+            a.run_epoch();
+            b.run_epoch();
+        }
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.w.data, lb.w.data);
+            assert_eq!(la.z.data, lb.z.data);
+        }
+    }
+
+    #[test]
+    fn pipelined_interleaves_with_barrier_epochs() {
+        // flipping schedules mid-run exercises the boundary-buffer reseed
+        // guard: barrier epochs advance the layers without touching the
+        // buffers, and the next pipelined epoch must notice
+        let mut a = trainer(QuantMode::None, ScheduleMode::Serial);
+        let mut b = trainer(QuantMode::None, ScheduleMode::Pipelined);
+        for e in 0..6 {
+            a.run_epoch();
+            b.cfg.schedule =
+                if e % 2 == 0 { ScheduleMode::Pipelined } else { ScheduleMode::Serial };
+            b.run_epoch();
+        }
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.w.data, lb.w.data, "W diverged at layer {}", la.index);
+            assert_eq!(la.z.data, lb.z.data, "z diverged at layer {}", la.index);
+        }
+    }
+
+    #[test]
+    fn pipelined_pool_spawns_no_threads_after_warmup() {
+        let mut t = trainer(QuantMode::None, ScheduleMode::Pipelined);
+        t.run_epoch();
+        let spawned = t.pool.as_ref().expect("pipelined builds a pool").spawned_threads();
+        assert_eq!(spawned, t.layers.len());
+        for _ in 0..3 {
+            t.run_epoch();
+        }
+        assert_eq!(t.pool.as_ref().unwrap().spawned_threads(), spawned);
+    }
+
+    #[test]
+    fn pipelined_records_phase_aggregates() {
+        let mut t = trainer(QuantMode::None, ScheduleMode::Pipelined);
+        t.record_layer_times = true;
+        let rec = t.run_epoch();
+        assert_eq!(t.last_phase_layer_secs.len(), Phase::COUNT);
+        // same structural zeros as the barrier schedule: layer 0 skips P,
+        // the last layer skips Q and U
+        let n = t.layers.len();
+        assert_eq!(t.last_phase_layer_secs[Phase::P.index()][0], 0.0);
+        assert_eq!(t.last_phase_layer_secs[Phase::Q.index()][n - 1], 0.0);
+        assert_eq!(t.last_phase_layer_secs[Phase::U.index()][n - 1], 0.0);
+        // phase_ms is the per-phase aggregate task time: positive overall
+        assert!(rec.phase_ms.iter().sum::<f64>() > 0.0);
+    }
+
+    #[test]
+    fn pipelined_staleness1_single_worker_is_deterministic_and_differs() {
+        let run = || {
+            let mut t = trainer(QuantMode::None, ScheduleMode::Pipelined);
+            t.cfg.staleness = 1;
+            t.cfg.workers = 1; // fixed scan order => deterministic at S >= 1
+            let mut objs = Vec::new();
+            for _ in 0..8 {
+                objs.push(t.run_epoch().objective);
+            }
+            (objs, t)
+        };
+        let (objs1, t1) = run();
+        let (objs2, t2) = run();
+        assert_eq!(objs1, objs2, "single-worker staleness-1 must be deterministic");
+        for (la, lb) in t1.layers.iter().zip(&t2.layers) {
+            assert_eq!(la.w.data, lb.w.data);
+            assert_eq!(la.z.data, lb.z.data);
+        }
+        // the stale boundary genuinely changes the trajectory...
+        let mut barrier = trainer(QuantMode::None, ScheduleMode::Serial);
+        let mut diverged = false;
+        for &o in &objs1 {
+            diverged |= (barrier.run_epoch().objective - o).abs() > 0.0;
+        }
+        assert!(diverged, "staleness 1 should not reproduce the barrier trajectory");
+        // ...but still optimizes
+        assert!(objs1.iter().all(|o| o.is_finite()));
+        assert!(
+            objs1.last().unwrap() < &objs1[1],
+            "stale run must still descend: {objs1:?}"
+        );
+    }
+
+    #[test]
+    fn pipeline_makespan_is_critical_path_with_enough_workers() {
+        // the legacy skewed matrix from the accounting regression: layer 0
+        // heavy in W/B/Z, idle in P; last layer has no Q/U
+        let phases: Vec<Vec<f64>> = vec![
+            vec![0.0, 1.0, 1.0, 1.0], // P
+            vec![4.0, 1.0, 1.0, 1.0], // W
+            vec![4.0, 1.0, 1.0, 1.0], // B
+            vec![4.0, 1.0, 1.0, 1.0], // Z
+            vec![1.0, 1.0, 1.0, 0.0], // Q
+            vec![1.0, 1.0, 1.0, 0.0], // U
+        ];
+        // critical path: layer 0 runs W,B,Z back to back (12), then Q and
+        // U (P(1) finished at t=1 long before) -> 14; the barrier schedule
+        // pays the per-phase maxima -> 15
+        let pipe = pipeline_makespan_ms(&phases, 4);
+        let barrier = phase_makespan_ms(&phases, 4);
+        assert!((pipe - 14.0e3).abs() < 1e-6, "pipeline {pipe}");
+        assert!((barrier - 15.0e3).abs() < 1e-6, "barrier {barrier}");
+        assert!(pipe < barrier, "removing the barriers must help on skewed inputs");
+        // one worker serializes every task: the plain sum, same as barrier
+        let pipe1 = pipeline_makespan_ms(&phases, 1);
+        assert!((pipe1 - 30.0e3).abs() < 1e-6, "got {pipe1}");
+        assert!((phase_makespan_ms(&phases, 1) - pipe1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pipeline_makespan_never_beats_the_dependency_structure() {
+        // uniform times: barrier and pipeline agree when nothing is skewed
+        // enough to overlap (every phase is the same width), and both
+        // simulators handle the empty input
+        let uniform: Vec<Vec<f64>> = (0..6).map(|_| vec![1.0; 3]).collect();
+        let pipe = pipeline_makespan_ms(&uniform, 3);
+        let barrier = phase_makespan_ms(&uniform, 3);
+        assert!(pipe <= barrier + 1e-9, "pipe {pipe} > barrier {barrier}");
+        assert_eq!(pipeline_makespan_ms(&[], 4), 0.0);
     }
 
     fn adaptive_trainer(schedule: ScheduleMode, interval: usize) -> Trainer {

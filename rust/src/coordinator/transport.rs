@@ -41,13 +41,31 @@
 //!
 //! TCP guarantees per-connection ordering, so a worker always applies its
 //! neighbors' VAR frames before the next PHASE command arrives.
+//!
+//! # Pipelined protocol (`--schedule pipelined`)
+//!
+//! The six PHASE rounds collapse into one EPOCH_START broadcast. Each
+//! worker runs its whole per-layer chain for the epoch, shipping tagged
+//! BOUNDARY frames (`var ‖ layer ‖ epoch tag ‖ wire`) the moment a
+//! block-boundary tensor is produced and blocking only where the
+//! bounded-staleness rule requires a fresher neighbor tensor than its
+//! mailbox holds (tag `>= e + 1 - lag - staleness`). While workers
+//! compute, the coordinator runs a relay pump: one reader thread per
+//! connection drains frames into a channel and the main thread forwards
+//! each BOUNDARY to the neighbor block's owner, so a frame is in flight
+//! the instant it is produced instead of after a phase barrier. A worker
+//! failure aborts the epoch: the pump broadcasts ABORT so peers blocked
+//! in a boundary wait fail fast instead of waiting forever. At
+//! `--staleness 0` the dataflow this realizes is exactly the barrier
+//! dataflow, so the records, byte totals and final state are bitwise
+//! identical to the other three schedules.
 
 use crate::admm::state::LayerState;
 use crate::backend::{ComputeBackend, NativeBackend};
-use crate::config::{BackendKind, DatasetSpec, QuantMode, TrainConfig};
+use crate::config::{BackendKind, DatasetSpec, QuantMode, ScheduleMode, TrainConfig};
 use crate::coordinator::adapt::AdaptController;
 use crate::coordinator::channel::CommSnapshot;
-use crate::coordinator::phases;
+use crate::coordinator::phases::{self, Phase};
 use crate::coordinator::quant::{self, Codec};
 use crate::coordinator::trainer::{measure_record, Trainer};
 use crate::graph::datasets::{self, Dataset};
@@ -105,6 +123,18 @@ pub mod frame_kind {
     /// per-layer bit assignment
     /// ([`crate::coordinator::adapt::QuantPlan::to_payload`]).
     pub const PLAN: u8 = 14;
+    /// Coordinator → worker (pipelined schedule): run one whole epoch
+    /// (`epoch: u64 LE`); the worker replies PHASE_DONE when its chain
+    /// finishes.
+    pub const EPOCH_START: u8 = 15;
+    /// Either direction (pipelined schedule): an epoch-tagged boundary
+    /// tensor (`var: u8 ‖ layer: u32 LE ‖ tag: u64 LE ‖ quant codec wire
+    /// bytes`). The tag is the producing epoch plus one; init-chain
+    /// values carry tag 0.
+    pub const BOUNDARY: u8 = 16;
+    /// Coordinator → worker (pipelined schedule): a peer failed — abandon
+    /// the epoch; any blocked boundary wait must error out.
+    pub const ABORT: u8 = 17;
 }
 
 /// VAR tag: a p tensor (travels to the owner of layer `l-1`).
@@ -229,6 +259,40 @@ impl Conn {
     pub fn recv(&mut self) -> Result<(u8, Vec<u8>)> {
         read_frame(&mut self.reader)
     }
+
+    /// Split into independently owned halves, so a reader thread can block
+    /// on incoming frames while another thread keeps writing — the
+    /// pipelined relay pump. Reassemble with [`Conn::from_halves`].
+    pub fn into_halves(self) -> (ReadHalf, WriteHalf) {
+        (ReadHalf { reader: self.reader }, WriteHalf { writer: self.writer })
+    }
+
+    /// Reassemble a connection split by [`Conn::into_halves`].
+    pub fn from_halves(r: ReadHalf, w: WriteHalf) -> Conn {
+        Conn { reader: r.reader, writer: w.writer }
+    }
+}
+
+/// The receive side of a split [`Conn`].
+pub struct ReadHalf {
+    reader: BufReader<Box<dyn Read + Send>>,
+}
+
+impl ReadHalf {
+    pub fn recv(&mut self) -> Result<(u8, Vec<u8>)> {
+        read_frame(&mut self.reader)
+    }
+}
+
+/// The send side of a split [`Conn`].
+pub struct WriteHalf {
+    writer: BufWriter<Box<dyn Write + Send>>,
+}
+
+impl WriteHalf {
+    pub fn send(&mut self, kind: u8, payload: &[u8]) -> Result<()> {
+        write_frame(&mut self.writer, kind, payload)
+    }
 }
 
 /// Bind `addr` (`unix:<path>` or TCP `host:port`) and accept exactly one
@@ -278,6 +342,26 @@ pub(crate) fn parse_var_header(payload: &[u8]) -> Result<(u8, usize, &[u8])> {
     }
     let layer = u32::from_le_bytes([payload[1], payload[2], payload[3], payload[4]]) as usize;
     Ok((payload[0], layer, &payload[5..]))
+}
+
+/// Build a BOUNDARY frame payload: `var ‖ layer ‖ epoch tag ‖ codec wire`.
+pub(crate) fn boundary_payload(var: u8, layer: usize, tag: u64, enc: &quant::Encoded) -> Vec<u8> {
+    let mut out = Vec::with_capacity(13 + enc.wire_bytes() as usize);
+    out.push(var);
+    out.extend_from_slice(&(layer as u32).to_le_bytes());
+    out.extend_from_slice(&tag.to_le_bytes());
+    enc.write_wire(&mut out);
+    out
+}
+
+/// Split a BOUNDARY frame payload into `(var, layer, tag, wire bytes)`.
+pub(crate) fn parse_boundary_header(payload: &[u8]) -> Result<(u8, usize, u64, &[u8])> {
+    if payload.len() < 13 {
+        return Err(anyhow!("BOUNDARY frame of {} bytes is too short", payload.len()));
+    }
+    let layer = u32::from_le_bytes([payload[1], payload[2], payload[3], payload[4]]) as usize;
+    let tag = u64::from_le_bytes(payload[5..13].try_into().unwrap());
+    Ok((payload[0], layer, tag, &payload[13..]))
 }
 
 /// Encode a per-worker [`CommSnapshot`] as the SNAPSHOT frame payload.
@@ -600,17 +684,22 @@ impl SocketTransport {
             .ok_or_else(|| anyhow!("no worker owns layer {layer}"))
     }
 
-    /// One epoch over the socket: six phase barriers with VAR relays, then
-    /// snapshot aggregation and (when measuring) a mirror sync + the same
-    /// evaluation path as the in-process trainer.
+    /// One epoch over the socket: six phase barriers with VAR relays
+    /// (barrier schedules) or one EPOCH_START with a live BOUNDARY relay
+    /// pump (`--schedule pipelined`), then snapshot aggregation and (when
+    /// measuring) a mirror sync + the same evaluation path as the
+    /// in-process trainer.
     pub fn run_epoch(&mut self) -> Result<EpochRecord> {
+        if self.cfg.schedule == ScheduleMode::Pipelined {
+            return self.run_epoch_pipelined();
+        }
         let t0 = Instant::now();
         self.synced = false;
-        let mut phase_ms = [0.0f64; 6];
-        for ph in 0..6u8 {
+        let mut phase_ms = [0.0f64; Phase::COUNT];
+        for ph in Phase::ALL {
             let pt = Instant::now();
             for conn in &mut self.conns {
-                conn.send(frame_kind::PHASE, &[ph])?;
+                conn.send(frame_kind::PHASE, &[ph.index() as u8])?;
             }
             let mut relays: Vec<(usize, Vec<u8>)> = Vec::new();
             for w in 0..self.conns.len() {
@@ -620,26 +709,20 @@ impl SocketTransport {
                         frame_kind::PHASE_DONE => break,
                         frame_kind::VAR => {
                             let (var, layer, _) = parse_var_header(&payload)?;
-                            let target = match var {
-                                VAR_P => self.owner_of(
-                                    layer
-                                        .checked_sub(1)
-                                        .ok_or_else(|| anyhow!("p_1 never travels"))?,
-                                )?,
-                                VAR_Q | VAR_U => self.owner_of(layer + 1)?,
-                                other => return Err(anyhow!("unknown VAR tag {other}")),
-                            };
+                            let target = self.boundary_target(var, layer)?;
                             relays.push((target, payload));
                         }
                         frame_kind::ERROR => {
                             return Err(anyhow!(
-                                "worker {w} failed in phase {ph}: {}",
+                                "worker {w} failed in phase {}: {}",
+                                ph.name(),
                                 String::from_utf8_lossy(&payload)
                             ));
                         }
                         other => {
                             return Err(anyhow!(
-                                "unexpected frame {other} from worker {w} in phase {ph}"
+                                "unexpected frame {other} from worker {w} in phase {}",
+                                ph.name()
                             ));
                         }
                     }
@@ -648,8 +731,120 @@ impl SocketTransport {
             for (target, payload) in relays {
                 self.conns[target].send(frame_kind::VAR, &payload)?;
             }
-            phase_ms[ph as usize] = pt.elapsed().as_secs_f64() * 1e3;
+            phase_ms[ph.index()] = pt.elapsed().as_secs_f64() * 1e3;
         }
+        self.finish_epoch(t0, phase_ms)
+    }
+
+    /// Which worker consumes a boundary tensor: `p_l` travels to the owner
+    /// of layer `l-1`, `q_l`/`u_l` travel to the owner of layer `l+1`.
+    fn boundary_target(&self, var: u8, layer: usize) -> Result<usize> {
+        match var {
+            VAR_P => self.owner_of(
+                layer.checked_sub(1).ok_or_else(|| anyhow!("p_1 never travels"))?,
+            ),
+            VAR_Q | VAR_U => self.owner_of(layer + 1),
+            other => Err(anyhow!("unknown VAR tag {other}")),
+        }
+    }
+
+    /// One pipelined epoch: broadcast EPOCH_START, then run the relay
+    /// pump — one reader thread per connection drains frames into a
+    /// channel while this thread forwards each BOUNDARY to its consumer
+    /// the moment it arrives — until every worker's PHASE_DONE lands. On
+    /// any failure the pump broadcasts ABORT once (so peers blocked in a
+    /// staleness wait fail fast) and drains the remaining readers.
+    ///
+    /// There are no phase barriers to time here, so `phase_ms` is all
+    /// zeros; the epoch wall-clock is the meaningful timing.
+    fn run_epoch_pipelined(&mut self) -> Result<EpochRecord> {
+        let t0 = Instant::now();
+        self.synced = false;
+        let epoch = self.epoch as u64;
+        let n = self.conns.len();
+        let (mut readers, mut writers): (Vec<ReadHalf>, Vec<WriteHalf>) =
+            std::mem::take(&mut self.conns).into_iter().map(Conn::into_halves).unzip();
+        let pumped: Result<()> = std::thread::scope(|s| {
+            let (tx, rx) = std::sync::mpsc::channel::<(usize, Result<(u8, Vec<u8>)>)>();
+            for (w, r) in readers.iter_mut().enumerate() {
+                let tx = tx.clone();
+                s.spawn(move || loop {
+                    match r.recv() {
+                        Ok((k, payload)) => {
+                            // PHASE_DONE / ERROR is the worker's last frame
+                            // this epoch — stop so the scope can join
+                            let last = matches!(k, frame_kind::PHASE_DONE | frame_kind::ERROR);
+                            if tx.send((w, Ok((k, payload)))).is_err() || last {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            let _ = tx.send((w, Err(e)));
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            for w in writers.iter_mut() {
+                w.send(frame_kind::EPOCH_START, &epoch.to_le_bytes())?;
+            }
+            let mut done = 0usize;
+            let mut failure: Option<anyhow::Error> = None;
+            let mut aborted = false;
+            while done < n {
+                // a closed channel means every reader exited — any missing
+                // PHASE_DONE is already recorded as a failure below
+                let Ok((w, msg)) = rx.recv() else { break };
+                match msg {
+                    Ok((frame_kind::PHASE_DONE, _)) => done += 1,
+                    Ok((frame_kind::BOUNDARY, payload)) => {
+                        let relayed = parse_boundary_header(&payload)
+                            .and_then(|(var, layer, _, _)| self.boundary_target(var, layer))
+                            .and_then(|t| writers[t].send(frame_kind::BOUNDARY, &payload));
+                        if let Err(e) = relayed {
+                            failure.get_or_insert(e);
+                        }
+                    }
+                    Ok((frame_kind::ERROR, payload)) => {
+                        done += 1; // the reader stopped; nothing more to await
+                        failure.get_or_insert(anyhow!(
+                            "worker {w} failed in the pipelined epoch: {}",
+                            String::from_utf8_lossy(&payload)
+                        ));
+                    }
+                    Ok((other, _)) => {
+                        failure.get_or_insert(anyhow!(
+                            "unexpected frame {other} from worker {w} in the pipelined epoch"
+                        ));
+                    }
+                    Err(e) => {
+                        done += 1; // the reader stopped on an i/o error
+                        failure.get_or_insert(e.context(format!("reading from worker {w}")));
+                    }
+                }
+                if failure.is_some() && !aborted {
+                    aborted = true;
+                    for w in writers.iter_mut() {
+                        let _ = w.send(frame_kind::ABORT, &[]);
+                    }
+                }
+            }
+            match failure {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        });
+        self.conns =
+            readers.into_iter().zip(writers).map(|(r, w)| Conn::from_halves(r, w)).collect();
+        pumped?;
+        self.finish_epoch(t0, [0.0f64; Phase::COUNT])
+    }
+
+    /// Shared epoch epilogue for both protocols: aggregate the per-worker
+    /// meters (and adaptive stats), advance the epoch, run the re-plan
+    /// barrier, and build the record (syncing the mirror when measuring).
+    fn finish_epoch(&mut self, t0: Instant, phase_ms: [f64; Phase::COUNT]) -> Result<EpochRecord> {
         // epoch end: aggregate the per-worker communication meters (and,
         // under adaptive quantization, the per-worker boundary stats —
         // each worker sends STATS immediately before its SNAPSHOT)

@@ -16,6 +16,15 @@
 //! owner's [`CommMeter`], and every consumer (owner and neighbor alike)
 //! adopts the *decoded* tensor — exactly the in-process semantics, with
 //! the boundary encodings additionally shipped as physical frames.
+//!
+//! Under `--schedule pipelined` the six PHASE rounds collapse into one
+//! EPOCH_START: the worker runs its whole per-layer chain, ships its
+//! block-boundary tensors as epoch-tagged BOUNDARY frames the moment they
+//! are produced, and blocks only where the bounded-staleness rule needs a
+//! fresher mailbox tensor than it holds (tag `>= e + 1 - lag - staleness`;
+//! see [`crate::coordinator::phases::TaskDep::Boundary`]). At staleness 0
+//! this realizes exactly the barrier dataflow, so the numerics and byte
+//! totals stay bitwise identical.
 
 use crate::admm::state::{self, LayerState};
 use crate::admm::updates::zlast_lr;
@@ -23,7 +32,7 @@ use crate::backend::{ComputeBackend, NativeBackend};
 use crate::config::{BackendKind, QuantMode, TrainConfig};
 use crate::coordinator::adapt::{self, AdaptController};
 use crate::coordinator::channel::{CommMeter, Kind};
-use crate::coordinator::phases;
+use crate::coordinator::phases::{self, Phase};
 use crate::coordinator::quant::{self, Codec, RangeStats};
 use crate::coordinator::transport::{self, frame_kind, Conn, DistSetup};
 use crate::graph::datasets::{self, Dataset};
@@ -62,14 +71,25 @@ fn serve(mut conn: Conn) -> Result<()> {
         let outcome = match k {
             frame_kind::VAR => st.apply_var(&payload),
             frame_kind::PLAN => st.apply_plan(&payload),
-            frame_kind::PHASE => {
-                if payload.len() != 1 {
-                    Err(anyhow!("PHASE frame needs exactly 1 byte"))
-                } else {
-                    st.run_phase(payload[0], &mut conn)
-                        .and_then(|_| conn.send(frame_kind::PHASE_DONE, &[]))
-                }
-            }
+            frame_kind::PHASE => match &payload[..] {
+                &[ph] => match Phase::from_index(ph as usize) {
+                    Some(ph) => st
+                        .run_phase(ph, &mut conn)
+                        .and_then(|_| conn.send(frame_kind::PHASE_DONE, &[])),
+                    None => Err(anyhow!("unknown phase index {ph}")),
+                },
+                _ => Err(anyhow!("PHASE frame needs exactly 1 byte")),
+            },
+            frame_kind::EPOCH_START => match <[u8; 8]>::try_from(&payload[..]) {
+                Ok(bytes) => st
+                    .run_pipelined_epoch(u64::from_le_bytes(bytes), &mut conn)
+                    .and_then(|_| conn.send(frame_kind::PHASE_DONE, &[])),
+                Err(_) => Err(anyhow!("EPOCH_START frame needs exactly 8 bytes")),
+            },
+            // a neighbor's tagged tensor relayed after this worker already
+            // finished its epoch — store it for the next epoch's waits
+            frame_kind::BOUNDARY => st.apply_boundary(&payload),
+            frame_kind::ABORT => Err(anyhow!("coordinator aborted the session")),
             frame_kind::EPOCH_END => {
                 // adaptive runs ship this epoch's boundary stats ahead of
                 // the comm snapshot; the coordinator merges them and (on
@@ -109,6 +129,11 @@ struct WorkerState {
     hi: usize,
     meter: CommMeter,
     epoch: usize,
+    /// Epoch tags of the neighbor mailboxes (pipelined schedule only),
+    /// indexed by VAR tag: `p_hi`, `q_{lo-1}`, `u_{lo-1}`. A tensor
+    /// produced during epoch `e` carries tag `e + 1`; the init-chain
+    /// values every mailbox starts from carry tag 0.
+    mb_tags: [u64; 3],
     /// Phase-B cached `W @ p` per owned layer (consumed by phase Z).
     wps: Vec<Option<Mat>>,
     /// Adaptive-quantization state (`--quant adaptive` only): the live
@@ -155,6 +180,7 @@ impl WorkerState {
             hi: setup.layer_hi,
             meter: CommMeter::new(),
             epoch: 0,
+            mb_tags: [0; 3],
             wps: (0..n).map(|_| None).collect(),
             adapt,
         })
@@ -200,8 +226,14 @@ impl WorkerState {
     /// transfer once (the in-process accounting convention).
     fn apply_var(&mut self, payload: &[u8]) -> Result<()> {
         let (var, layer, wire) = transport::parse_var_header(payload)?;
+        self.store_boundary(var, layer, wire)
+    }
+
+    /// Decode a neighbor tensor into its mailbox slot (shared by the VAR
+    /// and BOUNDARY paths).
+    fn store_boundary(&mut self, var: u8, layer: usize, wire: &[u8]) -> Result<()> {
         if layer >= self.layers.len() {
-            return Err(anyhow!("VAR for unknown layer {layer}"));
+            return Err(anyhow!("boundary tensor for unknown layer {layer}"));
         }
         let plan = self.adapt.as_ref().map(|a| &a.plan);
         let (codec, dst) = match var {
@@ -222,9 +254,58 @@ impl WorkerState {
         Ok(())
     }
 
+    /// Store an epoch-tagged BOUNDARY tensor (pipelined schedule) and
+    /// advance the matching mailbox tag. Only this block's two mailboxes
+    /// are legal targets — anything else is a routing bug upstream.
+    fn apply_boundary(&mut self, payload: &[u8]) -> Result<()> {
+        let (var, layer, tag, wire) = transport::parse_boundary_header(payload)?;
+        let expected = match var {
+            transport::VAR_P => self.hi,
+            transport::VAR_Q | transport::VAR_U => self
+                .lo
+                .checked_sub(1)
+                .ok_or_else(|| anyhow!("q/u never travel to the first block"))?,
+            other => return Err(anyhow!("unknown VAR tag {other}")),
+        };
+        if layer != expected {
+            return Err(anyhow!(
+                "BOUNDARY var {var} for layer {layer} is not a mailbox of block [{}, {})",
+                self.lo,
+                self.hi
+            ));
+        }
+        self.store_boundary(var, layer, wire)?;
+        let slot = &mut self.mb_tags[var as usize];
+        *slot = (*slot).max(tag);
+        Ok(())
+    }
+
+    /// Block on the coordinator connection until the mailbox for `var`
+    /// holds a tensor with tag `>= min_tag`, applying every BOUNDARY
+    /// frame that arrives in the meantime (other mailboxes included).
+    fn wait_boundary(&mut self, conn: &mut Conn, var: u8, min_tag: u64) -> Result<()> {
+        while self.mb_tags[var as usize] < min_tag {
+            let (k, payload) = conn.recv().context("waiting for a BOUNDARY frame")?;
+            match k {
+                frame_kind::BOUNDARY => self.apply_boundary(&payload)?,
+                frame_kind::ABORT => {
+                    return Err(anyhow!("coordinator aborted the epoch"));
+                }
+                other => {
+                    return Err(anyhow!(
+                        "unexpected frame {other} while waiting for a boundary tensor"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Commit an owned layer's outbound tensor: encode once with the wire
     /// codec, meter the exact wire bytes, adopt the decoded value locally,
-    /// and — iff `boundary` — ship the same encoding as a VAR frame.
+    /// and — iff `boundary` — ship the same encoding as a VAR frame (or,
+    /// when `tag` is set, as an epoch-tagged BOUNDARY frame on the
+    /// pipelined schedule; the metered wire bytes are identical).
     /// Adaptive runs emit the v2 (per-message bit-width) header, exactly
     /// like the in-process meter, so byte totals match across runtimes.
     /// `range`, when the phase kernel folded one, feeds the fused encode
@@ -240,6 +321,7 @@ impl WorkerState {
         value: &Mat,
         range: Option<&RangeStats>,
         boundary: bool,
+        tag: Option<u64>,
     ) -> Result<()> {
         let mut enc = quant::Encoded::empty();
         quant::encode_hot_into(codec, self.adapt.is_some(), value, range, &mut enc);
@@ -251,7 +333,13 @@ impl WorkerState {
         };
         quant::decode_into(&enc, dst);
         if boundary {
-            conn.send(frame_kind::VAR, &transport::var_payload(var, layer, &enc))?;
+            match tag {
+                Some(t) => conn.send(
+                    frame_kind::BOUNDARY,
+                    &transport::boundary_payload(var, layer, t, &enc),
+                )?,
+                None => conn.send(frame_kind::VAR, &transport::var_payload(var, layer, &enc))?,
+            }
         }
         Ok(())
     }
@@ -259,10 +347,10 @@ impl WorkerState {
     /// Run one phase over the owned block. Mirrors the in-process
     /// semantics exactly: compute every layer's update from pre-phase
     /// state, then commit (and meter) the results.
-    fn run_phase(&mut self, ph: u8, conn: &mut Conn) -> Result<()> {
+    fn run_phase(&mut self, ph: Phase, conn: &mut Conn) -> Result<()> {
         let nu = self.cfg.nu;
         let rho = self.cfg.rho;
-        if ph == 0 && self.epoch == 0 {
+        if ph == Phase::P && self.epoch == 0 {
             // identical to the trainer's first-epoch step-size refresh: the
             // full chain is bitwise-identical in every process, so the
             // shared RNG stream yields the same tau/theta everywhere. This
@@ -272,7 +360,7 @@ impl WorkerState {
         }
         let n = self.layers.len();
         match ph {
-            0 => {
+            Phase::P => {
                 let mut outs: Vec<(usize, Mat, f32, RangeStats)> = Vec::new();
                 for l in self.lo..self.hi {
                     if l == 0 {
@@ -314,11 +402,12 @@ impl WorkerState {
                         &cand,
                         Some(&range),
                         boundary,
+                        None,
                     )?;
                     self.layers[l].tau = tau;
                 }
             }
-            1 => {
+            Phase::W => {
                 let mut outs: Vec<(usize, Mat, f32)> = Vec::new();
                 for l in self.lo..self.hi {
                     let (w, theta) = phases::w_update(self.backend.as_ref(), &self.layers[l], nu);
@@ -329,7 +418,7 @@ impl WorkerState {
                     self.layers[l].theta = theta;
                 }
             }
-            2 => {
+            Phase::B => {
                 let mut outs: Vec<(usize, Mat, Mat)> = Vec::new();
                 for l in self.lo..self.hi {
                     let (b, wp) = phases::b_update(self.backend.as_ref(), &self.layers[l]);
@@ -340,7 +429,7 @@ impl WorkerState {
                     self.wps[l] = Some(wp);
                 }
             }
-            3 => {
+            Phase::Z => {
                 let prox_lr = zlast_lr(nu, self.ds.train_idx.len());
                 let mut outs: Vec<(usize, Mat)> = Vec::new();
                 for l in self.lo..self.hi {
@@ -361,7 +450,7 @@ impl WorkerState {
                     self.layers[l].z = z;
                 }
             }
-            4 => {
+            Phase::Q => {
                 let mut outs: Vec<(usize, Mat, RangeStats)> = Vec::new();
                 for l in self.lo..self.hi {
                     if l + 1 == n {
@@ -396,6 +485,7 @@ impl WorkerState {
                         &q,
                         Some(&range),
                         boundary,
+                        None,
                     )?;
                 }
                 // constraint residuals of the owned boundaries, from the
@@ -417,7 +507,7 @@ impl WorkerState {
                     }
                 }
             }
-            5 => {
+            Phase::U => {
                 let mut outs: Vec<(usize, Mat)> = Vec::new();
                 for l in self.lo..self.hi {
                     if l + 1 == n {
@@ -443,14 +533,179 @@ impl WorkerState {
                         &u,
                         Option::None,
                         boundary,
+                        None,
                     )?;
                 }
             }
-            other => return Err(anyhow!("unknown phase {other}")),
         }
-        if ph == 5 {
+        if ph == Phase::U {
             self.epoch += 1;
         }
+        Ok(())
+    }
+
+    /// One whole epoch on the pipelined schedule (EPOCH_START): run the
+    /// owned block's per-layer chain P → W → B → Z → Q → U, shipping each
+    /// block-boundary tensor as an epoch-tagged BOUNDARY frame the moment
+    /// it is produced and blocking only where the staleness rule needs a
+    /// fresher mailbox tensor. The per-layer sequencing computes values
+    /// bitwise identical to the barrier phases: no kernel reads a
+    /// same-phase sibling's output, and U reuses exactly the `p_{l+1}` its
+    /// Q consumed because no frame is received between them.
+    fn run_pipelined_epoch(&mut self, epoch: u64, conn: &mut Conn) -> Result<()> {
+        if epoch != self.epoch as u64 {
+            return Err(anyhow!(
+                "EPOCH_START for epoch {epoch}, but this worker is at epoch {}",
+                self.epoch
+            ));
+        }
+        let nu = self.cfg.nu;
+        let rho = self.cfg.rho;
+        let stale = self.cfg.staleness as u64;
+        if self.epoch == 0 {
+            // same first-epoch step-size refresh + trim as the barrier path
+            state::refresh_step_sizes(&mut self.layers, nu, rho, self.cfg.seed);
+            self.trim_non_owned();
+        }
+        let n = self.layers.len();
+        let tag = epoch + 1;
+        let running_epoch = self.epoch + 1;
+        // ---- P, ascending: the block-low boundary leaves immediately ----
+        for l in self.lo..self.hi {
+            if l == 0 {
+                continue; // p_1 = X is fixed
+            }
+            if l == self.lo {
+                // previous-epoch neighbor outputs (lag 1); relays precede
+                // EPOCH_START on this connection, so at staleness 0 these
+                // waits are always already satisfied
+                let min = tag.saturating_sub(1 + stale);
+                self.wait_boundary(conn, transport::VAR_Q, min)?;
+                self.wait_boundary(conn, transport::VAR_U, min)?;
+            }
+            let prev = &self.layers[l - 1];
+            let (cand, tau, range) = phases::p_update_scanned(
+                self.backend.as_ref(),
+                &self.layers[l],
+                prev.q.as_ref().ok_or_else(|| anyhow!("layer {} missing q", l - 1))?,
+                prev.u.as_ref().ok_or_else(|| anyhow!("layer {} missing u", l - 1))?,
+                nu,
+                rho,
+                self.cfg.quant,
+            );
+            if let Some(a) = self.adapt.as_mut() {
+                if a.wants_stats(running_epoch) {
+                    a.note_p(l, &cand);
+                }
+            }
+            let codec = phases::p_codec_at(&self.cfg, self.adapt.as_ref().map(|a| &a.plan), l);
+            self.commit_transfer(
+                conn,
+                Kind::P,
+                transport::VAR_P,
+                l,
+                codec,
+                &cand,
+                Some(&range),
+                l == self.lo,
+                Some(tag),
+            )?;
+            self.layers[l].tau = tau;
+        }
+        // ---- W, B, Z: layer-local chains ----
+        let prox_lr = zlast_lr(nu, self.ds.train_idx.len());
+        for l in self.lo..self.hi {
+            let (w, theta) = phases::w_update(self.backend.as_ref(), &self.layers[l], nu);
+            self.layers[l].w = w;
+            self.layers[l].theta = theta;
+            let (b, wp) = phases::b_update(self.backend.as_ref(), &self.layers[l]);
+            self.layers[l].b = b;
+            let z = phases::z_update(
+                self.backend.as_ref(),
+                &self.layers[l],
+                &wp,
+                &self.ds.y_onehot,
+                &self.ds.maskn_train,
+                nu,
+                prox_lr,
+            );
+            self.layers[l].z = z;
+        }
+        // ---- Q, ascending: the block-high boundary waits on p_hi ----
+        for l in self.lo..self.hi {
+            if l + 1 == n {
+                continue; // the last layer has no q
+            }
+            if l + 1 == self.hi {
+                // this epoch's neighbor p (lag 0) — the only wait that can
+                // actually block; the staleness bound caps how old a p may
+                // substitute for it
+                self.wait_boundary(conn, transport::VAR_P, tag.saturating_sub(stale))?;
+            }
+            let (q, range) = phases::q_update_scanned(
+                self.backend.as_ref(),
+                &self.layers[l],
+                &self.layers[l + 1].p,
+                nu,
+                rho,
+            );
+            if let Some(a) = self.adapt.as_mut() {
+                if a.wants_stats(running_epoch) {
+                    a.note_q(l, &q);
+                }
+            }
+            let codec = phases::q_codec_at(&self.cfg, self.adapt.as_ref().map(|a| &a.plan), l);
+            self.commit_transfer(
+                conn,
+                Kind::Q,
+                transport::VAR_Q,
+                l,
+                codec,
+                &q,
+                Some(&range),
+                l + 1 == self.hi,
+                Some(tag),
+            )?;
+        }
+        // constraint residuals of the owned boundaries, from the adopted
+        // (decoded) tensors — the same values as the barrier path
+        if self.adapt.as_ref().is_some_and(|a| a.wants_stats(running_epoch)) {
+            for l in self.lo..self.hi {
+                if l + 1 == n {
+                    continue;
+                }
+                let q = self.layers[l]
+                    .q
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("layer {l} missing q after phase Q"))?;
+                let r = adapt::boundary_residual_sq(&self.layers[l + 1].p, q);
+                self.adapt.as_mut().unwrap().note_residual(l, r);
+            }
+        }
+        // ---- U, ascending: reuses exactly the p_{l+1} that Q consumed ----
+        for l in self.lo..self.hi {
+            if l + 1 == n {
+                continue;
+            }
+            let u = phases::u_update(
+                self.backend.as_ref(),
+                &self.layers[l],
+                &self.layers[l + 1].p,
+                rho,
+            );
+            self.commit_transfer(
+                conn,
+                Kind::U,
+                transport::VAR_U,
+                l,
+                Codec::None,
+                &u,
+                None,
+                l + 1 == self.hi,
+                Some(tag),
+            )?;
+        }
+        self.epoch += 1;
         Ok(())
     }
 

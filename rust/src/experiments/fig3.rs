@@ -18,11 +18,19 @@
 //! (measured when possible), `parallel_sim_ms` is always the simulator.
 //! Coordination overhead (barriers + channel encode/decode) is measured,
 //! not simulated: it is included in the serial path.
+//!
+//! The pipelined columns repeat both measurements for the barrier-free
+//! task-graph schedule (`ScheduleMode::Pipelined`, staleness 0 — bitwise
+//! the same arithmetic): `pipelined_ms` is its measured wall-clock (falls
+//! back to the simulator on single-core hosts), `pipelined_sim_ms` the
+//! dependency-graph makespan ([`pipeline_makespan_ms`]), which with one
+//! worker per layer is the critical path and never exceeds the
+//! phase-barrier makespan.
 
 use super::ExpOptions;
 use crate::backend::NativeBackend;
 use crate::config::{BackendKind, DatasetSpec, RootConfig, ScheduleMode, TrainConfig};
-use crate::coordinator::trainer::{phase_makespan_ms, Trainer};
+use crate::coordinator::trainer::{phase_makespan_ms, pipeline_makespan_ms, Trainer};
 use crate::coordinator::transport::{spawn_self_repro_worker, SocketTransport};
 use crate::graph::datasets;
 use crate::metrics::write_csv_table;
@@ -44,14 +52,15 @@ pub(crate) fn bench_cfg(name: &str, hidden: usize, layers: usize, epochs: usize)
 }
 
 /// Per-depth epoch times: `(serial_ms, parallel_ms, parallel_sim_ms,
-/// measured)`. `parallel_ms` is physically measured on the worker pool
-/// when the host has >= 2 cores, otherwise it equals the simulator value.
+/// pipelined_ms, pipelined_sim_ms, measured)`. The measured columns come
+/// from the worker pool when the host has >= 2 cores, otherwise they
+/// equal their simulator values.
 fn epoch_times(
     ds: &crate::graph::datasets::Dataset,
     hidden: usize,
     layers: usize,
     reps: usize,
-) -> (f64, f64, f64, bool) {
+) -> (f64, f64, f64, f64, f64, bool) {
     let mut tc = bench_cfg(&ds.name, hidden, layers, reps);
     tc.schedule = ScheduleMode::Serial;
     let mut trainer = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
@@ -60,30 +69,36 @@ fn epoch_times(
     trainer.run_epoch(); // warmup (allocations, page faults)
     let mut serial = 0.0;
     let mut sim = 0.0;
+    let mut pipe_sim = 0.0;
     for _ in 0..reps {
         serial += trainer.run_epoch().epoch_ms;
         sim += phase_makespan_ms(&trainer.last_phase_layer_secs, layers);
+        pipe_sim += pipeline_makespan_ms(&trainer.last_phase_layer_secs, layers);
     }
     let serial = serial / reps as f64;
     let sim = sim / reps as f64;
+    let pipe_sim = pipe_sim / reps as f64;
 
     let measured = effective_cores() >= 2;
-    let parallel = if measured {
-        let mut tc = bench_cfg(&ds.name, hidden, layers, reps);
-        tc.schedule = ScheduleMode::Parallel;
-        tc.workers = 0; // one worker per layer, as in the paper
-        let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
-        t.measure = false;
-        t.run_epoch(); // warmup: builds the persistent pool
-        let mut ms = 0.0;
-        for _ in 0..reps {
-            ms += t.run_epoch().epoch_ms;
-        }
-        ms / reps as f64
+    let (parallel, pipelined) = if measured {
+        let run = |schedule: ScheduleMode| {
+            let mut tc = bench_cfg(&ds.name, hidden, layers, reps);
+            tc.schedule = schedule;
+            tc.workers = 0; // one worker per layer, as in the paper
+            let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
+            t.measure = false;
+            t.run_epoch(); // warmup: builds the persistent pool
+            let mut ms = 0.0;
+            for _ in 0..reps {
+                ms += t.run_epoch().epoch_ms;
+            }
+            ms / reps as f64
+        };
+        (run(ScheduleMode::Parallel), run(ScheduleMode::Pipelined))
     } else {
-        sim
+        (sim, pipe_sim)
     };
-    (serial, parallel, sim, measured)
+    (serial, parallel, sim, pipelined, pipe_sim, measured)
 }
 
 /// Measured epoch time and metered bytes of a real cross-process run:
@@ -141,11 +156,16 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
     for ds_name in &datasets_all {
         let ds = datasets::load(cfg, ds_name)?;
         for &l in &layer_counts {
-            let (serial, parallel, sim, measured) = epoch_times(&ds, hidden, l, reps);
+            let (serial, parallel, sim, pipelined, pipe_sim, measured) =
+                epoch_times(&ds, hidden, l, reps);
             let speedup = serial / parallel;
+            let pipe_speedup = serial / pipelined;
             let mode = if measured { "measured" } else { "simulated" };
             println!(
                 "[fig3] {ds_name:<18} L={l:<3} serial {serial:>9.1} ms  parallel {parallel:>9.1} ms ({mode})  sim {sim:>9.1} ms  speedup {speedup:>5.2}x"
+            );
+            println!(
+                "[fig3] {ds_name:<18} L={l:<3} pipelined {pipelined:>9.1} ms ({mode})  sim {pipe_sim:>9.1} ms  speedup {pipe_speedup:>5.2}x"
             );
             // the paper's setting: one worker (process) per layer
             let dist_cell = if opts.distributed {
@@ -161,14 +181,14 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
                 ",".to_string()
             };
             rows.push(format!(
-                "{ds_name},{l},{serial:.3},{parallel:.3},{sim:.3},{speedup:.4},{mode},{dist_cell}"
+                "{ds_name},{l},{serial:.3},{parallel:.3},{sim:.3},{pipelined:.3},{pipe_sim:.3},{speedup:.4},{pipe_speedup:.4},{mode},{dist_cell}"
             ));
         }
     }
     let out = cfg.results_dir().join("fig3_speedup_layers.csv");
     write_csv_table(
         &out,
-        "dataset,layers,serial_ms,parallel_ms,parallel_sim_ms,speedup,parallel_mode,dist_ms,dist_comm_bytes",
+        "dataset,layers,serial_ms,parallel_ms,parallel_sim_ms,pipelined_ms,pipelined_sim_ms,speedup,pipelined_speedup,parallel_mode,dist_ms,dist_comm_bytes",
         &rows,
     )?;
     println!("[fig3] wrote {}", out.display());

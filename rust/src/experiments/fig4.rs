@@ -16,11 +16,17 @@
 //! Expected shape: pdADMM-G scales near-linearly; baselines flatten.
 //! Physically measured curves flatten at the host's core count — the
 //! simulator column preserves the paper-shaped curve beyond it.
+//!
+//! The pipelined columns repeat both measurements for the barrier-free
+//! task-graph schedule (`ScheduleMode::Pipelined`, staleness 0):
+//! `pipelined_ms` measured on the pool, `pipelined_sim_ms` the
+//! dependency-graph makespan ([`pipeline_makespan_ms`]) on the same
+//! LPT layer binning.
 
 use super::ExpOptions;
 use crate::backend::{ComputeBackend, NativeBackend};
 use crate::config::{RootConfig, ScheduleMode, WorkerAssign};
-use crate::coordinator::trainer::{phase_makespan_ms, Trainer};
+use crate::coordinator::trainer::{phase_makespan_ms, pipeline_makespan_ms, Trainer};
 use crate::graph::datasets::{self, Dataset};
 use crate::metrics::write_csv_table;
 use crate::optim::{Optimizer, OptimizerKind};
@@ -31,17 +37,19 @@ use std::time::Instant;
 
 pub const DATASETS: [&str; 2] = ["flickr", "ogbn-arxiv"];
 
-/// Per worker count: `(epoch_ms, sim_ms)` plus whether `epoch_ms` was
-/// physically measured on the pool (hosts with >= 2 cores) or is the
-/// simulator value. Per-phase layer times are measured once on the serial
-/// path; the simulator then bins them for every `w`.
+/// Per worker count: `(epoch_ms, sim_ms, pipelined_ms, pipelined_sim_ms)`
+/// plus whether the measured columns were physically measured on the pool
+/// (hosts with >= 2 cores) or are the simulator values. Per-phase layer
+/// times are measured once on the serial path; the simulators then bin
+/// them for every `w`.
+#[allow(clippy::type_complexity)]
 fn admm_curve(
     ds: &Dataset,
     hidden: usize,
     layers: usize,
     reps: usize,
     workers: &[usize],
-) -> (Vec<f64>, Vec<f64>, bool) {
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, bool) {
     let mut tc = super::fig3::bench_cfg(&ds.name, hidden, layers, reps);
     tc.schedule = ScheduleMode::Serial;
     let mut trainer = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
@@ -49,38 +57,44 @@ fn admm_curve(
     trainer.record_layer_times = true;
     trainer.run_epoch();
     let mut sim = vec![0.0f64; workers.len()];
+    let mut pipe_sim = vec![0.0f64; workers.len()];
     for _ in 0..reps {
         trainer.run_epoch();
         for (i, &w) in workers.iter().enumerate() {
             sim[i] += phase_makespan_ms(&trainer.last_phase_layer_secs, w);
+            pipe_sim[i] += pipeline_makespan_ms(&trainer.last_phase_layer_secs, w);
         }
     }
     let sim: Vec<f64> = sim.iter().map(|t| t / reps as f64).collect();
+    let pipe_sim: Vec<f64> = pipe_sim.iter().map(|t| t / reps as f64).collect();
 
     let measured = effective_cores() >= 2;
-    let epoch = if measured {
-        let mut out = Vec::with_capacity(workers.len());
-        for &w in workers {
-            let mut tc = super::fig3::bench_cfg(&ds.name, hidden, layers, reps);
-            tc.schedule = ScheduleMode::Parallel;
-            tc.workers = w;
-            // same layer→worker policy the simulator bins with, so the
-            // measured and simulated columns differ only by real overhead
-            tc.assign = WorkerAssign::Lpt;
-            let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
-            t.measure = false;
-            t.run_epoch(); // warmup: builds the pool + first layer-time measurement
-            let mut ms = 0.0;
-            for _ in 0..reps {
-                ms += t.run_epoch().epoch_ms;
+    let (epoch, pipe) = if measured {
+        let run = |schedule: ScheduleMode| {
+            let mut out = Vec::with_capacity(workers.len());
+            for &w in workers {
+                let mut tc = super::fig3::bench_cfg(&ds.name, hidden, layers, reps);
+                tc.schedule = schedule;
+                tc.workers = w;
+                // same layer→worker policy the simulators bin with, so the
+                // measured and simulated columns differ only by real overhead
+                tc.assign = WorkerAssign::Lpt;
+                let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds.clone(), tc);
+                t.measure = false;
+                t.run_epoch(); // warmup: builds the pool + first layer-time measurement
+                let mut ms = 0.0;
+                for _ in 0..reps {
+                    ms += t.run_epoch().epoch_ms;
+                }
+                out.push(ms / reps as f64);
             }
-            out.push(ms / reps as f64);
-        }
-        out
+            out
+        };
+        (run(ScheduleMode::Parallel), run(ScheduleMode::Pipelined))
     } else {
-        sim.clone()
+        (sim.clone(), pipe_sim.clone())
     };
-    (epoch, sim, measured)
+    (epoch, sim, pipe, pipe_sim, measured)
 }
 
 /// Baseline: shard grads measured individually; epoch(w) = max shard time +
@@ -174,13 +188,20 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for ds_name in &ds_names {
         let ds = datasets::load(cfg, ds_name)?;
-        let (admm, admm_sim, measured) = admm_curve(&ds, hidden, layers, reps, &worker_counts);
+        let (admm, admm_sim, pipe, pipe_sim, measured) =
+            admm_curve(&ds, hidden, layers, reps, &worker_counts);
         let mode = if measured { "measured" } else { "simulated" };
         for (i, &w) in worker_counts.iter().enumerate() {
             let speedup = admm[0] / admm[i];
             println!(
                 "[fig4] {ds_name:<12} pdADMM-G   w={w:<3} {:>9.1} ms ({mode})  sim {:>9.1} ms  speedup {speedup:>5.2}x",
                 admm[i], admm_sim[i]
+            );
+            println!(
+                "[fig4] {ds_name:<12} pipelined  w={w:<3} {:>9.1} ms ({mode})  sim {:>9.1} ms  speedup {:>5.2}x",
+                pipe[i],
+                pipe_sim[i],
+                admm[0] / pipe[i]
             );
             // cross-process measurement: w real worker OS processes over
             // the framed socket transport, next to the pooled numbers
@@ -197,8 +218,8 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
                 ",".to_string()
             };
             rows.push(format!(
-                "{ds_name},pdADMM-G,{w},{:.3},{:.3},{speedup:.4},{mode},{dist_cell}",
-                admm[i], admm_sim[i]
+                "{ds_name},pdADMM-G,{w},{:.3},{:.3},{:.3},{:.3},{speedup:.4},{mode},{dist_cell}",
+                admm[i], admm_sim[i], pipe[i], pipe_sim[i]
             ));
         }
         for kind in OptimizerKind::all() {
@@ -211,7 +232,7 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
                     curve[i]
                 );
                 rows.push(format!(
-                    "{ds_name},{},{w},{:.3},{:.3},{speedup:.4},modeled,,",
+                    "{ds_name},{},{w},{:.3},{:.3},,,{speedup:.4},modeled,,",
                     kind.label(),
                     curve[i],
                     curve[i]
@@ -222,7 +243,7 @@ pub fn run(cfg: &RootConfig, opts: &ExpOptions) -> anyhow::Result<()> {
     let out = cfg.results_dir().join("fig4_speedup_workers.csv");
     write_csv_table(
         &out,
-        "dataset,method,workers,epoch_ms,sim_ms,speedup,epoch_mode,dist_ms,dist_comm_bytes",
+        "dataset,method,workers,epoch_ms,sim_ms,pipelined_ms,pipelined_sim_ms,speedup,epoch_mode,dist_ms,dist_comm_bytes",
         &rows,
     )?;
     println!("[fig4] wrote {}", out.display());

@@ -47,7 +47,7 @@
 //! export → reload reproduces the
 //! in-memory dataset bit for bit (asserted by
 //! `tests/integration_dataset_io.rs`, including 3-epoch training traces
-//! on all three schedules).
+//! on every schedule).
 
 use crate::config::SyntheticSpec;
 use crate::graph::csr::{Csr, CsrBuilder};

@@ -39,9 +39,9 @@
 //! from per-layer boundary statistics ([`coordinator::adapt`]); messages
 //! then carry their width in the v2 wire header. With an integral budget
 //! `b ≥ 2` the epoch wire volume is guaranteed ≤ fixed `pq<b>`'s, and the
-//! plan is identical across all three schedules.
+//! plan is identical across all four schedules.
 //!
-//! # Execution model — three schedules, one set of kernels
+//! # Execution model — four schedules, one set of kernels
 //!
 //! Algorithm 1's six phases (P, W, B, Z, Q, U) always execute the
 //! [`coordinator::phases`] kernels; the schedules differ only in where a
@@ -60,13 +60,25 @@
 //!    the phases against the coordinator's framed Unix-socket/TCP barrier
 //!    protocol; block-boundary tensors cross the wire as frames whose
 //!    payloads are exactly the `quant` codec format.
+//! 4. **Pipelined (task graph)** — `--schedule pipelined` drops the six
+//!    per-phase barriers and runs the explicit per-layer dependency graph
+//!    ([`coordinator::phases::epoch_tasks`]): each `(layer, phase)` task
+//!    fires as soon as its inputs exist, with cross-layer boundary tensors
+//!    double-buffered and tagged by producing epoch. `--staleness N`
+//!    bounds how many epochs a consumer may run ahead of a stale boundary
+//!    tensor; in the distributed runtime the same graph rides tagged
+//!    `BOUNDARY` frames instead of lockstep phase rounds.
 //!
-//! All three are bitwise-identical — same `EpochRecord` trajectories,
-//! same metered byte totals — asserted end-to-end by the schedule-parity
-//! integration test. Speedup experiments physically measure the pool (and,
-//! with `--distributed`, the socket runtime) on multi-core hosts and
-//! otherwise use the phase-wise makespan simulator
-//! ([`coordinator::trainer::phase_makespan_ms`]).
+//! The first three — and Pipelined at staleness 0, whose dependency graph
+//! reproduces the barrier dataflow exactly — are bitwise-identical: same
+//! `EpochRecord` trajectories, same metered byte totals, asserted
+//! end-to-end by the schedule-parity integration test. Staleness `N > 0`
+//! trades that identity for overlap; a convergence test pins its loss to
+//! the fp32 envelope. Speedup experiments physically measure the pool
+//! (and, with `--distributed`, the socket runtime) on multi-core hosts
+//! and otherwise use the makespan simulators
+//! ([`coordinator::trainer::phase_makespan_ms`] for the barrier schedule,
+//! [`coordinator::trainer::pipeline_makespan_ms`] for the task graph).
 //!
 //! # Datasets — synthetic and on-disk
 //!
@@ -77,8 +89,8 @@
 //! vector, and the manifest through the SAX-style visitor reader
 //! [`util::json_stream`] without building a DOM. Both sources share
 //! [`graph::datasets::assemble`], so an exported synthetic dataset reloads
-//! bitwise-identically — including its training traces on all three
-//! schedules (`tests/integration_dataset_io.rs`). On-disk specs pin a
+//! bitwise-identically — including its training traces on every
+//! schedule (`tests/integration_dataset_io.rs`). On-disk specs pin a
 //! SHA-256 content hash that the distributed SETUP frame carries to every
 //! worker process.
 

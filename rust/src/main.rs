@@ -155,6 +155,13 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
         ));
     }
     tc.schedule = args.flags.get_or("schedule", ScheduleMode::Parallel)?;
+    tc.staleness = args.flags.get_or("staleness", 0usize)?;
+    if tc.staleness > 0 && tc.schedule != ScheduleMode::Pipelined {
+        return Err(anyhow::anyhow!(
+            "--staleness only applies to --schedule pipelined, not {:?}",
+            tc.schedule.label()
+        ));
+    }
     tc.workers = args.flags.get_or("workers", 0usize)?;
     tc.assign = args.flags.get_or("assign", tc.assign)?;
     if let Some(stages) = args.flags.get("greedy") {

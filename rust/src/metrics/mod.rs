@@ -1,6 +1,7 @@
 //! Metrics (substrate S16): per-epoch training records, communication
 //! accounting, and CSV/JSON sinks under `results/`.
 
+use crate::coordinator::phases::Phase;
 use crate::util::json::Json;
 use std::io::Write;
 use std::path::Path;
@@ -18,17 +19,20 @@ pub struct EpochRecord {
     pub val_acc: f64,
     pub test_acc: f64,
     pub epoch_ms: f64,
-    /// Wall-clock per Algorithm-1 phase, in [`PHASE_NAMES`] order
-    /// (dispatch through barrier and wire transfer; ADMM only).
-    pub phase_ms: [f64; 6],
+    /// Per-phase milliseconds, indexed by [`Phase::index`] (order of
+    /// [`PHASE_NAMES`]). Barrier schedules record wall-clock per phase
+    /// round (dispatch through barrier and wire transfer); the pipelined
+    /// schedule has no phase rounds, so it records each phase's aggregate
+    /// per-layer compute time instead. ADMM only.
+    pub phase_ms: [f64; Phase::COUNT],
     /// Bytes moved through coordinator channels this epoch.
     pub comm_bytes: u64,
 }
 
-/// The six phases of one Algorithm-1 iteration, in execution order —
-/// the index convention for [`EpochRecord::phase_ms`] and the trainer's
-/// per-phase layer timings.
-pub const PHASE_NAMES: [&str; 6] = ["P", "W", "B", "Z", "Q", "U"];
+/// Display names of the six phases of one Algorithm-1 iteration, indexed
+/// by [`Phase::index`] — the column convention for [`EpochRecord::phase_ms`]
+/// and the trainer's per-phase layer timings.
+pub const PHASE_NAMES: [&str; Phase::COUNT] = ["P", "W", "B", "Z", "Q", "U"];
 
 /// Full run log with run-level metadata.
 #[derive(Clone, Debug, Default)]
