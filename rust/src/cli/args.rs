@@ -98,15 +98,25 @@ USAGE:
   repro exp     fig2|fig3|fig4|fig5|table3|table4|perf|all
                 [--quick] [--backend native|xla] [--epochs N] [--seeds N]
                 [--distributed]   # fig3/fig4: also measure socket workers
+  repro gen     --nodes N --out <dir>     # stream an SBM benchmark to disk
+                [--classes N] [--feat-dim N] [--avg-degree F]
+                [--homophily F] [--feature-signal F] [--label-noise F]
+                [--train N] [--val N] [--test N]   # default: 10% each
+                [--seed N] [--shard-rows N] [--name S]
   repro datasets            # list the benchmark suite with statistics
   repro artifacts           # show the AOT artifact manifest summary
   repro help
 
---dataset-dir loads an on-disk dataset (graph.edges + meta.json; format
-spec in README \"On-disk datasets\"). Its content hash is pinned at load
-time and shipped to distributed workers, which refuse to train on
-different bytes. Registry entries in configs/datasets.json may also be
-on-disk: {\"kind\": \"on-disk\", \"name\": ..., \"dir\": ..., \"sha256\": ...}.
+--dataset-dir loads an on-disk dataset: v1 (graph.edges + meta.json) or
+the sharded v2 layout `repro gen` writes (manifest.json + binary shards;
+format specs in README \"On-disk datasets\" / \"Out-of-core datasets\").
+v2 datasets train out-of-core: CSR shards and features are mmap-backed
+and the augmented input is built by a streaming, spill-to-disk pass, so
+million-node graphs run in fixed RAM. Either way the content hash is
+pinned at load time and shipped to distributed workers, which refuse to
+train on different bytes. Registry entries in configs/datasets.json may
+also be on-disk: {\"kind\": \"on-disk\", \"name\": ..., \"dir\": ...,
+\"sha256\": ...}.
 
 --schedule pipelined replaces the six-phase barrier with a per-layer task
 graph: each layer advances to its next phase the moment its own

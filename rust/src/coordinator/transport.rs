@@ -384,6 +384,12 @@ fn parse_snapshot(payload: &[u8]) -> Result<CommSnapshot> {
 /// Everything a worker process needs to reconstruct its share of a run:
 /// the dataset spec (rebuilt deterministically), the train config, and the
 /// contiguous layer block this worker owns.
+///
+/// On-disk specs carry `dir + sha256`, never dataset bytes. For the
+/// sharded v2 format the pinned hash covers `manifest.json` alone, and
+/// the manifest pins each shard file by its own sha256 — so a worker
+/// re-verifies exactly the shards it maps, and two workers that accept
+/// the same SETUP frame are guaranteed byte-identical inputs.
 #[derive(Clone, Debug)]
 pub struct DistSetup {
     pub spec: DatasetSpec,

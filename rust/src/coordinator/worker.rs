@@ -10,6 +10,13 @@
 //! arrive as VAR frames (`q_{lo-1}`/`u_{lo-1}` from the previous block,
 //! `p_{hi}` from the next).
 //!
+//! On-disk datasets arrive as `path + sha256` (never bytes): the SETUP
+//! frame's pinned hash covers `meta.json` (v1) or `manifest.json` (v2),
+//! and for v2 the manifest's per-file sha256 entries transitively pin
+//! every shard — so the rebuild in [`crate::graph::datasets::build`]
+//! re-verifies, shard by shard as each one is mapped, that this worker
+//! trains on exactly the coordinator's bytes.
+//!
 //! Numeric and accounting parity with the in-process schedules is by
 //! construction: every update is a [`phases`] kernel, every logical
 //! transfer is encoded once with the configured codec, metered once by the

@@ -6,7 +6,13 @@
 //! row-major, then emit the features-major X the model consumes.
 
 use crate::graph::csr::Csr;
+use crate::graph::io::V2Store;
 use crate::tensor::matrix::Mat;
+use crate::util::mmap::{create_unlinked, MappedF32, MappedU32, MmapFile};
+use crate::util::threads::parallel_chunks;
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::path::PathBuf;
 
 /// Compute X = [H; HÃ; HÃ²; …] given nodes-major features `h_nd: (|V|, d)`.
 /// Returns `(K*d, |V|)` — the `p_1` of Problem 1.
@@ -48,6 +54,172 @@ pub fn augment(adj_renorm: &Csr, h_nd: &Mat, hops: usize, threads: usize) -> Mat
 /// Augmentation statistics used by docs/experiments (input dim = K·d).
 pub fn augmented_dim(feat_dim: usize, hops: usize) -> usize {
     feat_dim * hops
+}
+
+/// Fresh spill-file path under the OS temp dir (unlinked at birth on
+/// unix, so nothing leaks even on crash).
+fn spill_path(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("pdadmm-spill-{}-{seq}-{tag}", std::process::id()))
+}
+
+/// Reinterpret an f32 slice as bytes for bulk file writes. Sound on the
+/// little-endian hosts this crate's binary formats already require.
+fn f32_bytes(v: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no invalid bit patterns and the slice stays borrowed.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// Positioned write into a spill file (strided transpose target).
+fn write_at(file: &File, byte_off: u64, bytes: &[u8]) -> Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.write_all_at(bytes, byte_off).context("spill write_at")?;
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Seek, SeekFrom, Write};
+        let mut f = file;
+        f.seek(SeekFrom::Start(byte_off)).context("spill seek")?;
+        f.write_all(bytes).context("spill write")?;
+    }
+    Ok(())
+}
+
+/// Transpose one nodes-major hop block — `block: (hi-lo, d)` covering
+/// graph rows `[lo, lo + block.len()/d)` — into the `(hops*d, n)` X spill
+/// file: feature `f` of the block lands in X row `x_row0 + f`, columns
+/// starting at `lo`.
+fn transpose_block_into_x(
+    x_file: &File,
+    block: &[f32],
+    d: usize,
+    x_row0: usize,
+    lo: usize,
+    n: usize,
+    col: &mut Vec<f32>,
+) -> Result<()> {
+    let rows_blk = block.len() / d;
+    for feat in 0..d {
+        col.clear();
+        col.extend((0..rows_blk).map(|r| block[r * d + feat]));
+        let off = (((x_row0 + feat) * n + lo) * 4) as u64;
+        write_at(x_file, off, f32_bytes(col))?;
+    }
+    Ok(())
+}
+
+/// Out-of-core sibling of [`augment`]: build X = [H; HÃ; HÃ²; …] for a
+/// sharded v2 dataset without materialising the CSR, the dense features,
+/// or X itself in RAM.
+///
+/// Per hop, the renormalisation and the SpMM are fused: each output row i
+/// accumulates `inv_sqrt[i]·inv_sqrt[j] · prev[j]` over the raw CSR row
+/// with the weighted self-loop merged at its sorted position — the exact
+/// accumulation order of `renormalized()` + [`Csr::spmm`], so the result
+/// is bitwise-identical to the in-RAM path (Rust never contracts f32
+/// arithmetic). Hop blocks stream shard-by-shard through the worker pool
+/// into unlinked spill files; the returned `Mat` is an mmap-backed view
+/// of the final X, so resident memory tracks the training working set,
+/// not `hops·d·|V|`.
+pub fn augment_out_of_core(store: &V2Store, hops: usize, threads: usize) -> Result<Mat> {
+    assert!(hops >= 1, "need at least the identity hop");
+    let man = &store.man;
+    let (n, d) = (man.nodes, man.feat_dim);
+    let x_rows = hops
+        .checked_mul(d)
+        .filter(|r| r.checked_mul(n).and_then(|c| c.checked_mul(4)).is_some())
+        .context("augmented X size overflows")?;
+
+    let x_file = create_unlinked(&spill_path("x"))?;
+    x_file.set_len((x_rows * n * 4) as u64).context("sizing X spill file")?;
+    let max_shard_rows = man.shards.iter().map(|s| s.hi - s.lo).max().unwrap_or(0);
+    let mut col: Vec<f32> = Vec::with_capacity(max_shard_rows);
+
+    // Hop 0: the feature shards themselves (verified at map time) are the
+    // first block of X, and — when more hops follow — the first `prev`.
+    let mut prev: Option<MappedF32> = None;
+    {
+        let prev_file = if hops > 1 { Some(create_unlinked(&spill_path("hop0"))?) } else { None };
+        for (s, sh) in man.shards.iter().enumerate() {
+            let feats = store.map_shard_features(s)?;
+            let block = feats.as_slice();
+            if let Some(pf) = &prev_file {
+                use std::io::Write;
+                (&mut &*pf).write_all(f32_bytes(block)).context("hop-0 spill write")?;
+            }
+            transpose_block_into_x(&x_file, block, d, 0, sh.lo, n, &mut col)?;
+        }
+        if let Some(pf) = prev_file {
+            prev = Some(MappedF32::whole(MmapFile::map(&pf)?)?);
+        }
+    }
+
+    if hops > 1 {
+        let ip = store.indptr.as_slice();
+        let inv_sqrt: Vec<f32> =
+            (0..n).map(|i| 1.0 / (((ip[i + 1] - ip[i]) as f32 + 1.0).sqrt())).collect();
+        // Map (and hash-verify) every edge shard once, up front; the pages
+        // are file-backed, so this costs address space, not RSS.
+        let edge_maps: Vec<MappedU32> =
+            (0..man.shards.len()).map(|s| store.map_shard_edges(s)).collect::<Result<_>>()?;
+
+        let mut out_block: Vec<f32> = Vec::new();
+        for k in 1..hops {
+            let prev_view = prev.as_ref().expect("prev hop mapped");
+            let prev_slice = prev_view.as_slice();
+            let next_file = create_unlinked(&spill_path("hop"))?;
+            for (s, sh) in man.shards.iter().enumerate() {
+                let rows_blk = sh.hi - sh.lo;
+                out_block.clear();
+                out_block.resize(rows_blk * d, 0.0);
+                let idx = edge_maps[s].as_slice();
+                let base = ip[sh.lo];
+                parallel_chunks(threads, rows_blk, &mut out_block, d, |row0, chunk| {
+                    for (di, yrow) in chunk.chunks_mut(d).enumerate() {
+                        let i = sh.lo + row0 + di;
+                        let row = &idx[(ip[i] - base) as usize..(ip[i + 1] - base) as usize];
+                        let wi = inv_sqrt[i];
+                        let acc = |j: usize, v: f32, yrow: &mut [f32]| {
+                            let xrow = &prev_slice[j * d..(j + 1) * d];
+                            for (yv, &xv) in yrow.iter_mut().zip(xrow) {
+                                *yv += v * xv;
+                            }
+                        };
+                        // merge the self loop into sorted position, exactly
+                        // like `renormalized()` does when it builds Ã rows
+                        let mut inserted = false;
+                        for &j in row {
+                            let ju = j as usize;
+                            if !inserted && ju > i {
+                                acc(i, wi * wi, yrow);
+                                inserted = true;
+                            }
+                            acc(ju, wi * inv_sqrt[ju], yrow);
+                        }
+                        if !inserted {
+                            acc(i, wi * wi, yrow);
+                        }
+                    }
+                });
+                {
+                    use std::io::Write;
+                    (&mut &next_file)
+                        .write_all(f32_bytes(&out_block))
+                        .context("hop spill write")?;
+                }
+                transpose_block_into_x(&x_file, &out_block, d, k * d, sh.lo, n, &mut col)?;
+            }
+            prev = Some(MappedF32::whole(MmapFile::map(&next_file)?)?);
+        }
+    }
+
+    drop(prev);
+    let x = MappedF32::whole(MmapFile::map(&x_file)?)?;
+    Ok(Mat::from_mapped(x_rows, n, x))
 }
 
 #[cfg(test)]

@@ -82,10 +82,33 @@ pub struct RawDataset {
     pub test_idx: Vec<usize>,
 }
 
+/// Sorted, disjoint train/val/test index sets drawn from the dedicated
+/// split stream (`Pcg32::new(seed, 0x5711f5)`). Shared by the in-RAM
+/// synthetic path and the streaming v2 generator so both produce
+/// bitwise-identical splits for the same spec.
+pub(crate) fn split_indices(
+    seed: u64,
+    n: usize,
+    train: usize,
+    val: usize,
+    test: usize,
+) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg32::new(seed, 0x5711f5); // split stream
+    rng.shuffle(&mut order);
+    let take = |from: usize, count: usize| -> Vec<usize> {
+        let mut v: Vec<usize> = order[from.min(n)..(from + count).min(n)].to_vec();
+        v.sort_unstable();
+        v
+    };
+    (take(0, train), take(train, val), take(train + val, test))
+}
+
 /// Generate the raw parts of a synthetic benchmark (pure in the seed):
 /// SBM graph + features + noisy labels from the generator stream, splits
-/// from an independent split stream.
-pub fn synthetic_raw(spec: &SyntheticSpec) -> RawDataset {
+/// from an independent split stream. Errs on infeasible block
+/// probabilities (see [`generator::block_probabilities`]).
+pub fn synthetic_raw(spec: &SyntheticSpec) -> anyhow::Result<RawDataset> {
     let g = generator::generate(&SbmSpec {
         nodes: spec.nodes,
         classes: spec.classes,
@@ -95,26 +118,19 @@ pub fn synthetic_raw(spec: &SyntheticSpec) -> RawDataset {
         feature_signal: spec.feature_signal,
         label_noise: spec.label_noise,
         seed: spec.seed,
-    });
-    let n = spec.nodes;
-    let mut order: Vec<usize> = (0..n).collect();
-    let mut rng = Pcg32::new(spec.seed, 0x5711f5); // split stream
-    rng.shuffle(&mut order);
-    let take = |from: usize, count: usize| -> Vec<usize> {
-        let mut v: Vec<usize> = order[from..(from + count).min(n)].to_vec();
-        v.sort_unstable();
-        v
-    };
-    RawDataset {
+    })?;
+    let (train_idx, val_idx, test_idx) =
+        split_indices(spec.seed, spec.nodes, spec.train, spec.val, spec.test);
+    Ok(RawDataset {
         name: spec.name.clone(),
-        train_idx: take(0, spec.train),
-        val_idx: take(spec.train, spec.val),
-        test_idx: take(spec.train + spec.val, spec.test),
+        train_idx,
+        val_idx,
+        test_idx,
         adjacency: g.adjacency,
         features_nd: g.features_nd,
         labels: g.labels,
         classes: spec.classes,
-    }
+    })
 }
 
 /// Renormalize, augment, one-hot and mask: the shared assembly from raw
@@ -151,17 +167,65 @@ pub fn assemble(raw: RawDataset, hops: usize, threads: usize) -> Dataset {
     }
 }
 
-/// Build a dataset from its spec. Synthetic specs are pure functions of
-/// the spec and cannot fail; on-disk specs stream `graph.edges` +
-/// `meta.json` from the spec's directory (and verify the content hash
-/// when the spec pins one).
+/// Assemble a trainable `Dataset` from an opened sharded v2 store without
+/// ever materialising the raw CSR or dense features in RAM: the augmented
+/// X is built by the streaming out-of-core pipeline (hop blocks spilled
+/// to disk, final X mmap-backed), and only the O(|V|) label / mask /
+/// split arrays are resident.
+pub fn assemble_v2(
+    store: &crate::graph::io::V2Store,
+    hops: usize,
+    threads: usize,
+) -> anyhow::Result<Dataset> {
+    let x = crate::graph::augment::augment_out_of_core(store, hops, threads)?;
+    let man = &store.man;
+    let n = man.nodes;
+
+    let labels: Vec<usize> = store.labels.as_slice().iter().map(|&l| l as usize).collect();
+    let mut y = Mat::zeros(man.classes, n);
+    for (v, &c) in labels.iter().enumerate() {
+        *y.at_mut(c, v) = 1.0;
+    }
+    let mut maskn = Mat::zeros(1, n);
+    let inv = 1.0 / man.train_idx.len().max(1) as f32;
+    for &v in &man.train_idx {
+        maskn.data[v] = inv;
+    }
+
+    Ok(Dataset {
+        name: man.name.clone(),
+        input_dim: x.rows,
+        edges_stored: man.edges,
+        x: Arc::new(x),
+        y_onehot: Arc::new(y),
+        maskn_train: Arc::new(maskn),
+        labels: Arc::new(labels),
+        train_idx: Arc::new(man.train_idx.clone()),
+        val_idx: Arc::new(man.val_idx.clone()),
+        test_idx: Arc::new(man.test_idx.clone()),
+        classes: man.classes,
+        nodes: n,
+    })
+}
+
+/// Build a dataset from its spec. On-disk specs dispatch on the marker
+/// file in the directory: `meta.json` (v1, fully in-RAM ingestion) or
+/// `manifest.json` (v2, sharded out-of-core path). Either way the spec's
+/// pinned content hash, when present, is verified before anything is
+/// trusted.
 pub fn build(spec: &DatasetSpec, hops: usize, threads: usize) -> anyhow::Result<Dataset> {
     match spec {
-        DatasetSpec::Synthetic(s) => Ok(assemble(synthetic_raw(s), hops, threads)),
-        DatasetSpec::OnDisk(o) => {
-            let raw = crate::graph::io::load_raw(&o.dir, o.sha256.as_deref())?;
-            Ok(assemble(raw, hops, threads))
-        }
+        DatasetSpec::Synthetic(s) => Ok(assemble(synthetic_raw(s)?, hops, threads)),
+        DatasetSpec::OnDisk(o) => match crate::graph::io::dataset_version(&o.dir)? {
+            1 => {
+                let raw = crate::graph::io::load_raw(&o.dir, o.sha256.as_deref())?;
+                Ok(assemble(raw, hops, threads))
+            }
+            _ => {
+                let store = crate::graph::io::V2Store::open(&o.dir, o.sha256.as_deref())?;
+                assemble_v2(&store, hops, threads)
+            }
+        },
     }
 }
 

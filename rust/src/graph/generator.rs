@@ -12,10 +12,21 @@
 //!    (drives the speedup and communication figures).
 //!
 //! The SBM with planted class communities provides exactly these knobs.
+//!
+//! Two emission paths share one edge stream ([`sample_edges`], so the
+//! graphs are bitwise-identical): [`generate`] materializes everything in
+//! RAM, and [`generate_to_disk`] streams a sharded `pdadmm-dataset-v2`
+//! directory (see [`crate::graph::io`]) without ever holding an edge
+//! list, for graphs far beyond RAM.
 
+use crate::config::SyntheticSpec;
 use crate::graph::csr::Csr;
+use crate::graph::io;
 use crate::tensor::matrix::Mat;
 use crate::tensor::rng::Pcg32;
+use anyhow::{anyhow, Context, Result};
+use std::io::Write;
+use std::path::Path;
 
 #[derive(Clone, Debug)]
 pub struct SbmSpec {
@@ -35,6 +46,23 @@ pub struct SbmSpec {
     pub seed: u64,
 }
 
+impl SbmSpec {
+    /// The graph knobs of a full dataset spec (splits are handled by the
+    /// dataset layer, not the generator).
+    pub fn from_synthetic(spec: &SyntheticSpec) -> SbmSpec {
+        SbmSpec {
+            nodes: spec.nodes,
+            classes: spec.classes,
+            avg_degree: spec.avg_degree,
+            homophily_ratio: spec.homophily_ratio,
+            feat_dim: spec.feat_dim,
+            feature_signal: spec.feature_signal,
+            label_noise: spec.label_noise,
+            seed: spec.seed,
+        }
+    }
+}
+
 #[derive(Clone)]
 pub struct Generated {
     pub adjacency: Csr,
@@ -47,85 +75,160 @@ pub struct Generated {
 /// Solve for (p_in, p_out) from the target average degree and ratio.
 ///
 /// avg_deg = p_in (n/k - 1) + p_out (n - n/k),  p_in = r * p_out.
-pub fn block_probabilities(spec: &SbmSpec) -> (f64, f64) {
+///
+/// Errors when the solution leaves [0, 1] — most commonly `p_in > 1` for
+/// high `homophily_ratio * avg_degree` at small `nodes`. The old code
+/// silently clamped to 1.0 there, which quietly missed the target degree
+/// and broke every `degree ≈ avg_degree` assumption downstream.
+pub fn block_probabilities(spec: &SbmSpec) -> Result<(f64, f64)> {
+    if spec.classes == 0 || spec.nodes == 0 {
+        return Err(anyhow!(
+            "SBM spec needs nodes >= 1 and classes >= 1 (got {} nodes, {} classes)",
+            spec.nodes,
+            spec.classes
+        ));
+    }
     let n = spec.nodes as f64;
     let k = spec.classes as f64;
-    let within = n / k - 1.0;
+    let within = (n / k - 1.0).max(0.0);
     let across = n - n / k;
-    let p_out = spec.avg_degree / (spec.homophily_ratio * within + across);
-    let p_in = (spec.homophily_ratio * p_out).min(1.0);
-    (p_in, p_out.min(1.0))
-}
-
-pub fn generate(spec: &SbmSpec) -> Generated {
-    let mut rng = Pcg32::new(spec.seed, 0x5b3);
-    let n = spec.nodes;
-    let k = spec.classes;
-
-    // Balanced-ish class assignment, then shuffled so class blocks are not
-    // contiguous in node id (splits sample uniformly).
-    let mut labels: Vec<usize> = (0..n).map(|i| i % k).collect();
-    rng.shuffle(&mut labels);
-
-    let (p_in, p_out) = block_probabilities(spec);
-
-    // Edge sampling with geometric skips: O(edges), not O(n^2) Bernoulli
-    // trials. We iterate the strict upper triangle in row-major order,
-    // partitioned by same/cross class probability per row for exactness.
-    let mut edges: Vec<(u32, u32)> = Vec::new();
-    for i in 0..n {
-        // Walk j in (i, n) with two interleaved geometric processes would
-        // require class-sorted columns; with n <= a few thousand a direct
-        // pass with one uniform draw per pair is still cheap, but we keep
-        // the geometric fast path for the (common) homogeneous-probability
-        // stretches by grouping consecutive j of equal class relation.
-        let mut j = i + 1;
-        while j < n {
-            let p = if labels[i] == labels[j] { p_in } else { p_out };
-            // find the run of identical relation to use skip sampling
-            let mut run_end = j + 1;
-            while run_end < n && (labels[run_end] == labels[i]) == (labels[j] == labels[i]) {
-                run_end += 1;
-            }
-            let mut pos = j;
-            loop {
-                let skip = rng.geometric_skip(p);
-                if pos + skip >= run_end {
-                    break;
-                }
-                pos += skip;
-                edges.push((i as u32, pos as u32));
-                pos += 1;
-                if pos >= run_end {
-                    break;
-                }
-            }
-            j = run_end;
+    let denom = spec.homophily_ratio * within + across;
+    if !(denom > 0.0) {
+        return Err(anyhow!(
+            "SBM spec is degenerate: no eligible node pairs at {} nodes / {} classes / ratio {}",
+            spec.nodes,
+            spec.classes,
+            spec.homophily_ratio
+        ));
+    }
+    let p_out = spec.avg_degree / denom;
+    let p_in = spec.homophily_ratio * p_out;
+    for (name, p) in [("p_in", p_in), ("p_out", p_out)] {
+        if !(0.0..=1.0).contains(&p) {
+            return Err(anyhow!(
+                "SBM spec is infeasible: {name} = {p:.4} falls outside [0, 1] \
+                 (avg_degree {} x homophily_ratio {} at {} nodes / {} classes); \
+                 lower the degree or ratio, or raise the node count",
+                spec.avg_degree,
+                spec.homophily_ratio,
+                spec.nodes,
+                spec.classes
+            ));
         }
     }
+    Ok((p_in, p_out))
+}
 
-    let adjacency = Csr::from_undirected_edges(n, &edges);
-
-    // Class means mu_c ~ N(0, signal^2 I); x_v = mu_{c(v)} + N(0,1).
-    let mut means = Vec::with_capacity(k);
-    for _ in 0..k {
-        means.push(Mat::randn(1, spec.feat_dim, spec.feature_signal, &mut rng));
+/// Node ids of each class, ascending — the column partition the edge
+/// sampler walks.
+fn class_positions(labels: &[usize], k: usize) -> Vec<Vec<u32>> {
+    let mut positions = vec![Vec::new(); k];
+    for (v, &c) in labels.iter().enumerate() {
+        positions[c].push(v as u32);
     }
-    let mut features_nd = Mat::zeros(n, spec.feat_dim);
-    for v in 0..n {
-        let mu = &means[labels[v]];
-        let row = features_nd.row_mut(v);
+    positions
+}
+
+/// Stream the strict-upper-triangle SBM edges in row-major order.
+///
+/// For each row `i` the candidate columns `j > i` are walked *per class*
+/// (each class's node ids, sorted ascending, with a monotone suffix
+/// pointer per class), so every stretch has a single Bernoulli
+/// probability and geometric-skip sampling applies directly. Total work
+/// is O(|E| + n·k) draws — the previous implementation looked for
+/// equal-relation runs in the *shuffled* label array, where expected run
+/// length is ~1, degrading to O(n²) Bernoulli trials.
+///
+/// Emission order is deterministic in the rng state: rows ascending, and
+/// within a row classes ascending, columns ascending within a class. Rows
+/// are therefore *not* emitted column-sorted across classes — consumers
+/// sort per row (`CsrBuilder::finish` / the shard writer), which keeps
+/// the final CSR identical to what the ordered stream would give.
+fn sample_edges(
+    rng: &mut Pcg32,
+    labels: &[usize],
+    positions: &[Vec<u32>],
+    p_in: f64,
+    p_out: f64,
+    mut emit: impl FnMut(u32, u32),
+) {
+    let mut ptr = vec![0usize; positions.len()];
+    for (i, &li) in labels.iter().enumerate() {
+        for (c, pos) in positions.iter().enumerate() {
+            // First candidate strictly past the diagonal; i is ascending,
+            // so this pointer only ever moves forward (amortised O(n·k)).
+            while ptr[c] < pos.len() && (pos[ptr[c]] as usize) <= i {
+                ptr[c] += 1;
+            }
+            let p = if li == c { p_in } else { p_out };
+            let mut idx = ptr[c];
+            loop {
+                let skip = rng.geometric_skip(p);
+                // Compare, never add: skip can be SKIP_INFINITE.
+                if skip >= pos.len() - idx {
+                    break;
+                }
+                idx += skip;
+                emit(i as u32, pos[idx]);
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// Shared head of both generation paths: shuffled labels, feasible block
+/// probabilities, and the class partition, with `rng` positioned exactly
+/// at the start of the edge stream.
+struct SamplerSetup {
+    rng: Pcg32,
+    labels: Vec<usize>,
+    positions: Vec<Vec<u32>>,
+    p_in: f64,
+    p_out: f64,
+}
+
+fn sampler_setup(spec: &SbmSpec) -> Result<SamplerSetup> {
+    let (p_in, p_out) = block_probabilities(spec)?;
+    let mut rng = Pcg32::new(spec.seed, 0x5b3);
+    // Balanced-ish class assignment, then shuffled so class blocks are not
+    // contiguous in node id (splits sample uniformly).
+    let mut labels: Vec<usize> = (0..spec.nodes).map(|i| i % spec.classes).collect();
+    rng.shuffle(&mut labels);
+    let positions = class_positions(&labels, spec.classes);
+    Ok(SamplerSetup { rng, labels, positions, p_in, p_out })
+}
+
+/// Per-node Gaussian features around class means, streamed in node order;
+/// `sink` receives each node's `feat_dim` values. Consumes the rng
+/// exactly like the in-RAM path so both emit identical bytes.
+fn stream_features(
+    rng: &mut Pcg32,
+    spec: &SbmSpec,
+    labels: &[usize],
+    mut sink: impl FnMut(usize, &[f32]),
+) {
+    // Class means mu_c ~ N(0, signal^2 I); x_v = mu_{c(v)} + N(0,1).
+    let mut means = Vec::with_capacity(spec.classes);
+    for _ in 0..spec.classes {
+        means.push(Mat::randn(1, spec.feat_dim, spec.feature_signal, rng));
+    }
+    let mut row = vec![0.0f32; spec.feat_dim];
+    for (v, &label) in labels.iter().enumerate() {
+        let mu = &means[label];
         for (d, val) in row.iter_mut().enumerate() {
             *val = mu.data[d] + rng.normal();
         }
+        sink(v, &row);
     }
+}
 
-    // Observed labels: graph/features above follow the *true* labels; the
-    // labels exposed to training/evaluation carry the Bayes noise floor.
-    if spec.label_noise > 0.0 && k > 1 {
+/// Observed labels: graph/features follow the *true* labels; the labels
+/// exposed to training/evaluation carry the Bayes noise floor.
+fn apply_label_noise(rng: &mut Pcg32, spec: &SbmSpec, labels: &mut [usize]) {
+    if spec.label_noise > 0.0 && spec.classes > 1 {
         for lv in labels.iter_mut() {
             if rng.next_f32() < spec.label_noise {
-                let mut other = rng.below(k as u32 - 1) as usize;
+                let mut other = rng.below(spec.classes as u32 - 1) as usize;
                 if other >= *lv {
                     other += 1;
                 }
@@ -133,8 +236,187 @@ pub fn generate(spec: &SbmSpec) -> Generated {
             }
         }
     }
+}
 
-    Generated { adjacency, features_nd, labels }
+pub fn generate(spec: &SbmSpec) -> Result<Generated> {
+    let SamplerSetup { mut rng, mut labels, positions, p_in, p_out } = sampler_setup(spec)?;
+    let n = spec.nodes;
+
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    sample_edges(&mut rng, &labels, &positions, p_in, p_out, |i, j| edges.push((i, j)));
+    let adjacency = Csr::from_undirected_edges(n, &edges);
+    drop(edges);
+
+    let mut features_nd = Mat::zeros(n, spec.feat_dim);
+    stream_features(&mut rng, spec, &labels, |v, row| {
+        features_nd.row_mut(v).copy_from_slice(row);
+    });
+
+    apply_label_noise(&mut rng, spec, &mut labels);
+
+    Ok(Generated { adjacency, features_nd, labels })
+}
+
+/// Stream a synthetic benchmark straight to a sharded `pdadmm-dataset-v2`
+/// directory (see [`crate::graph::io`] for the format) without ever
+/// holding the edge list, CSR, or feature matrix in RAM. Returns the
+/// directory content hash ([`io::dir_sha256`]) for spec pinning.
+///
+/// Peak memory is O(n) counters plus one shard of edges: degrees are
+/// tallied in a first sampler pass, then each shard replays the sampler
+/// from a cloned rng snapshot and scatters only the edges that land in
+/// its row range. Loading the result through the v2 path yields the same
+/// dataset, bit for bit, as the in-RAM `generate` + export pipeline.
+pub fn generate_to_disk(spec: &SyntheticSpec, dir: &Path, shard_rows: usize) -> Result<String> {
+    let sbm = SbmSpec::from_synthetic(spec);
+    let n = sbm.nodes;
+    if shard_rows == 0 {
+        return Err(anyhow!("shard_rows must be >= 1"));
+    }
+    if spec.train == 0 {
+        return Err(anyhow!("train split must be non-empty"));
+    }
+    if spec.train + spec.val + spec.test > n {
+        return Err(anyhow!(
+            "splits ({} + {} + {}) exceed {} nodes",
+            spec.train,
+            spec.val,
+            spec.test,
+            n
+        ));
+    }
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+
+    let SamplerSetup { mut rng, mut labels, positions, p_in, p_out } = sampler_setup(&sbm)?;
+
+    // Pass A: degree tally on the main rng (advances it past the edge
+    // stream, exactly like the in-RAM path), snapshotting first so each
+    // shard can replay the identical stream.
+    let edge_rng = rng.clone();
+    let mut counts = vec![0u32; n];
+    sample_edges(&mut rng, &labels, &positions, p_in, p_out, |i, j| {
+        counts[i as usize] += 1;
+        counts[j as usize] += 1;
+    });
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut total = 0u64;
+    indptr.push(0u64);
+    for &c in &counts {
+        total += c as u64;
+        indptr.push(total);
+    }
+    drop(counts);
+    let edges_stored = total as usize;
+
+    let indptr_ref = {
+        let mut w = io::HashingFileWriter::create(&dir.join(io::V2_INDPTR_FILE))?;
+        for &v in &indptr {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.finish(io::V2_INDPTR_FILE)?
+    };
+
+    // Pass B, per shard: replay the sampler from the snapshot and scatter
+    // the edges touching rows [lo, hi) into a shard-sized buffer (the
+    // sampler emits strict-upper-triangle pairs; the CSR stores both
+    // directions). Rows are then sorted, matching `CsrBuilder::finish`.
+    let mut shards = Vec::new();
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + shard_rows).min(n);
+        let base = indptr[lo];
+        let cnt = (indptr[hi] - base) as usize;
+        let mut buf = vec![0u32; cnt];
+        let mut cursor: Vec<usize> =
+            (lo..hi).map(|r| (indptr[r] - base) as usize).collect();
+        let mut replay = edge_rng.clone();
+        sample_edges(&mut replay, &labels, &positions, p_in, p_out, |i, j| {
+            for (row, col) in [(i as usize, j), (j as usize, i)] {
+                if (lo..hi).contains(&row) {
+                    buf[cursor[row - lo]] = col;
+                    cursor[row - lo] += 1;
+                }
+            }
+        });
+        for r in lo..hi {
+            let (s, e) = ((indptr[r] - base) as usize, (indptr[r + 1] - base) as usize);
+            buf[s..e].sort_unstable();
+        }
+        let edges_file = io::v2_shard_file(shards.len(), "edges.u32");
+        let mut w = io::HashingFileWriter::create(&dir.join(&edges_file))?;
+        for &v in &buf {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        shards.push(io::V2ShardMeta {
+            lo,
+            hi,
+            edges: w.finish(&edges_file)?,
+            // features are streamed below, once the main rng reaches them
+            features: io::V2FileRef { file: String::new(), sha256: String::new() },
+        });
+        lo = hi;
+    }
+
+    // Features: one continuous pass on the main rng (same order as the
+    // in-RAM path: class means first, then nodes ascending), split across
+    // the shard files at the shard boundaries.
+    {
+        let mut shard = 0usize;
+        let mut writer: Option<io::HashingFileWriter> = None;
+        let mut feat_err: Result<()> = Ok(());
+        stream_features(&mut rng, &sbm, &labels, |v, row| {
+            if feat_err.is_err() {
+                return;
+            }
+            feat_err = (|| -> Result<()> {
+                if v == shards[shard].lo {
+                    let file = io::v2_shard_file(shard, "feat.f32");
+                    writer = Some(io::HashingFileWriter::create(&dir.join(&file))?);
+                }
+                let w = writer.as_mut().expect("feature writer open");
+                for &x in row {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+                if v + 1 == shards[shard].hi {
+                    let file = io::v2_shard_file(shard, "feat.f32");
+                    shards[shard].features = writer.take().expect("open").finish(&file)?;
+                    shard += 1;
+                }
+                Ok(())
+            })();
+        });
+        feat_err?;
+    }
+
+    apply_label_noise(&mut rng, &sbm, &mut labels);
+    let labels_ref = {
+        let mut w = io::HashingFileWriter::create(&dir.join(io::V2_LABELS_FILE))?;
+        for &l in &labels {
+            w.write_all(&(l as u32).to_le_bytes())?;
+        }
+        w.finish(io::V2_LABELS_FILE)?
+    };
+
+    let (train_idx, val_idx, test_idx) =
+        crate::graph::datasets::split_indices(spec.seed, n, spec.train, spec.val, spec.test);
+
+    io::write_manifest_v2(
+        dir,
+        &io::V2Manifest {
+            name: spec.name.clone(),
+            nodes: n,
+            classes: sbm.classes,
+            feat_dim: sbm.feat_dim,
+            edges: edges_stored,
+            indptr: indptr_ref,
+            labels: labels_ref,
+            shards,
+            train_idx,
+            val_idx,
+            test_idx,
+        },
+    )?;
+    io::dir_sha256(dir)
 }
 
 /// Empirical homophily: fraction of edges whose endpoints share a label.
@@ -176,7 +458,7 @@ mod tests {
 
     #[test]
     fn degree_matches_target() {
-        let g = generate(&spec());
+        let g = generate(&spec()).unwrap();
         let mean_deg = g.adjacency.nnz() as f64 / g.adjacency.n as f64;
         assert!(
             (mean_deg - 10.0).abs() < 1.5,
@@ -186,7 +468,7 @@ mod tests {
 
     #[test]
     fn homophily_exceeds_chance() {
-        let g = generate(&spec());
+        let g = generate(&spec()).unwrap();
         let h = edge_homophily(&g.adjacency, &g.labels);
         // chance level = 1/4; ratio 8 should push well above it
         assert!(h > 0.55, "homophily {h}");
@@ -194,8 +476,8 @@ mod tests {
 
     #[test]
     fn generation_is_deterministic() {
-        let a = generate(&spec());
-        let b = generate(&spec());
+        let a = generate(&spec()).unwrap();
+        let b = generate(&spec()).unwrap();
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.adjacency.indices, b.adjacency.indices);
         assert_eq!(a.features_nd.data, b.features_nd.data);
@@ -205,14 +487,14 @@ mod tests {
     fn different_seed_differs() {
         let mut s2 = spec();
         s2.seed = 100;
-        let a = generate(&spec());
-        let b = generate(&s2);
+        let a = generate(&spec()).unwrap();
+        let b = generate(&s2).unwrap();
         assert_ne!(a.adjacency.indices, b.adjacency.indices);
     }
 
     #[test]
     fn classes_are_balanced() {
-        let g = generate(&spec());
+        let g = generate(&spec()).unwrap();
         let mut counts = vec![0usize; 4];
         for &l in &g.labels {
             counts[l] += 1;
@@ -224,7 +506,7 @@ mod tests {
 
     #[test]
     fn features_cluster_by_class() {
-        let g = generate(&spec());
+        let g = generate(&spec()).unwrap();
         // mean within-class feature distance < cross-class distance
         let centroid = |c: usize| -> Vec<f32> {
             let mut acc = vec![0.0f32; 16];
@@ -253,11 +535,59 @@ mod tests {
     #[test]
     fn block_probabilities_reproduce_avg_degree() {
         let s = spec();
-        let (p_in, p_out) = block_probabilities(&s);
+        let (p_in, p_out) = block_probabilities(&s).unwrap();
         let n = s.nodes as f64;
         let k = s.classes as f64;
         let deg = p_in * (n / k - 1.0) + p_out * (n - n / k);
         assert!((deg - s.avg_degree).abs() < 1e-9);
         assert!(p_in / p_out > 7.9 && p_in / p_out < 8.1);
+    }
+
+    #[test]
+    fn infeasible_probabilities_error_instead_of_clamping() {
+        // Small graph, huge ratio x degree: p_in solves to > 1. The old
+        // code clamped it to 1.0 and silently missed the degree target.
+        let s = SbmSpec { nodes: 40, avg_degree: 30.0, homophily_ratio: 50.0, ..spec() };
+        let err = block_probabilities(&s).unwrap_err().to_string();
+        assert!(err.contains("p_in") && err.contains("infeasible"), "{err}");
+        assert!(generate(&s).is_err(), "generate must surface the same error");
+        // The boundary itself is fine: p = 1 exactly is a valid Bernoulli.
+        let k = 4.0;
+        let n = 40.0;
+        let ratio = 8.0;
+        let p_out = 1.0 / ratio;
+        let feasible_deg = 1.0 * (n / k - 1.0) + p_out * (n - n / k);
+        let s2 = SbmSpec {
+            nodes: 40,
+            avg_degree: feasible_deg,
+            homophily_ratio: ratio,
+            ..spec()
+        };
+        let (p_in, _) = block_probabilities(&s2).unwrap();
+        assert!((p_in - 1.0).abs() < 1e-9, "p_in {p_in}");
+    }
+
+    /// The sampler must do O(|E| + n·k) rng work, not O(n²): quadrupling
+    /// the node count at fixed average degree must scale draws ~4x (the
+    /// old run-detection sampler over shuffled labels scaled ~16x).
+    #[test]
+    fn sampler_work_scales_linearly_in_edges() {
+        let draws_for = |nodes: usize| -> u64 {
+            let s = SbmSpec { nodes, ..spec() };
+            let SamplerSetup { mut rng, labels, positions, p_in, p_out } =
+                sampler_setup(&s).unwrap();
+            let before = rng.draw_count();
+            let mut edges = 0u64;
+            sample_edges(&mut rng, &labels, &positions, p_in, p_out, |_, _| edges += 1);
+            assert!(edges > 0);
+            rng.draw_count() - before
+        };
+        let small = draws_for(2_000) as f64;
+        let big = draws_for(8_000) as f64;
+        let ratio = big / small;
+        assert!(
+            ratio < 6.0,
+            "draw count scaled {ratio:.1}x for 4x nodes at fixed degree — sampler is superlinear"
+        );
     }
 }

@@ -48,6 +48,56 @@
 //! in-memory dataset bit for bit (asserted by
 //! `tests/integration_dataset_io.rs`, including 3-epoch training traces
 //! on every schedule).
+//!
+//! # Format `pdadmm-dataset-v2` (sharded, out-of-core)
+//!
+//! The v1 text format materializes the whole dataset in RAM; v2 is its
+//! million-node sibling: binary, sharded by node range, and loaded as
+//! read-only memory maps ([`crate::util::mmap`]) so resident memory
+//! tracks the working set. A v2 directory holds `manifest.json` plus the
+//! binary files it references (all integers/floats little-endian):
+//!
+//! ```json
+//! {
+//!   "format": "pdadmm-dataset-v2",
+//!   "name": "sbm-1m",
+//!   "nodes": 1000000, "classes": 4, "feat_dim": 8,
+//!   "edges": 48000000,                              // stored entries = indptr[nodes]
+//!   "indptr": {"file": "indptr.u64", "sha256": "…"},
+//!   "labels": {"file": "labels.u32", "sha256": "…"},
+//!   "shards": [
+//!     {"lo": 0, "hi": 262144,
+//!      "edges":    {"file": "shard-0000.edges.u32", "sha256": "…"},
+//!      "features": {"file": "shard-0000.feat.f32",  "sha256": "…"}},
+//!     …
+//!   ],
+//!   "splits": {"train": [...], "val": [...], "test": [...]}
+//! }
+//! ```
+//!
+//! * **`indptr.u64`** — `nodes + 1` u64 CSR row offsets over the *whole*
+//!   graph: `indptr[0] = 0`, non-decreasing, `indptr[nodes] = edges`.
+//! * **shards** — a contiguous ascending partition of `0..nodes` by row
+//!   range `[lo, hi)`. A shard's `edges` file is exactly the CSR slice
+//!   `indices[indptr[lo] .. indptr[hi]]` as u32 (symmetric adjacency:
+//!   every undirected edge appears in both endpoint rows; within a row,
+//!   neighbours are strictly increasing, no self-loops — the same
+//!   invariants [`CsrBuilder::finish`] establishes). Its `features` file
+//!   is the `(hi - lo) × feat_dim` f32 row block of the nodes-major
+//!   feature matrix.
+//! * **`labels.u32`** — one observed label per node, each `< classes`.
+//!
+//! **Hash rules.** Every referenced file carries its SHA-256 in the
+//! manifest, verified when the file is mapped — workers that only touch
+//! the shards covering their node range re-verify exactly those shards.
+//! The directory hash ([`dir_sha256`]) of a v2 dataset is the rolling
+//! scheme applied to `manifest.json` *alone*: since the manifest embeds
+//! every file's hash, pinning it pins the whole tree (Merkle-style), and
+//! computing the pin stays O(manifest) even for multi-GB datasets.
+//! Structural lies (wrong file sizes, non-monotone `indptr`, overlapping
+//! shards, out-of-range neighbours…) are reported as errors before any
+//! size-`nodes` allocation is made from untrusted input: every dimension
+//! is cross-checked against actual on-disk file sizes first.
 
 use crate::config::SyntheticSpec;
 use crate::graph::csr::{Csr, CsrBuilder};
@@ -55,27 +105,70 @@ use crate::graph::datasets::{synthetic_raw, RawDataset};
 use crate::tensor::matrix::Mat;
 use crate::util::json::Json;
 use crate::util::json_stream::{parse_events, PathSeg, Scalar};
+use crate::util::mmap::{MappedF32, MappedU32, MappedU64, MmapFile};
 use crate::util::sha256::{hex, Sha256};
 use anyhow::{anyhow, Context, Result};
 use std::fs;
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// The format tag written to (and accepted from) `meta.json`.
 pub const FORMAT_TAG: &str = "pdadmm-dataset-v1";
+/// The format tag written to (and accepted from) `manifest.json`.
+pub const FORMAT_TAG_V2: &str = "pdadmm-dataset-v2";
 
 const META_FILE: &str = "meta.json";
 const EDGES_FILE: &str = "graph.edges";
+/// Presence of this file marks a directory as v2 (`meta.json` marks v1).
+pub const V2_MANIFEST_FILE: &str = "manifest.json";
+pub const V2_INDPTR_FILE: &str = "indptr.u64";
+pub const V2_LABELS_FILE: &str = "labels.u32";
+
+/// Canonical shard file name (`shard-0007.edges.u32` etc).
+pub fn v2_shard_file(index: usize, suffix: &str) -> String {
+    format!("shard-{index:04}.{suffix}")
+}
 
 // ---------------------------------------------------------------------------
 // hashing
 
-/// Content hash of a dataset directory: SHA-256 over, for each of
-/// `meta.json` then `graph.edges`: the file name, a NUL, the byte length
-/// (u64 LE), and the raw bytes.
+/// Content hash of a dataset directory.
+///
+/// v1 (`meta.json` present): SHA-256 over, for each of `meta.json` then
+/// `graph.edges`: the file name, a NUL, the byte length (u64 LE), and the
+/// raw bytes. v2 (`manifest.json` present): the same rolling scheme over
+/// `manifest.json` alone — the manifest embeds per-file hashes, so it
+/// pins the whole directory. A directory carrying both marker files is
+/// ambiguous and refused.
 pub fn dir_sha256(dir: &Path) -> Result<String> {
+    match dataset_version(dir)? {
+        2 => rolling_sha256(dir, &[V2_MANIFEST_FILE]),
+        _ => rolling_sha256(dir, &[META_FILE, EDGES_FILE]),
+    }
+}
+
+/// 1 for v1 layouts, 2 for v2; errors when the directory carries both
+/// marker files or neither.
+pub fn dataset_version(dir: &Path) -> Result<u32> {
+    let v1 = dir.join(META_FILE).is_file();
+    let v2 = dir.join(V2_MANIFEST_FILE).is_file();
+    match (v1, v2) {
+        (true, true) => Err(anyhow!(
+            "{} holds both {META_FILE} and {V2_MANIFEST_FILE}: ambiguous dataset version",
+            dir.display()
+        )),
+        (false, false) => Err(anyhow!(
+            "{} holds neither {META_FILE} (v1) nor {V2_MANIFEST_FILE} (v2)",
+            dir.display()
+        )),
+        (true, false) => Ok(1),
+        (false, true) => Ok(2),
+    }
+}
+
+fn rolling_sha256(dir: &Path, files: &[&str]) -> Result<String> {
     let mut h = Sha256::new();
-    for fname in [META_FILE, EDGES_FILE] {
+    for fname in files {
         let path = dir.join(fname);
         let bytes = fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
         h.update(fname.as_bytes());
@@ -102,7 +195,7 @@ pub fn export(raw: &RawDataset, dir: &Path) -> Result<String> {
 /// SBM registry to the on-disk world (and the integration tests' way of
 /// producing a dataset whose reload must be bitwise-identical).
 pub fn export_synthetic(spec: &SyntheticSpec, dir: &Path) -> Result<String> {
-    export(&synthetic_raw(spec), dir)
+    export(&synthetic_raw(spec)?, dir)
 }
 
 fn write_edges(adj: &Csr, path: &Path) -> Result<()> {
@@ -446,6 +539,633 @@ fn for_each_edge(
     }
 }
 
+// ---------------------------------------------------------------------------
+// v2: sharded binary format (see the module doc for the spec)
+
+/// A file reference inside `manifest.json`: name + content hash.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct V2FileRef {
+    pub file: String,
+    pub sha256: String,
+}
+
+/// One node-range shard: rows `[lo, hi)` of the CSR and feature matrix.
+#[derive(Clone, Debug, Default)]
+pub struct V2ShardMeta {
+    pub lo: usize,
+    pub hi: usize,
+    pub edges: V2FileRef,
+    pub features: V2FileRef,
+}
+
+/// Parsed + intra-manifest-validated `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct V2Manifest {
+    pub name: String,
+    pub nodes: usize,
+    pub classes: usize,
+    pub feat_dim: usize,
+    /// Stored CSR entries (`indptr[nodes]`; 2x the undirected edge count).
+    pub edges: usize,
+    pub indptr: V2FileRef,
+    pub labels: V2FileRef,
+    pub shards: Vec<V2ShardMeta>,
+    pub train_idx: Vec<usize>,
+    pub val_idx: Vec<usize>,
+    pub test_idx: Vec<usize>,
+}
+
+impl V2Manifest {
+    /// The shard whose row range contains `node`.
+    pub fn shard_of(&self, node: usize) -> Option<usize> {
+        self.shards.iter().position(|s| s.lo <= node && node < s.hi)
+    }
+}
+
+/// `BufWriter` that folds everything written into a SHA-256, so shard
+/// files get their manifest hash in the same streaming pass that writes
+/// them.
+pub struct HashingFileWriter {
+    w: BufWriter<fs::File>,
+    h: Sha256,
+}
+
+impl HashingFileWriter {
+    pub fn create(path: &Path) -> Result<HashingFileWriter> {
+        let file =
+            fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        Ok(HashingFileWriter { w: BufWriter::new(file), h: Sha256::new() })
+    }
+
+    /// Flush and return the manifest reference for the written file.
+    pub fn finish(mut self, file: &str) -> Result<V2FileRef> {
+        self.w.flush()?;
+        Ok(V2FileRef { file: file.to_string(), sha256: hex(&self.h.finalize()) })
+    }
+}
+
+impl Write for HashingFileWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.w.write(buf)?;
+        self.h.update(&buf[..n]);
+        Ok(n)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+fn json_file_ref(w: &mut impl Write, r: &V2FileRef) -> Result<()> {
+    write!(
+        w,
+        "{{\"file\":{},\"sha256\":{}}}",
+        Json::str(&r.file).to_string_compact(),
+        Json::str(&r.sha256).to_string_compact()
+    )?;
+    Ok(())
+}
+
+fn json_index_list(w: &mut impl Write, idx: &[usize]) -> Result<()> {
+    w.write_all(b"[")?;
+    for (i, &v) in idx.iter().enumerate() {
+        if i > 0 {
+            w.write_all(b",")?;
+        }
+        write!(w, "{v}")?;
+    }
+    w.write_all(b"]")?;
+    Ok(())
+}
+
+/// Serialize `manifest.json` (written last, so a crashed export never
+/// leaves a directory that passes validation).
+pub fn write_manifest_v2(dir: &Path, man: &V2Manifest) -> Result<()> {
+    let path = dir.join(V2_MANIFEST_FILE);
+    let file = fs::File::create(&path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    write!(
+        w,
+        "{{\"format\":{},\"name\":{},\"nodes\":{},\"classes\":{},\"feat_dim\":{},\"edges\":{},",
+        Json::str(FORMAT_TAG_V2).to_string_compact(),
+        Json::str(&man.name).to_string_compact(),
+        man.nodes,
+        man.classes,
+        man.feat_dim,
+        man.edges
+    )?;
+    w.write_all(b"\"indptr\":")?;
+    json_file_ref(&mut w, &man.indptr)?;
+    w.write_all(b",\"labels\":")?;
+    json_file_ref(&mut w, &man.labels)?;
+    w.write_all(b",\"shards\":[")?;
+    for (i, s) in man.shards.iter().enumerate() {
+        if i > 0 {
+            w.write_all(b",")?;
+        }
+        write!(w, "{{\"lo\":{},\"hi\":{},\"edges\":", s.lo, s.hi)?;
+        json_file_ref(&mut w, &s.edges)?;
+        w.write_all(b",\"features\":")?;
+        json_file_ref(&mut w, &s.features)?;
+        w.write_all(b"}")?;
+    }
+    w.write_all(b"],\"splits\":{\"train\":")?;
+    json_index_list(&mut w, &man.train_idx)?;
+    w.write_all(b",\"val\":")?;
+    json_index_list(&mut w, &man.val_idx)?;
+    w.write_all(b",\"test\":")?;
+    json_index_list(&mut w, &man.test_idx)?;
+    w.write_all(b"}}")?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write an in-RAM [`RawDataset`] as a sharded v2 directory and return
+/// its content hash — the bridge the bitwise-parity tests (and v1 → v2
+/// conversion) use. The streaming sibling for synthetic specs is
+/// [`crate::graph::generator::generate_to_disk`].
+pub fn export_v2(raw: &RawDataset, dir: &Path, shard_rows: usize) -> Result<String> {
+    if shard_rows == 0 {
+        return Err(anyhow!("shard_rows must be >= 1"));
+    }
+    let (n, d) = raw.features_nd.shape();
+    if raw.labels.len() != n {
+        return Err(anyhow!("{} labels for {n} nodes", raw.labels.len()));
+    }
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let adj = &raw.adjacency;
+
+    let indptr = {
+        let mut w = HashingFileWriter::create(&dir.join(V2_INDPTR_FILE))?;
+        for &v in &adj.indptr {
+            w.write_all(&(v as u64).to_le_bytes())?;
+        }
+        w.finish(V2_INDPTR_FILE)?
+    };
+    let labels = {
+        let mut w = HashingFileWriter::create(&dir.join(V2_LABELS_FILE))?;
+        for &l in &raw.labels {
+            w.write_all(&(l as u32).to_le_bytes())?;
+        }
+        w.finish(V2_LABELS_FILE)?
+    };
+
+    let mut shards = Vec::new();
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + shard_rows).min(n);
+        let idx = shards.len();
+        let edges_file = v2_shard_file(idx, "edges.u32");
+        let mut w = HashingFileWriter::create(&dir.join(&edges_file))?;
+        for &j in &adj.indices[adj.indptr[lo]..adj.indptr[hi]] {
+            w.write_all(&j.to_le_bytes())?;
+        }
+        let edges = w.finish(&edges_file)?;
+        let feat_file = v2_shard_file(idx, "feat.f32");
+        let mut w = HashingFileWriter::create(&dir.join(&feat_file))?;
+        for r in lo..hi {
+            for &x in raw.features_nd.row(r) {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        let features = w.finish(&feat_file)?;
+        shards.push(V2ShardMeta { lo, hi, edges, features });
+        lo = hi;
+    }
+
+    write_manifest_v2(
+        dir,
+        &V2Manifest {
+            name: raw.name.clone(),
+            nodes: n,
+            classes: raw.classes,
+            feat_dim: d,
+            edges: adj.nnz(),
+            indptr,
+            labels,
+            shards,
+            train_idx: raw.train_idx.clone(),
+            val_idx: raw.val_idx.clone(),
+            test_idx: raw.test_idx.clone(),
+        },
+    )?;
+    dir_sha256(dir)
+}
+
+/// A manifest file name is used to open files inside the dataset dir —
+/// refuse anything that could escape it.
+fn checked_file_name(name: &str) -> std::result::Result<(), String> {
+    if name.is_empty() {
+        return Err("empty file name".into());
+    }
+    if name.contains('/') || name.contains('\\') || name == "." || name == ".." {
+        return Err(format!("file name {name:?} must be a plain name inside the dataset dir"));
+    }
+    Ok(())
+}
+
+fn set_ref_field(r: &mut V2FileRef, field: &str, v: Scalar<'_>) -> std::result::Result<(), String> {
+    let s = v.as_str().ok_or_else(|| format!("{field} must be a string"))?;
+    let slot = match field {
+        "file" => {
+            checked_file_name(s)?;
+            &mut r.file
+        }
+        "sha256" => &mut r.sha256,
+        other => return Err(format!("unknown file-ref key {other:?}")),
+    };
+    if !slot.is_empty() {
+        return Err(format!("duplicate {field:?}"));
+    }
+    *slot = s.to_string();
+    Ok(())
+}
+
+/// Parse and validate `manifest.json`. Performs every check that does not
+/// need the binary files; nothing here allocates proportionally to the
+/// *claimed* `nodes`/`edges` (only to the manifest's actual byte size),
+/// so a lying manifest cannot over-allocate. File-size and content checks
+/// happen in [`V2Store::open`] / the shard mappers.
+pub fn load_manifest_v2(path: &Path) -> Result<V2Manifest> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut format_seen = false;
+    let mut name: Option<String> = None;
+    let mut nodes = usize::MAX;
+    let mut classes = usize::MAX;
+    let mut feat_dim = usize::MAX;
+    let mut edges = usize::MAX;
+    let mut indptr = V2FileRef::default();
+    let mut labels = V2FileRef::default();
+    let mut shards: Vec<V2ShardMeta> = Vec::new();
+    let mut lo_seen: Vec<bool> = Vec::new();
+    let mut hi_seen: Vec<bool> = Vec::new();
+    let (mut train, mut val, mut test) = (Vec::new(), Vec::new(), Vec::new());
+    parse_events(&bytes, |p, v| {
+        // Shard events arrive in document order; indices must be dense so
+        // `shards` only ever grows by actually-present entries.
+        let shard_slot = |shards: &mut Vec<V2ShardMeta>,
+                          lo_seen: &mut Vec<bool>,
+                          hi_seen: &mut Vec<bool>,
+                          i: usize|
+         -> std::result::Result<usize, String> {
+            if i > shards.len() {
+                return Err(format!("shard {i} out of order"));
+            }
+            if i == shards.len() {
+                shards.push(V2ShardMeta::default());
+                lo_seen.push(false);
+                hi_seen.push(false);
+            }
+            Ok(i)
+        };
+        match p {
+            [PathSeg::Key(k)] => match k.as_str() {
+                "format" => {
+                    let tag = v.as_str().ok_or("format must be a string")?;
+                    if tag != FORMAT_TAG_V2 {
+                        return Err(format!(
+                            "unsupported dataset format {tag:?} (this build reads {FORMAT_TAG_V2:?})"
+                        ));
+                    }
+                    format_seen = true;
+                }
+                "name" => name = Some(v.as_str().ok_or("name must be a string")?.to_string()),
+                "nodes" => set_dim(&mut nodes, v, "nodes")?,
+                "classes" => set_dim(&mut classes, v, "classes")?,
+                "feat_dim" => set_dim(&mut feat_dim, v, "feat_dim")?,
+                "edges" => set_dim(&mut edges, v, "edges")?,
+                _ => {}
+            },
+            [PathSeg::Key(k), PathSeg::Key(f)] if k.as_str() == "indptr" => {
+                set_ref_field(&mut indptr, f.as_str(), v)?;
+            }
+            [PathSeg::Key(k), PathSeg::Key(f)] if k.as_str() == "labels" => {
+                set_ref_field(&mut labels, f.as_str(), v)?;
+            }
+            [PathSeg::Key(k), PathSeg::Index(i), PathSeg::Key(f)] if k.as_str() == "shards" => {
+                let i = shard_slot(&mut shards, &mut lo_seen, &mut hi_seen, *i)?;
+                match f.as_str() {
+                    "lo" => {
+                        if std::mem::replace(&mut lo_seen[i], true) {
+                            return Err(format!("shard {i}: duplicate \"lo\""));
+                        }
+                        shards[i].lo = dim(v, "shard lo")?;
+                    }
+                    "hi" => {
+                        if std::mem::replace(&mut hi_seen[i], true) {
+                            return Err(format!("shard {i}: duplicate \"hi\""));
+                        }
+                        shards[i].hi = dim(v, "shard hi")?;
+                    }
+                    other => return Err(format!("shard {i}: unknown key {other:?}")),
+                }
+            }
+            [PathSeg::Key(k), PathSeg::Index(i), PathSeg::Key(which), PathSeg::Key(f)]
+                if k.as_str() == "shards" =>
+            {
+                let i = shard_slot(&mut shards, &mut lo_seen, &mut hi_seen, *i)?;
+                let slot = match which.as_str() {
+                    "edges" => &mut shards[i].edges,
+                    "features" => &mut shards[i].features,
+                    other => return Err(format!("shard {i}: unknown key {other:?}")),
+                };
+                set_ref_field(slot, f.as_str(), v)?;
+            }
+            [PathSeg::Key(s), PathSeg::Key(which), PathSeg::Index(_)]
+                if s.as_str() == "splits" =>
+            {
+                let slot = match which.as_str() {
+                    "train" => &mut train,
+                    "val" => &mut val,
+                    "test" => &mut test,
+                    other => return Err(format!("unknown split {other:?}")),
+                };
+                slot.push(dim(v, "split indices")?);
+            }
+            _ => {}
+        }
+        Ok(())
+    })
+    .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+    let ctx = |msg: String| anyhow!("{}: {msg}", path.display());
+    if !format_seen {
+        return Err(ctx(format!("missing \"format\" (expected {FORMAT_TAG_V2:?})")));
+    }
+    if nodes == usize::MAX || classes == usize::MAX || feat_dim == usize::MAX || edges == usize::MAX
+    {
+        return Err(ctx("missing required key(s): needs nodes, classes, feat_dim, edges".into()));
+    }
+    if nodes == 0 || classes == 0 || feat_dim == 0 {
+        return Err(ctx("nodes, classes and feat_dim must all be positive".into()));
+    }
+    for (what, r) in [("indptr", &indptr), ("labels", &labels)] {
+        if r.file.is_empty() || r.sha256.is_empty() {
+            return Err(ctx(format!("{what} needs both \"file\" and \"sha256\"")));
+        }
+    }
+    if shards.is_empty() {
+        return Err(ctx("a v2 dataset needs at least one shard".into()));
+    }
+    // Shards must partition 0..nodes contiguously and ascending: a gap,
+    // overlap, or count lie leaves nodes uncovered or double-covered.
+    let mut expect_lo = 0usize;
+    for (i, s) in shards.iter().enumerate() {
+        if s.lo != expect_lo {
+            return Err(ctx(format!(
+                "shard {i} covers [{}, {}) but the previous shard ended at {expect_lo} \
+                 (shards must partition 0..nodes contiguously)",
+                s.lo, s.hi
+            )));
+        }
+        if s.hi <= s.lo {
+            return Err(ctx(format!("shard {i} range [{}, {}) is empty or inverted", s.lo, s.hi)));
+        }
+        for (what, r) in [("edges", &s.edges), ("features", &s.features)] {
+            if r.file.is_empty() || r.sha256.is_empty() {
+                return Err(ctx(format!("shard {i} {what} needs both \"file\" and \"sha256\"")));
+            }
+        }
+        expect_lo = s.hi;
+    }
+    if expect_lo != nodes {
+        return Err(ctx(format!(
+            "shards cover 0..{expect_lo} but the manifest claims {nodes} nodes"
+        )));
+    }
+    if train.is_empty() {
+        return Err(ctx("the train split is empty".into()));
+    }
+    for (which, idx) in [("train", &mut train), ("val", &mut val), ("test", &mut test)] {
+        idx.sort_unstable();
+        if let Some(&v) = idx.last() {
+            if v >= nodes {
+                return Err(ctx(format!("{which} split index {v} out of range ({nodes} nodes)")));
+            }
+        }
+    }
+    // Disjointness without a size-`nodes` allocation: merge-check the
+    // three (now sorted) lists.
+    let mut all: Vec<usize> =
+        train.iter().chain(val.iter()).chain(test.iter()).copied().collect();
+    all.sort_unstable();
+    if all.windows(2).any(|w| w[0] == w[1]) {
+        return Err(ctx("a node appears in more than one split slot".into()));
+    }
+
+    Ok(V2Manifest {
+        name: name.unwrap_or_else(|| "on-disk-v2".to_string()),
+        nodes,
+        classes,
+        feat_dim,
+        edges,
+        indptr,
+        labels,
+        shards,
+        train_idx: train,
+        val_idx: val,
+        test_idx: test,
+    })
+}
+
+/// Map a manifest-referenced file and verify its size and SHA-256 before
+/// anything reads through it.
+fn map_verified(
+    dir: &Path,
+    r: &V2FileRef,
+    want_bytes: u64,
+    what: &str,
+) -> Result<std::sync::Arc<MmapFile>> {
+    let path = dir.join(&r.file);
+    let got = fs::metadata(&path)
+        .with_context(|| format!("{what}: stat {}", path.display()))?
+        .len();
+    if got != want_bytes {
+        return Err(anyhow!(
+            "{what} {} is {got} bytes, expected {want_bytes} (truncated or padded shard?)",
+            path.display()
+        ));
+    }
+    let map = MmapFile::open(&path)?;
+    let mut h = Sha256::new();
+    h.update(map.as_bytes());
+    let sha = hex(&h.finalize());
+    if !sha.eq_ignore_ascii_case(&r.sha256) {
+        return Err(anyhow!(
+            "{what} {} sha256 mismatch: manifest pins {}, file hashes to {sha}",
+            path.display(),
+            r.sha256
+        ));
+    }
+    Ok(map)
+}
+
+/// An opened v2 dataset: validated manifest plus always-resident maps of
+/// the row offsets and labels. Shard edge/feature blocks are mapped (and
+/// sha-verified) on demand, so a consumer that touches one node range
+/// reads and verifies only the shards covering it.
+pub struct V2Store {
+    pub dir: PathBuf,
+    pub man: V2Manifest,
+    pub indptr: MappedU64,
+    pub labels: MappedU32,
+}
+
+impl V2Store {
+    /// Open + fully validate the dataset skeleton. Every claimed
+    /// dimension is checked against real file sizes before it is trusted,
+    /// and `indptr`/`labels` content invariants are scanned once here;
+    /// per-shard payloads are verified by the `map_shard_*` calls.
+    pub fn open(dir: &Path, expect_sha256: Option<&str>) -> Result<V2Store> {
+        if let Some(want) = expect_sha256 {
+            let got = dir_sha256(dir)?;
+            if !got.eq_ignore_ascii_case(want) {
+                return Err(anyhow!(
+                    "dataset {} content hash mismatch: expected {want}, found {got} \
+                     (the files changed since the hash was pinned)",
+                    dir.display()
+                ));
+            }
+        }
+        let man = load_manifest_v2(&dir.join(V2_MANIFEST_FILE))?;
+
+        let indptr_bytes = (man.nodes as u64 + 1)
+            .checked_mul(8)
+            .ok_or_else(|| anyhow!("indptr size overflows"))?;
+        let indptr = MappedU64::whole(map_verified(dir, &man.indptr, indptr_bytes, "indptr")?)?;
+        {
+            let ip = indptr.as_slice();
+            if ip[0] != 0 {
+                return Err(anyhow!("indptr[0] = {}, must be 0", ip[0]));
+            }
+            if let Some(i) = (1..ip.len()).find(|&i| ip[i] < ip[i - 1]) {
+                return Err(anyhow!(
+                    "indptr is not non-decreasing at row {i} ({} after {})",
+                    ip[i],
+                    ip[i - 1]
+                ));
+            }
+            if ip[man.nodes] != man.edges as u64 {
+                return Err(anyhow!(
+                    "indptr[nodes] = {} stored entries but the manifest claims {}",
+                    ip[man.nodes],
+                    man.edges
+                ));
+            }
+        }
+
+        let labels_bytes = (man.nodes as u64)
+            .checked_mul(4)
+            .ok_or_else(|| anyhow!("labels size overflows"))?;
+        let labels = MappedU32::whole(map_verified(dir, &man.labels, labels_bytes, "labels")?)?;
+        if let Some((i, &l)) = labels
+            .as_slice()
+            .iter()
+            .enumerate()
+            .find(|(_, &l)| l as usize >= man.classes)
+        {
+            return Err(anyhow!("label {l} at node {i} out of range ({} classes)", man.classes));
+        }
+
+        // Shard payload *sizes* are checked eagerly (cheap stat calls, and
+        // it catches truncation before a long augmentation run); payload
+        // bytes are hashed/validated when a shard is actually mapped.
+        let ip = indptr.as_slice();
+        for (i, s) in man.shards.iter().enumerate() {
+            let edge_bytes = (ip[s.hi] - ip[s.lo])
+                .checked_mul(4)
+                .ok_or_else(|| anyhow!("shard {i} edge size overflows"))?;
+            let path = dir.join(&s.edges.file);
+            let got = fs::metadata(&path)
+                .with_context(|| format!("shard {i} edges: stat {}", path.display()))?
+                .len();
+            if got != edge_bytes {
+                return Err(anyhow!(
+                    "shard {i} edges {} is {got} bytes, expected {edge_bytes} \
+                     (indptr rows {}..{})",
+                    path.display(),
+                    s.lo,
+                    s.hi
+                ));
+            }
+            let feat_bytes = ((s.hi - s.lo) as u64)
+                .checked_mul(man.feat_dim as u64)
+                .and_then(|c| c.checked_mul(4))
+                .ok_or_else(|| anyhow!("shard {i} feature size overflows"))?;
+            let path = dir.join(&s.features.file);
+            let got = fs::metadata(&path)
+                .with_context(|| format!("shard {i} features: stat {}", path.display()))?
+                .len();
+            if got != feat_bytes {
+                return Err(anyhow!(
+                    "shard {i} features {} is {got} bytes, expected {feat_bytes}",
+                    path.display()
+                ));
+            }
+        }
+
+        Ok(V2Store { dir: dir.to_path_buf(), man, indptr, labels })
+    }
+
+    /// Map shard `s`'s CSR index slice, re-verifying its hash and the CSR
+    /// row invariants (strictly increasing neighbours, in range, no self
+    /// loops) — the per-shard integrity check distributed workers run on
+    /// exactly the shards covering their node range.
+    pub fn map_shard_edges(&self, s: usize) -> Result<MappedU32> {
+        let shard = &self.man.shards[s];
+        let ip = self.indptr.as_slice();
+        let want = (ip[shard.hi] - ip[shard.lo]) * 4;
+        let map = MappedU32::whole(map_verified(
+            &self.dir,
+            &shard.edges,
+            want,
+            &format!("shard {s} edges"),
+        )?)?;
+        let base = ip[shard.lo];
+        let idx = map.as_slice();
+        for r in shard.lo..shard.hi {
+            let (lo, hi) = ((ip[r] - base) as usize, (ip[r + 1] - base) as usize);
+            let row = &idx[lo..hi];
+            let mut prev: Option<u32> = None;
+            for &j in row {
+                if j as usize >= self.man.nodes {
+                    return Err(anyhow!(
+                        "shard {s}: neighbour {j} of node {r} out of range ({} nodes)",
+                        self.man.nodes
+                    ));
+                }
+                if j as usize == r {
+                    return Err(anyhow!("shard {s}: self-loop at node {r}"));
+                }
+                if prev.is_some_and(|p| p >= j) {
+                    return Err(anyhow!(
+                        "shard {s}: node {r} neighbours not strictly increasing"
+                    ));
+                }
+                prev = Some(j);
+            }
+        }
+        Ok(map)
+    }
+
+    /// Map shard `s`'s feature block, re-verifying its hash.
+    pub fn map_shard_features(&self, s: usize) -> Result<MappedF32> {
+        let shard = &self.man.shards[s];
+        let want = ((shard.hi - shard.lo) * self.man.feat_dim * 4) as u64;
+        MappedF32::whole(map_verified(
+            &self.dir,
+            &shard.features,
+            want,
+            &format!("shard {s} features"),
+        )?)
+    }
+
+    /// Stored-pattern degree `indptr[node+1] - indptr[node]`.
+    pub fn degree(&self, node: usize) -> usize {
+        let ip = self.indptr.as_slice();
+        (ip[node + 1] - ip[node]) as usize
+    }
+}
+
 /// Parse one `u v` / `u,v` edge line (already trimmed, non-empty).
 fn parse_edge(t: &str) -> Result<(u32, u32)> {
     let mut it: Box<dyn Iterator<Item = &str>> = if t.contains(',') {
@@ -498,7 +1218,7 @@ mod tests {
         let spec = tiny();
         let sha = export_synthetic(&spec, &dir).unwrap();
         assert_eq!(sha.len(), 64);
-        let want = synthetic_raw(&spec);
+        let want = synthetic_raw(&spec).unwrap();
         let got = load_raw(&dir, Some(&sha)).unwrap();
         assert_eq!(got.name, "io-tiny");
         assert_eq!(got.adjacency.indptr, want.adjacency.indptr);
@@ -667,6 +1387,70 @@ mod tests {
         let err = load_raw(&dir, None).err().expect("truncated meta rejected");
         let err = format!("{err:#}");
         assert!(err.contains("byte") || err.contains("end of input"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v2_export_roundtrips_through_store() {
+        let dir = tmpdir("v2roundtrip");
+        let spec = tiny();
+        let raw = synthetic_raw(&spec).unwrap();
+        // shard_rows = 16 over 40 nodes -> 3 shards with a short tail
+        let sha = export_v2(&raw, &dir, 16).unwrap();
+        assert_eq!(dataset_version(&dir).unwrap(), 2);
+        let store = V2Store::open(&dir, Some(&sha)).unwrap();
+        assert_eq!(store.man.nodes, 40);
+        assert_eq!(store.man.shards.len(), 3);
+        assert_eq!(store.man.edges, raw.adjacency.nnz());
+        assert_eq!(store.man.train_idx, raw.train_idx);
+        // indptr / labels content round-trips exactly
+        let ip: Vec<usize> = store.indptr.as_slice().iter().map(|&v| v as usize).collect();
+        assert_eq!(ip, raw.adjacency.indptr);
+        let labels: Vec<usize> = store.labels.as_slice().iter().map(|&l| l as usize).collect();
+        assert_eq!(labels, raw.labels);
+        // every shard's edges and features match the in-RAM slices
+        for (s, sh) in store.man.shards.iter().enumerate() {
+            let edges = store.map_shard_edges(s).unwrap();
+            assert_eq!(
+                edges.as_slice(),
+                &raw.adjacency.indices[raw.adjacency.indptr[sh.lo]..raw.adjacency.indptr[sh.hi]]
+            );
+            let feats = store.map_shard_features(s).unwrap();
+            let d = store.man.feat_dim;
+            assert_eq!(feats.as_slice(), &raw.features_nd.data[sh.lo * d..sh.hi * d]);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v2_streaming_generator_matches_in_ram_export_bitwise() {
+        let dir_a = tmpdir("v2gen");
+        let dir_b = tmpdir("v2exp");
+        let spec = tiny();
+        // The replay-based sharded generator and the in-RAM export must
+        // produce byte-identical directories (same dir hash) for the same
+        // spec and shard size.
+        let sha_gen = crate::graph::generator::generate_to_disk(&spec, &dir_a, 16).unwrap();
+        let raw = synthetic_raw(&spec).unwrap();
+        let sha_exp = export_v2(&raw, &dir_b, 16).unwrap();
+        assert_eq!(sha_gen, sha_exp);
+        for f in ["manifest.json", V2_INDPTR_FILE, V2_LABELS_FILE, "shard-0000.edges.u32"] {
+            assert_eq!(fs::read(dir_a.join(f)).unwrap(), fs::read(dir_b.join(f)).unwrap(), "{f}");
+        }
+        let _ = fs::remove_dir_all(&dir_a);
+        let _ = fs::remove_dir_all(&dir_b);
+    }
+
+    #[test]
+    fn v1_and_v2_markers_disambiguate() {
+        let dir = tmpdir("version");
+        let err = dataset_version(&dir).unwrap_err().to_string();
+        assert!(err.contains("neither"), "{err}");
+        fs::write(dir.join(META_FILE), "{}").unwrap();
+        assert_eq!(dataset_version(&dir).unwrap(), 1);
+        fs::write(dir.join(V2_MANIFEST_FILE), "{}").unwrap();
+        let err = dataset_version(&dir).unwrap_err().to_string();
+        assert!(err.contains("ambiguous"), "{err}");
         let _ = fs::remove_dir_all(&dir);
     }
 }

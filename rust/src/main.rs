@@ -35,6 +35,11 @@ fn run(argv: &[String]) -> Result<()> {
     if args.subcommand == "worker" {
         return cmd_worker(&args);
     }
+    // gen writes a dataset directory from flags alone; like worker it must
+    // run without a findable configs/datasets.json
+    if args.subcommand == "gen" {
+        return cmd_gen(&args);
+    }
     let cfg = RootConfig::load_default()?;
     match args.subcommand.as_str() {
         "train" => cmd_train(&cfg, &args),
@@ -48,6 +53,52 @@ fn run(argv: &[String]) -> Result<()> {
         }
         other => Err(anyhow::anyhow!("unknown subcommand {other:?}")),
     }
+}
+
+/// Stream a synthetic SBM benchmark straight to a sharded
+/// `pdadmm-dataset-v2` directory (out-of-core: never holds the edge list
+/// or feature matrix in RAM), printing the content hash to pin in specs.
+fn cmd_gen(args: &Args) -> Result<()> {
+    let nodes: usize = args
+        .flags
+        .get_parse("nodes")?
+        .ok_or_else(|| anyhow::anyhow!("gen requires --nodes <N>"))?;
+    let out = args
+        .flags
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("gen requires --out <dir>"))?;
+    // Default splits: the classic 10%/10%/10% of nodes, overridable.
+    let tenth = (nodes / 10).max(1).min(nodes);
+    let spec = pdadmm_g::config::SyntheticSpec {
+        name: args.flags.get("name").unwrap_or("sbm-gen").to_string(),
+        nodes,
+        avg_degree: args.flags.get_or("avg-degree", 12.0f64)?,
+        classes: args.flags.get_or("classes", 4usize)?,
+        feat_dim: args.flags.get_or("feat-dim", 16usize)?,
+        train: args.flags.get_or("train", tenth)?,
+        val: args.flags.get_or("val", tenth)?,
+        test: args.flags.get_or("test", tenth)?,
+        homophily_ratio: args.flags.get_or("homophily", 8.0f64)?,
+        feature_signal: args.flags.get_or("feature-signal", 1.0f32)?,
+        label_noise: args.flags.get_or("label-noise", 0.0f32)?,
+        seed: args.flags.get_or("seed", 0u64)?,
+    };
+    let shard_rows = args.flags.get_or("shard-rows", 262_144usize)?;
+    let dir = std::path::PathBuf::from(out);
+    let t0 = std::time::Instant::now();
+    let sha = pdadmm_g::graph::generator::generate_to_disk(&spec, &dir, shard_rows)?;
+    println!(
+        "wrote {} ({} nodes, {} classes, feat {}, target degree {}) in {:.1}s",
+        dir.display(),
+        spec.nodes,
+        spec.classes,
+        spec.feat_dim,
+        spec.avg_degree,
+        t0.elapsed().as_secs_f64(),
+    );
+    println!("sha256 {sha}");
+    println!("train with: repro train --dataset-dir {}", dir.display());
+    Ok(())
 }
 
 fn cmd_worker(args: &Args) -> Result<()> {
@@ -387,7 +438,7 @@ fn cmd_datasets(cfg: &RootConfig) -> Result<()> {
                         label_noise: 0.0,
                         seed: s.seed,
                     },
-                );
+                )?;
                 let h = pdadmm_g::graph::generator::edge_homophily(&g.adjacency, &g.labels);
                 ("synthetic", format!("{h:>9.3}"))
             }

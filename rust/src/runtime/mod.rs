@@ -177,7 +177,7 @@ impl XlaRuntime {
             .iter()
             .map(|a| -> Result<xla::Literal> {
                 match a {
-                    Arg::M(m) => Ok(xla::Literal::vec1(&m.data)
+                    Arg::M(m) => Ok(xla::Literal::vec1(&m.data[..])
                         .reshape(&[m.rows as i64, m.cols as i64])
                         .map_err(|e| anyhow!("reshape: {e:?}"))?),
                     Arg::S(s) => Ok(xla::Literal::vec1(&[*s])),

@@ -7,12 +7,128 @@
 
 use crate::tensor::rng::Pcg32;
 use crate::tensor::ops;
+use crate::util::mmap::MappedF32;
+
+/// The storage behind a [`Mat`]: an owned heap buffer, or a read-only
+/// file-backed view ([`MappedF32`]) for out-of-core datasets.
+///
+/// `Buf` dereferences to `[f32]`, so every read path (`iter`, indexing,
+/// slicing) is oblivious to the variant. Mutation goes through `DerefMut`,
+/// which transparently materializes a mapped view into an owned buffer
+/// first (copy-on-write) — mapped tensors are cheap to clone and share
+/// their mapping until someone writes.
+#[derive(Clone)]
+pub enum Buf {
+    Owned(Vec<f32>),
+    Mapped(MappedF32),
+}
+
+impl Buf {
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            Buf::Owned(v) => v,
+            Buf::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// True when still backed by the file mapping (no write has landed).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Buf::Mapped(_))
+    }
+
+    /// Owned copy of the contents.
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.as_slice().to_vec()
+    }
+
+    /// Resize in place (materializes a mapped view first).
+    pub fn resize(&mut self, n: usize, v: f32) {
+        self.make_owned().resize(n, v);
+    }
+
+    fn make_owned(&mut self) -> &mut Vec<f32> {
+        if let Buf::Mapped(m) = self {
+            *self = Buf::Owned(m.as_slice().to_vec());
+        }
+        match self {
+            Buf::Owned(v) => v,
+            Buf::Mapped(_) => unreachable!("just materialized"),
+        }
+    }
+}
+
+impl std::ops::Deref for Buf {
+    type Target = [f32];
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl std::ops::DerefMut for Buf {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.make_owned()
+    }
+}
+
+impl From<Vec<f32>> for Buf {
+    fn from(v: Vec<f32>) -> Buf {
+        Buf::Owned(v)
+    }
+}
+
+impl From<MappedF32> for Buf {
+    fn from(m: MappedF32) -> Buf {
+        Buf::Mapped(m)
+    }
+}
+
+impl FromIterator<f32> for Buf {
+    fn from_iter<I: IntoIterator<Item = f32>>(iter: I) -> Buf {
+        Buf::Owned(iter.into_iter().collect())
+    }
+}
+
+/// `for &x in &buf` — for-loops don't deref-coerce, so spell it out.
+impl<'a> IntoIterator for &'a Buf {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl PartialEq for Buf {
+    fn eq(&self, other: &Buf) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f32>> for Buf {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Buf> for Vec<f32> {
+    fn eq(&self, other: &Buf) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Buf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
 
 #[derive(Clone, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
-    pub data: Vec<f32>,
+    pub data: Buf,
 }
 
 impl std::fmt::Debug for Mat {
@@ -27,16 +143,24 @@ impl std::fmt::Debug for Mat {
 
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Mat { rows, cols, data: vec![0.0; rows * cols] }
+        Mat { rows, cols, data: vec![0.0; rows * cols].into() }
     }
 
     pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
-        Mat { rows, cols, data: vec![v; rows * cols] }
+        Mat { rows, cols, data: vec![v; rows * cols].into() }
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
-        Mat { rows, cols, data }
+        Mat { rows, cols, data: data.into() }
+    }
+
+    /// Wrap a file-backed view (see [`crate::util::mmap`]) without copying.
+    /// The result reads like any other `Mat`; the first mutation
+    /// materializes an owned buffer (copy-on-write).
+    pub fn from_mapped(rows: usize, cols: usize, data: MappedF32) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/mapping mismatch");
+        Mat { rows, cols, data: data.into() }
     }
 
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
@@ -46,7 +170,7 @@ impl Mat {
                 data.push(f(i, j));
             }
         }
-        Mat { rows, cols, data }
+        Mat { rows, cols, data: data.into() }
     }
 
     /// i.i.d. N(0, std^2) entries — the weight initializer.
@@ -55,7 +179,7 @@ impl Mat {
         for _ in 0..rows * cols {
             data.push(rng.normal() * std);
         }
-        Mat { rows, cols, data }
+        Mat { rows, cols, data: data.into() }
     }
 
     #[inline]
@@ -299,7 +423,7 @@ impl Mat {
 trait MaxAbs {
     fn iters_max_abs(&self) -> f32;
 }
-impl MaxAbs for Vec<f32> {
+impl MaxAbs for [f32] {
     fn iters_max_abs(&self) -> f32 {
         self.iter().map(|x| x.abs()).fold(0.0, f32::max)
     }

@@ -6,5 +6,5 @@ pub mod matrix;
 pub mod ops;
 pub mod rng;
 
-pub use matrix::Mat;
+pub use matrix::{Buf, Mat};
 pub use rng::Pcg32;

@@ -12,7 +12,17 @@ pub struct Pcg32 {
     inc: u64,
     /// Cached second output of the Box-Muller transform.
     gauss_spare: Option<f32>,
+    /// Total `next_u32` calls since construction — a work meter the
+    /// generator tests use to assert sampling cost scales with output
+    /// size (e.g. O(edges), not O(n^2), for the SBM edge sampler).
+    draws: u64,
 }
+
+/// Sentinel returned by [`Pcg32::geometric_skip`] when `p <= 0`: the gap
+/// until the next success of a zero-probability trial is infinite.
+/// Callers must compare (`skip >= remaining`) rather than add, so the
+/// sentinel can never overflow a position counter.
+pub const SKIP_INFINITE: usize = usize::MAX;
 
 const PCG_MULT: u64 = 6364136223846793005;
 
@@ -24,6 +34,7 @@ impl Pcg32 {
             state: 0,
             inc: (stream << 1) | 1,
             gauss_spare: None,
+            draws: 0,
         };
         rng.next_u32();
         rng.state = rng.state.wrapping_add(seed);
@@ -38,6 +49,7 @@ impl Pcg32 {
 
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
+        self.draws += 1;
         let old = self.state;
         self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
         let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
@@ -106,17 +118,39 @@ impl Pcg32 {
         }
     }
 
-    /// Geometric-skip sampling helper: next index gap for Bernoulli(p)
-    /// trials (used by the SBM edge sampler to stay O(edges)).
+    /// Total `next_u32` draws since construction (see the `draws` field).
+    pub fn draw_count(&self) -> u64 {
+        self.draws
+    }
+
+    /// Geometric-skip sampling helper: the number of failed Bernoulli(p)
+    /// trials before the next success (used by the SBM edge sampler to
+    /// stay O(edges)).
+    ///
+    /// Edge behaviour is pinned down so the sampler can never spin or
+    /// mis-count:
+    /// - `p >= 1.0` (including NaN-free overshoot from upstream clamps)
+    ///   succeeds immediately: skip 0, no draw consumed.
+    /// - `p <= 0.0` (or NaN) can never succeed: returns [`SKIP_INFINITE`],
+    ///   no draw consumed. Callers must treat the sentinel as "past the
+    ///   end" via comparison, never arithmetic.
+    /// - Tiny positive `p` uses `ln_1p(-p)` for the denominator; the naive
+    ///   `(1.0 - p).ln()` rounds to `-0.0` for `p < ~1e-17`, turning the
+    ///   division into `-inf` and the cast into skip 0 — every trial would
+    ///   "succeed", which is the p = 1 behaviour at p ~ 0.
     pub fn geometric_skip(&mut self, p: f64) -> usize {
         if p >= 1.0 {
             return 0;
         }
-        if p <= 0.0 {
-            return usize::MAX / 2;
+        if !(p > 0.0) {
+            return SKIP_INFINITE;
         }
         let u = self.next_f64().max(1e-300);
-        (u.ln() / (1.0 - p).ln()).floor() as usize
+        let s = (u.ln() / (-p).ln_1p()).floor();
+        if s >= usize::MAX as f64 {
+            return SKIP_INFINITE;
+        }
+        s as usize
     }
 }
 
@@ -203,5 +237,44 @@ mod tests {
         let mean = total as f64 / n as f64;
         // E[skips] = (1-p)/p = 19
         assert!((mean - 19.0).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn geometric_skip_edge_cases() {
+        let mut rng = Pcg32::seeded(19);
+        // p >= 1 succeeds immediately and consumes no entropy.
+        let before = rng.draw_count();
+        assert_eq!(rng.geometric_skip(1.0), 0);
+        assert_eq!(rng.geometric_skip(1.5), 0);
+        assert_eq!(rng.draw_count(), before);
+        // p <= 0 / NaN can never succeed: sentinel, no entropy consumed.
+        assert_eq!(rng.geometric_skip(0.0), SKIP_INFINITE);
+        assert_eq!(rng.geometric_skip(-0.25), SKIP_INFINITE);
+        assert_eq!(rng.geometric_skip(f64::NAN), SKIP_INFINITE);
+        assert_eq!(rng.draw_count(), before);
+        // Tiny positive p must give enormous skips, not skip 0 (the old
+        // `(1.0 - p).ln()` denominator rounded to -0.0 here).
+        for _ in 0..64 {
+            let s = rng.geometric_skip(1e-300);
+            assert!(
+                s == SKIP_INFINITE || s > 1_000_000_000,
+                "tiny p produced skip {s}"
+            );
+        }
+        // ... while moderate p still behaves.
+        let s = rng.geometric_skip(0.5);
+        assert!(s < 64, "p=0.5 skip {s}");
+    }
+
+    #[test]
+    fn draw_count_tracks_next_u32() {
+        let mut rng = Pcg32::seeded(23);
+        let start = rng.draw_count();
+        for _ in 0..10 {
+            rng.next_u32();
+        }
+        assert_eq!(rng.draw_count(), start + 10);
+        rng.next_u64(); // two u32 draws
+        assert_eq!(rng.draw_count(), start + 12);
     }
 }

@@ -1,0 +1,296 @@
+//! Read-only memory-mapped file buffers (out-of-core substrate).
+//!
+//! [`MmapFile`] maps a whole file `PROT_READ`/`MAP_PRIVATE` so multi-GB
+//! CSR arrays and feature matrices become file-backed views the kernel
+//! pages in and out on demand — resident set tracks the working set, not
+//! the dataset. Typed views ([`MappedF32`], [`MappedU32`], [`MappedU64`])
+//! reinterpret the bytes as little-endian primitive slices after
+//! alignment and length checks; this repo only targets little-endian
+//! hosts for its binary formats (the same assumption the wire codecs
+//! make).
+//!
+//! No `libc` crate: the two syscalls are declared directly (std already
+//! links the platform libc). On targets other than linux/macos — where
+//! the flag constants below are not guaranteed — the implementation
+//! falls back to reading the file into an owned, 8-byte-aligned buffer:
+//! same API and results, no out-of-core benefit.
+//!
+//! Safety model: a mapping's bytes are only as immutable as the file
+//! behind it. Callers keep this sound by mapping either (a) spill files
+//! that are unlinked immediately after mapping (no path ⇒ no writers), or
+//! (b) dataset files whose sha256 was verified at map time, treated as
+//! immutable by contract. Concurrent modification of a mapped dataset
+//! file is outside that contract.
+
+use anyhow::{anyhow, Context, Result};
+use std::fs::File;
+use std::path::Path;
+use std::sync::Arc;
+
+#[cfg(any(target_os = "linux", target_os = "macos"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A whole file mapped read-only (or its read-into-RAM fallback).
+pub struct MmapFile {
+    /// Base of the view. Points into the mapping, or into `fallback`.
+    ptr: *const u8,
+    len: usize,
+    /// True when `ptr` came from `mmap` and must be `munmap`ed on drop.
+    mapped: bool,
+    /// Owned storage on targets without the mmap path (u64 elements for
+    /// 8-byte alignment, so every typed view below stays aligned).
+    #[allow(dead_code)]
+    fallback: Vec<u64>,
+}
+
+// SAFETY: the view is read-only and the backing pages are never remapped
+// for the lifetime of the value (see the module-level immutability
+// contract), so shared references can cross threads.
+unsafe impl Send for MmapFile {}
+unsafe impl Sync for MmapFile {}
+
+impl MmapFile {
+    /// Map `path` in its entirety.
+    pub fn open(path: &Path) -> Result<Arc<MmapFile>> {
+        let file =
+            File::open(path).with_context(|| format!("opening {} for mmap", path.display()))?;
+        Self::map(&file).with_context(|| format!("mapping {}", path.display()))
+    }
+
+    /// Map an already-open file (works on unlinked files, which is how
+    /// spill buffers stay invisible and self-cleaning).
+    #[cfg(any(target_os = "linux", target_os = "macos"))]
+    pub fn map(file: &File) -> Result<Arc<MmapFile>> {
+        use std::os::unix::io::AsRawFd;
+        let len = file.metadata().context("stat for mmap")?.len();
+        let len = usize::try_from(len).map_err(|_| anyhow!("file too large to map"))?;
+        if len == 0 {
+            return Ok(Arc::new(MmapFile {
+                // u64-aligned dangling base: every typed view's alignment
+                // check (and `from_raw_parts` for empty slices) stays happy.
+                ptr: std::ptr::NonNull::<u64>::dangling().as_ptr() as *const u8,
+                len: 0,
+                mapped: false,
+                fallback: Vec::new(),
+            }));
+        }
+        // SAFETY: valid fd, length matches the file, PROT_READ only. The
+        // kernel picks the address (addr = null).
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(anyhow!("mmap of {len} bytes failed"));
+        }
+        Ok(Arc::new(MmapFile { ptr: ptr as *const u8, len, mapped: true, fallback: Vec::new() }))
+    }
+
+    /// Fallback for targets without a guaranteed mmap ABI: read the file
+    /// into an owned 8-byte-aligned buffer.
+    #[cfg(not(any(target_os = "linux", target_os = "macos")))]
+    pub fn map(file: &File) -> Result<Arc<MmapFile>> {
+        use std::io::Read;
+        let len = file.metadata().context("stat for read")?.len();
+        let len = usize::try_from(len).map_err(|_| anyhow!("file too large to read"))?;
+        let mut fallback = vec![0u64; len.div_ceil(8)];
+        // SAFETY: u64 -> u8 reinterpretation of an initialized buffer.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(fallback.as_mut_ptr() as *mut u8, fallback.len() * 8)
+        };
+        let mut f = file.try_clone().context("cloning file handle")?;
+        f.read_exact(&mut bytes[..len]).context("reading file")?;
+        let ptr = fallback.as_ptr() as *const u8;
+        Ok(Arc::new(MmapFile { ptr, len, mapped: false, fallback }))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len describe the live mapping (or owned buffer).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for MmapFile {
+    fn drop(&mut self) {
+        #[cfg(any(target_os = "linux", target_os = "macos"))]
+        if self.mapped {
+            // SAFETY: exactly the region returned by mmap.
+            unsafe {
+                sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+            }
+        }
+        let _ = self.mapped;
+    }
+}
+
+impl std::fmt::Debug for MmapFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MmapFile({} bytes, mapped={})", self.len, self.mapped)
+    }
+}
+
+macro_rules! typed_view {
+    ($name:ident, $elem:ty, $label:literal) => {
+        /// Read-only typed view over a whole [`MmapFile`] (little-endian
+        /// elements; cheap to clone — clones share the mapping).
+        #[derive(Clone, Debug)]
+        pub struct $name {
+            file: Arc<MmapFile>,
+            len: usize,
+        }
+
+        impl $name {
+            pub fn whole(file: Arc<MmapFile>) -> Result<$name> {
+                let size = std::mem::size_of::<$elem>();
+                if file.len() % size != 0 {
+                    return Err(anyhow!(
+                        concat!("file length {} is not a multiple of ", $label, " size"),
+                        file.len()
+                    ));
+                }
+                // mmap bases are page-aligned and the fallback buffer is
+                // 8-byte aligned, but belt-and-braces check anyway.
+                if (file.as_bytes().as_ptr() as usize) % size != 0 {
+                    return Err(anyhow!(concat!("mapping base not aligned for ", $label)));
+                }
+                let len = file.len() / size;
+                Ok($name { file, len })
+            }
+
+            pub fn len(&self) -> usize {
+                self.len
+            }
+
+            pub fn is_empty(&self) -> bool {
+                self.len == 0
+            }
+
+            pub fn as_slice(&self) -> &[$elem] {
+                // SAFETY: length and alignment validated in `whole`; the
+                // bytes stay immutable per the module contract.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        self.file.as_bytes().as_ptr() as *const $elem,
+                        self.len,
+                    )
+                }
+            }
+        }
+    };
+}
+
+typed_view!(MappedF32, f32, "f32");
+typed_view!(MappedU32, u32, "u32");
+typed_view!(MappedU64, u64, "u64");
+
+/// Open a spill file for writing and unlink it immediately: the data is
+/// reachable only through the returned handle (and any mapping made from
+/// it), and the kernel reclaims it automatically when the last user
+/// exits — even on crash. On targets where unlink-while-open is not
+/// reliable the path is left in place and cleaned up on a best-effort
+/// basis by the caller's temp dir.
+pub fn create_unlinked(path: &Path) -> Result<File> {
+    let file = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create_new(true)
+        .open(path)
+        .with_context(|| format!("creating spill file {}", path.display()))?;
+    #[cfg(unix)]
+    std::fs::remove_file(path)
+        .with_context(|| format!("unlinking spill file {}", path.display()))?;
+    Ok(file)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("pdadmm-mmap-test-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn maps_f32_roundtrip() {
+        let path = tmp("f32");
+        let vals = [1.0f32, -2.5, 0.0, f32::MAX, 1e-30];
+        {
+            let mut f = File::create(&path).unwrap();
+            for v in vals {
+                f.write_all(&v.to_le_bytes()).unwrap();
+            }
+        }
+        let m = MappedF32::whole(MmapFile::open(&path).unwrap()).unwrap();
+        assert_eq!(m.as_slice(), &vals);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_misaligned_length() {
+        let path = tmp("odd");
+        std::fs::write(&path, [1u8, 2, 3]).unwrap();
+        let f = MmapFile::open(&path).unwrap();
+        assert_eq!(f.as_bytes(), &[1, 2, 3]);
+        assert!(MappedF32::whole(f.clone()).is_err());
+        assert!(MappedU64::whole(f).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_maps_as_empty() {
+        let path = tmp("empty");
+        std::fs::write(&path, []).unwrap();
+        let f = MmapFile::open(&path).unwrap();
+        assert!(f.is_empty());
+        let v = MappedU32::whole(f).unwrap();
+        assert!(v.is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn unlinked_spill_survives_until_mapped() {
+        let path = tmp("spill");
+        let mut f = create_unlinked(&path).unwrap();
+        #[cfg(unix)]
+        assert!(!path.exists(), "spill file must be unlinked at birth");
+        f.write_all(&7u64.to_le_bytes()).unwrap();
+        f.write_all(&9u64.to_le_bytes()).unwrap();
+        let m = MappedU64::whole(MmapFile::map(&f).unwrap()).unwrap();
+        drop(f);
+        assert_eq!(m.as_slice(), &[7, 9]);
+        #[cfg(not(unix))]
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod json;
 pub mod json_stream;
+pub mod mmap;
 pub mod prop;
 pub mod sha256;
 pub mod threads;

@@ -1,0 +1,213 @@
+//! Out-of-core pipeline, end to end.
+//!
+//! Two layers of assurance:
+//!
+//! 1. **Bitwise parity** (always runs): a synthetic benchmark streamed to a
+//!    sharded `pdadmm-dataset-v2` directory and rebuilt through the
+//!    mmap-backed loader + spill-to-disk augmentation must produce a dataset
+//!    bit-identical to the all-in-RAM synthetic build — same augmented X,
+//!    labels, masks, splits — and train to bit-identical epoch traces.
+//!
+//! 2. **Peak-RSS ceiling** (gated behind `PDADMM_OOC_SMOKE=1`, CI-only): a
+//!    million-node SBM is generated shard-by-shard, rebuilt out-of-core and
+//!    trained for two epochs, then `VmHWM` from `/proc/self/status` is
+//!    asserted under a ceiling that sits well below the
+//!    `(4*|E| + |V|*K*d) * 4` bytes the in-RAM pipeline would need.
+//!    Override the ceiling with `PDADMM_RSS_CEILING_MB` when the runner's
+//!    baseline RSS differs.
+
+use pdadmm_g::backend::NativeBackend;
+use pdadmm_g::config::{DatasetSpec, OnDiskSpec, SyntheticSpec, TrainConfig};
+use pdadmm_g::coordinator::Trainer;
+use pdadmm_g::graph::datasets::{self, Dataset};
+use pdadmm_g::graph::generator;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pdadmm_ooc_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn assert_f32_bitwise(tag: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: diverged at element {i}: {x} vs {y}");
+    }
+}
+
+fn two_epoch_trace(ds: Dataset, seed: u64) -> Vec<(u64, u64)> {
+    let mut tc = TrainConfig::new(&ds.name, 8, 3, 2);
+    tc.nu = 0.01;
+    tc.rho = 1.0;
+    tc.seed = seed;
+    let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc);
+    (0..2)
+        .map(|_| {
+            let r = t.run_epoch();
+            (r.objective.to_bits(), r.residual.to_bits())
+        })
+        .collect()
+}
+
+fn parity_spec() -> SyntheticSpec {
+    SyntheticSpec {
+        name: "ooc-parity".into(),
+        nodes: 200,
+        avg_degree: 8.0,
+        classes: 4,
+        feat_dim: 6,
+        train: 80,
+        val: 40,
+        test: 40,
+        homophily_ratio: 6.0,
+        feature_signal: 1.2,
+        label_noise: 0.05,
+        seed: 21,
+    }
+}
+
+/// The streamed v2 dataset, mapped back and augmented through the
+/// spill-to-disk pass, is bit-identical to the in-RAM synthetic build.
+#[test]
+fn v2_out_of_core_build_matches_in_ram_build_bitwise() {
+    const HOPS: usize = 3;
+    let dir = scratch("parity");
+    // shard_rows 64 over 200 nodes -> 4 shards, the last one ragged
+    let sha = generator::generate_to_disk(&parity_spec(), &dir, 64).expect("streaming generation");
+    let mem = datasets::build(&DatasetSpec::Synthetic(parity_spec()), HOPS, 2).unwrap();
+    let disk = datasets::build(
+        &DatasetSpec::OnDisk(OnDiskSpec {
+            name: "ooc-parity".into(),
+            dir: dir.clone(),
+            sha256: Some(sha),
+        }),
+        HOPS,
+        2,
+    )
+    .expect("out-of-core rebuild");
+
+    assert_eq!(disk.nodes, mem.nodes);
+    assert_eq!(disk.classes, mem.classes);
+    assert_eq!(disk.input_dim, mem.input_dim);
+    assert_eq!(disk.edges_stored, mem.edges_stored);
+    assert_f32_bitwise("augmented X", &disk.x.data, &mem.x.data);
+    assert_f32_bitwise("y_onehot", &disk.y_onehot.data, &mem.y_onehot.data);
+    assert_f32_bitwise("maskn_train", &disk.maskn_train.data, &mem.maskn_train.data);
+    assert_eq!(*disk.labels, *mem.labels);
+    assert_eq!(*disk.train_idx, *mem.train_idx);
+    assert_eq!(*disk.val_idx, *mem.val_idx);
+    assert_eq!(*disk.test_idx, *mem.test_idx);
+
+    // and the mapped dataset trains exactly like the owned one
+    assert_eq!(
+        two_epoch_trace(mem, 5),
+        two_epoch_trace(disk, 5),
+        "training traces diverged between in-RAM and out-of-core datasets"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[cfg(target_os = "linux")]
+fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb = line.trim_start_matches("VmHWM:").trim().trim_end_matches("kB").trim();
+    Some(kb.parse::<u64>().ok()? * 1024)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn peak_rss_bytes() -> Option<u64> {
+    None
+}
+
+/// Million-node smoke: streaming generation finishes in seconds, the
+/// out-of-core build + 2 training epochs stay under a peak-RSS ceiling that
+/// is a fraction of what materializing the graph in RAM would take.
+#[test]
+fn million_node_smoke_stays_under_the_rss_ceiling() {
+    if std::env::var("PDADMM_OOC_SMOKE").is_err() {
+        eprintln!("skipping: set PDADMM_OOC_SMOKE=1 to run the million-node smoke");
+        return;
+    }
+    const NODES: usize = 1_000_000;
+    const HOPS: usize = 2;
+    const FEAT: usize = 8;
+    const AVG_DEGREE: f64 = 48.0;
+    let spec = SyntheticSpec {
+        name: "sbm-1m".into(),
+        nodes: NODES,
+        avg_degree: AVG_DEGREE,
+        classes: 4,
+        feat_dim: FEAT,
+        train: 100_000,
+        val: 50_000,
+        test: 50_000,
+        homophily_ratio: 8.0,
+        feature_signal: 1.0,
+        label_noise: 0.0,
+        seed: 7,
+    };
+    let dir = scratch("smoke_1m");
+
+    let t0 = Instant::now();
+    let sha = generator::generate_to_disk(&spec, &dir, 262_144).expect("streaming generation");
+    let gen_secs = t0.elapsed().as_secs_f64();
+    eprintln!("generated 1M-node SBM in {gen_secs:.1}s ({sha})");
+    assert!(gen_secs < 60.0, "1M-node generation took {gen_secs:.1}s; the O(n^2) sampler is back");
+
+    let on_disk = DatasetSpec::OnDisk(OnDiskSpec {
+        name: "sbm-1m".into(),
+        dir: dir.clone(),
+        sha256: Some(sha),
+    });
+    let ds = datasets::build(&on_disk, HOPS, 4).expect("out-of-core build");
+    assert_eq!(ds.nodes, NODES);
+    assert_eq!(ds.input_dim, HOPS * FEAT);
+    let edges_stored = ds.edges_stored;
+
+    let mut tc = TrainConfig::new("sbm-1m", 4, 2, 2);
+    tc.nu = 0.01;
+    tc.rho = 1.0;
+    tc.seed = 7;
+    let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc);
+    for e in 0..2 {
+        let rec = t.run_epoch();
+        assert!(rec.objective.is_finite(), "epoch {e}: objective {}", rec.objective);
+    }
+    drop(t);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // What the pre-out-of-core pipeline would hold resident: the CSR plus
+    // its renormalized copy (indices + values each, ~4 * edges_stored
+    // f32-sized words total) plus the dense augmented X (|V| * K * d f32s).
+    let formula_bytes = (4 * edges_stored + NODES * HOPS * FEAT) as u64 * 4;
+    let ceiling_mb: u64 = std::env::var("PDADMM_RSS_CEILING_MB")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(384);
+    let ceiling = ceiling_mb * 1024 * 1024;
+    assert!(
+        ceiling < formula_bytes,
+        "ceiling {ceiling_mb} MB must sit below the {} MB in-RAM footprint to prove anything",
+        formula_bytes >> 20
+    );
+    match peak_rss_bytes() {
+        Some(peak) => {
+            eprintln!(
+                "peak RSS {} MB, ceiling {ceiling_mb} MB, in-RAM formula {} MB",
+                peak >> 20,
+                formula_bytes >> 20
+            );
+            assert!(
+                peak < ceiling,
+                "peak RSS {} MB breached the {ceiling_mb} MB ceiling (in-RAM formula {} MB)",
+                peak >> 20,
+                formula_bytes >> 20
+            );
+        }
+        None => eprintln!("no /proc/self/status on this platform; RSS assertion skipped"),
+    }
+}

@@ -1,0 +1,302 @@
+//! Fuzz-style hardening of the sharded `pdadmm-dataset-v2` loader
+//! (`graph::io`), mirroring `property_json_stream.rs`: on-disk datasets
+//! are untrusted input, so every corruption — truncated shards, hash
+//! mismatches, overlapping or missing node ranges, shard-count lies,
+//! absurd claimed dimensions, mangled manifests — must surface as a clean
+//! `Err`, never a panic, and never an allocation sized by a *claimed*
+//! (unverified) dimension.
+
+use pdadmm_g::config::SyntheticSpec;
+use pdadmm_g::graph::generator::generate_to_disk;
+use pdadmm_g::graph::io::{self, V2Store};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+
+fn tiny() -> SyntheticSpec {
+    SyntheticSpec {
+        name: "v2fuzz".into(),
+        nodes: 48,
+        avg_degree: 4.0,
+        classes: 3,
+        feat_dim: 4,
+        train: 12,
+        val: 8,
+        test: 8,
+        homophily_ratio: 6.0,
+        feature_signal: 1.0,
+        label_noise: 0.0,
+        seed: 11,
+    }
+}
+
+/// Fresh valid dataset (3 shards of 16 rows) plus its pinned hash.
+fn fresh(tag: &str) -> (PathBuf, String) {
+    let dir = std::env::temp_dir().join(format!("pdadmm_v2fuzz_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sha = generate_to_disk(&tiny(), &dir, 16).unwrap();
+    (dir, sha)
+}
+
+/// Open must fail cleanly: an `Err` with a message, never a panic, never
+/// an accept. Returns the rendered error for content asserts.
+fn open_must_fail(dir: &Path, sha: Option<&str>, tag: &str) -> String {
+    match catch_unwind(AssertUnwindSafe(|| V2Store::open(dir, sha).map(|_| ()))) {
+        Ok(Ok(())) => panic!("{tag}: corrupt dataset accepted"),
+        Ok(Err(e)) => format!("{e:#}"),
+        Err(_) => panic!("{tag}: loader panicked"),
+    }
+}
+
+fn rewrite_manifest(dir: &Path, man: &io::V2Manifest) {
+    io::write_manifest_v2(dir, man).unwrap();
+}
+
+fn load_manifest(dir: &Path) -> io::V2Manifest {
+    io::load_manifest_v2(&dir.join("manifest.json")).unwrap()
+}
+
+#[test]
+fn pristine_dataset_opens_and_maps_every_shard() {
+    let (dir, sha) = fresh("pristine");
+    let store = V2Store::open(&dir, Some(&sha)).unwrap();
+    assert_eq!(store.man.shards.len(), 3);
+    for s in 0..store.man.shards.len() {
+        store.map_shard_edges(s).unwrap();
+        store.map_shard_features(s).unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_shard_files_are_rejected_by_size() {
+    for file in ["shard-0001.edges.u32", "shard-0001.feat.f32", "indptr.u64", "labels.u32"] {
+        let (dir, _) = fresh("trunc");
+        let path = dir.join(file);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        let err = open_must_fail(&dir, None, file);
+        assert!(err.contains("bytes") || err.contains("expected"), "{file}: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn shard_hash_mismatch_is_caught_at_map_time() {
+    let (dir, sha) = fresh("flip");
+    // Flip one byte without changing the size: open still succeeds (the
+    // dir hash only pins manifest.json, shard payloads are lazy)...
+    let path = dir.join("shard-0000.edges.u32");
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[0] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let store = V2Store::open(&dir, Some(&sha)).unwrap();
+    // ...but mapping that shard re-verifies and must refuse.
+    let r = catch_unwind(AssertUnwindSafe(|| store.map_shard_edges(0).map(|_| ())));
+    let err = match r {
+        Ok(Ok(())) => panic!("corrupt shard mapped"),
+        Ok(Err(e)) => format!("{e:#}"),
+        Err(_) => panic!("shard mapper panicked"),
+    };
+    assert!(err.contains("sha256 mismatch"), "{err}");
+    // untouched shards still map fine
+    store.map_shard_edges(1).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn always_resident_files_are_hash_verified_eagerly() {
+    for file in ["indptr.u64", "labels.u32"] {
+        let (dir, _) = fresh("flipcore");
+        let path = dir.join(file);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x80;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = open_must_fail(&dir, None, file);
+        // either the hash or a content invariant (monotonicity, label
+        // range) trips — both are clean rejections
+        assert!(
+            err.contains("sha256 mismatch")
+                || err.contains("indptr")
+                || err.contains("label"),
+            "{file}: {err}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn pinned_dir_hash_mismatch_is_refused() {
+    let (dir, sha) = fresh("pin");
+    let mut wrong = sha.clone();
+    let flip = if wrong.ends_with('0') { '1' } else { '0' };
+    wrong.pop();
+    wrong.push(flip);
+    let err = open_must_fail(&dir, Some(&wrong), "pin");
+    assert!(err.contains("hash mismatch"), "{err}");
+    // editing the manifest invalidates the original pin too
+    let mut man = load_manifest(&dir);
+    man.name = "renamed".into();
+    rewrite_manifest(&dir, &man);
+    let err = open_must_fail(&dir, Some(&sha), "pin-edit");
+    assert!(err.contains("hash mismatch"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn overlapping_and_gapped_shard_ranges_are_rejected() {
+    // overlap: shard 1 claims to start inside shard 0
+    let (dir, _) = fresh("overlap");
+    let mut man = load_manifest(&dir);
+    man.shards[1].lo = 8;
+    rewrite_manifest(&dir, &man);
+    let err = open_must_fail(&dir, None, "overlap");
+    assert!(err.contains("contiguously"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // gap: shard 1 skips rows 16..24
+    let (dir, _) = fresh("gap");
+    let mut man = load_manifest(&dir);
+    man.shards[1].lo = 24;
+    rewrite_manifest(&dir, &man);
+    let err = open_must_fail(&dir, None, "gap");
+    assert!(err.contains("contiguously"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // inverted: hi <= lo
+    let (dir, _) = fresh("inverted");
+    let mut man = load_manifest(&dir);
+    man.shards[2].hi = man.shards[2].lo;
+    rewrite_manifest(&dir, &man);
+    let err = open_must_fail(&dir, None, "inverted");
+    assert!(err.contains("empty or inverted") || err.contains("contiguously"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shard_count_lies_are_rejected() {
+    // fewer shards than the node range needs
+    let (dir, _) = fresh("fewer");
+    let mut man = load_manifest(&dir);
+    man.shards.pop();
+    rewrite_manifest(&dir, &man);
+    let err = open_must_fail(&dir, None, "fewer");
+    assert!(err.contains("claims 48 nodes"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // extra phantom shard past the real ones (no backing file)
+    let (dir, _) = fresh("extra");
+    let mut man = load_manifest(&dir);
+    let mut ghost = man.shards.last().unwrap().clone();
+    ghost.lo = 48;
+    ghost.hi = 64;
+    ghost.edges.file = "shard-0003.edges.u32".into();
+    ghost.features.file = "shard-0003.feat.f32".into();
+    man.shards.push(ghost);
+    rewrite_manifest(&dir, &man);
+    let err = open_must_fail(&dir, None, "extra");
+    // shards now cover 0..64 against 48 claimed nodes
+    assert!(err.contains("claims 48 nodes"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A manifest claiming absurd dimensions must fail on real file sizes
+/// (checked *before* any dimension-proportional allocation), not OOM.
+#[test]
+fn huge_claimed_dimensions_fail_fast_without_allocating() {
+    let (dir, _) = fresh("huge");
+    let mut man = load_manifest(&dir);
+    man.nodes = 1usize << 50;
+    man.shards.last_mut().unwrap().hi = 1usize << 50;
+    rewrite_manifest(&dir, &man);
+    let err = open_must_fail(&dir, None, "huge-nodes");
+    assert!(err.contains("expected") || err.contains("bytes"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // past 2^53 the integer reader itself refuses (nothing downstream
+    // ever sees a dimension it could overflow on)
+    let (dir, _) = fresh("overflow");
+    let mut man = load_manifest(&dir);
+    man.nodes = usize::MAX - 1;
+    man.shards.last_mut().unwrap().hi = usize::MAX - 1;
+    rewrite_manifest(&dir, &man);
+    let err = open_must_fail(&dir, None, "overflow");
+    assert!(err.contains("non-negative integer"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn edge_count_lies_are_cross_checked_against_indptr() {
+    let (dir, _) = fresh("edgelie");
+    let mut man = load_manifest(&dir);
+    man.edges += 8;
+    rewrite_manifest(&dir, &man);
+    let err = open_must_fail(&dir, None, "edgelie");
+    assert!(err.contains("indptr") || err.contains("manifest claims"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn path_escaping_file_names_are_rejected() {
+    for evil in ["../escape.u64", "a/b.u64", "..", ""] {
+        let (dir, _) = fresh("path");
+        let mut man = load_manifest(&dir);
+        man.indptr.file = evil.to_string();
+        rewrite_manifest(&dir, &man);
+        let err = open_must_fail(&dir, None, "path");
+        assert!(
+            err.contains("file name") || err.contains("plain name"),
+            "{evil:?}: {err}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Every truncation of a valid manifest parses to a clean error (or, once
+/// whole, to success) — never a panic.
+#[test]
+fn manifest_truncations_never_panic() {
+    let (dir, _) = fresh("cut");
+    let full = std::fs::read(dir.join("manifest.json")).unwrap();
+    let scratch = dir.join("scratch.json");
+    for cut in 0..=full.len() {
+        std::fs::write(&scratch, &full[..cut]).unwrap();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            io::load_manifest_v2(&scratch).map(|_| ())
+        }));
+        let r = r.unwrap_or_else(|_| panic!("panicked at truncation {cut}"));
+        if cut == full.len() {
+            assert!(r.is_ok(), "full manifest must parse: {:?}", r.err());
+        } else {
+            assert!(r.is_err(), "truncation {cut} accepted");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Single-byte corruptions of the manifest either parse to something the
+/// validators reject, parse to a still-valid manifest (e.g. a digit in
+/// the name), or fail the JSON reader — but never panic and never crash
+/// the full open path.
+#[test]
+fn manifest_single_byte_corruptions_are_contained() {
+    let (dir, _) = fresh("mut");
+    let full = std::fs::read(dir.join("manifest.json")).unwrap();
+    let manifest_path = dir.join("manifest.json");
+    for i in (0..full.len()).step_by(3) {
+        for flip in [0x00u8, b'9', b'"', b'{', 0xff] {
+            let mut mutated = full.clone();
+            if mutated[i] == flip {
+                continue;
+            }
+            mutated[i] = flip;
+            std::fs::write(&manifest_path, &mutated).unwrap();
+            let r = catch_unwind(AssertUnwindSafe(|| V2Store::open(&dir, None).map(|_| ())));
+            assert!(
+                r.is_ok(),
+                "open panicked with byte {i} set to {flip:#04x}"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
