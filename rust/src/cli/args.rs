@@ -90,8 +90,19 @@ USAGE:
                 [--distributed N]           # spawn N localhost worker processes
                 [--workers-at a:p,unix:/s]  # drive pre-started workers instead
                 [--greedy 2,5,10] [--out results/run.csv]
+                [--snapshot-out model.snap]  # persist the trained chain
   repro worker  --listen  <host:port|unix:path>   # serve one coordinator
   repro worker  --connect <host:port|unix:path>   # dial a coordinator
+  repro serve   --snapshot <file> (--dataset <name> | --dataset-dir <path>)
+                [--listen host:port]   # default 127.0.0.1:0 (prints port)
+                [--pool N] [--coalesce N]       # worker pool / fuse depth
+                [--resident-bits B]    # hold weights quantized (1..=16)
+                [--forward-threads N]  # intra-op width per forward pass
+  repro bench-serve --snapshot <file> (--dataset <name> | --dataset-dir <path>)
+                [--quick] [--rates qps,qps,...] [--duration-ms N]
+                [--batch N] [--connections N] [--seed N]
+                [--pool N] [--coalesce N] [--resident-bits B]
+                [--out BENCH_serve.json]
   repro baseline --dataset <name> --optimizer gd|adadelta|adagrad|adam
                 [--hidden N] [--layers N] [--epochs N] [--lr F] [--seed N]
                 [--workers N] [--backend native|xla]
@@ -131,6 +142,13 @@ a --quant-budget bits-per-element target (default 4.0), re-planned every
 --adapt-interval epochs (default 5) from per-layer boundary statistics.
 With an integral budget b >= 2 it is guaranteed to use no more comm
 bytes than the fixed pq<b> codec; see README \"Adaptive quantization\".
+
+serve answers batched node-classification queries from a trained
+`pdadmm-snapshot-v1` file (written by train --snapshot-out) over the
+framed transport's QUERY/PREDICT protocol; the dataset flag names the
+graph whose augmented features the snapshot was trained on. bench-serve
+drives a loopback server with open-loop Poisson load and writes per-rate
+p50/p95/p99 latency to BENCH_serve.json. See README \"Serving\".
 ";
 
 #[cfg(test)]

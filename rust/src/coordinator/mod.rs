@@ -10,12 +10,19 @@
 //! * [`transport`] — the [`transport::Transport`] abstraction: the framed
 //!   Unix-socket/TCP runtime next to the in-process one.
 //! * [`worker`] — the `repro worker` process serving one layer block.
+//! * [`snapshot`] — the `pdadmm-snapshot-v1` trained-model file format
+//!   (distinct from the transport's SNAPSHOT counter frame).
+//! * [`serve`] — the `repro serve` inference tier: resident (optionally
+//!   quantized) weights answering QUERY/PREDICT frames on a bounded,
+//!   coalescing worker pool.
 
 pub mod adapt;
 pub mod channel;
 pub mod greedy;
 pub mod phases;
 pub mod quant;
+pub mod serve;
+pub mod snapshot;
 pub mod trainer;
 pub mod transport;
 pub mod worker;

@@ -1,0 +1,589 @@
+//! The inference serving tier (`repro serve`): answer batched
+//! node-classification queries from a trained `pdadmm-snapshot-v1` model.
+//!
+//! # Architecture
+//!
+//! ```text
+//! client ──QUERY──▶ reader thread ─▶ bounded queue ─▶ worker pool (N)
+//!    ▲                (1 per conn)     (coalescing)      gather cols,
+//!    └────PREDICT──────────────────────────────────────  forward, split
+//! ```
+//!
+//! The chain is loaded **once** ([`ServeModel`]) and held resident for the
+//! life of the server. Weights stay either plain f32 or — opt-in, the
+//! pdADMM-G-Q payoff at inference time — in quantized [`Codec`] form,
+//! decoded per layer on demand into a scratch buffer during each forward
+//! pass, so a quantized-resident server never holds more than one decoded
+//! weight matrix at a time.
+//!
+//! Connections are framed exactly like the training transport
+//! ([`transport::read_frame`]): clients send QUERY frames (`req ‖ count ‖
+//! node ids`), the server answers each with one PREDICT frame carrying
+//! the argmax labels and the raw logits block in the [`Codec::None`] wire
+//! format. One reader thread per connection validates and enqueues
+//! requests; a **bounded** worker pool (`--pool`) pops up to `--coalesce`
+//! queued requests at a time, fuses them into a single forward pass over
+//! the concatenated node columns, and splits the result back into
+//! per-request replies. The queue itself is bounded ([`MAX_QUEUED`]);
+//! past that the server answers with a PREDICT error frame instead of
+//! buffering without limit.
+//!
+//! # Bitwise parity
+//!
+//! The blocked GEMM accumulates each output element's k-sequence in a
+//! fixed order independent of panel position ([`crate::tensor::ops`]), so
+//! forwarding a *column subset* of X is bitwise-identical per column to
+//! the full-graph forward. A plain-resident server therefore reproduces
+//! [`Trainer::logits`](crate::coordinator::Trainer::logits) argmax
+//! exactly for any batch composition — asserted end-to-end over a real
+//! loopback socket in `tests/integration_serve.rs`. Quantized residency
+//! trades that exactness for memory, and is off by default.
+
+use crate::coordinator::quant::{self, Codec};
+use crate::coordinator::snapshot::Snapshot;
+use crate::coordinator::transport::{self, frame_kind, Conn, WriteHalf};
+use crate::tensor::matrix::Mat;
+use anyhow::{anyhow, Context, Result};
+use std::collections::VecDeque;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Hard cap on queued (accepted, unanswered) requests: past this the
+/// server sheds load with PREDICT error frames instead of buffering
+/// without bound.
+pub const MAX_QUEUED: usize = 4096;
+
+/// Serving knobs (see `repro serve --help`).
+pub struct ServeOptions {
+    /// Worker threads answering queries (the bounded pool).
+    pub pool: usize,
+    /// Max queued requests fused into one forward pass.
+    pub coalesce: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { pool: 2, coalesce: 8 }
+    }
+}
+
+/// Resident form of the chain's weights.
+enum Resident {
+    Plain(Vec<Mat>),
+    /// One [`Codec::Uniform`] encoding per layer, decoded on demand.
+    Quantized(Vec<quant::Encoded>),
+}
+
+/// A loaded chain held resident for serving.
+pub struct ServeModel {
+    /// `d_0 .. d_L` as in the snapshot format.
+    pub dims: Vec<usize>,
+    ws: Resident,
+    bs: Vec<Mat>,
+    threads: usize,
+    /// The snapshot's hex SHA-256 content pin.
+    pub sha256: String,
+}
+
+impl ServeModel {
+    /// Take ownership of a loaded [`Snapshot`]. `resident_bits` keeps the
+    /// weights quantized in RAM at that uniform width (1..=16), decoded
+    /// per layer on demand; `None` keeps plain f32 (bitwise-exact
+    /// serving). `threads` is the intra-op width of each forward pass.
+    pub fn from_snapshot(
+        snap: Snapshot,
+        resident_bits: Option<u8>,
+        threads: usize,
+    ) -> Result<ServeModel> {
+        let Snapshot { dims, ws, bs, sha256 } = snap;
+        let ws = match resident_bits {
+            Option::None => Resident::Plain(ws),
+            Some(bits) => {
+                let codec = Codec::uniform(bits).context("--resident-bits")?;
+                Resident::Quantized(ws.iter().map(|w| quant::encode(codec, w)).collect())
+            }
+        };
+        Ok(ServeModel { dims, ws, bs, threads: threads.max(1), sha256 })
+    }
+
+    pub fn layers(&self) -> usize {
+        self.bs.len()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn classes(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// `"f32"` or `"uniform<bits>"` — for logs and bench metadata.
+    pub fn residency(&self) -> String {
+        match &self.ws {
+            Resident::Plain(_) => "f32".to_string(),
+            Resident::Quantized(enc) => match enc.first().map(|e| e.codec()) {
+                Some(Codec::Uniform { bits }) => format!("uniform{bits}"),
+                _ => "quantized".to_string(),
+            },
+        }
+    }
+
+    /// Forward `x` (input_dim × batch) through the resident chain to the
+    /// logits (classes × batch). Quantized layers decode into a single
+    /// reused scratch buffer.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows, self.input_dim(), "serve forward: input dim mismatch");
+        let n = self.bs.len();
+        let mut p = x.clone();
+        let mut scratch = Mat::zeros(0, 0);
+        for l in 0..n {
+            let w: &Mat = match &self.ws {
+                Resident::Plain(ws) => &ws[l],
+                Resident::Quantized(enc) => {
+                    quant::decode_into(&enc[l], &mut scratch);
+                    &scratch
+                }
+            };
+            let m = crate::tensor::ops::linear(w, &p, &self.bs[l], self.threads);
+            p = if l + 1 < n { m.relu() } else { m };
+        }
+        p
+    }
+}
+
+/// Gather the named columns of `x` into a dense input_dim × ids.len()
+/// batch. Ids must be pre-validated (`< x.cols`): the reader threads
+/// reject out-of-range ids at the protocol edge, so a violation here is
+/// an internal routing bug, not untrusted input.
+pub fn gather_cols(x: &Mat, ids: &[u32]) -> Mat {
+    let mut out = Mat::zeros(x.rows, ids.len());
+    for i in 0..x.rows {
+        let src = x.row(i);
+        let dst = out.row_mut(i);
+        for (j, &id) in ids.iter().enumerate() {
+            dst[j] = src[id as usize];
+        }
+    }
+    out
+}
+
+/// Copy columns `[off, off + cnt)` of `m` into their own matrix.
+fn slice_cols(m: &Mat, off: usize, cnt: usize) -> Mat {
+    let mut out = Mat::zeros(m.rows, cnt);
+    for i in 0..m.rows {
+        out.row_mut(i).copy_from_slice(&m.row(i)[off..off + cnt]);
+    }
+    out
+}
+
+type SharedWriter = Arc<Mutex<WriteHalf>>;
+
+/// One accepted, validated, unanswered query.
+struct Pending {
+    writer: SharedWriter,
+    req: u64,
+    ids: Vec<u32>,
+}
+
+enum Push {
+    Ok,
+    Full,
+    Closed,
+}
+
+/// The bounded request queue the reader threads feed and the worker pool
+/// drains (coalescing up to `coalesce` requests per pop).
+struct Queue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    q: VecDeque<Pending>,
+    closed: bool,
+}
+
+impl Queue {
+    fn new() -> Queue {
+        Queue {
+            state: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, p: Pending) -> Push {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Push::Closed;
+        }
+        if s.q.len() >= MAX_QUEUED {
+            return Push::Full;
+        }
+        s.q.push_back(p);
+        drop(s);
+        self.cv.notify_one();
+        Push::Ok
+    }
+
+    /// Pop up to `max` requests, blocking while the queue is empty and
+    /// open. `None` means closed **and** fully drained — queued requests
+    /// are still answered during shutdown.
+    fn pop_batch(&self, max: usize) -> Option<Vec<Pending>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if !s.q.is_empty() {
+                let take = s.q.len().min(max.max(1));
+                return Some(s.q.drain(..take).collect());
+            }
+            if s.closed {
+                return Option::None;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// A running serve instance. Dropping (or [`Server::stop`]) shuts it
+/// down: the listener stops accepting, open connections are closed, and
+/// already-queued requests are drained before the pool exits.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    queue: Arc<Queue>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Bind `listen` (TCP `host:port`; port 0 picks a free port) and start
+/// serving `model` over the feature matrix `x` (input_dim × nodes).
+pub fn start(model: ServeModel, x: Arc<Mat>, opts: &ServeOptions, listen: &str) -> Result<Server> {
+    if model.input_dim() != x.rows {
+        return Err(anyhow!(
+            "snapshot expects input dim {} but the dataset's X has {} rows",
+            model.input_dim(),
+            x.rows
+        ));
+    }
+    let listener = TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let addr = listener.local_addr()?;
+    let model = Arc::new(model);
+    let queue = Arc::new(Queue::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let workers = (0..opts.pool.max(1))
+        .map(|_| {
+            let (model, x, queue) = (model.clone(), x.clone(), queue.clone());
+            let coalesce = opts.coalesce.max(1);
+            std::thread::spawn(move || worker_loop(&model, &x, &queue, coalesce))
+        })
+        .collect();
+
+    let accept = {
+        let (queue, stop, conns) = (queue.clone(), stop.clone(), conns.clone());
+        let nodes = x.cols as u32;
+        std::thread::spawn(move || loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match listener.accept() {
+                Ok((s, _)) => {
+                    if let Ok(raw) = s.try_clone() {
+                        conns.lock().unwrap().push(raw);
+                    }
+                    if let Ok(conn) = Conn::from_tcp(s) {
+                        let queue = queue.clone();
+                        // readers are detached: closing their stream (via
+                        // the raw clone above) unblocks and ends them
+                        std::thread::spawn(move || reader_loop(conn, &queue, nodes));
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(25)),
+            }
+        })
+    };
+
+    Ok(Server { addr, stop, queue, conns, accept: Some(accept), workers })
+}
+
+/// One connection's protocol edge: validate frames, answer malformed
+/// queries with PREDICT error frames, enqueue well-formed ones.
+fn reader_loop(conn: Conn, queue: &Queue, nodes: u32) {
+    let (mut rd, wr) = conn.into_halves();
+    let wr: SharedWriter = Arc::new(Mutex::new(wr));
+    let reply_err = |req: u64, msg: &str| {
+        let _ = wr.lock().unwrap().send(frame_kind::PREDICT, &transport::predict_err_payload(req, msg));
+    };
+    loop {
+        let (kind, payload) = match rd.recv() {
+            Ok(f) => f,
+            Err(_) => return, // disconnect or corrupt framing
+        };
+        match kind {
+            frame_kind::QUERY => {
+                let (req, ids) = match transport::parse_query(&payload) {
+                    Ok(q) => q,
+                    Err(e) => {
+                        // framing was intact, so answer the malformed query
+                        // if its request id is recoverable; drop otherwise
+                        if payload.len() >= 8 {
+                            let req = u64::from_le_bytes([
+                                payload[0], payload[1], payload[2], payload[3], payload[4],
+                                payload[5], payload[6], payload[7],
+                            ]);
+                            reply_err(req, &format!("{e:#}"));
+                            continue;
+                        }
+                        return;
+                    }
+                };
+                if let Some(&bad) = ids.iter().find(|&&i| i >= nodes) {
+                    reply_err(req, &format!("node id {bad} out of range (graph has {nodes} nodes)"));
+                    continue;
+                }
+                match queue.push(Pending { writer: wr.clone(), req, ids }) {
+                    Push::Ok => {}
+                    Push::Full => reply_err(req, "server overloaded: request queue is full"),
+                    Push::Closed => {
+                        reply_err(req, "server is shutting down");
+                        return;
+                    }
+                }
+            }
+            frame_kind::SHUTDOWN => return,
+            other => {
+                reply_err(0, &format!("unexpected frame kind {other} on a serve connection"));
+                return;
+            }
+        }
+    }
+}
+
+/// One pool worker: coalesce queued requests, run one fused forward pass,
+/// split the logits back into per-request PREDICT replies.
+fn worker_loop(model: &ServeModel, x: &Mat, queue: &Queue, coalesce: usize) {
+    while let Some(batch) = queue.pop_batch(coalesce) {
+        let total: usize = batch.iter().map(|p| p.ids.len()).sum();
+        let mut ids = Vec::with_capacity(total);
+        for p in &batch {
+            ids.extend_from_slice(&p.ids);
+        }
+        let logits = model.forward(&gather_cols(x, &ids));
+        let labels = logits.argmax_cols();
+        let mut off = 0;
+        for p in batch {
+            let cnt = p.ids.len();
+            let sub = slice_cols(&logits, off, cnt);
+            let sub_labels: Vec<u32> = labels[off..off + cnt].iter().map(|&l| l as u32).collect();
+            let enc = quant::encode(Codec::None, &sub);
+            let payload = transport::predict_ok_payload(p.req, &sub_labels, &enc);
+            // a vanished client is its own problem — keep serving others
+            let _ = p.writer.lock().unwrap().send(frame_kind::PREDICT, &payload);
+            off += cnt;
+        }
+    }
+}
+
+impl Server {
+    /// The bound address (resolves `--listen host:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the accept loop exits (i.e. until [`Server::stop`] is
+    /// called from another thread, or forever for the CLI).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Shut down: stop accepting, close open connections, drain already
+    /// queued requests, join the pool. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.queue.close();
+        for s in self.conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// A served prediction for one query batch.
+pub struct Prediction {
+    /// Argmax class per queried node (same order as the query ids).
+    pub labels: Vec<usize>,
+    /// The raw logits, classes × batch.
+    pub logits: Mat,
+}
+
+/// A blocking client for the QUERY/PREDICT protocol.
+pub struct ServeClient {
+    conn: Conn,
+    next_req: u64,
+}
+
+impl ServeClient {
+    pub fn dial(addr: &str) -> Result<ServeClient> {
+        Ok(ServeClient { conn: Conn::dial(addr)?, next_req: 1 })
+    }
+
+    /// Send one batched query and block for its PREDICT reply. A server-
+    /// side rejection (bad node id, overload) comes back as an `Err`.
+    pub fn query(&mut self, ids: &[u32]) -> Result<Prediction> {
+        let req = self.next_req;
+        self.next_req += 1;
+        self.conn.send(frame_kind::QUERY, &transport::query_payload(req, ids)?)?;
+        let (kind, payload) = self.conn.recv()?;
+        if kind != frame_kind::PREDICT {
+            return Err(anyhow!("expected a PREDICT frame, got kind {kind}"));
+        }
+        let (rid, body) = transport::parse_predict(&payload)?;
+        if rid != req {
+            return Err(anyhow!("PREDICT answers request {rid}, expected {req}"));
+        }
+        match body {
+            transport::PredictBody::Labels { labels, logits } => {
+                if labels.len() != ids.len() {
+                    return Err(anyhow!(
+                        "PREDICT carries {} labels for a {}-node query",
+                        labels.len(),
+                        ids.len()
+                    ));
+                }
+                Ok(Prediction { labels: labels.into_iter().map(|l| l as usize).collect(), logits })
+            }
+            transport::PredictBody::Error(msg) => Err(anyhow!("server rejected the query: {msg}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg32;
+
+    fn toy_model(resident_bits: Option<u8>) -> (ServeModel, Arc<Mat>) {
+        let mut rng = Pcg32::seeded(42);
+        let dims = [6usize, 5, 3];
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        for l in 0..dims.len() - 1 {
+            ws.push(Mat::randn(dims[l + 1], dims[l], 0.5, &mut rng));
+            bs.push(Mat::randn(dims[l + 1], 1, 0.5, &mut rng));
+        }
+        let snap = Snapshot {
+            dims: dims.to_vec(),
+            ws,
+            bs,
+            sha256: "test".to_string(),
+        };
+        let x = Arc::new(Mat::randn(6, 17, 1.0, &mut rng));
+        (ServeModel::from_snapshot(snap, resident_bits, 1).unwrap(), x)
+    }
+
+    #[test]
+    fn gather_then_forward_matches_full_forward_columns() {
+        let (model, x) = toy_model(Option::None);
+        let full = model.forward(&x);
+        let ids = [3u32, 0, 16, 3, 9];
+        let batch = model.forward(&gather_cols(&x, &ids));
+        for (j, &id) in ids.iter().enumerate() {
+            for i in 0..batch.rows {
+                assert_eq!(
+                    batch.row(i)[j],
+                    full.row(i)[id as usize],
+                    "logit ({i}, {j}) diverges from the full forward"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn loopback_query_round_trips_and_coalesces() {
+        let (model, x) = toy_model(Option::None);
+        let expect = model.forward(&x);
+        let mut server = start(
+            model,
+            x.clone(),
+            &ServeOptions { pool: 2, coalesce: 4 },
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let addr = addr.clone();
+                let expect = expect.clone();
+                std::thread::spawn(move || {
+                    let mut client = ServeClient::dial(&addr).unwrap();
+                    let ids: Vec<u32> = (0..5).map(|i| ((t * 5 + i) % 17) as u32).collect();
+                    for _ in 0..3 {
+                        let pred = client.query(&ids).unwrap();
+                        for (j, &id) in ids.iter().enumerate() {
+                            for i in 0..pred.logits.rows {
+                                assert_eq!(pred.logits.row(i)[j], expect.row(i)[id as usize]);
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn out_of_range_node_id_is_rejected_not_served() {
+        let (model, x) = toy_model(Option::None);
+        let mut server =
+            start(model, x, &ServeOptions::default(), "127.0.0.1:0").unwrap();
+        let mut client = ServeClient::dial(&server.addr().to_string()).unwrap();
+        let err = client.query(&[0, 99]).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        // the connection survives a rejected query
+        assert!(client.query(&[0, 1]).is_ok());
+        server.stop();
+    }
+
+    #[test]
+    fn quantized_residency_serves_its_own_forward_bitwise() {
+        let (model, x) = toy_model(Some(8));
+        let expect = model.forward(&gather_cols(&x, &[1, 4, 8]));
+        let mut server =
+            start(model, x, &ServeOptions::default(), "127.0.0.1:0").unwrap();
+        let mut client = ServeClient::dial(&server.addr().to_string()).unwrap();
+        let pred = client.query(&[1, 4, 8]).unwrap();
+        assert_eq!(pred.logits.data, expect.data);
+        assert_eq!(pred.labels, expect.argmax_cols());
+        server.stop();
+    }
+}

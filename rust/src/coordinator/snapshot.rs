@@ -1,0 +1,365 @@
+//! Trained-model persistence (format `pdadmm-snapshot-v1`).
+//!
+//! A snapshot is one binary file holding a trained chain's forward
+//! parameters — the `(W_l, b_l)` pairs that [`crate::coordinator::Trainer::logits`]
+//! feeds forward. It is **not** the transport's `SNAPSHOT` frame: that
+//! frame is a 32-byte per-worker [`CommMeter`](crate::coordinator::channel::CommMeter)
+//! counter report, and no model state ever rides it. Model state lives in
+//! this on-disk format, produced by
+//! [`Trainer::export_snapshot`](crate::coordinator::Trainer::export_snapshot)
+//! and consumed by `repro serve` ([`crate::coordinator::serve`]).
+//!
+//! # Layout (all integers and floats little-endian)
+//!
+//! ```text
+//! offset            bytes        field
+//! 0                 8            magic b"PDADMMS1"
+//! 8                 4            L = layer count (u32, 1 ..= 4096)
+//! 12                4 × (L + 1)  dims d_0 .. d_L (u32, each 1 ..= 2^28;
+//!                                d_0 = augmented input dim, d_L = classes)
+//! header end        ...          for l in 0 .. L:
+//!                                  W_l   d_{l+1} × d_l f32, row-major
+//!                                  b_l   d_{l+1} f32 (the bias column)
+//! file end - 32     32           SHA-256 over every preceding byte
+//! ```
+//!
+//! # Hardening
+//!
+//! The loader mirrors the v2 dataset-manifest rules ([`crate::graph::io`]):
+//! on-disk bytes are untrusted, so every structural lie is an error, never
+//! a panic, and **no allocation is sized from a claimed dimension until
+//! the claim has been cross-checked against the actual file size**. The
+//! fixed-size header is parsed first (its own size is bounded by the
+//! layer-count cap), the exact body size implied by the dims is computed
+//! in checked u64 arithmetic, and a mismatch against `fs::metadata` fails
+//! fast — a truncated file or a header claiming 2^28-wide layers dies
+//! before a single tensor buffer exists. The trailing SHA-256 content pin
+//! is recomputed incrementally while reading and must match bit for bit,
+//! so export → load is guaranteed bitwise-identical (asserted by the
+//! round-trip property tests in `tests/property_frame_codec.rs` and end
+//! to end — train → export → serve — in `tests/integration_serve.rs`).
+
+use crate::tensor::matrix::Mat;
+use crate::util::sha256::{hex, Sha256};
+use anyhow::{anyhow, Context, Result};
+use std::fs;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// The human-readable format tag (file content is pinned by [`MAGIC`]).
+pub const FORMAT_TAG: &str = "pdadmm-snapshot-v1";
+/// First eight bytes of every snapshot file.
+pub const MAGIC: [u8; 8] = *b"PDADMMS1";
+/// Layer-count cap: bounds the header size before the header is trusted.
+pub const MAX_LAYERS: u32 = 4096;
+/// Per-dimension cap (matches the tensor wire format's element budget).
+pub const MAX_DIM: u32 = 1 << 28;
+/// Trailing SHA-256 content pin length.
+const PIN_BYTES: usize = 32;
+
+/// A loaded snapshot: the chain dims plus the weight/bias tensors.
+pub struct Snapshot {
+    /// `d_0 .. d_L` — `ws[l]` is `(dims[l + 1], dims[l])`, `bs[l]` is
+    /// `(dims[l + 1], 1)`.
+    pub dims: Vec<usize>,
+    pub ws: Vec<Mat>,
+    pub bs: Vec<Mat>,
+    /// Hex SHA-256 content pin (the file's trailing 32 bytes).
+    pub sha256: String,
+}
+
+impl Snapshot {
+    pub fn layers(&self) -> usize {
+        self.ws.len()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn classes(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+}
+
+/// Derive and validate the chain dims from a `(ws, bs)` parameter list:
+/// shapes must chain (`ws[l].cols == ws[l-1].rows`), biases must be one
+/// column of matching height, and every dim must fit the format caps.
+fn chain_dims(ws: &[Mat], bs: &[Mat]) -> Result<Vec<usize>> {
+    if ws.is_empty() || ws.len() != bs.len() {
+        return Err(anyhow!(
+            "snapshot needs a non-empty chain with one bias per weight (got {} weights, {} biases)",
+            ws.len(),
+            bs.len()
+        ));
+    }
+    if ws.len() as u64 > MAX_LAYERS as u64 {
+        return Err(anyhow!("{} layers exceeds the {MAX_LAYERS}-layer snapshot cap", ws.len()));
+    }
+    let mut dims = Vec::with_capacity(ws.len() + 1);
+    dims.push(ws[0].cols);
+    for (l, (w, b)) in ws.iter().zip(bs).enumerate() {
+        if w.cols != dims[l] {
+            return Err(anyhow!(
+                "layer {l}: W is {:?} but the previous layer produces dim {}",
+                w.shape(),
+                dims[l]
+            ));
+        }
+        if b.rows != w.rows || b.cols != 1 {
+            return Err(anyhow!(
+                "layer {l}: bias {:?} does not match W {:?} (need one column of {} rows)",
+                b.shape(),
+                w.shape(),
+                w.rows
+            ));
+        }
+        dims.push(w.rows);
+    }
+    for &d in &dims {
+        if d == 0 || d as u64 > MAX_DIM as u64 {
+            return Err(anyhow!("chain dim {d} is outside 1..={MAX_DIM}"));
+        }
+    }
+    Ok(dims)
+}
+
+/// Exact byte count of the tensor body implied by `dims`, in checked
+/// arithmetic — the cross-check the loader runs **before** allocating.
+fn body_bytes(dims: &[usize]) -> Result<u64> {
+    let mut total = 0u64;
+    for l in 0..dims.len() - 1 {
+        let (din, dout) = (dims[l] as u64, dims[l + 1] as u64);
+        let elems = dout
+            .checked_mul(din)
+            .and_then(|we| we.checked_add(dout))
+            .ok_or_else(|| anyhow!("snapshot dims overflow at layer {l}"))?;
+        total = elems
+            .checked_mul(4)
+            .and_then(|b| total.checked_add(b))
+            .ok_or_else(|| anyhow!("snapshot body size overflows at layer {l}"))?;
+    }
+    Ok(total)
+}
+
+/// A writer that feeds every byte through the incremental content hash —
+/// the pin is computed in the same single pass that writes the file.
+struct HashingWriter<W: Write> {
+    inner: W,
+    hash: Sha256,
+}
+
+impl<W: Write> HashingWriter<W> {
+    fn put(&mut self, bytes: &[u8]) -> Result<()> {
+        self.hash.update(bytes);
+        self.inner.write_all(bytes).context("writing snapshot bytes")?;
+        Ok(())
+    }
+}
+
+/// Write `(ws, bs)` to `path` in the `pdadmm-snapshot-v1` format and
+/// return the hex SHA-256 content pin (also stored as the file trailer).
+pub fn export(path: &Path, ws: &[Mat], bs: &[Mat]) -> Result<String> {
+    let dims = chain_dims(ws, bs)?;
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    }
+    let file = fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = HashingWriter { inner: BufWriter::new(file), hash: Sha256::new() };
+    w.put(&MAGIC)?;
+    w.put(&(ws.len() as u32).to_le_bytes())?;
+    for &d in &dims {
+        w.put(&(d as u32).to_le_bytes())?;
+    }
+    let mut buf = Vec::new();
+    let mut put_f32s = |w: &mut HashingWriter<_>, vals: &[f32]| -> Result<()> {
+        buf.clear();
+        buf.reserve(vals.len() * 4);
+        for v in vals {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.put(&buf)
+    };
+    for (wl, bl) in ws.iter().zip(bs) {
+        put_f32s(&mut w, &wl.data)?;
+        put_f32s(&mut w, &bl.data)?;
+    }
+    let pin = w.hash.finalize();
+    w.inner.write_all(&pin).context("writing snapshot content pin")?;
+    w.inner.flush().context("flushing snapshot")?;
+    Ok(hex(&pin))
+}
+
+/// Read exactly `n` bytes, feeding them through the running content hash.
+fn read_hashed(r: &mut impl Read, hash: &mut Sha256, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).context("reading snapshot bytes")?;
+    hash.update(&buf);
+    Ok(buf)
+}
+
+/// Load a `pdadmm-snapshot-v1` file. Structural lies (bad magic, dim or
+/// layer-count caps, a file size that contradicts the claimed dims) and a
+/// content-pin mismatch are all clean errors; the dims/size cross-check
+/// runs before any tensor allocation.
+pub fn load(path: &Path) -> Result<Snapshot> {
+    let meta = fs::metadata(path).with_context(|| format!("reading {}", path.display()))?;
+    let file_len = meta.len();
+    let file = fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut hash = Sha256::new();
+
+    // fixed 12-byte prelude: magic + layer count (header size bound)
+    if file_len < 12 {
+        return Err(anyhow!("{} is {file_len} bytes: too short for a snapshot", path.display()));
+    }
+    let prelude = read_hashed(&mut r, &mut hash, 12)?;
+    if prelude[..8] != MAGIC {
+        return Err(anyhow!("{} is not a {FORMAT_TAG} file (bad magic)", path.display()));
+    }
+    let layers = u32::from_le_bytes([prelude[8], prelude[9], prelude[10], prelude[11]]);
+    if layers == 0 || layers > MAX_LAYERS {
+        return Err(anyhow!("snapshot claims {layers} layers (valid: 1..={MAX_LAYERS})"));
+    }
+
+    // dims, then the body-size cross-check — all before any tensor exists
+    let header_len = 12u64 + 4 * (layers as u64 + 1);
+    if file_len < header_len + PIN_BYTES as u64 {
+        return Err(anyhow!(
+            "snapshot of {file_len} bytes is too short for its {layers}-layer header"
+        ));
+    }
+    let dim_bytes = read_hashed(&mut r, &mut hash, 4 * (layers as usize + 1))?;
+    let mut dims = Vec::with_capacity(layers as usize + 1);
+    for (i, c) in dim_bytes.chunks_exact(4).enumerate() {
+        let d = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        if d == 0 || d > MAX_DIM {
+            return Err(anyhow!("snapshot dim d_{i} = {d} is outside 1..={MAX_DIM}"));
+        }
+        dims.push(d as usize);
+    }
+    let expect = header_len
+        .checked_add(body_bytes(&dims)?)
+        .and_then(|n| n.checked_add(PIN_BYTES as u64))
+        .ok_or_else(|| anyhow!("snapshot size overflows"))?;
+    if expect != file_len {
+        return Err(anyhow!(
+            "snapshot dims claim a {expect}-byte file but {} is {file_len} bytes",
+            path.display()
+        ));
+    }
+
+    // the claims check out against the real size — now read the tensors
+    let to_mat = |rows: usize, cols: usize, bytes: &[u8]| -> Mat {
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Mat::from_vec(rows, cols, data)
+    };
+    let mut ws = Vec::with_capacity(layers as usize);
+    let mut bs = Vec::with_capacity(layers as usize);
+    for l in 0..layers as usize {
+        let (din, dout) = (dims[l], dims[l + 1]);
+        let wb = read_hashed(&mut r, &mut hash, dout * din * 4)?;
+        ws.push(to_mat(dout, din, &wb));
+        let bb = read_hashed(&mut r, &mut hash, dout * 4)?;
+        bs.push(to_mat(dout, 1, &bb));
+    }
+    let mut pin = [0u8; PIN_BYTES];
+    r.read_exact(&mut pin).context("reading snapshot content pin")?;
+    let computed = hash.finalize();
+    if pin != computed {
+        return Err(anyhow!(
+            "snapshot content pin mismatch: file carries {}, content hashes to {}",
+            hex(&pin),
+            hex(&computed)
+        ));
+    }
+    Ok(Snapshot { dims, ws, bs, sha256: hex(&computed) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Pcg32;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("pdadmm-snap-{}-{name}", std::process::id()))
+    }
+
+    fn chain(dims: &[usize], seed: u64) -> (Vec<Mat>, Vec<Mat>) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        for l in 0..dims.len() - 1 {
+            ws.push(Mat::randn(dims[l + 1], dims[l], 1.0, &mut rng));
+            bs.push(Mat::randn(dims[l + 1], 1, 1.0, &mut rng));
+        }
+        (ws, bs)
+    }
+
+    #[test]
+    fn export_load_round_trips_bitwise() {
+        let (ws, bs) = chain(&[7, 5, 4, 3], 11);
+        let path = tmp("roundtrip.snap");
+        let pin = export(&path, &ws, &bs).unwrap();
+        let snap = load(&path).unwrap();
+        assert_eq!(snap.sha256, pin);
+        assert_eq!(snap.dims, vec![7, 5, 4, 3]);
+        for l in 0..ws.len() {
+            assert_eq!(snap.ws[l].data, ws[l].data, "W_{l} changed");
+            assert_eq!(snap.bs[l].data, bs[l].data, "b_{l} changed");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mismatched_chain_shapes_are_rejected_at_export() {
+        let (mut ws, bs) = chain(&[4, 3, 2], 5);
+        ws[1] = Mat::zeros(2, 4); // does not chain with ws[0]: (3, 4)
+        assert!(export(&tmp("badchain.snap"), &ws, &bs).is_err());
+    }
+
+    #[test]
+    fn dim_lying_header_is_rejected_by_the_size_cross_check() {
+        let (ws, bs) = chain(&[4, 3, 2], 7);
+        let path = tmp("dimlie.snap");
+        export(&path, &ws, &bs).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // claim d_1 = 2^28 - a ~256 PiB body — must die on the size check,
+        // long before any allocation could be attempted
+        bytes[16..20].copy_from_slice(&MAX_DIM.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("bytes"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn flipped_payload_byte_fails_the_content_pin() {
+        let (ws, bs) = chain(&[4, 3, 2], 9);
+        let path = tmp("flip.snap");
+        export(&path, &ws, &bs).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("pin"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn every_truncation_errors_cleanly() {
+        let (ws, bs) = chain(&[3, 2, 2], 13);
+        let path = tmp("trunc.snap");
+        export(&path, &ws, &bs).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in 0..bytes.len() {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(load(&path).is_err(), "{cut}-byte prefix must not load");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -914,6 +914,15 @@ impl Trainer {
         let (ws, bs) = state::params_of(&self.layers);
         self.backend.forward(&ws, &bs, &self.ds.x)
     }
+
+    /// Persist the trained chain's forward parameters `(W_l, b_l)` as a
+    /// `pdadmm-snapshot-v1` file ([`crate::coordinator::snapshot`]) and
+    /// return the hex SHA-256 content pin. `repro serve` loads this file
+    /// and reproduces [`Trainer::logits`] bitwise over the wire.
+    pub fn export_snapshot(&self, path: &std::path::Path) -> anyhow::Result<String> {
+        let (ws, bs) = state::params_of(&self.layers);
+        crate::coordinator::snapshot::export(path, &ws, &bs)
+    }
 }
 
 /// Fill an epoch record's measured fields (objective, residual, accuracies)

@@ -59,6 +59,19 @@
 //! `--staleness 0` the dataflow this realizes is exactly the barrier
 //! dataflow, so the records, byte totals and final state are bitwise
 //! identical to the other three schedules.
+//!
+//! # Serving protocol (`repro serve`)
+//!
+//! The inference tier ([`crate::coordinator::serve`]) reuses this frame
+//! codec on its own connections: a client sends a QUERY frame (a batch of
+//! node ids) and the server answers it with one PREDICT frame whose
+//! logits block is the `quant` codec wire format, same as training
+//! tensors. One clarification the frame table below makes explicit:
+//! `frame_kind::SNAPSHOT` is a 32-byte per-worker
+//! [`CommMeter`](crate::coordinator::channel::CommMeter) counter report
+//! and carries **no model state** — trained-model persistence is the
+//! separate on-disk `pdadmm-snapshot-v1` format
+//! ([`crate::coordinator::snapshot`]), not a frame.
 
 use crate::admm::state::LayerState;
 use crate::backend::{ComputeBackend, NativeBackend};
@@ -135,14 +148,29 @@ pub mod frame_kind {
     /// Coordinator → worker (pipelined schedule): a peer failed — abandon
     /// the epoch; any blocked boundary wait must error out.
     pub const ABORT: u8 = 17;
+    /// Client → serve tier: one batched node-classification query
+    /// (`req: u64 LE ‖ count: u32 LE ‖ node id: u32 LE × count`; count is
+    /// capped at [`super::MAX_QUERY_NODES`]).
+    pub const QUERY: u8 = 18;
+    /// Serve tier → client: the answer to one QUERY
+    /// (`req: u64 LE ‖ status: u8`; status 0 continues with
+    /// `count: u32 LE ‖ label: u32 LE × count ‖ Codec::None logits wire`
+    /// — the logits matrix is classes × count, one column per queried
+    /// node — while status 1 continues with a utf-8 error message).
+    pub const PREDICT: u8 = 19;
 }
 
 /// VAR tag: a p tensor (travels to the owner of layer `l-1`).
-pub(crate) const VAR_P: u8 = 0;
+pub const VAR_P: u8 = 0;
 /// VAR tag: a q tensor (travels to the owner of layer `l+1`).
-pub(crate) const VAR_Q: u8 = 1;
+pub const VAR_Q: u8 = 1;
 /// VAR tag: a u tensor (travels with q to the owner of layer `l+1`).
-pub(crate) const VAR_U: u8 = 2;
+pub const VAR_U: u8 = 2;
+
+/// Hard cap on node ids per QUERY frame — bounds the id-vector allocation
+/// the parser makes from an untrusted count field, exactly as
+/// [`MAX_FRAME_BYTES`] bounds the frame reader.
+pub const MAX_QUERY_NODES: u32 = 1 << 20;
 
 /// Write one frame (header + payload) and flush. Errors (no panics) on
 /// payloads above [`MAX_FRAME_BYTES`] — nothing ever goes on the wire
@@ -327,7 +355,7 @@ pub fn listen_accept_one(addr: &str) -> Result<Conn> {
 }
 
 /// Build a VAR frame payload: `var ‖ layer ‖ codec wire bytes`.
-pub(crate) fn var_payload(var: u8, layer: usize, enc: &quant::Encoded) -> Vec<u8> {
+pub fn var_payload(var: u8, layer: usize, enc: &quant::Encoded) -> Vec<u8> {
     let mut out = Vec::with_capacity(5 + enc.wire_bytes() as usize);
     out.push(var);
     out.extend_from_slice(&(layer as u32).to_le_bytes());
@@ -335,8 +363,9 @@ pub(crate) fn var_payload(var: u8, layer: usize, enc: &quant::Encoded) -> Vec<u8
     out
 }
 
-/// Split a VAR frame payload into `(var, layer, wire bytes)`.
-pub(crate) fn parse_var_header(payload: &[u8]) -> Result<(u8, usize, &[u8])> {
+/// Split a VAR frame payload into `(var, layer, wire bytes)`. Never
+/// panics on truncated or corrupt input — the payload is untrusted.
+pub fn parse_var_header(payload: &[u8]) -> Result<(u8, usize, &[u8])> {
     if payload.len() < 5 {
         return Err(anyhow!("VAR frame of {} bytes is too short", payload.len()));
     }
@@ -345,7 +374,7 @@ pub(crate) fn parse_var_header(payload: &[u8]) -> Result<(u8, usize, &[u8])> {
 }
 
 /// Build a BOUNDARY frame payload: `var ‖ layer ‖ epoch tag ‖ codec wire`.
-pub(crate) fn boundary_payload(var: u8, layer: usize, tag: u64, enc: &quant::Encoded) -> Vec<u8> {
+pub fn boundary_payload(var: u8, layer: usize, tag: u64, enc: &quant::Encoded) -> Vec<u8> {
     let mut out = Vec::with_capacity(13 + enc.wire_bytes() as usize);
     out.push(var);
     out.extend_from_slice(&(layer as u32).to_le_bytes());
@@ -355,12 +384,18 @@ pub(crate) fn boundary_payload(var: u8, layer: usize, tag: u64, enc: &quant::Enc
 }
 
 /// Split a BOUNDARY frame payload into `(var, layer, tag, wire bytes)`.
-pub(crate) fn parse_boundary_header(payload: &[u8]) -> Result<(u8, usize, u64, &[u8])> {
+/// Never panics on truncated or corrupt input — the payload is untrusted,
+/// so the length guard comes first and no slice-to-array conversion can
+/// fail after it.
+pub fn parse_boundary_header(payload: &[u8]) -> Result<(u8, usize, u64, &[u8])> {
     if payload.len() < 13 {
         return Err(anyhow!("BOUNDARY frame of {} bytes is too short", payload.len()));
     }
     let layer = u32::from_le_bytes([payload[1], payload[2], payload[3], payload[4]]) as usize;
-    let tag = u64::from_le_bytes(payload[5..13].try_into().unwrap());
+    let tag = u64::from_le_bytes([
+        payload[5], payload[6], payload[7], payload[8], payload[9], payload[10], payload[11],
+        payload[12],
+    ]);
     Ok((payload[0], layer, tag, &payload[13..]))
 }
 
@@ -373,12 +408,147 @@ pub(crate) fn snapshot_payload(s: &CommSnapshot) -> Vec<u8> {
     out
 }
 
-fn parse_snapshot(payload: &[u8]) -> Result<CommSnapshot> {
+/// Parse a SNAPSHOT (CommMeter counters) frame payload. The exact-length
+/// guard runs before any indexing, so the conversions below cannot fail.
+pub fn parse_snapshot(payload: &[u8]) -> Result<CommSnapshot> {
     if payload.len() != 32 {
         return Err(anyhow!("SNAPSHOT frame must be 32 bytes, got {}", payload.len()));
     }
     let g = |i: usize| u64::from_le_bytes(payload[i * 8..i * 8 + 8].try_into().unwrap());
     Ok(CommSnapshot { p_bytes: g(0), q_bytes: g(1), u_bytes: g(2), transfers: g(3) })
+}
+
+/// Build a QUERY frame payload: `req ‖ count ‖ node ids`. Errors if the
+/// batch exceeds [`MAX_QUERY_NODES`] — nothing goes on the wire that
+/// [`parse_query`] would reject.
+pub fn query_payload(req: u64, ids: &[u32]) -> Result<Vec<u8>> {
+    if ids.len() as u64 > MAX_QUERY_NODES as u64 {
+        return Err(anyhow!(
+            "query batch of {} node ids exceeds the {MAX_QUERY_NODES}-id cap",
+            ids.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(12 + ids.len() * 4);
+    out.extend_from_slice(&req.to_le_bytes());
+    out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+    for id in ids {
+        out.extend_from_slice(&id.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// Parse a QUERY frame payload into `(req, node ids)`. The payload is
+/// untrusted: the count field is capped by [`MAX_QUERY_NODES`] and
+/// cross-checked against the actual payload length before the id vector
+/// is allocated; truncation and trailing garbage are clean errors.
+pub fn parse_query(payload: &[u8]) -> Result<(u64, Vec<u32>)> {
+    if payload.len() < 12 {
+        return Err(anyhow!("QUERY frame of {} bytes is too short", payload.len()));
+    }
+    let req = u64::from_le_bytes([
+        payload[0], payload[1], payload[2], payload[3], payload[4], payload[5], payload[6],
+        payload[7],
+    ]);
+    let count = u32::from_le_bytes([payload[8], payload[9], payload[10], payload[11]]);
+    if count > MAX_QUERY_NODES {
+        return Err(anyhow!("QUERY claims {count} node ids (cap {MAX_QUERY_NODES})"));
+    }
+    // count <= 2^20, so this arithmetic cannot overflow usize
+    let expect = 12 + count as usize * 4;
+    if payload.len() != expect {
+        return Err(anyhow!(
+            "QUERY claims {count} node ids ({expect} bytes) but the frame carries {}",
+            payload.len()
+        ));
+    }
+    let ids = payload[12..]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((req, ids))
+}
+
+/// The decoded body of a PREDICT frame.
+pub enum PredictBody {
+    /// `labels[j]` is the argmax class of column `j` of `logits`
+    /// (classes × batch, [`Codec::None`] wire on the frame).
+    Labels { labels: Vec<u32>, logits: Mat },
+    /// The server rejected the query (bad node id, overload, shutdown).
+    Error(String),
+}
+
+/// Build a successful PREDICT frame payload:
+/// `req ‖ status 0 ‖ count ‖ labels ‖ logits wire`.
+pub fn predict_ok_payload(req: u64, labels: &[u32], logits: &quant::Encoded) -> Vec<u8> {
+    let mut out = Vec::with_capacity(13 + labels.len() * 4 + logits.wire_bytes() as usize);
+    out.extend_from_slice(&req.to_le_bytes());
+    out.push(0);
+    out.extend_from_slice(&(labels.len() as u32).to_le_bytes());
+    for l in labels {
+        out.extend_from_slice(&l.to_le_bytes());
+    }
+    logits.write_wire(&mut out);
+    out
+}
+
+/// Build an error PREDICT frame payload: `req ‖ status 1 ‖ utf-8 message`.
+pub fn predict_err_payload(req: u64, msg: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9 + msg.len());
+    out.extend_from_slice(&req.to_le_bytes());
+    out.push(1);
+    out.extend_from_slice(msg.as_bytes());
+    out
+}
+
+/// Parse a PREDICT frame payload into `(req, body)`. Untrusted input:
+/// every length is guarded before indexing, the label count is capped by
+/// [`MAX_QUERY_NODES`] and cross-checked against the remaining bytes, and
+/// the logits wire block must decode to exactly one column per label.
+pub fn parse_predict(payload: &[u8]) -> Result<(u64, PredictBody)> {
+    if payload.len() < 9 {
+        return Err(anyhow!("PREDICT frame of {} bytes is too short", payload.len()));
+    }
+    let req = u64::from_le_bytes([
+        payload[0], payload[1], payload[2], payload[3], payload[4], payload[5], payload[6],
+        payload[7],
+    ]);
+    match payload[8] {
+        1 => Ok((req, PredictBody::Error(String::from_utf8_lossy(&payload[9..]).into_owned()))),
+        0 => {
+            if payload.len() < 13 {
+                return Err(anyhow!(
+                    "PREDICT frame of {} bytes is too short for its label count",
+                    payload.len()
+                ));
+            }
+            let count = u32::from_le_bytes([payload[9], payload[10], payload[11], payload[12]]);
+            if count > MAX_QUERY_NODES {
+                return Err(anyhow!("PREDICT claims {count} labels (cap {MAX_QUERY_NODES})"));
+            }
+            let labels_end = 13 + count as usize * 4;
+            if payload.len() < labels_end {
+                return Err(anyhow!(
+                    "PREDICT claims {count} labels but the frame carries {} bytes",
+                    payload.len()
+                ));
+            }
+            let labels: Vec<u32> = payload[13..labels_end]
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let enc = quant::read_wire(Codec::None, &payload[labels_end..])
+                .context("PREDICT logits wire block")?;
+            let logits = quant::decode(&enc);
+            if logits.cols != count as usize {
+                return Err(anyhow!(
+                    "PREDICT logits have {} columns for {count} labels",
+                    logits.cols
+                ));
+            }
+            Ok((req, PredictBody::Labels { labels, logits }))
+        }
+        s => Err(anyhow!("PREDICT frame has unknown status byte {s}")),
+    }
 }
 
 /// Everything a worker process needs to reconstruct its share of a run:

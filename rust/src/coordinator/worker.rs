@@ -242,6 +242,21 @@ impl WorkerState {
         if layer >= self.layers.len() {
             return Err(anyhow!("boundary tensor for unknown layer {layer}"));
         }
+        // routing legality before any codec/plan lookup: p_1 never travels
+        // (layer 0's input is the fixed X) and the last layer has no q/u,
+        // so a frame claiming either is corrupt — the adaptive plan holds
+        // no bit assignment for those slots and must not be asked for one
+        match var {
+            transport::VAR_P if layer == 0 => {
+                return Err(anyhow!("VAR frame routes p for layer 0, which never travels"));
+            }
+            transport::VAR_Q | transport::VAR_U if layer + 1 >= self.layers.len() => {
+                return Err(anyhow!(
+                    "VAR frame routes q/u for the last layer ({layer}), which do not exist"
+                ));
+            }
+            _ => {}
+        }
         let plan = self.adapt.as_ref().map(|a| &a.plan);
         let (codec, dst) = match var {
             transport::VAR_P => {

@@ -12,12 +12,18 @@
 //!
 //! Every runner writes CSV(s) under `results/` and prints the paper-shaped
 //! summary to stdout. `--quick` shrinks epochs/seeds for smoke runs.
+//!
+//! [`serve_bench`] is the odd one out: it measures this repo's own
+//! serving tier (`repro bench-serve`, writing `BENCH_serve.json`) rather
+//! than a paper artifact, so it dispatches from its own subcommand
+//! instead of an experiment id.
 
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod perf;
+pub mod serve_bench;
 pub mod tables;
 
 use crate::backend::{ComputeBackend, NativeBackend, XlaBackend};

@@ -1,0 +1,253 @@
+//! `repro bench-serve`: the serving-tier load generator.
+//!
+//! # Methodology
+//!
+//! The generator is **open-loop**: query arrival times are drawn up front
+//! from a Poisson process (exponential inter-arrival gaps, deterministic
+//! [`Pcg32`] stream) and each query is sent at its scheduled instant
+//! whether or not earlier queries have been answered. Latency is measured
+//! from the *scheduled arrival* to the PREDICT completion, so server-side
+//! queueing shows up in the percentiles instead of silently throttling
+//! the offered rate — the standard guard against coordinated omission.
+//! Sweeping the offered rate upward until the achieved rate stops
+//! following it maps the saturation knee.
+//!
+//! Results go to `BENCH_serve.json` (schema `pdadmm-bench-serve-v1`) next
+//! to `BENCH_kernels.json`: per-rate offered/achieved qps, completed and
+//! rejected query counts, and p50/p95/p99/max latency in milliseconds,
+//! plus the snapshot pin and host info so runs are comparable.
+
+use crate::coordinator::serve::{self, ServeClient, ServeModel, ServeOptions};
+use crate::tensor::matrix::Mat;
+use crate::tensor::rng::Pcg32;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Load-generator knobs (`repro bench-serve --help`).
+pub struct BenchServeOptions {
+    /// Offered rates to sweep, queries per second.
+    pub rates: Vec<f64>,
+    /// Wall-clock per rate point.
+    pub duration: Duration,
+    /// Node ids per query.
+    pub batch: usize,
+    /// Concurrent client connections the load is spread over.
+    pub connections: usize,
+    /// Seed for arrival times and node-id sampling.
+    pub seed: u64,
+    /// Where `BENCH_serve.json` goes.
+    pub out: PathBuf,
+}
+
+impl Default for BenchServeOptions {
+    fn default() -> Self {
+        BenchServeOptions {
+            rates: vec![250.0, 500.0, 1000.0, 2000.0, 4000.0],
+            duration: Duration::from_millis(2000),
+            batch: 32,
+            connections: 4,
+            seed: 7,
+            out: PathBuf::from("BENCH_serve.json"),
+        }
+    }
+}
+
+impl BenchServeOptions {
+    /// The CI smoke configuration: two short rate points.
+    pub fn quick() -> Self {
+        BenchServeOptions {
+            rates: vec![200.0, 800.0],
+            duration: Duration::from_millis(300),
+            batch: 8,
+            connections: 2,
+            ..Self::default()
+        }
+    }
+}
+
+/// One scheduled query: send offset from the sweep start, plus its ids.
+struct Arrival {
+    offset: Duration,
+    ids: Vec<u32>,
+}
+
+/// Measured outcome of one rate point.
+struct RateSample {
+    offered: f64,
+    achieved: f64,
+    sent: usize,
+    completed: usize,
+    errors: usize,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    max_ms: f64,
+}
+
+impl RateSample {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered_qps", Json::num(self.offered)),
+            ("achieved_qps", Json::num(self.achieved)),
+            ("sent", Json::num(self.sent as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p95_ms", Json::num(self.p95_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("max_ms", Json::num(self.max_ms)),
+        ])
+    }
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * p).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// Draw the Poisson arrival schedule for one rate point and split it
+/// round-robin across the client connections.
+fn draw_arrivals(
+    rate: f64,
+    duration: Duration,
+    batch: usize,
+    connections: usize,
+    nodes: u32,
+    rng: &mut Pcg32,
+) -> Vec<Vec<Arrival>> {
+    let mut per_conn: Vec<Vec<Arrival>> = (0..connections).map(|_| Vec::new()).collect();
+    let mut t = 0.0f64;
+    let mut i = 0usize;
+    loop {
+        // exponential inter-arrival gap; 1 - u > 0 since next_f64 < 1
+        t += -(1.0 - rng.next_f64()).ln() / rate;
+        if t >= duration.as_secs_f64() {
+            break;
+        }
+        let ids: Vec<u32> = (0..batch).map(|_| rng.below(nodes)).collect();
+        per_conn[i % connections].push(Arrival { offset: Duration::from_secs_f64(t), ids });
+        i += 1;
+    }
+    per_conn
+}
+
+/// Drive one offered-rate point against a running server.
+fn run_rate(
+    addr: &str,
+    rate: f64,
+    opts: &BenchServeOptions,
+    nodes: u32,
+    rng: &mut Pcg32,
+) -> Result<RateSample> {
+    let schedule = draw_arrivals(rate, opts.duration, opts.batch, opts.connections, nodes, rng);
+    let sent: usize = schedule.iter().map(|s| s.len()).sum();
+    let latencies: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::with_capacity(sent)));
+    let errors = Arc::new(Mutex::new(0usize));
+    let start = Instant::now();
+    let threads: Vec<_> = schedule
+        .into_iter()
+        .map(|arrivals| {
+            let addr = addr.to_string();
+            let (latencies, errors) = (latencies.clone(), errors.clone());
+            std::thread::spawn(move || -> Result<()> {
+                let mut client = ServeClient::dial(&addr)?;
+                for a in arrivals {
+                    if let Some(wait) = a.offset.checked_sub(start.elapsed()) {
+                        std::thread::sleep(wait);
+                    }
+                    // open-loop latency: from the *scheduled* arrival, so
+                    // send/queue delay counts against the server
+                    match client.query(&a.ids) {
+                        Ok(_) => {
+                            let ms = (start.elapsed() - a.offset).as_secs_f64() * 1e3;
+                            latencies.lock().unwrap().push(ms);
+                        }
+                        Err(_) => *errors.lock().unwrap() += 1,
+                    }
+                }
+                Ok(())
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().map_err(|_| anyhow!("load-generator thread panicked"))??;
+    }
+    let elapsed = start.elapsed().as_secs_f64().max(1e-9);
+    let mut ms = latencies.lock().unwrap().clone();
+    ms.sort_by(|a, b| a.total_cmp(b));
+    let errors = *errors.lock().unwrap();
+    Ok(RateSample {
+        offered: rate,
+        achieved: ms.len() as f64 / elapsed,
+        sent,
+        completed: ms.len(),
+        errors,
+        p50_ms: percentile(&ms, 0.50),
+        p95_ms: percentile(&ms, 0.95),
+        p99_ms: percentile(&ms, 0.99),
+        max_ms: ms.last().copied().unwrap_or(0.0),
+    })
+}
+
+/// Start a loopback server over `(model, x)`, sweep the offered rates,
+/// write `BENCH_serve.json`, and return the snapshot document.
+pub fn run(
+    model: ServeModel,
+    x: Arc<Mat>,
+    serve_opts: &ServeOptions,
+    opts: &BenchServeOptions,
+) -> Result<Json> {
+    if opts.rates.is_empty() || opts.connections == 0 || opts.batch == 0 {
+        return Err(anyhow!("bench-serve needs at least one rate, one connection, batch >= 1"));
+    }
+    let meta = (model.layers(), model.sha256.clone(), model.residency());
+    let nodes = x.cols as u32;
+    let mut server = serve::start(model, x, serve_opts, "127.0.0.1:0")?;
+    let addr = server.addr().to_string();
+    println!(
+        "bench-serve: {} layers, residency {}, {} nodes, batch {}, {} connections, pool {} (coalesce {})",
+        meta.0, meta.2, nodes, opts.batch, opts.connections, serve_opts.pool, serve_opts.coalesce
+    );
+    println!("{:>12} {:>12} {:>10} {:>10} {:>10} {:>10}", "offered qps", "achieved", "p50 ms", "p95 ms", "p99 ms", "errors");
+    let mut rng = Pcg32::seeded(opts.seed);
+    let mut sweep = Vec::new();
+    for &rate in &opts.rates {
+        let s = run_rate(&addr, rate, opts, nodes, &mut rng)?;
+        println!(
+            "{:>12.0} {:>12.1} {:>10.3} {:>10.3} {:>10.3} {:>10}",
+            s.offered, s.achieved, s.p50_ms, s.p95_ms, s.p99_ms, s.errors
+        );
+        sweep.push(s.to_json());
+    }
+    server.stop();
+    let doc = Json::obj(vec![
+        ("schema", Json::str("pdadmm-bench-serve-v1")),
+        ("snapshot_sha256", Json::str(meta.1)),
+        ("layers", Json::num(meta.0 as f64)),
+        ("residency", Json::str(meta.2)),
+        ("nodes", Json::num(nodes as f64)),
+        ("batch", Json::num(opts.batch as f64)),
+        ("connections", Json::num(opts.connections as f64)),
+        ("pool", Json::num(serve_opts.pool as f64)),
+        ("coalesce", Json::num(serve_opts.coalesce as f64)),
+        (
+            "host",
+            Json::obj(vec![
+                ("os", Json::str(std::env::consts::OS)),
+                ("arch", Json::str(std::env::consts::ARCH)),
+                ("cores", Json::num(crate::util::threads::host_cores() as f64)),
+            ]),
+        ),
+        ("sweep", Json::Arr(sweep)),
+    ]);
+    std::fs::write(&opts.out, doc.to_string_pretty() + "\n")
+        .with_context(|| format!("writing {}", opts.out.display()))?;
+    println!("wrote {}", opts.out.display());
+    Ok(doc)
+}

@@ -80,6 +80,23 @@
 //! ([`coordinator::trainer::phase_makespan_ms`] for the barrier schedule,
 //! [`coordinator::trainer::pipeline_makespan_ms`] for the task graph).
 //!
+//! # Serving — the inference path
+//!
+//! Training is not the only runtime. `repro train --snapshot-out` (or
+//! [`coordinator::Trainer::export_snapshot`]) persists the trained chain
+//! as a `pdadmm-snapshot-v1` file ([`coordinator::snapshot`]) — note
+//! this is **not** the transport's `SNAPSHOT` frame, which only carries
+//! per-worker `CommMeter` counters, never model state. `repro serve`
+//! ([`coordinator::serve`]) loads that file once, holds the weights
+//! resident (plain f32 for bitwise parity with
+//! [`coordinator::Trainer::logits`], or quantized via the same
+//! [`coordinator::quant::Codec`] layer and decoded per layer on demand),
+//! and answers batched node-classification queries over the framed
+//! transport's QUERY/PREDICT protocol on a bounded, request-coalescing
+//! worker pool. `repro bench-serve`
+//! ([`experiments::serve_bench`]) is the open-loop Poisson load harness
+//! behind `BENCH_serve.json`.
+//!
 //! # Datasets — synthetic and on-disk
 //!
 //! [`config::DatasetSpec`] is either `Synthetic` (the SBM benchmark

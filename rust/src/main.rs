@@ -1,7 +1,9 @@
 //! `repro` — the pdADMM-G launcher (L3 entrypoint).
 //!
-//! Subcommands: `train` (one pdADMM-G/-Q run), `baseline` (one GD-family
-//! run), `exp` (regenerate a paper table/figure), `datasets`, `artifacts`.
+//! Subcommands: `train` (one pdADMM-G/-Q run), `serve` (inference tier
+//! over a trained snapshot), `bench-serve` (serving load generator),
+//! `baseline` (one GD-family run), `exp` (regenerate a paper
+//! table/figure), `datasets`, `artifacts`.
 
 use anyhow::Result;
 use pdadmm_g::backend;
@@ -9,8 +11,8 @@ use pdadmm_g::cli::args::{Args, USAGE};
 use pdadmm_g::config::{BackendKind, QuantMode, RootConfig, ScheduleMode, TrainConfig};
 use pdadmm_g::coordinator::greedy::train_greedy;
 use pdadmm_g::coordinator::transport::{self, SocketTransport};
-use pdadmm_g::coordinator::{worker, Trainer};
-use pdadmm_g::experiments::{self, ExpOptions};
+use pdadmm_g::coordinator::{serve, snapshot, worker, Trainer};
+use pdadmm_g::experiments::{self, serve_bench, ExpOptions};
 use pdadmm_g::graph::datasets;
 use pdadmm_g::optim::{train_baseline, BaselineConfig, Optimizer, OptimizerKind};
 use pdadmm_g::runtime::XlaRuntime;
@@ -43,6 +45,8 @@ fn run(argv: &[String]) -> Result<()> {
     let cfg = RootConfig::load_default()?;
     match args.subcommand.as_str() {
         "train" => cmd_train(&cfg, &args),
+        "serve" => cmd_serve(&cfg, &args),
+        "bench-serve" => cmd_bench_serve(&cfg, &args),
         "baseline" => cmd_baseline(&cfg, &args),
         "exp" => cmd_exp(&cfg, &args),
         "datasets" => cmd_datasets(&cfg),
@@ -277,8 +281,18 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
             "pdADMM-G-Q".into()
         };
         log.dataset = dataset.clone();
+        if let Some(p) = args.flags.get("snapshot-out") {
+            let sha = trainer.export_snapshot(std::path::Path::new(p))?;
+            println!("wrote snapshot {p} (sha256 {sha})");
+        }
         log
     } else {
+        if args.flags.get("snapshot-out").is_some() {
+            return Err(anyhow::anyhow!(
+                "--snapshot-out is not supported with --greedy (the greedy \
+                 protocol discards its chain after logging)"
+            ));
+        }
         train_greedy(backend, ds, tc)
     };
     let (best_val, test) = log.test_at_best_val();
@@ -343,6 +357,12 @@ fn train_distributed(
         }
         log.push(rec);
     }
+    if let Some(p) = args.flags.get("snapshot-out") {
+        let layers = tr.synced_layers()?;
+        let (ws, bs) = pdadmm_g::admm::state::params_of(layers);
+        let sha = snapshot::export(std::path::Path::new(p), &ws, &bs)?;
+        println!("wrote snapshot {p} (sha256 {sha})");
+    }
     tr.shutdown()?;
     let (best_val, test) = log.test_at_best_val();
     println!(
@@ -353,6 +373,98 @@ fn train_distributed(
         log.write_csv(std::path::Path::new(out))?;
         println!("wrote {out}");
     }
+    Ok(())
+}
+
+/// Shared by `serve` and `bench-serve`: load the `--snapshot` file and
+/// the dataset it serves over, cross-checking the chain's outer dims
+/// against the dataset's augmented input dim and class count before
+/// anything listens. Returns the resident model, the feature matrix, and
+/// the dataset name.
+fn load_serve_model(
+    cfg: &RootConfig,
+    args: &Args,
+) -> Result<(serve::ServeModel, std::sync::Arc<pdadmm_g::tensor::matrix::Mat>, String)> {
+    let path = args
+        .flags
+        .get("snapshot")
+        .ok_or_else(|| anyhow::anyhow!("--snapshot <file> is required"))?;
+    let snap = snapshot::load(std::path::Path::new(path))?;
+    let (spec, from_registry) = resolve_dataset_spec(cfg, args)?;
+    let name = spec.name().to_string();
+    let ds = if from_registry {
+        datasets::load(cfg, &name)?
+    } else {
+        datasets::build(&spec, cfg.hops, pdadmm_g::tensor::ops::default_threads())?
+    };
+    if snap.input_dim() != ds.input_dim || snap.classes() != ds.classes {
+        return Err(anyhow::anyhow!(
+            "snapshot {path} serves a {}-dim -> {}-class chain, but dataset {name} \
+             has augmented input dim {} and {} classes",
+            snap.input_dim(),
+            snap.classes(),
+            ds.input_dim,
+            ds.classes
+        ));
+    }
+    let resident_bits = args.flags.get_parse::<u8>("resident-bits")?;
+    let threads = args.flags.get_or("forward-threads", 1usize)?;
+    let model = serve::ServeModel::from_snapshot(snap, resident_bits, threads)?;
+    Ok((model, ds.x.clone(), name))
+}
+
+fn serve_options(args: &Args) -> Result<serve::ServeOptions> {
+    let defaults = serve::ServeOptions::default();
+    Ok(serve::ServeOptions {
+        pool: args.flags.get_or("pool", defaults.pool)?,
+        coalesce: args.flags.get_or("coalesce", defaults.coalesce)?,
+    })
+}
+
+fn cmd_serve(cfg: &RootConfig, args: &Args) -> Result<()> {
+    let (model, x, dataset) = load_serve_model(cfg, args)?;
+    let opts = serve_options(args)?;
+    let listen = args.flags.get("listen").unwrap_or("127.0.0.1:0");
+    let (layers, residency, sha) = (model.layers(), model.residency(), model.sha256.clone());
+    let nodes = x.cols;
+    let server = serve::start(model, x, &opts, listen)?;
+    println!(
+        "serving {dataset} ({nodes} nodes) on {}: {layers} layers, residency {residency}, \
+         pool {} (coalesce {})",
+        server.addr(),
+        opts.pool,
+        opts.coalesce
+    );
+    println!("snapshot sha256 {sha}; Ctrl-C to stop");
+    server.wait();
+    Ok(())
+}
+
+fn cmd_bench_serve(cfg: &RootConfig, args: &Args) -> Result<()> {
+    let (model, x, _) = load_serve_model(cfg, args)?;
+    let serve_opts = serve_options(args)?;
+    let mut opts = if args.flags.has("quick") {
+        serve_bench::BenchServeOptions::quick()
+    } else {
+        serve_bench::BenchServeOptions::default()
+    };
+    if let Some(rates) = args.flags.get("rates") {
+        opts.rates = rates
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| anyhow::anyhow!("--rates: {e}"))?;
+    }
+    if let Some(ms) = args.flags.get_parse::<u64>("duration-ms")? {
+        opts.duration = std::time::Duration::from_millis(ms);
+    }
+    opts.batch = args.flags.get_or("batch", opts.batch)?;
+    opts.connections = args.flags.get_or("connections", opts.connections)?;
+    opts.seed = args.flags.get_or("seed", opts.seed)?;
+    if let Some(out) = args.flags.get("out") {
+        opts.out = std::path::PathBuf::from(out);
+    }
+    serve_bench::run(model, x, &serve_opts, &opts)?;
     Ok(())
 }
 

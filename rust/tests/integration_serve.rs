@@ -1,0 +1,146 @@
+//! End-to-end serving acceptance: train a tiny SBM for two epochs, export
+//! the chain as a `pdadmm-snapshot-v1` file, load it back, serve it over a
+//! real loopback TCP socket, and require the served labels and logits to
+//! be **bitwise** identical to [`Trainer::logits`] on the same chain —
+//! the acceptance bar for the serving tier. A quick `bench-serve` sweep
+//! then must write a parseable, internally consistent `BENCH_serve.json`.
+
+use pdadmm_g::backend::NativeBackend;
+use pdadmm_g::config::{DatasetSpec, SyntheticSpec, TrainConfig};
+use pdadmm_g::coordinator::serve::{self, ServeClient, ServeModel, ServeOptions};
+use pdadmm_g::coordinator::{snapshot, Trainer};
+use pdadmm_g::experiments::serve_bench::{self, BenchServeOptions};
+use pdadmm_g::graph::datasets;
+use pdadmm_g::util::json;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+const HOPS: usize = 2;
+
+fn tiny_spec() -> DatasetSpec {
+    DatasetSpec::Synthetic(SyntheticSpec {
+        name: "tiny-serve".into(),
+        nodes: 80,
+        avg_degree: 6.0,
+        classes: 3,
+        feat_dim: 8,
+        train: 40,
+        val: 20,
+        test: 20,
+        homophily_ratio: 8.0,
+        feature_signal: 1.5,
+        label_noise: 0.0,
+        seed: 17,
+    })
+}
+
+/// Train a 3-layer chain for `epochs` and export it; returns the trainer
+/// (for the reference logits), the augmented features and the snapshot
+/// file path.
+fn train_and_export(epochs: usize, tag: &str) -> (Trainer, Arc<pdadmm_g::Mat>, PathBuf) {
+    let ds = datasets::build(&tiny_spec(), HOPS, 1).expect("synthetic build");
+    let x = ds.x.clone();
+    let mut tc = TrainConfig::new("tiny-serve", 10, 3, epochs);
+    tc.nu = 0.01;
+    tc.rho = 1.0;
+    tc.seed = 5;
+    let mut trainer = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc);
+    for _ in 0..epochs {
+        trainer.run_epoch();
+    }
+    let path = std::env::temp_dir()
+        .join(format!("pdadmm-serve-it-{}-{tag}.snap", std::process::id()));
+    trainer.export_snapshot(&path).expect("snapshot export");
+    (trainer, x, path)
+}
+
+#[test]
+fn loopback_serving_matches_trainer_logits_bitwise() {
+    let (trainer, x, path) = train_and_export(2, "parity");
+    let expect = trainer.logits();
+    let want_labels = expect.argmax_cols();
+
+    let snap = snapshot::load(&path).expect("snapshot load");
+    let _ = std::fs::remove_file(&path);
+    let classes = snap.classes();
+    assert_eq!(snap.input_dim(), x.rows, "snapshot/dataset input dim");
+
+    let model = ServeModel::from_snapshot(snap, None, 1).expect("resident model");
+    let mut server = serve::start(
+        model,
+        x.clone(),
+        &ServeOptions { pool: 2, coalesce: 4 },
+        "127.0.0.1:0",
+    )
+    .expect("serve start");
+    let mut client = ServeClient::dial(&server.addr().to_string()).expect("dial");
+
+    // batch compositions: singleton, a prefix, repeats + extremes, and the
+    // whole graph in one query — every one must be bitwise identical to
+    // the trainer's full-graph forward
+    let batches: Vec<Vec<u32>> = vec![
+        vec![0],
+        (0..10).collect(),
+        vec![7, 7, 3, 79, 0, 41],
+        (0..x.cols as u32).collect(),
+    ];
+    for ids in &batches {
+        let pred = client.query(ids).expect("query");
+        for (j, &id) in ids.iter().enumerate() {
+            assert_eq!(pred.labels[j], want_labels[id as usize], "label for node {id}");
+            for i in 0..classes {
+                assert_eq!(
+                    pred.logits.row(i)[j].to_bits(),
+                    expect.row(i)[id as usize].to_bits(),
+                    "logit ({i}, node {id}) is not bitwise identical"
+                );
+            }
+        }
+    }
+    server.stop();
+}
+
+#[test]
+fn bench_serve_quick_writes_parseable_consistent_json() {
+    let (_trainer, x, path) = train_and_export(1, "bench");
+    let snap = snapshot::load(&path).expect("snapshot load");
+    let _ = std::fs::remove_file(&path);
+    let model = ServeModel::from_snapshot(snap, None, 1).expect("resident model");
+
+    let out = std::env::temp_dir()
+        .join(format!("pdadmm-bench-serve-{}.json", std::process::id()));
+    let mut bo = BenchServeOptions::quick();
+    bo.rates = vec![150.0, 400.0];
+    bo.duration = Duration::from_millis(200);
+    bo.out = out.clone();
+    let doc = serve_bench::run(model, x, &ServeOptions::default(), &bo).expect("bench-serve");
+
+    // the returned document and the file on disk agree on the schema
+    assert_eq!(doc.req("schema").unwrap().as_str(), Some("pdadmm-bench-serve-v1"));
+    let parsed = json::parse_file(&out).expect("BENCH_serve.json must parse");
+    let _ = std::fs::remove_file(&out);
+    assert_eq!(parsed.req("schema").unwrap().as_str(), Some("pdadmm-bench-serve-v1"));
+    assert!(parsed.req("snapshot_sha256").unwrap().as_str().unwrap().len() == 64);
+    assert_eq!(parsed.req("residency").unwrap().as_str(), Some("f32"));
+
+    let sweep = parsed.req("sweep").unwrap().as_arr().expect("sweep array");
+    assert_eq!(sweep.len(), bo.rates.len(), "one sample per offered rate");
+    for s in sweep {
+        let sent = s.req("sent").unwrap().as_f64().unwrap();
+        let completed = s.req("completed").unwrap().as_f64().unwrap();
+        let errors = s.req("errors").unwrap().as_f64().unwrap();
+        // every scheduled arrival either completed or errored
+        assert_eq!(completed + errors, sent, "arrival accounting must balance");
+        assert!(sent >= 1.0, "a 150+ qps point over 200ms must schedule arrivals");
+        let p50 = s.req("p50_ms").unwrap().as_f64().unwrap();
+        let p95 = s.req("p95_ms").unwrap().as_f64().unwrap();
+        let p99 = s.req("p99_ms").unwrap().as_f64().unwrap();
+        let max = s.req("max_ms").unwrap().as_f64().unwrap();
+        assert!(p50.is_finite() && p95.is_finite() && p99.is_finite() && max.is_finite());
+        assert!(
+            p50 <= p95 && p95 <= p99 && p99 <= max,
+            "percentiles must be monotone: {p50} {p95} {p99} {max}"
+        );
+    }
+}

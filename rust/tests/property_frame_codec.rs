@@ -3,14 +3,28 @@
 //! round-trips for arbitrary payload sizes, and clean `Err`s — no panics,
 //! no partial successes — on truncated streams, oversized lengths and
 //! garbage headers.
+//!
+//! The second half sweeps every *typed* payload parser the runtime feeds
+//! untrusted bytes into — VAR, BOUNDARY, STATS, PLAN, SNAPSHOT, QUERY and
+//! PREDICT — with exhaustive prefix truncations and single-byte flips, and
+//! round-trips the on-disk `pdadmm-snapshot-v1` model format.
 
+use pdadmm_g::admm::state;
+use pdadmm_g::coordinator::adapt::{AdaptController, QuantPlan};
 use pdadmm_g::coordinator::quant::{self, Codec};
-use pdadmm_g::coordinator::transport::{read_frame, write_frame, FRAME_MAGIC, MAX_FRAME_BYTES};
+use pdadmm_g::coordinator::snapshot;
+use pdadmm_g::coordinator::transport::{
+    boundary_payload, parse_boundary_header, parse_predict, parse_query, parse_snapshot,
+    parse_var_header, predict_err_payload, predict_ok_payload, query_payload, read_frame,
+    var_payload, write_frame, PredictBody, FRAME_MAGIC, MAX_FRAME_BYTES, MAX_QUERY_NODES, VAR_P,
+    VAR_Q,
+};
 use pdadmm_g::prop_assert;
 use pdadmm_g::tensor::matrix::Mat;
 use pdadmm_g::tensor::rng::Pcg32;
 use pdadmm_g::util::prop::Prop;
 use std::io::Cursor;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 fn random_payload(rng: &mut Pcg32, len: usize) -> Vec<u8> {
     (0..len).map(|_| rng.below(256) as u8).collect()
@@ -166,4 +180,302 @@ fn tensor_wire_codec_mismatches_are_rejected() {
     let wireb = quant::encode(Codec::BlockUniform { bits: 4, block: 16 }, &m).to_wire();
     assert!(quant::read_wire(Codec::BlockUniform { bits: 4, block: 8 }, &wireb).is_err());
     assert!(quant::read_wire(Codec::BlockUniform { bits: 2, block: 16 }, &wireb).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Typed payload parsers. Everything below exercises the per-kind payload
+// formats a hostile or truncated peer can feed the runtime; every parser
+// must return a clean `Err` — never panic, never over-allocate — and the
+// full payload must round-trip bitwise.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_var_and_boundary_payload_truncations_error_cleanly() {
+    // Parsing a VAR/BOUNDARY frame is header split + codec wire decode;
+    // a strict prefix must fail one of the two stages, never panic.
+    let parse_var_full = |bytes: &[u8]| -> Result<Mat, String> {
+        let (_, _, wire) = parse_var_header(bytes).map_err(|e| format!("{e:#}"))?;
+        let enc = quant::read_wire(Codec::None, wire).map_err(|e| format!("{e:#}"))?;
+        Ok(quant::decode(&enc))
+    };
+    let parse_boundary_full = |bytes: &[u8]| -> Result<Mat, String> {
+        let (_, _, _, wire) = parse_boundary_header(bytes).map_err(|e| format!("{e:#}"))?;
+        let enc = quant::read_wire(Codec::None, wire).map_err(|e| format!("{e:#}"))?;
+        Ok(quant::decode(&enc))
+    };
+    Prop::new(10, 0xbdf1).check("VAR/BOUNDARY prefixes never parse", |rng, size| {
+        let m = Mat::randn(1 + size % 5, 1 + rng.below(12) as usize, 1.0, rng);
+        let enc = quant::encode(Codec::None, &m);
+        let v = var_payload(VAR_P, 1 + size % 7, &enc);
+        let full = parse_var_full(&v)?;
+        prop_assert!(full.data == m.data, "VAR round-trip changed the tensor");
+        for cut in 0..v.len() {
+            prop_assert!(
+                parse_var_full(&v[..cut]).is_err(),
+                "VAR prefix of {cut}/{} bytes must not parse",
+                v.len()
+            );
+        }
+        let b = boundary_payload(VAR_Q, size % 7, rng.below(1000) as u64, &enc);
+        let fullb = parse_boundary_full(&b)?;
+        prop_assert!(fullb.data == m.data, "BOUNDARY round-trip changed the tensor");
+        for cut in 0..b.len() {
+            prop_assert!(
+                parse_boundary_full(&b[..cut]).is_err(),
+                "BOUNDARY prefix of {cut}/{} bytes must not parse",
+                b.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_snapshot_counter_frame_is_exact_length_only() {
+    // The SNAPSHOT frame is four u64 counters — any 32 bytes decode, and
+    // nothing shorter or longer does.
+    Prop::new(8, 0x5a4).check("SNAPSHOT parses at exactly 32 bytes", |rng, _| {
+        let payload = random_payload(rng, 32);
+        let snap = parse_snapshot(&payload).map_err(|e| format!("{e:#}"))?;
+        let p = u64::from_le_bytes(payload[..8].try_into().unwrap());
+        prop_assert!(snap.p_bytes == p, "p_bytes decoded {} from field {p}", snap.p_bytes);
+        for cut in 0..32 {
+            prop_assert!(
+                parse_snapshot(&payload[..cut]).is_err(),
+                "{cut}-byte SNAPSHOT must not parse"
+            );
+        }
+        let mut long = payload.clone();
+        long.push(0);
+        prop_assert!(parse_snapshot(&long).is_err(), "33-byte SNAPSHOT must not parse");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_query_payload_rejects_truncation_and_forged_counts() {
+    Prop::new(12, 0x9e1).check("QUERY length/count cross-check", |rng, size| {
+        let ids: Vec<u32> = (0..1 + size % 9).map(|_| rng.below(1 << 20)).collect();
+        let req = 0x1000 + size as u64;
+        let q = query_payload(req, &ids).map_err(|e| format!("{e:#}"))?;
+        let (r2, ids2) = parse_query(&q).map_err(|e| format!("{e:#}"))?;
+        prop_assert!(r2 == req && ids2 == ids, "QUERY round-trip mismatch");
+        for cut in 0..q.len() {
+            prop_assert!(
+                parse_query(&q[..cut]).is_err(),
+                "QUERY prefix of {cut}/{} bytes must not parse",
+                q.len()
+            );
+        }
+        let mut long = q.clone();
+        long.push(0);
+        prop_assert!(parse_query(&long).is_err(), "trailing byte must be rejected");
+        // a count header claiming one more id than the frame carries
+        let mut forged = q.clone();
+        forged[8..12].copy_from_slice(&(ids.len() as u32 + 1).to_le_bytes());
+        prop_assert!(parse_query(&forged).is_err(), "count/length mismatch must be rejected");
+        // a count over the cap dies before the id vector would be sized
+        let mut over = q.clone();
+        over[8..12].copy_from_slice(&(MAX_QUERY_NODES + 1).to_le_bytes());
+        let err = format!("{:#}", parse_query(&over).unwrap_err());
+        prop_assert!(err.contains("cap"), "cap rejection expected, got: {err}");
+        Ok(())
+    });
+}
+
+#[test]
+fn query_payload_refuses_batches_over_the_wire_cap() {
+    let ids = vec![0u32; MAX_QUERY_NODES as usize + 1];
+    assert!(query_payload(1, &ids).is_err(), "oversized batch must not be encodable");
+}
+
+#[test]
+fn prop_predict_payload_truncations_error_and_flips_never_panic() {
+    Prop::new(8, 0xbead).check("PREDICT untrusted-byte sweep", |rng, size| {
+        let classes = 2 + size % 4;
+        let batch = 1 + rng.below(5) as usize;
+        let logits = Mat::randn(classes, batch, 1.0, rng);
+        let labels: Vec<u32> = logits.argmax_cols().iter().map(|&c| c as u32).collect();
+        let enc = quant::encode(Codec::None, &logits);
+        let ok = predict_ok_payload(7, &labels, &enc);
+        match parse_predict(&ok).map_err(|e| format!("{e:#}"))? {
+            (7, PredictBody::Labels { labels: l2, logits: m2 }) => {
+                prop_assert!(l2 == labels, "labels changed on the wire");
+                prop_assert!(m2.data == logits.data, "logits changed on the wire");
+            }
+            _ => return Err("PREDICT ok payload parsed to the wrong body".into()),
+        }
+        for cut in 0..ok.len() {
+            prop_assert!(
+                parse_predict(&ok[..cut]).is_err(),
+                "PREDICT prefix of {cut}/{} bytes must not parse",
+                ok.len()
+            );
+        }
+        // single-byte corruption anywhere: Ok or clean Err, never a panic
+        for i in 0..ok.len() {
+            let mut bad = ok.clone();
+            bad[i] ^= 0x40;
+            let r = catch_unwind(AssertUnwindSafe(|| drop(parse_predict(&bad))));
+            prop_assert!(r.is_ok(), "parse_predict panicked with byte {i} flipped");
+        }
+        // the error body round-trips, and unknown status bytes are rejected
+        let e = predict_err_payload(9, "node id out of range");
+        match parse_predict(&e).map_err(|e| format!("{e:#}"))? {
+            (9, PredictBody::Error(msg)) => {
+                prop_assert!(msg == "node id out of range", "error message changed: {msg:?}");
+            }
+            _ => return Err("PREDICT err payload parsed to the wrong body".into()),
+        }
+        for cut in 0..9 {
+            prop_assert!(
+                parse_predict(&e[..cut]).is_err(),
+                "PREDICT err prefix of {cut} bytes must not parse"
+            );
+        }
+        let mut unk = e.clone();
+        unk[8] = 2;
+        prop_assert!(parse_predict(&unk).is_err(), "unknown status byte must be rejected");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_payload_rejects_truncation_and_invalid_widths() {
+    Prop::new(10, 0x91a7).check("PLAN untrusted-byte sweep", |rng, size| {
+        let layers = 2 + size % 5;
+        let bits = 1 + rng.below(16) as u8;
+        let plan = QuantPlan::uniform(layers, bits);
+        let payload = plan.to_payload();
+        let back = QuantPlan::from_payload(&payload).map_err(|e| format!("{e:#}"))?;
+        prop_assert!(back == plan, "PLAN round-trip changed the plan");
+        for cut in 0..payload.len() {
+            prop_assert!(
+                QuantPlan::from_payload(&payload[..cut]).is_err(),
+                "PLAN prefix of {cut}/{} bytes must not parse",
+                payload.len()
+            );
+        }
+        let mut long = payload.clone();
+        long.push(4);
+        prop_assert!(QuantPlan::from_payload(&long).is_err(), "trailing byte must be rejected");
+        // active slots must hold 1..=16; inactive slots must hold exactly 0
+        let mut zeroed = payload.clone();
+        zeroed[5 + 1] = 0; // p_1 — active
+        prop_assert!(QuantPlan::from_payload(&zeroed).is_err(), "zero active width must fail");
+        let mut wide = payload.clone();
+        wide[5 + 1] = 17;
+        prop_assert!(QuantPlan::from_payload(&wide).is_err(), "17-bit width must fail");
+        let mut inactive = payload.clone();
+        inactive[5] = 3; // p_0 never travels
+        prop_assert!(QuantPlan::from_payload(&inactive).is_err(), "nonzero p_0 must fail");
+        let mut vers = payload.clone();
+        vers[0] = 2;
+        prop_assert!(QuantPlan::from_payload(&vers).is_err(), "unknown version must fail");
+        Ok(())
+    });
+}
+
+#[test]
+fn stats_payload_truncation_errors_and_corruption_never_panics() {
+    let mut rng = Pcg32::seeded(0x57a75);
+    let dims = [4usize, 5, 3];
+    let x = Mat::randn(4, 6, 1.0, &mut rng);
+    let layers = state::init_chain(&dims, &x, 11, 0.1, 1);
+    let fresh = || AdaptController::new(&layers, 4.0, 5).expect("controller");
+
+    // one hand-built entry for the P boundary at layer 1 — the only P
+    // boundary of a two-layer chain, so the full payload must absorb
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&1u32.to_le_bytes()); // count
+    payload.push(0); // BoundaryKind::P wire tag
+    payload.extend_from_slice(&1u32.to_le_bytes()); // layer
+    payload.extend_from_slice(&30u64.to_le_bytes()); // n
+    payload.extend_from_slice(&(-1.0f32).to_le_bytes()); // lo
+    payload.extend_from_slice(&1.0f32.to_le_bytes()); // hi
+    payload.extend_from_slice(&0.1f64.to_le_bytes()); // mean
+    payload.extend_from_slice(&0.5f64.to_le_bytes()); // var
+    payload.extend_from_slice(&0.25f64.to_le_bytes()); // residual
+    fresh().absorb_stats_payload(&payload).expect("valid STATS payload must absorb");
+
+    for cut in 0..payload.len() {
+        assert!(
+            fresh().absorb_stats_payload(&payload[..cut]).is_err(),
+            "STATS prefix of {cut} bytes must not absorb"
+        );
+    }
+    let mut long = payload.clone();
+    long.push(0);
+    assert!(fresh().absorb_stats_payload(&long).is_err(), "trailing byte must be rejected");
+    // a boundary that does not exist in this chain (no q_1 at depth 2)
+    let mut bad = payload.clone();
+    bad[4] = 1; // BoundaryKind::Q wire tag, layer stays 1
+    assert!(fresh().absorb_stats_payload(&bad).is_err(), "out-of-range boundary must fail");
+    // arbitrary single-byte corruption: Ok or clean Err, never a panic
+    for i in 0..payload.len() {
+        let mut flip = payload.clone();
+        flip[i] ^= 0xFF;
+        let r = catch_unwind(AssertUnwindSafe(|| drop(fresh().absorb_stats_payload(&flip))));
+        assert!(r.is_ok(), "absorb_stats_payload panicked with byte {i} flipped");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The on-disk `pdadmm-snapshot-v1` model format (coordinator::snapshot):
+// export → load is bitwise-identical, and corrupted or dim-lying files are
+// rejected before any tensor allocation.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_model_snapshot_round_trips_bitwise() {
+    Prop::new(6, 0x5a9b1).check("snapshot export|load identity", |rng, size| {
+        let dims = vec![1 + size % 6, 1 + rng.below(7) as usize, 2 + rng.below(4) as usize];
+        let ws: Vec<Mat> = (0..2).map(|l| Mat::randn(dims[l + 1], dims[l], 0.5, rng)).collect();
+        let bs: Vec<Mat> = (0..2).map(|l| Mat::randn(dims[l + 1], 1, 0.5, rng)).collect();
+        let path = std::env::temp_dir()
+            .join(format!("pdadmm-prop-snap-{}-{size}", std::process::id()));
+        let pin = snapshot::export(&path, &ws, &bs).map_err(|e| format!("{e:#}"))?;
+        let pin2 = snapshot::export(&path, &ws, &bs).map_err(|e| format!("{e:#}"))?;
+        prop_assert!(pin == pin2, "export is not deterministic");
+        let loaded = snapshot::load(&path).map_err(|e| format!("{e:#}"))?;
+        let _ = std::fs::remove_file(&path);
+        prop_assert!(loaded.sha256 == pin, "loader recomputed a different content pin");
+        prop_assert!(loaded.dims == dims, "dims changed across the round trip");
+        for l in 0..2 {
+            prop_assert!(
+                loaded.ws[l].data == ws[l].data && loaded.bs[l].data == bs[l].data,
+                "layer {l} tensors are not bitwise identical"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn model_snapshot_corruption_is_rejected_before_allocation() {
+    let mut rng = Pcg32::seeded(3);
+    let ws = vec![Mat::randn(5, 4, 0.5, &mut rng), Mat::randn(3, 5, 0.5, &mut rng)];
+    let bs = vec![Mat::randn(5, 1, 0.5, &mut rng), Mat::randn(3, 1, 0.5, &mut rng)];
+    let path =
+        std::env::temp_dir().join(format!("pdadmm-prop-snapbad-{}", std::process::id()));
+    snapshot::export(&path, &ws, &bs).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // a header that lies about d_0: the size cross-check fires before any
+    // tensor is sized from the claim
+    let mut lying = bytes.clone();
+    lying[12..16].copy_from_slice(&(1u32 << 27).to_le_bytes());
+    std::fs::write(&path, &lying).unwrap();
+    assert!(snapshot::load(&path).is_err(), "dim-lying header must not load");
+    // strict prefixes: inside the magic, the layer count, the dims, the
+    // tensors and the trailing pin
+    for cut in [0, 7, 8, 11, 12, 23, bytes.len() / 2, bytes.len() - 1] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(snapshot::load(&path).is_err(), "{cut}-byte snapshot prefix must not load");
+    }
+    // one flipped tensor byte fails the sha256 content pin
+    let mut flipped = bytes.clone();
+    flipped[34] ^= 0x01; // inside W_0
+    std::fs::write(&path, &flipped).unwrap();
+    assert!(snapshot::load(&path).is_err(), "flipped payload byte must fail the pin");
+    let _ = std::fs::remove_file(&path);
 }
