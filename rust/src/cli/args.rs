@@ -89,6 +89,10 @@ USAGE:
                 [--assign round-robin|block|lpt]
                 [--distributed N]           # spawn N localhost worker processes
                 [--workers-at a:p,unix:/s]  # drive pre-started workers instead
+                [--peer-timeout SECS]       # liveness deadline; default 30
+                [--checkpoint-dir DIR]      # epoch-boundary checkpoints
+                [--checkpoint-interval N]   # cadence; default 1 with a dir
+                [--resume DIR]              # restart from a checkpoint
                 [--greedy 2,5,10] [--out results/run.csv]
                 [--snapshot-out model.snap]  # persist the trained chain
   repro worker  --listen  <host:port|unix:path>   # serve one coordinator
@@ -136,6 +140,16 @@ finishes. --staleness N (default 0) bounds how many epochs a consumed
 neighbor boundary may lag; 0 is bitwise-identical to the barrier
 schedules, N >= 1 trades exactness for less waiting. See README
 \"Pipelined schedule\".
+
+--checkpoint-dir makes the coordinator write a `pdadmm-checkpoint-v1`
+directory (chain + ADMM state + run manifest) every --checkpoint-interval
+epochs; --resume restarts a run from one after validating it against the
+run's config and dataset. In --distributed mode a worker lost mid-run is
+respawned and the run silently recovers from the last checkpoint — the
+resumed trace is bitwise the uninterrupted one. --peer-timeout SECS
+(default 30, max 3600) bounds how long any peer may stay silent before it
+is declared dead; it must exceed the slowest single-phase compute. See
+README \"Fault tolerance\".
 
 --quant adaptive gives every p/q boundary its own 1..=16-bit width under
 a --quant-budget bits-per-element target (default 4.0), re-planned every

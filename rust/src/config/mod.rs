@@ -339,6 +339,14 @@ pub struct TrainConfig {
     /// Greedy layerwise stage plan; empty = train all layers at once.
     pub greedy_stages: Vec<usize>,
     pub zlast_prox_steps: usize,
+    /// Distributed runtime: how long a framed read may go without any
+    /// traffic (heartbeats included) before the peer is declared dead, in
+    /// seconds. Also the `Conn::dial` retry deadline and the heartbeat
+    /// ping cadence is derived from it. Must be finite, > 0 and <= 3600.
+    pub peer_timeout_secs: f64,
+    /// Distributed runtime: write a `pdadmm-checkpoint-v1` checkpoint
+    /// every this many epochs (0 = checkpointing disabled).
+    pub checkpoint_interval: usize,
 }
 
 impl TrainConfig {
@@ -363,7 +371,14 @@ impl TrainConfig {
             staleness: 0,
             greedy_stages: vec![],
             zlast_prox_steps: 24,
+            peer_timeout_secs: 30.0,
+            checkpoint_interval: 0,
         }
+    }
+
+    /// The distributed peer-liveness deadline as a [`std::time::Duration`].
+    pub fn peer_timeout(&self) -> std::time::Duration {
+        std::time::Duration::from_secs_f64(self.peer_timeout_secs)
     }
 }
 
@@ -395,6 +410,8 @@ impl TrainConfig {
                 Json::Arr(self.greedy_stages.iter().map(|&s| Json::num(s as f64)).collect()),
             ),
             ("zlast_prox_steps", Json::num(self.zlast_prox_steps as f64)),
+            ("peer_timeout_secs", Json::num(self.peer_timeout_secs)),
+            ("checkpoint_interval", Json::num(self.checkpoint_interval as f64)),
         ])
     }
 
@@ -442,6 +459,14 @@ impl TrainConfig {
             .map(|x| x.as_usize().ok_or_else(|| anyhow!("greedy stage must be a number")))
             .collect::<Result<Vec<_>>>()?;
         tc.zlast_prox_steps = num("zlast_prox_steps")? as usize;
+        // fault-tolerance knobs arrived after v1 of the SETUP wire format:
+        // absent keys keep the defaults so old coordinators stay speakable
+        if let Some(t) = v.get("peer_timeout_secs").and_then(Json::as_f64) {
+            tc.peer_timeout_secs = check_peer_timeout(t)?;
+        }
+        if let Some(i) = v.get("checkpoint_interval").and_then(Json::as_f64) {
+            tc.checkpoint_interval = i as usize;
+        }
         Ok(tc)
     }
 }
@@ -567,6 +592,16 @@ pub fn check_adaptive_config(budget: f32, interval: usize) -> Result<()> {
         return Err(anyhow!("adaptive re-plan interval must be >= 1 epoch"));
     }
     Ok(())
+}
+
+/// Validity rule for the distributed peer-liveness deadline, shared by the
+/// CLI and the SETUP deserializer. Deliberately no lower bound beyond > 0:
+/// tests shrink it to fractions of a second to exercise stall detection.
+pub fn check_peer_timeout(secs: f64) -> Result<f64> {
+    if !secs.is_finite() || secs <= 0.0 || secs > 3600.0 {
+        return Err(anyhow!("peer timeout must be in (0, 3600] seconds, got {secs}"));
+    }
+    Ok(secs)
 }
 
 /// The single validity rule for uniform wire widths — shared by QuantMode
@@ -820,6 +855,8 @@ mod tests {
         tc.schedule = ScheduleMode::Pipelined;
         tc.staleness = 1;
         tc.greedy_stages = vec![2, 5, 7];
+        tc.peer_timeout_secs = 2.5;
+        tc.checkpoint_interval = 3;
         let text = tc.to_json().to_string_compact();
         let back = TrainConfig::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.dataset, tc.dataset);
@@ -841,6 +878,31 @@ mod tests {
         assert_eq!(back.staleness, tc.staleness);
         assert_eq!(back.greedy_stages, tc.greedy_stages);
         assert_eq!(back.zlast_prox_steps, tc.zlast_prox_steps);
+        assert_eq!(back.peer_timeout_secs.to_bits(), tc.peer_timeout_secs.to_bits());
+        assert_eq!(back.checkpoint_interval, tc.checkpoint_interval);
+    }
+
+    #[test]
+    fn peer_timeout_bounds_are_enforced_on_the_wire() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, 3601.0] {
+            assert!(check_peer_timeout(bad).is_err(), "{bad} should be rejected");
+        }
+        assert_eq!(check_peer_timeout(0.25).unwrap(), 0.25);
+        let mut tc = TrainConfig::new("tiny", 8, 3, 2);
+        tc.peer_timeout_secs = -4.0;
+        let text = tc.to_json().to_string_compact();
+        let err = TrainConfig::from_json(&crate::util::json::parse(&text).unwrap()).unwrap_err();
+        assert!(format!("{err}").contains("peer timeout"), "{err}");
+        // a SETUP payload from an older coordinator simply omits the keys
+        tc.peer_timeout_secs = 30.0;
+        let mut kvs = match tc.to_json() {
+            Json::Obj(kvs) => kvs,
+            _ => unreachable!(),
+        };
+        kvs.retain(|(k, _)| k != "peer_timeout_secs" && k != "checkpoint_interval");
+        let back = TrainConfig::from_json(&Json::Obj(kvs)).unwrap();
+        assert_eq!(back.peer_timeout_secs.to_bits(), 30.0f64.to_bits());
+        assert_eq!(back.checkpoint_interval, 0);
     }
 
     #[test]

@@ -1,0 +1,393 @@
+//! Epoch-boundary run checkpoints (directory format `pdadmm-checkpoint-v1`).
+//!
+//! A checkpoint captures everything needed to restart a training run at an
+//! epoch boundary and reproduce the uninterrupted run **bitwise**: the
+//! forward parameters, the full per-layer ADMM state, and a small JSON
+//! run-manifest binding them to the exact configuration and dataset.
+//! The step sizes `tau`/`theta` are deliberately **not** stored: they are
+//! computed once, at epoch 0, from the pristine init chain
+//! ([`crate::admm::state::refresh_step_sizes`] with a seed-derived RNG),
+//! so every resume path recomputes them on a freshly built chain *before*
+//! overlaying the checkpointed tensors — a pure function of the config,
+//! never of the training trajectory.
+//!
+//! # Directory layout
+//!
+//! ```text
+//! <dir>/chain.snap     (W_l, b_l) in pdadmm-snapshot-v1 — directly servable
+//! <dir>/state.snap     z, p (l>0), q, u in pdadmm-state-v1, canonical order
+//! <dir>/manifest.json  format tag, epoch, config digest, sha256-pinned
+//!                      DatasetSpec, adaptive plan payload (hex), per-file pins
+//! ```
+//!
+//! The canonical `state.snap` order is: for each layer `l` ascending —
+//! `z_l`, then `p_l` for `l > 0` (layer 0's `p` is the fixed input X and
+//! is rebuilt from the dataset), then `q_l, u_l` for hidden layers.
+//!
+//! All three files are written via [`snapshot::write_atomic`] and the
+//! manifest is written **last**, so a crash mid-checkpoint leaves either
+//! the previous complete checkpoint or a manifest whose pins still match
+//! the previous tensor files — never a torn mixture that loads.
+//!
+//! # Resume validation
+//!
+//! [`Checkpoint::check_run`] compares the manifest's config digest
+//! ([`config_digest`]: SHA-256 of the canonical `TrainConfig` JSON with
+//! `epochs` normalized to 0, so a resume may extend training) and the
+//! sha256-pinned `DatasetSpec` JSON against the resuming run. A checkpoint
+//! from a different config or dataset is a clean error, not a silently
+//! diverging trace.
+
+use crate::admm::state::{params_of, LayerState};
+use crate::config::{DatasetSpec, TrainConfig};
+use crate::coordinator::snapshot::{self, Snapshot};
+use crate::tensor::matrix::Mat;
+use crate::util::json::{self, Json};
+use crate::util::sha256::sha256_hex;
+use anyhow::{anyhow, Context, Result};
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// The manifest's format tag.
+pub const FORMAT_TAG: &str = "pdadmm-checkpoint-v1";
+/// Forward-parameter file name inside a checkpoint directory.
+pub const CHAIN_FILE: &str = "chain.snap";
+/// ADMM-state file name inside a checkpoint directory.
+pub const STATE_FILE: &str = "state.snap";
+/// Run-manifest file name inside a checkpoint directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// Where and how often the coordinator writes checkpoints.
+#[derive(Clone, Debug)]
+pub struct CheckpointCfg {
+    /// Checkpoint directory (overwritten atomically every interval).
+    pub dir: PathBuf,
+    /// Write every `interval` epochs (>= 1).
+    pub interval: usize,
+}
+
+/// A loaded, pin-verified checkpoint.
+pub struct Checkpoint {
+    /// Completed-epoch count at write time: training resumes at this epoch.
+    pub epoch: usize,
+    /// [`config_digest`] of the run that wrote this checkpoint.
+    pub config_sha256: String,
+    /// The sha256-pinned `DatasetSpec` JSON as written.
+    pub dataset: Json,
+    /// Adaptive-quantization plan payload in force at `epoch` (None for
+    /// fixed-codec runs).
+    pub plan: Option<Vec<u8>>,
+    /// The forward parameters (`chain.snap`).
+    pub snapshot: Snapshot,
+    /// The ADMM state tensors (`state.snap`), canonical order.
+    pub state: Vec<Mat>,
+}
+
+/// SHA-256 over the canonical `TrainConfig` JSON with `epochs` normalized
+/// to 0 — resuming may extend or shorten the epoch budget, but every other
+/// knob must match the run that wrote the checkpoint bit for bit.
+pub fn config_digest(cfg: &TrainConfig) -> String {
+    let mut c = cfg.clone();
+    c.epochs = 0;
+    sha256_hex(c.to_json().to_string_compact().as_bytes())
+}
+
+fn hex_bytes(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+fn unhex(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(anyhow!("manifest plan is not a hex string"));
+    }
+    (0..s.len() / 2)
+        .map(|i| {
+            u8::from_str_radix(&s[2 * i..2 * i + 2], 16)
+                .map_err(|_| anyhow!("manifest plan is not a hex string"))
+        })
+        .collect()
+}
+
+/// The canonical `state.snap` tensor list for a full layer chain.
+fn state_tensors(layers: &[LayerState]) -> Vec<&Mat> {
+    let mut out = Vec::new();
+    for (l, layer) in layers.iter().enumerate() {
+        out.push(&layer.z);
+        if l > 0 {
+            out.push(&layer.p);
+        }
+        if let (Some(q), Some(u)) = (&layer.q, &layer.u) {
+            out.push(q);
+            out.push(u);
+        }
+    }
+    out
+}
+
+/// Write a complete checkpoint of `layers` at `epoch` into `dir`. Every
+/// file lands atomically and the manifest goes last, so a crash at any
+/// point leaves a previous checkpoint loadable.
+pub fn write(
+    dir: &Path,
+    epoch: usize,
+    layers: &[LayerState],
+    plan: Option<&[u8]>,
+    cfg: &TrainConfig,
+    spec: &DatasetSpec,
+) -> Result<()> {
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let (ws, bs) = params_of(layers);
+    let chain_sha =
+        snapshot::export(&dir.join(CHAIN_FILE), &ws, &bs).context("writing checkpoint chain")?;
+    let state_sha = snapshot::export_tensors(&dir.join(STATE_FILE), &state_tensors(layers))
+        .context("writing checkpoint state")?;
+    let manifest = Json::obj(vec![
+        ("format", Json::str(FORMAT_TAG)),
+        ("epoch", Json::num(epoch as f64)),
+        ("config_sha256", Json::str(config_digest(cfg))),
+        ("dataset", spec.to_json()),
+        ("plan", plan.map_or(Json::Null, |p| Json::str(hex_bytes(p)))),
+        ("chain_sha256", Json::str(chain_sha)),
+        ("state_sha256", Json::str(state_sha)),
+    ]);
+    snapshot::write_atomic(&dir.join(MANIFEST_FILE), |w| {
+        w.write_all(manifest.to_string_pretty().as_bytes()).context("writing manifest")?;
+        w.write_all(b"\n").context("writing manifest")?;
+        Ok(())
+    })
+}
+
+/// Load and pin-verify the checkpoint in `dir`. Every structural lie —
+/// wrong format tag, a tensor file whose content pin disagrees with the
+/// manifest, garbage plan hex — is a clean error.
+pub fn load(dir: &Path) -> Result<Checkpoint> {
+    let manifest = json::parse_file(&dir.join(MANIFEST_FILE))
+        .with_context(|| format!("reading checkpoint manifest in {}", dir.display()))?;
+    let format = manifest.req("format")?.as_str().unwrap_or_default();
+    if format != FORMAT_TAG {
+        return Err(anyhow!(
+            "{} is not a {FORMAT_TAG} checkpoint (format {format:?})",
+            dir.display()
+        ));
+    }
+    let epoch = manifest
+        .req("epoch")?
+        .as_usize()
+        .ok_or_else(|| anyhow!("checkpoint manifest epoch is not a number"))?;
+    let config_sha256 = manifest
+        .req("config_sha256")?
+        .as_str()
+        .ok_or_else(|| anyhow!("checkpoint manifest config_sha256 is not a string"))?
+        .to_string();
+    let dataset = manifest.req("dataset")?.clone();
+    let plan = match manifest.req("plan")? {
+        Json::Null => None,
+        Json::Str(s) => Some(unhex(s)?),
+        other => {
+            return Err(anyhow!("checkpoint manifest plan is neither null nor hex: {other:?}"))
+        }
+    };
+    let snap = snapshot::load(&dir.join(CHAIN_FILE)).context("loading checkpoint chain")?;
+    let want_chain = manifest.req("chain_sha256")?.as_str().unwrap_or_default();
+    if snap.sha256 != want_chain {
+        return Err(anyhow!(
+            "checkpoint chain pin mismatch: manifest pins {want_chain}, file hashes to {}",
+            snap.sha256
+        ));
+    }
+    let (state, state_sha) =
+        snapshot::load_tensors(&dir.join(STATE_FILE)).context("loading checkpoint state")?;
+    let want_state = manifest.req("state_sha256")?.as_str().unwrap_or_default();
+    if state_sha != want_state {
+        return Err(anyhow!(
+            "checkpoint state pin mismatch: manifest pins {want_state}, file hashes to {state_sha}"
+        ));
+    }
+    Ok(Checkpoint { epoch, config_sha256, dataset, plan, snapshot: snap, state })
+}
+
+impl Checkpoint {
+    /// Reject a resume whose config or dataset differs from the run that
+    /// wrote this checkpoint (the epoch budget is allowed to differ).
+    pub fn check_run(&self, cfg: &TrainConfig, spec: &DatasetSpec) -> Result<()> {
+        let want = config_digest(cfg);
+        if self.config_sha256 != want {
+            return Err(anyhow!(
+                "checkpoint was written by a different config (digest {} vs this run's {want}); \
+                 a resumed trace would silently diverge",
+                self.config_sha256
+            ));
+        }
+        let have = spec.to_json().to_string_compact();
+        let stored = self.dataset.to_string_compact();
+        if have != stored {
+            return Err(anyhow!(
+                "checkpoint was written for a different dataset spec: {stored} vs {have}"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Overlay this checkpoint's tensors onto a freshly initialized layer
+    /// chain. `tau`/`theta` and layer 0's input `p` are left untouched —
+    /// refresh the step sizes on the pristine init chain *before* calling
+    /// this, exactly as an uninterrupted run does at epoch 0, so the
+    /// resumed trajectory is bitwise identical.
+    pub fn install(&self, layers: &mut [LayerState]) -> Result<()> {
+        if layers.len() != self.snapshot.layers() {
+            return Err(anyhow!(
+                "checkpoint holds {} layers but this run builds {}",
+                self.snapshot.layers(),
+                layers.len()
+            ));
+        }
+        let mut st = self.state.iter();
+        let mut take = |what: &str, l: usize, shape: (usize, usize)| -> Result<Mat> {
+            let m = st.next().ok_or_else(|| anyhow!("checkpoint state ends before {what}_{l}"))?;
+            if m.shape() != shape {
+                return Err(anyhow!(
+                    "checkpoint {what}_{l} is {:?} but this run needs {:?}",
+                    m.shape(),
+                    shape
+                ));
+            }
+            Ok(m.clone())
+        };
+        for (l, layer) in layers.iter_mut().enumerate() {
+            let (w, b) = (&self.snapshot.ws[l], &self.snapshot.bs[l]);
+            if w.shape() != layer.w.shape() || b.shape() != layer.b.shape() {
+                return Err(anyhow!(
+                    "checkpoint layer {l} parameters {:?}/{:?} do not match this run's {:?}/{:?}",
+                    w.shape(),
+                    b.shape(),
+                    layer.w.shape(),
+                    layer.b.shape()
+                ));
+            }
+            layer.w = w.clone();
+            layer.b = b.clone();
+            layer.z = take("z", l, layer.z.shape())?;
+            if l > 0 {
+                layer.p = take("p", l, layer.p.shape())?;
+            }
+            let hidden = match (&layer.q, &layer.u) {
+                (Some(q), Some(u)) => Some((q.shape(), u.shape())),
+                _ => None,
+            };
+            if let Some((qs, us)) = hidden {
+                layer.q = Some(take("q", l, qs)?);
+                layer.u = Some(take("u", l, us)?);
+            }
+        }
+        if st.next().is_some() {
+            return Err(anyhow!(
+                "checkpoint state carries trailing tensors this chain has no slot for"
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::state::init_chain;
+    use crate::tensor::rng::Pcg32;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("pdadmm-ckpt-{}-{name}", std::process::id()))
+    }
+
+    fn chain(seed: u64) -> Vec<LayerState> {
+        let mut rng = Pcg32::seeded(seed);
+        let x = Mat::randn(6, 15, 1.0, &mut rng);
+        init_chain(&[6, 5, 4, 3], &x, seed, 0.3, 1)
+    }
+
+    fn cfg() -> TrainConfig {
+        TrainConfig::new("tiny", 10, 3, 7)
+    }
+
+    fn spec() -> DatasetSpec {
+        DatasetSpec::Synthetic(crate::config::SyntheticSpec {
+            name: "tiny".into(),
+            nodes: 30,
+            avg_degree: 4.0,
+            classes: 3,
+            feat_dim: 6,
+            train: 15,
+            val: 8,
+            test: 7,
+            homophily_ratio: 6.0,
+            feature_signal: 1.0,
+            label_noise: 0.0,
+            seed: 3,
+        })
+    }
+
+    #[test]
+    fn checkpoint_round_trips_bitwise_and_validates_the_run() {
+        let layers = chain(5);
+        let dir = tmp_dir("roundtrip");
+        write(&dir, 4, &layers, Some(&[1, 2, 0xfe]), &cfg(), &spec()).unwrap();
+        let ck = load(&dir).unwrap();
+        assert_eq!(ck.epoch, 4);
+        assert_eq!(ck.plan.as_deref(), Some(&[1u8, 2, 0xfe][..]));
+        ck.check_run(&cfg(), &spec()).unwrap();
+        // a different epoch budget is allowed; any other knob is not
+        let mut longer = cfg();
+        longer.epochs = 99;
+        ck.check_run(&longer, &spec()).unwrap();
+        let mut other = cfg();
+        other.nu = 0.5;
+        assert!(ck.check_run(&other, &spec()).is_err());
+
+        // install onto a fresh chain: every checkpointed tensor lands
+        // bitwise, tau/theta and the layer-0 input stay untouched
+        let mut fresh = chain(5);
+        crate::admm::state::refresh_step_sizes(&mut fresh, 0.01, 1.0, 9);
+        let tau0 = fresh[0].tau;
+        let x0 = fresh[0].p.data.clone();
+        ck.install(&mut fresh).unwrap();
+        assert_eq!(fresh[0].tau, tau0);
+        assert_eq!(fresh[0].p.data, x0);
+        for (a, b) in fresh.iter().zip(&layers) {
+            assert_eq!(a.w.data, b.w.data);
+            assert_eq!(a.z.data, b.z.data);
+            assert_eq!(a.q.as_ref().map(|m| &m.data), b.q.as_ref().map(|m| &m.data));
+        }
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tampered_state_file_fails_the_manifest_pin() {
+        let layers = chain(6);
+        let dir = tmp_dir("tamper");
+        write(&dir, 2, &layers, None, &cfg(), &spec()).unwrap();
+        // re-export a *valid* state file with different content: the file
+        // itself loads, but the manifest pin must catch the swap
+        let other = chain(7);
+        snapshot::export_tensors(&dir.join(STATE_FILE), &super::state_tensors(&other)).unwrap();
+        let err = format!("{:#}", load(&dir).unwrap_err());
+        assert!(err.contains("pin"), "{err}");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_shape_chain_is_rejected_at_install() {
+        let layers = chain(8);
+        let dir = tmp_dir("shapes");
+        write(&dir, 1, &layers, None, &cfg(), &spec()).unwrap();
+        let ck = load(&dir).unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let x = Mat::randn(6, 15, 1.0, &mut rng);
+        let mut wider = init_chain(&[6, 8, 8, 3], &x, 1, 0.3, 1);
+        assert!(ck.install(&mut wider).is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+}

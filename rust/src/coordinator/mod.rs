@@ -12,12 +12,16 @@
 //! * [`worker`] — the `repro worker` process serving one layer block.
 //! * [`snapshot`] — the `pdadmm-snapshot-v1` trained-model file format
 //!   (distinct from the transport's SNAPSHOT counter frame).
+//! * [`checkpoint`] — `pdadmm-checkpoint-v1` epoch-boundary run
+//!   checkpoints (chain + ADMM state + run-manifest) behind
+//!   `--checkpoint-dir` / `repro train --resume`.
 //! * [`serve`] — the `repro serve` inference tier: resident (optionally
 //!   quantized) weights answering QUERY/PREDICT frames on a bounded,
 //!   coalescing worker pool.
 
 pub mod adapt;
 pub mod channel;
+pub mod checkpoint;
 pub mod greedy;
 pub mod phases;
 pub mod quant;

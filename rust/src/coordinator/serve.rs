@@ -44,7 +44,7 @@ use crate::coordinator::snapshot::Snapshot;
 use crate::coordinator::transport::{self, frame_kind, Conn, WriteHalf};
 use crate::tensor::matrix::Mat;
 use anyhow::{anyhow, Context, Result};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -259,7 +259,7 @@ pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     queue: Arc<Queue>,
-    conns: Arc<Mutex<Vec<TcpStream>>>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
     accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -280,7 +280,7 @@ pub fn start(model: ServeModel, x: Arc<Mat>, opts: &ServeOptions, listen: &str) 
     let model = Arc::new(model);
     let queue = Arc::new(Queue::new());
     let stop = Arc::new(AtomicBool::new(false));
-    let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+    let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
 
     let workers = (0..opts.pool.max(1))
         .map(|_| {
@@ -293,20 +293,32 @@ pub fn start(model: ServeModel, x: Arc<Mat>, opts: &ServeOptions, listen: &str) 
     let accept = {
         let (queue, stop, conns) = (queue.clone(), stop.clone(), conns.clone());
         let nodes = x.cols as u32;
+        let mut next_id: u64 = 0;
         std::thread::spawn(move || loop {
             if stop.load(Ordering::SeqCst) {
                 return;
             }
             match listener.accept() {
                 Ok((s, _)) => {
-                    if let Ok(raw) = s.try_clone() {
-                        conns.lock().unwrap().push(raw);
-                    }
+                    // build the framed Conn *first*: a stream we cannot
+                    // serve must not leave a dead entry in the registry
+                    let raw = s.try_clone().ok();
                     if let Ok(conn) = Conn::from_tcp(s) {
+                        let id = next_id;
+                        next_id += 1;
+                        if let Some(raw) = raw {
+                            conns.lock().unwrap().insert(id, raw);
+                        }
                         let queue = queue.clone();
+                        let conns = conns.clone();
                         // readers are detached: closing their stream (via
-                        // the raw clone above) unblocks and ends them
-                        std::thread::spawn(move || reader_loop(conn, &queue, nodes));
+                        // the raw clone above) unblocks and ends them; each
+                        // reader prunes its own registry entry on exit, so
+                        // churned connections never accumulate
+                        std::thread::spawn(move || {
+                            reader_loop(conn, &queue, nodes);
+                            conns.lock().unwrap().remove(&id);
+                        });
                     }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -412,12 +424,20 @@ impl Server {
         }
     }
 
+    /// Live connections currently tracked in the registry. Readers prune
+    /// their own entry on disconnect, so this converges to the number of
+    /// clients actually connected (bounded even under connect/disconnect
+    /// churn).
+    pub fn open_conns(&self) -> usize {
+        self.conns.lock().unwrap().len()
+    }
+
     /// Shut down: stop accepting, close open connections, drain already
     /// queued requests, join the pool. Idempotent.
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         self.queue.close();
-        for s in self.conns.lock().unwrap().drain(..) {
+        for (_, s) in self.conns.lock().unwrap().drain() {
             let _ = s.shutdown(Shutdown::Both);
         }
         if let Some(h) = self.accept.take() {
@@ -451,7 +471,8 @@ pub struct ServeClient {
 
 impl ServeClient {
     pub fn dial(addr: &str) -> Result<ServeClient> {
-        Ok(ServeClient { conn: Conn::dial(addr)?, next_req: 1 })
+        let conn = Conn::dial(addr, transport::DEFAULT_PEER_TIMEOUT)?;
+        Ok(ServeClient { conn, next_req: 1 })
     }
 
     /// Send one batched query and block for its PREDICT reply. A server-
@@ -571,6 +592,46 @@ mod tests {
         assert!(format!("{err:#}").contains("out of range"), "{err:#}");
         // the connection survives a rejected query
         assert!(client.query(&[0, 1]).is_ok());
+        server.stop();
+    }
+
+    /// Poll until the registry drains to `want` entries or the deadline
+    /// passes (reader threads prune asynchronously after a disconnect).
+    fn await_open_conns(server: &Server, want: usize) {
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while server.open_conns() != want {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "registry stuck at {} open connections (want {want})",
+                server.open_conns()
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    #[test]
+    fn connection_registry_stays_bounded_under_churn() {
+        let (model, x) = toy_model(Option::None);
+        let mut server = start(model, x, &ServeOptions::default(), "127.0.0.1:0").unwrap();
+        let addr = server.addr().to_string();
+        // churn: connect, query, disconnect — the registry must not grow
+        // with the total number of connections ever accepted
+        for round in 0..8 {
+            let mut client = ServeClient::dial(&addr).unwrap();
+            client.query(&[round as u32 % 17]).unwrap();
+            assert!(
+                server.open_conns() <= round + 1,
+                "registry grew past live connections at round {round}"
+            );
+            drop(client);
+        }
+        await_open_conns(&server, 0);
+        // a held connection stays registered until it actually closes
+        let mut client = ServeClient::dial(&addr).unwrap();
+        client.query(&[3]).unwrap();
+        assert_eq!(server.open_conns(), 1);
+        drop(client);
+        await_open_conns(&server, 0);
         server.stop();
     }
 

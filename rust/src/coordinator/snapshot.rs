@@ -38,18 +38,45 @@
 //! so export → load is guaranteed bitwise-identical (asserted by the
 //! round-trip property tests in `tests/property_frame_codec.rs` and end
 //! to end — train → export → serve — in `tests/integration_serve.rs`).
+//!
+//! # Atomic writes
+//!
+//! Every writer in this module streams into `<path>.tmp`, fsyncs, and
+//! atomically renames over `path` ([`write_atomic`]): a crash, full disk
+//! or short write mid-export can never tear or truncate a previous good
+//! file at the destination — load-bearing for the epoch-boundary
+//! checkpoints ([`crate::coordinator::checkpoint`]) that overwrite the
+//! same paths every interval.
+//!
+//! # The ADMM-state companion format (`pdadmm-state-v1`)
+//!
+//! Checkpoints also need the full per-layer ADMM state (z, p, q, u), not
+//! just the forward parameters. [`export_tensors`]/[`load_tensors`] hold a
+//! flat list of f32 tensors with the same hardening rules:
+//!
+//! ```text
+//! magic b"PDADMMT1" ‖ count u32 ‖ (rows u32 ‖ cols u32) × count ‖
+//! tensor bodies (f32 LE, row-major, header order) ‖ SHA-256 pin (32 B)
+//! ```
 
 use crate::tensor::matrix::Mat;
 use crate::util::sha256::{hex, Sha256};
 use anyhow::{anyhow, Context, Result};
 use std::fs;
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// The human-readable format tag (file content is pinned by [`MAGIC`]).
 pub const FORMAT_TAG: &str = "pdadmm-snapshot-v1";
 /// First eight bytes of every snapshot file.
 pub const MAGIC: [u8; 8] = *b"PDADMMS1";
+/// The tensor-list companion format's tag (ADMM state in checkpoints).
+pub const STATE_FORMAT_TAG: &str = "pdadmm-state-v1";
+/// First eight bytes of every `pdadmm-state-v1` file.
+pub const STATE_MAGIC: [u8; 8] = *b"PDADMMT1";
+/// Tensor-count cap for `pdadmm-state-v1`: at most six state tensors
+/// (w, b, z, p, q, u) per layer of the deepest supported chain.
+pub const MAX_STATE_TENSORS: u32 = MAX_LAYERS * 6;
 /// Layer-count cap: bounds the header size before the header is trusted.
 pub const MAX_LAYERS: u32 = 4096;
 /// Per-dimension cap (matches the tensor wire format's element budget).
@@ -157,37 +184,208 @@ impl<W: Write> HashingWriter<W> {
     }
 }
 
-/// Write `(ws, bs)` to `path` in the `pdadmm-snapshot-v1` format and
-/// return the hex SHA-256 content pin (also stored as the file trailer).
-pub fn export(path: &Path, ws: &[Mat], bs: &[Mat]) -> Result<String> {
-    let dims = chain_dims(ws, bs)?;
+/// The staging name every writer in this module streams into before the
+/// atomic rename: `<path>.tmp` (the extension is appended, not replaced,
+/// so distinct destinations never share a staging file).
+pub fn staging_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Stream `write_body` into `<path>.tmp`, fsync, then atomically rename
+/// over `path`. A failure at any point — short write, full disk, a crash
+/// before the rename — leaves a pre-existing file at `path` untouched;
+/// the stale staging file is removed on error.
+pub fn write_atomic(
+    path: &Path,
+    write_body: impl FnOnce(&mut BufWriter<fs::File>) -> Result<()>,
+) -> Result<()> {
     if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
         fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
     }
-    let file = fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
-    let mut w = HashingWriter { inner: BufWriter::new(file), hash: Sha256::new() };
-    w.put(&MAGIC)?;
-    w.put(&(ws.len() as u32).to_le_bytes())?;
-    for &d in &dims {
-        w.put(&(d as u32).to_le_bytes())?;
+    let tmp = staging_path(path);
+    let res = (|| -> Result<()> {
+        let file =
+            fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = BufWriter::new(file);
+        write_body(&mut w)?;
+        let file = w
+            .into_inner()
+            .map_err(|e| anyhow!("flushing {}: {}", tmp.display(), e.into_error()))?;
+        file.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+        fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
+        Ok(())
+    })();
+    if res.is_err() {
+        let _ = fs::remove_file(&tmp);
     }
-    let mut buf = Vec::new();
-    let mut put_f32s = |w: &mut HashingWriter<_>, vals: &[f32]| -> Result<()> {
-        buf.clear();
-        buf.reserve(vals.len() * 4);
-        for v in vals {
-            buf.extend_from_slice(&v.to_le_bytes());
+    res
+}
+
+/// Write `(ws, bs)` to `path` in the `pdadmm-snapshot-v1` format and
+/// return the hex SHA-256 content pin (also stored as the file trailer).
+/// The write is atomic ([`write_atomic`]): a pre-existing snapshot at
+/// `path` survives any failed export intact.
+pub fn export(path: &Path, ws: &[Mat], bs: &[Mat]) -> Result<String> {
+    let dims = chain_dims(ws, bs)?;
+    let mut pin_hex = String::new();
+    write_atomic(path, |out| {
+        let mut w = HashingWriter { inner: out, hash: Sha256::new() };
+        w.put(&MAGIC)?;
+        w.put(&(ws.len() as u32).to_le_bytes())?;
+        for &d in &dims {
+            w.put(&(d as u32).to_le_bytes())?;
         }
-        w.put(&buf)
-    };
-    for (wl, bl) in ws.iter().zip(bs) {
-        put_f32s(&mut w, &wl.data)?;
-        put_f32s(&mut w, &bl.data)?;
+        let mut buf = Vec::new();
+        let mut put_f32s = |w: &mut HashingWriter<_>, vals: &[f32]| -> Result<()> {
+            buf.clear();
+            buf.reserve(vals.len() * 4);
+            for v in vals {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            w.put(&buf)
+        };
+        for (wl, bl) in ws.iter().zip(bs) {
+            put_f32s(&mut w, &wl.data)?;
+            put_f32s(&mut w, &bl.data)?;
+        }
+        let HashingWriter { inner, hash } = w;
+        let pin = hash.finalize();
+        inner.write_all(&pin).context("writing snapshot content pin")?;
+        pin_hex = hex(&pin);
+        Ok(())
+    })?;
+    Ok(pin_hex)
+}
+
+/// Write a flat tensor list to `path` in the `pdadmm-state-v1` format and
+/// return the hex SHA-256 content pin. Atomic like [`export`].
+pub fn export_tensors(path: &Path, mats: &[&Mat]) -> Result<String> {
+    if mats.is_empty() || mats.len() as u64 > MAX_STATE_TENSORS as u64 {
+        return Err(anyhow!(
+            "state file needs 1..={MAX_STATE_TENSORS} tensors, got {}",
+            mats.len()
+        ));
     }
-    let pin = w.hash.finalize();
-    w.inner.write_all(&pin).context("writing snapshot content pin")?;
-    w.inner.flush().context("flushing snapshot")?;
-    Ok(hex(&pin))
+    for (i, m) in mats.iter().enumerate() {
+        if m.rows == 0
+            || m.cols == 0
+            || m.rows as u64 > MAX_DIM as u64
+            || m.cols as u64 > MAX_DIM as u64
+        {
+            return Err(anyhow!(
+                "state tensor {i} has shape {:?} outside 1..={MAX_DIM}",
+                m.shape()
+            ));
+        }
+    }
+    let mut pin_hex = String::new();
+    write_atomic(path, |out| {
+        let mut w = HashingWriter { inner: out, hash: Sha256::new() };
+        w.put(&STATE_MAGIC)?;
+        w.put(&(mats.len() as u32).to_le_bytes())?;
+        for m in mats {
+            w.put(&(m.rows as u32).to_le_bytes())?;
+            w.put(&(m.cols as u32).to_le_bytes())?;
+        }
+        let mut buf = Vec::new();
+        for m in mats {
+            buf.clear();
+            buf.reserve(m.data.len() * 4);
+            for v in &m.data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            w.put(&buf)?;
+        }
+        let HashingWriter { inner, hash } = w;
+        let pin = hash.finalize();
+        inner.write_all(&pin).context("writing state content pin")?;
+        pin_hex = hex(&pin);
+        Ok(())
+    })?;
+    Ok(pin_hex)
+}
+
+/// Load a `pdadmm-state-v1` tensor list. Same hardening discipline as
+/// [`load`]: caps and the size cross-check run before any tensor buffer
+/// is allocated, and the trailing content pin must match bit for bit.
+pub fn load_tensors(path: &Path) -> Result<(Vec<Mat>, String)> {
+    let meta = fs::metadata(path).with_context(|| format!("reading {}", path.display()))?;
+    let file_len = meta.len();
+    let file = fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut hash = Sha256::new();
+
+    if file_len < 12 {
+        return Err(anyhow!("{} is {file_len} bytes: too short for a state file", path.display()));
+    }
+    let prelude = read_hashed(&mut r, &mut hash, 12)?;
+    if prelude[..8] != STATE_MAGIC {
+        return Err(anyhow!("{} is not a {STATE_FORMAT_TAG} file (bad magic)", path.display()));
+    }
+    let count = u32::from_le_bytes([prelude[8], prelude[9], prelude[10], prelude[11]]);
+    if count == 0 || count > MAX_STATE_TENSORS {
+        return Err(anyhow!("state file claims {count} tensors (valid: 1..={MAX_STATE_TENSORS})"));
+    }
+
+    let header_len = 12u64 + 8 * count as u64;
+    if file_len < header_len + PIN_BYTES as u64 {
+        return Err(anyhow!(
+            "state file of {file_len} bytes is too short for its {count}-tensor header"
+        ));
+    }
+    let shape_bytes = read_hashed(&mut r, &mut hash, 8 * count as usize)?;
+    let mut shapes = Vec::with_capacity(count as usize);
+    let mut body = 0u64;
+    for (i, c) in shape_bytes.chunks_exact(8).enumerate() {
+        let rows = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        let cols = u32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+        if rows == 0 || rows > MAX_DIM || cols == 0 || cols > MAX_DIM {
+            return Err(anyhow!(
+                "state tensor {i} claims shape ({rows}, {cols}) outside 1..={MAX_DIM}"
+            ));
+        }
+        let bytes = (rows as u64)
+            .checked_mul(cols as u64)
+            .and_then(|e| e.checked_mul(4))
+            .and_then(|b| body.checked_add(b))
+            .ok_or_else(|| anyhow!("state body size overflows at tensor {i}"))?;
+        body = bytes;
+        shapes.push((rows as usize, cols as usize));
+    }
+    let expect = header_len
+        .checked_add(body)
+        .and_then(|n| n.checked_add(PIN_BYTES as u64))
+        .ok_or_else(|| anyhow!("state file size overflows"))?;
+    if expect != file_len {
+        return Err(anyhow!(
+            "state shapes claim a {expect}-byte file but {} is {file_len} bytes",
+            path.display()
+        ));
+    }
+
+    let mut mats = Vec::with_capacity(count as usize);
+    for &(rows, cols) in &shapes {
+        let bytes = read_hashed(&mut r, &mut hash, rows * cols * 4)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        mats.push(Mat::from_vec(rows, cols, data));
+    }
+    let mut pin = [0u8; PIN_BYTES];
+    r.read_exact(&mut pin).context("reading state content pin")?;
+    let computed = hash.finalize();
+    if pin != computed {
+        return Err(anyhow!(
+            "state content pin mismatch: file carries {}, content hashes to {}",
+            hex(&pin),
+            hex(&computed)
+        ));
+    }
+    Ok((mats, hex(&computed)))
 }
 
 /// Read exactly `n` bytes, feeding them through the running content hash.
@@ -360,6 +558,90 @@ mod tests {
             std::fs::write(&path, &bytes[..cut]).unwrap();
             assert!(load(&path).is_err(), "{cut}-byte prefix must not load");
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn state_file_round_trips_bitwise() {
+        let mut rng = Pcg32::seeded(21);
+        let mats: Vec<Mat> = [(3usize, 5usize), (1, 1), (4, 2)]
+            .iter()
+            .map(|&(r, c)| Mat::randn(r, c, 1.0, &mut rng))
+            .collect();
+        let refs: Vec<&Mat> = mats.iter().collect();
+        let path = tmp("state-roundtrip.snap");
+        let pin = export_tensors(&path, &refs).unwrap();
+        let (back, loaded_pin) = load_tensors(&path).unwrap();
+        assert_eq!(loaded_pin, pin);
+        assert_eq!(back.len(), mats.len());
+        for (a, b) in back.iter().zip(&mats) {
+            assert_eq!(a.shape(), b.shape());
+            assert_eq!(a.data, b.data);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn state_file_truncations_and_corruption_error_cleanly() {
+        let mut rng = Pcg32::seeded(22);
+        let m = Mat::randn(3, 4, 1.0, &mut rng);
+        let path = tmp("state-trunc.snap");
+        export_tensors(&path, &[&m]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in 0..bytes.len() {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(load_tensors(&path).is_err(), "{cut}-byte prefix must not load");
+        }
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x20;
+        std::fs::write(&path, &flipped).unwrap();
+        let err = format!("{:#}", load_tensors(&path).unwrap_err());
+        assert!(err.contains("pin") || err.contains("shape"), "{err}");
+        std::fs::remove_file(&path).ok();
+        assert!(export_tensors(&tmp("state-empty.snap"), &[]).is_err());
+    }
+
+    /// The torn-write satellite: a failing export must leave a
+    /// pre-existing valid snapshot at the destination untouched. Failure
+    /// injection: a directory squatting on the staging path makes the
+    /// `<path>.tmp` create fail before a single byte reaches `path`.
+    #[test]
+    fn failed_export_leaves_previous_snapshot_untouched() {
+        let (ws, bs) = chain(&[5, 4, 3], 31);
+        let path = tmp("atomic.snap");
+        let good_pin = export(&path, &ws, &bs).unwrap();
+        let block = staging_path(&path);
+        std::fs::create_dir_all(&block).unwrap();
+        let (ws2, bs2) = chain(&[5, 4, 3], 32);
+        assert!(export(&path, &ws2, &bs2).is_err(), "blocked staging path must fail the export");
+        let snap = load(&path).expect("previous snapshot must still load");
+        assert_eq!(snap.sha256, good_pin, "previous snapshot bytes must be untouched");
+        std::fs::remove_dir_all(&block).ok();
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Same satellite, injected *short write*: staging symlinked to
+    /// /dev/full makes every write (or the final flush) fail with ENOSPC
+    /// mid-body; the previous snapshot must survive bit for bit.
+    #[cfg(unix)]
+    #[test]
+    fn short_write_on_full_disk_leaves_previous_snapshot_untouched() {
+        if !std::path::Path::new("/dev/full").exists() {
+            eprintln!("skipping /dev/full short-write injection (device absent)");
+            return;
+        }
+        let (ws, bs) = chain(&[6, 5, 4], 41);
+        let path = tmp("enospc.snap");
+        let good_pin = export(&path, &ws, &bs).unwrap();
+        let stage = staging_path(&path);
+        std::fs::remove_file(&stage).ok();
+        std::os::unix::fs::symlink("/dev/full", &stage).unwrap();
+        let (ws2, bs2) = chain(&[6, 5, 4], 42);
+        assert!(export(&path, &ws2, &bs2).is_err(), "ENOSPC staging must fail the export");
+        let snap = load(&path).expect("previous snapshot must still load");
+        assert_eq!(snap.sha256, good_pin, "previous snapshot bytes must be untouched");
+        std::fs::remove_file(&stage).ok();
         std::fs::remove_file(&path).ok();
     }
 }

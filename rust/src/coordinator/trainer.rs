@@ -909,6 +909,37 @@ impl Trainer {
         log
     }
 
+    /// Restore a validated `pdadmm-checkpoint-v1` onto a freshly built
+    /// trainer (`repro train --resume`, in-process path). Step sizes are
+    /// refreshed on the pristine init chain first — checkpoints never
+    /// store tau/theta, which are deterministic functions of that chain
+    /// and the seed — then the checkpointed tensors overlay the chain and
+    /// the epoch counter and quantization plan jump to the checkpoint's.
+    /// The next [`Trainer::run_epoch`] is bitwise the one an
+    /// uninterrupted run would have executed at that epoch.
+    pub fn restore(
+        &mut self,
+        ck: &crate::coordinator::checkpoint::Checkpoint,
+    ) -> anyhow::Result<()> {
+        if self.epoch != 0 {
+            return Err(anyhow::anyhow!(
+                "restore requires a freshly built trainer (epoch 0, got {})",
+                self.epoch
+            ));
+        }
+        let (nu, rho) = (self.cfg.nu, self.cfg.rho);
+        state::refresh_step_sizes(&mut self.layers, nu, rho, self.cfg.seed);
+        ck.install(&mut self.layers)?;
+        if let Some(adapt) = &mut self.adapt {
+            if let Some(plan) = &ck.plan {
+                adapt.apply_plan_payload(plan)?;
+            }
+        }
+        self.epoch = ck.epoch;
+        self.pipeline = None;
+        Ok(())
+    }
+
     /// Current logits (evaluation).
     pub fn logits(&self) -> crate::Mat {
         let (ws, bs) = state::params_of(&self.layers);

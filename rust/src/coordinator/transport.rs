@@ -42,6 +42,44 @@
 //! TCP guarantees per-connection ordering, so a worker always applies its
 //! neighbors' VAR frames before the next PHASE command arrives.
 //!
+//! # Liveness (HEARTBEAT + deadline reads)
+//!
+//! A vanished peer closes its socket, so plain blocking reads detect a
+//! *crash* instantly — but a stalled peer (wedged process, dead host
+//! behind a silent firewall) used to block `recv()` forever. Every
+//! coordinator read and the worker's boundary wait therefore go through
+//! deadline-aware receives:
+//!
+//! * [`Conn::recv_deadline`] — waits up to the configured
+//!   `--peer-timeout` for a non-heartbeat frame, sending a HEARTBEAT
+//!   ping each empty slice and answering the peer's pings in between;
+//!   any traffic (heartbeats included) refreshes the deadline.
+//! * [`ReadHalf::recv_deadline`] — the write-free variant for the
+//!   pipelined pump's reader threads; HEARTBEAT frames are returned to
+//!   the pump, which answers pings through the write halves it owns.
+//!
+//! The timeout slicing applies only to the leading magic byte, so an
+//! expired slice never consumes a partial frame (no mid-frame desync);
+//! once a frame starts arriving, a mid-frame stall is a hard error. The
+//! deadline must exceed the slowest single-phase compute on any worker —
+//! a busy worker does not read, so it cannot answer pings until the
+//! phase ends (the 30 s default holds a wide margin for the paper's
+//! benchmarks; tests shrink it to hundreds of milliseconds).
+//!
+//! # Checkpoints and deterministic recovery
+//!
+//! With `--checkpoint-dir` the coordinator writes a
+//! `pdadmm-checkpoint-v1` directory ([`crate::coordinator::checkpoint`])
+//! every `--checkpoint-interval` epochs. When a worker is lost mid-epoch
+//! (in spawn mode), [`SocketTransport::run_epoch`] aborts the epoch,
+//! respawns the fleet, replays SETUP/PLAN, downloads the checkpointed
+//! chain (STATE frames, coordinator → worker this time), and silently
+//! re-runs from the checkpoint epoch — every epoch is a deterministic
+//! function of chain state and config, so the resumed trace is bitwise
+//! the uninterrupted one. Without a checkpoint dir recovery restarts
+//! from epoch 0; externally started workers (`connect` mode) cannot be
+//! respawned, so the error propagates instead.
+//!
 //! # Pipelined protocol (`--schedule pipelined`)
 //!
 //! The six PHASE rounds collapse into one EPOCH_START broadcast. Each
@@ -78,6 +116,7 @@ use crate::backend::{ComputeBackend, NativeBackend};
 use crate::config::{BackendKind, DatasetSpec, QuantMode, ScheduleMode, TrainConfig};
 use crate::coordinator::adapt::AdaptController;
 use crate::coordinator::channel::CommSnapshot;
+use crate::coordinator::checkpoint::{self, Checkpoint, CheckpointCfg};
 use crate::coordinator::phases::{self, Phase};
 use crate::coordinator::quant::{self, Codec};
 use crate::coordinator::trainer::{measure_record, Trainer};
@@ -158,7 +197,23 @@ pub mod frame_kind {
     /// — the logits matrix is classes × count, one column per queried
     /// node — while status 1 continues with a utf-8 error message).
     pub const PREDICT: u8 = 19;
+    /// Either direction: liveness probe/answer
+    /// (`[super::HEARTBEAT_PING]` or `[super::HEARTBEAT_PONG]`, 1 byte).
+    /// Never part of the protocol state machines — deadline receives
+    /// consume them transparently and any heartbeat refreshes the
+    /// peer-liveness deadline.
+    pub const HEARTBEAT: u8 = 20;
 }
+
+/// HEARTBEAT payload: a probe that wants a PONG back.
+pub const HEARTBEAT_PING: u8 = 0;
+/// HEARTBEAT payload: the answer to a PING (never answered itself).
+pub const HEARTBEAT_PONG: u8 = 1;
+
+/// Peer-liveness deadline used where no validated [`TrainConfig`] is in
+/// scope yet (worker dial before SETUP, serve clients); training paths
+/// use the `--peer-timeout` knob (`TrainConfig::peer_timeout`) instead.
+pub const DEFAULT_PEER_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// VAR tag: a p tensor (travels to the owner of layer `l-1`).
 pub const VAR_P: u8 = 0;
@@ -192,16 +247,22 @@ pub fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> Result<()> {
 /// Read one frame. Errors (no panics) on truncated streams, bad magic and
 /// oversized length prefixes; a corrupt length never causes an allocation.
 pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>)> {
-    let mut hdr = [0u8; 6];
-    r.read_exact(&mut hdr).context("reading frame header")?;
-    if hdr[0] != FRAME_MAGIC {
-        return Err(anyhow!(
-            "bad frame magic {:#04x} (expected {:#04x})",
-            hdr[0],
-            FRAME_MAGIC
-        ));
+    let mut magic = [0u8; 1];
+    r.read_exact(&mut magic).context("reading frame header")?;
+    read_frame_after_magic(magic[0], r)
+}
+
+/// The rest of [`read_frame`] once the leading magic byte is in hand.
+/// Split out so deadline receives can slice their timeout over the magic
+/// byte alone: an expired slice there consumes nothing (no mid-frame
+/// desync), while a stall after a frame has started is a hard error.
+pub fn read_frame_after_magic(magic: u8, r: &mut impl Read) -> Result<(u8, Vec<u8>)> {
+    if magic != FRAME_MAGIC {
+        return Err(anyhow!("bad frame magic {magic:#04x} (expected {FRAME_MAGIC:#04x})"));
     }
-    let len = u32::from_le_bytes([hdr[2], hdr[3], hdr[4], hdr[5]]);
+    let mut hdr = [0u8; 5];
+    r.read_exact(&mut hdr).context("reading frame header")?;
+    let len = u32::from_le_bytes([hdr[1], hdr[2], hdr[3], hdr[4]]);
     if len > MAX_FRAME_BYTES {
         return Err(anyhow!("frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"));
     }
@@ -217,38 +278,72 @@ pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>)> {
     if got as u64 != len as u64 {
         return Err(anyhow!("frame payload truncated: expected {len} bytes, got {got}"));
     }
-    Ok((hdr[1], payload))
+    Ok((hdr[0], payload))
+}
+
+/// The raw socket handle a [`Conn`] keeps next to its buffered halves:
+/// timeouts must be armed on the live descriptor, which the boxed
+/// `Read`/`Write` trait objects can no longer reach. Clones of one socket
+/// share the underlying file description, so arming a timeout here
+/// governs reads through the buffered half.
+enum SockCtl {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+}
+
+impl SockCtl {
+    fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            SockCtl::Tcp(s) => s.set_read_timeout(t),
+            #[cfg(unix)]
+            SockCtl::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+}
+
+/// True for the error a timed-out socket read surfaces (platform-dependent
+/// kind), as opposed to a closed or broken connection.
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
 }
 
 /// One framed, bidirectional connection (TCP or Unix socket).
 pub struct Conn {
     reader: BufReader<Box<dyn Read + Send>>,
     writer: BufWriter<Box<dyn Write + Send>>,
+    ctl: SockCtl,
 }
 
 impl Conn {
     pub fn from_tcp(s: TcpStream) -> Result<Conn> {
         s.set_nodelay(true).ok();
         let r = s.try_clone().context("cloning tcp stream")?;
+        let ctl = s.try_clone().context("cloning tcp stream")?;
         Ok(Conn {
             reader: BufReader::new(Box::new(r)),
             writer: BufWriter::new(Box::new(s)),
+            ctl: SockCtl::Tcp(ctl),
         })
     }
 
     #[cfg(unix)]
     pub fn from_unix(s: std::os::unix::net::UnixStream) -> Result<Conn> {
         let r = s.try_clone().context("cloning unix stream")?;
+        let ctl = s.try_clone().context("cloning unix stream")?;
         Ok(Conn {
             reader: BufReader::new(Box::new(r)),
             writer: BufWriter::new(Box::new(s)),
+            ctl: SockCtl::Unix(ctl),
         })
     }
 
     /// Dial `addr` — `unix:<path>` or TCP `host:port` — retrying refused
-    /// connections for a few seconds (worker/coordinator startup races).
-    pub fn dial(addr: &str) -> Result<Conn> {
-        let deadline = Instant::now() + Duration::from_secs(10);
+    /// connections until `timeout` elapses (worker/coordinator startup
+    /// races). Training paths pass the validated `--peer-timeout`;
+    /// pre-config paths use [`DEFAULT_PEER_TIMEOUT`].
+    pub fn dial(addr: &str, timeout: Duration) -> Result<Conn> {
+        let deadline = Instant::now() + timeout;
         #[cfg(unix)]
         if let Some(path) = addr.strip_prefix("unix:") {
             loop {
@@ -288,27 +383,108 @@ impl Conn {
         read_frame(&mut self.reader)
     }
 
+    /// Receive the next non-heartbeat frame, erroring if the peer stays
+    /// silent for `timeout`. While waiting, a HEARTBEAT ping goes out each
+    /// empty slice (so a peer blocked in its own deadline wait sees
+    /// traffic) and incoming pings are answered inline; any frame —
+    /// heartbeats included — refreshes the deadline. The socket is back in
+    /// plain blocking mode on return, so `recv()` keeps working after.
+    pub fn recv_deadline(&mut self, timeout: Duration) -> Result<(u8, Vec<u8>)> {
+        let slice = (timeout / 4).max(Duration::from_millis(10));
+        let mut deadline = Instant::now() + timeout;
+        let res = loop {
+            self.ctl.set_read_timeout(Some(slice)).context("arming read deadline")?;
+            let mut magic = [0u8; 1];
+            match self.reader.read_exact(&mut magic) {
+                Ok(()) => {
+                    // the frame has started arriving: a mid-frame stall is
+                    // a protocol violation, not a busy peer
+                    self.ctl.set_read_timeout(Some(timeout)).context("arming read deadline")?;
+                    match read_frame_after_magic(magic[0], &mut self.reader) {
+                        Ok((frame_kind::HEARTBEAT, p)) => {
+                            if p.first() == Some(&HEARTBEAT_PING) {
+                                self.send(frame_kind::HEARTBEAT, &[HEARTBEAT_PONG])?;
+                            }
+                            deadline = Instant::now() + timeout;
+                        }
+                        other => break other,
+                    }
+                }
+                Err(e) if is_timeout(&e) => {
+                    if Instant::now() >= deadline {
+                        break Err(anyhow!(
+                            "peer unresponsive: no traffic for {:.1}s",
+                            timeout.as_secs_f64()
+                        ));
+                    }
+                    // still inside the deadline: probe, so a peer that is
+                    // itself waiting sees our liveness and a dead one is
+                    // caught by the send failing or the deadline above
+                    self.send(frame_kind::HEARTBEAT, &[HEARTBEAT_PING])?;
+                }
+                Err(e) => break Err(anyhow!(e).context("reading frame header")),
+            }
+        };
+        self.ctl.set_read_timeout(None).context("clearing read deadline")?;
+        res
+    }
+
     /// Split into independently owned halves, so a reader thread can block
     /// on incoming frames while another thread keeps writing — the
-    /// pipelined relay pump. Reassemble with [`Conn::from_halves`].
+    /// pipelined relay pump. The socket control handle travels with the
+    /// read half (deadlines govern reads). Reassemble with
+    /// [`Conn::from_halves`].
     pub fn into_halves(self) -> (ReadHalf, WriteHalf) {
-        (ReadHalf { reader: self.reader }, WriteHalf { writer: self.writer })
+        (ReadHalf { reader: self.reader, ctl: self.ctl }, WriteHalf { writer: self.writer })
     }
 
     /// Reassemble a connection split by [`Conn::into_halves`].
     pub fn from_halves(r: ReadHalf, w: WriteHalf) -> Conn {
-        Conn { reader: r.reader, writer: w.writer }
+        Conn { reader: r.reader, writer: w.writer, ctl: r.ctl }
     }
 }
 
 /// The receive side of a split [`Conn`].
 pub struct ReadHalf {
     reader: BufReader<Box<dyn Read + Send>>,
+    ctl: SockCtl,
 }
 
 impl ReadHalf {
     pub fn recv(&mut self) -> Result<(u8, Vec<u8>)> {
         read_frame(&mut self.reader)
+    }
+
+    /// Deadline receive for the pump's reader threads: like
+    /// [`Conn::recv_deadline`] but write-free — HEARTBEAT frames are
+    /// returned to the caller (the pump answers pings through the write
+    /// halves it owns), and no pings are sent while waiting. Errors if no
+    /// frame at all arrives within `timeout`; the socket is back in plain
+    /// blocking mode on return.
+    pub fn recv_deadline(&mut self, timeout: Duration) -> Result<(u8, Vec<u8>)> {
+        let slice = (timeout / 4).max(Duration::from_millis(10));
+        let deadline = Instant::now() + timeout;
+        let res = loop {
+            self.ctl.set_read_timeout(Some(slice)).context("arming read deadline")?;
+            let mut magic = [0u8; 1];
+            match self.reader.read_exact(&mut magic) {
+                Ok(()) => {
+                    self.ctl.set_read_timeout(Some(timeout)).context("arming read deadline")?;
+                    break read_frame_after_magic(magic[0], &mut self.reader);
+                }
+                Err(e) if is_timeout(&e) => {
+                    if Instant::now() >= deadline {
+                        break Err(anyhow!(
+                            "peer unresponsive: no traffic for {:.1}s",
+                            timeout.as_secs_f64()
+                        ));
+                    }
+                }
+                Err(e) => break Err(anyhow!(e).context("reading frame header")),
+            }
+        };
+        self.ctl.set_read_timeout(None).context("clearing read deadline")?;
+        res
     }
 }
 
@@ -570,6 +746,11 @@ pub struct DistSetup {
     pub cfg: TrainConfig,
     pub layer_lo: usize,
     pub layer_hi: usize,
+    /// First epoch this run will execute. 0 for a fresh run; a resumed or
+    /// recovered run sets the checkpoint epoch, telling the worker to
+    /// refresh step sizes on its pristine init chain immediately, start
+    /// its epoch counter here, and await a STATE download before training.
+    pub start_epoch: usize,
 }
 
 impl DistSetup {
@@ -581,6 +762,7 @@ impl DistSetup {
             ("cfg", self.cfg.to_json()),
             ("layer_lo", Json::num(self.layer_lo as f64)),
             ("layer_hi", Json::num(self.layer_hi as f64)),
+            ("start_epoch", Json::num(self.start_epoch as f64)),
         ])
     }
 
@@ -592,6 +774,8 @@ impl DistSetup {
             cfg: TrainConfig::from_json(v.req("cfg")?)?,
             layer_lo: v.req("layer_lo")?.as_usize().ok_or_else(|| anyhow!("layer_lo"))?,
             layer_hi: v.req("layer_hi")?.as_usize().ok_or_else(|| anyhow!("layer_hi"))?,
+            // absent on the wire before the fault-tolerance protocol rev
+            start_epoch: v.get("start_epoch").and_then(Json::as_usize).unwrap_or(0),
         })
     }
 }
@@ -645,6 +829,19 @@ impl Transport for InProcessTransport {
     }
 }
 
+/// Fault-tolerance options for a distributed run
+/// ([`SocketTransport::spawn_opts`] / [`SocketTransport::connect_opts`]).
+#[derive(Clone, Debug, Default)]
+pub struct RunOptions {
+    /// Restart from this `pdadmm-checkpoint-v1` directory (validated
+    /// against the run's config digest and dataset spec before any worker
+    /// is spawned).
+    pub resume: Option<std::path::PathBuf>,
+    /// Write checkpoints during the run; also the recovery source after a
+    /// worker loss.
+    pub checkpoint: Option<CheckpointCfg>,
+}
+
 /// The cross-process runtime: drives worker processes over framed sockets
 /// and mirrors their state for evaluation.
 pub struct SocketTransport {
@@ -656,6 +853,10 @@ pub struct SocketTransport {
     mirror: Vec<LayerState>,
     ds: Dataset,
     cfg: TrainConfig,
+    /// Retained for recovery + checkpoint manifests: the respawned fleet
+    /// must receive bitwise the SETUP the original fleet got.
+    spec: DatasetSpec,
+    hops: usize,
     backend: Arc<dyn ComputeBackend>,
     epoch: usize,
     synced: bool,
@@ -663,6 +864,13 @@ pub struct SocketTransport {
     /// the workers' STATS frames, re-solves on interval epochs, and
     /// broadcasts the resulting PLAN frame before the next epoch.
     adapt: Option<AdaptController>,
+    /// Respawn recipe for deterministic recovery. `None` in connect mode:
+    /// the coordinator cannot respawn workers it did not spawn, so a
+    /// worker loss propagates as an error there.
+    spawner: Option<Box<dyn FnMut(&str) -> Result<Child> + Send>>,
+    /// Checkpoint destination + cadence (None = checkpointing disabled;
+    /// recovery then restarts from epoch 0).
+    checkpoint: Option<CheckpointCfg>,
     /// Evaluate objective/accuracy every epoch (disable for pure timing —
     /// measured epochs add one state upload per worker).
     pub measure: bool,
@@ -679,15 +887,33 @@ impl SocketTransport {
         hops: usize,
         cfg: TrainConfig,
         workers: usize,
-        mut spawn_worker: impl FnMut(&str) -> Result<Child>,
+        spawn_worker: impl FnMut(&str) -> Result<Child> + Send + 'static,
     ) -> Result<SocketTransport> {
+        Self::spawn_opts(spec, hops, cfg, workers, spawn_worker, RunOptions::default())
+    }
+
+    /// [`SocketTransport::spawn`] with fault-tolerance options: resume
+    /// from a checkpoint and/or write checkpoints as the run progresses.
+    /// The spawner is retained, so a worker lost mid-run is respawned and
+    /// the run recovers deterministically (see the module docs).
+    pub fn spawn_opts(
+        spec: &DatasetSpec,
+        hops: usize,
+        cfg: TrainConfig,
+        workers: usize,
+        spawn_worker: impl FnMut(&str) -> Result<Child> + Send + 'static,
+        opts: RunOptions,
+    ) -> Result<SocketTransport> {
+        let mut spawner: Box<dyn FnMut(&str) -> Result<Child> + Send> = Box::new(spawn_worker);
+        let resume = Self::load_resume(&opts, spec, &cfg)?;
+        let start_epoch = resume.as_ref().map_or(0, |c| c.epoch);
         let workers = workers.clamp(1, cfg.layers);
         let listener = TcpListener::bind("127.0.0.1:0").context("binding loopback listener")?;
         let addr = listener.local_addr()?.to_string();
         listener.set_nonblocking(true)?;
         let mut children = Vec::with_capacity(workers);
         for _ in 0..workers {
-            match spawn_worker(&addr) {
+            match spawner(&addr) {
                 Ok(c) => children.push(c),
                 Err(e) => {
                     reap_children(&mut children);
@@ -702,7 +928,28 @@ impl SocketTransport {
                 return Err(e);
             }
         };
-        Self::handshake(conns, children, spec, hops, cfg)
+        let mut t = Self::handshake(conns, children, spec, hops, cfg, start_epoch)?;
+        t.spawner = Some(spawner);
+        t.checkpoint = opts.checkpoint;
+        if let Some(ck) = &resume {
+            t.install_resume(ck)?;
+        }
+        Ok(t)
+    }
+
+    /// Load and validate the `--resume` checkpoint, if any — before any
+    /// worker is spawned, so a stale or mismatched checkpoint is a clean
+    /// error instead of a silently diverging run.
+    fn load_resume(
+        opts: &RunOptions,
+        spec: &DatasetSpec,
+        cfg: &TrainConfig,
+    ) -> Result<Option<Checkpoint>> {
+        let Some(dir) = &opts.resume else { return Ok(None) };
+        let ck = checkpoint::load(dir)
+            .with_context(|| format!("loading resume checkpoint {}", dir.display()))?;
+        ck.check_run(cfg, spec)?;
+        Ok(Some(ck))
     }
 
     /// Accept exactly `workers` connections, polling for early child exits.
@@ -744,6 +991,20 @@ impl SocketTransport {
         cfg: TrainConfig,
         addrs: &[String],
     ) -> Result<SocketTransport> {
+        Self::connect_opts(spec, hops, cfg, addrs, RunOptions::default())
+    }
+
+    /// [`SocketTransport::connect`] with fault-tolerance options. Resume
+    /// and checkpointing work as in spawn mode, but a lost worker cannot
+    /// be respawned (the coordinator did not start it), so worker loss
+    /// propagates as an error; restart the run with `--resume` instead.
+    pub fn connect_opts(
+        spec: &DatasetSpec,
+        hops: usize,
+        cfg: TrainConfig,
+        addrs: &[String],
+        opts: RunOptions,
+    ) -> Result<SocketTransport> {
         if addrs.is_empty() {
             return Err(anyhow!("need at least one worker address"));
         }
@@ -754,11 +1015,20 @@ impl SocketTransport {
                 cfg.layers
             ));
         }
+        let resume = Self::load_resume(&opts, spec, &cfg)?;
+        let start_epoch = resume.as_ref().map_or(0, |c| c.epoch);
         let mut conns = Vec::with_capacity(addrs.len());
         for a in addrs {
-            conns.push(Conn::dial(a).with_context(|| format!("connecting to worker {a}"))?);
+            let c = Conn::dial(a, cfg.peer_timeout())
+                .with_context(|| format!("connecting to worker {a}"))?;
+            conns.push(c);
         }
-        Self::handshake(conns, Vec::new(), spec, hops, cfg)
+        let mut t = Self::handshake(conns, Vec::new(), spec, hops, cfg, start_epoch)?;
+        t.checkpoint = opts.checkpoint;
+        if let Some(ck) = &resume {
+            t.install_resume(ck)?;
+        }
+        Ok(t)
     }
 
     /// Run the fallible setup exchange; on error the spawned children are
@@ -769,8 +1039,9 @@ impl SocketTransport {
         spec: &DatasetSpec,
         hops: usize,
         cfg: TrainConfig,
+        start_epoch: usize,
     ) -> Result<SocketTransport> {
-        match Self::handshake_inner(conns, spec, hops, cfg) {
+        match Self::handshake_inner(conns, spec, hops, cfg, start_epoch) {
             Ok(mut transport) => {
                 transport.children = children;
                 Ok(transport)
@@ -787,6 +1058,7 @@ impl SocketTransport {
         spec: &DatasetSpec,
         hops: usize,
         cfg: TrainConfig,
+        start_epoch: usize,
     ) -> Result<SocketTransport> {
         if cfg.backend != BackendKind::Native {
             return Err(anyhow!(
@@ -821,11 +1093,18 @@ impl SocketTransport {
                 cfg: cfg.clone(),
                 layer_lo: blocks[w].0,
                 layer_hi: blocks[w].1,
+                start_epoch,
             };
             conn.send(frame_kind::SETUP, setup.to_json().to_string_compact().as_bytes())?;
         }
+        // a worker rebuilds its dataset before answering — single-threaded,
+        // so it cannot trade heartbeats meanwhile; the READY deadline is
+        // therefore generous and independent of the steady-state timeout
+        let ready_deadline = cfg.peer_timeout().max(Duration::from_secs(120));
         for (w, conn) in conns.iter_mut().enumerate() {
-            let (k, payload) = conn.recv().with_context(|| format!("worker {w} handshake"))?;
+            let (k, payload) = conn
+                .recv_deadline(ready_deadline)
+                .with_context(|| format!("worker {w} handshake"))?;
             match k {
                 frame_kind::READY => {}
                 frame_kind::ERROR => {
@@ -844,10 +1123,14 @@ impl SocketTransport {
             mirror,
             ds,
             cfg,
+            spec: spec.clone(),
+            hops,
             backend: Arc::new(NativeBackend::default()),
-            epoch: 0,
+            epoch: start_epoch,
             synced: true,
             adapt,
+            spawner: None,
+            checkpoint: None,
             measure: true,
         })
     }
@@ -865,12 +1148,37 @@ impl SocketTransport {
     /// pump (`--schedule pipelined`), then snapshot aggregation and (when
     /// measuring) a mirror sync + the same evaluation path as the
     /// in-process trainer.
+    ///
+    /// On a worker failure — crash, disconnect, or a stall longer than
+    /// `--peer-timeout` — a spawn-mode coordinator recovers: respawn the
+    /// fleet, reload the last checkpoint (or epoch 0 without one), and
+    /// silently re-run up to the interrupted epoch, whose record is then
+    /// returned. Determinism makes the recovered trace bitwise the
+    /// uninterrupted one. Connect-mode runs propagate the error.
     pub fn run_epoch(&mut self) -> Result<EpochRecord> {
-        if self.cfg.schedule == ScheduleMode::Pipelined {
-            return self.run_epoch_pipelined();
+        let target = self.epoch;
+        match self.run_epoch_guarded() {
+            Ok(rec) => Ok(rec),
+            Err(cause) => self.recover_and_rerun(target, cause),
         }
+    }
+
+    /// One epoch without the recovery wrapper: schedule dispatch plus the
+    /// checkpoint cadence.
+    fn run_epoch_guarded(&mut self) -> Result<EpochRecord> {
+        let rec = if self.cfg.schedule == ScheduleMode::Pipelined {
+            self.run_epoch_pipelined()?
+        } else {
+            self.run_epoch_barrier()?
+        };
+        self.maybe_checkpoint()?;
+        Ok(rec)
+    }
+
+    fn run_epoch_barrier(&mut self) -> Result<EpochRecord> {
         let t0 = Instant::now();
         self.synced = false;
+        let timeout = self.cfg.peer_timeout();
         let mut phase_ms = [0.0f64; Phase::COUNT];
         for ph in Phase::ALL {
             let pt = Instant::now();
@@ -880,7 +1188,7 @@ impl SocketTransport {
             let mut relays: Vec<(usize, Vec<u8>)> = Vec::new();
             for w in 0..self.conns.len() {
                 loop {
-                    let (k, payload) = self.conns[w].recv()?;
+                    let (k, payload) = self.conns[w].recv_deadline(timeout)?;
                     match k {
                         frame_kind::PHASE_DONE => break,
                         frame_kind::VAR => {
@@ -938,6 +1246,7 @@ impl SocketTransport {
         self.synced = false;
         let epoch = self.epoch as u64;
         let n = self.conns.len();
+        let timeout = self.cfg.peer_timeout();
         let (mut readers, mut writers): (Vec<ReadHalf>, Vec<WriteHalf>) =
             std::mem::take(&mut self.conns).into_iter().map(Conn::into_halves).unzip();
         let pumped: Result<()> = std::thread::scope(|s| {
@@ -945,7 +1254,7 @@ impl SocketTransport {
             for (w, r) in readers.iter_mut().enumerate() {
                 let tx = tx.clone();
                 s.spawn(move || loop {
-                    match r.recv() {
+                    match r.recv_deadline(timeout) {
                         Ok((k, payload)) => {
                             // PHASE_DONE / ERROR is the worker's last frame
                             // this epoch — stop so the scope can join
@@ -980,6 +1289,17 @@ impl SocketTransport {
                             .and_then(|t| writers[t].send(frame_kind::BOUNDARY, &payload));
                         if let Err(e) = relayed {
                             failure.get_or_insert(e);
+                        }
+                    }
+                    Ok((frame_kind::HEARTBEAT, p)) => {
+                        // a worker blocked in a staleness wait probes us:
+                        // answer pings so its deadline refreshes (pongs
+                        // need no reply and already counted as traffic)
+                        if p.first() == Some(&HEARTBEAT_PING) {
+                            let pong = &[HEARTBEAT_PONG];
+                            if let Err(e) = writers[w].send(frame_kind::HEARTBEAT, pong) {
+                                failure.get_or_insert(e);
+                            }
                         }
                     }
                     Ok((frame_kind::ERROR, payload)) => {
@@ -1025,12 +1345,13 @@ impl SocketTransport {
         // under adaptive quantization, the per-worker boundary stats —
         // each worker sends STATS immediately before its SNAPSHOT)
         let mut comm = CommSnapshot::default();
+        let timeout = self.cfg.peer_timeout();
         for conn in &mut self.conns {
             conn.send(frame_kind::EPOCH_END, &[])?;
         }
         for w in 0..self.conns.len() {
             if self.adapt.is_some() {
-                let (k, payload) = self.conns[w].recv()?;
+                let (k, payload) = self.conns[w].recv_deadline(timeout)?;
                 match k {
                     frame_kind::STATS => {
                         self.adapt.as_mut().unwrap().absorb_stats_payload(&payload)?
@@ -1044,7 +1365,7 @@ impl SocketTransport {
                     other => return Err(anyhow!("expected STATS from worker {w}, got {other}")),
                 }
             }
-            let (k, payload) = self.conns[w].recv()?;
+            let (k, payload) = self.conns[w].recv_deadline(timeout)?;
             match k {
                 frame_kind::SNAPSHOT => comm.add(&parse_snapshot(&payload)?),
                 frame_kind::ERROR => {
@@ -1095,12 +1416,13 @@ impl SocketTransport {
         if self.synced {
             return Ok(());
         }
+        let timeout = self.cfg.peer_timeout();
         for conn in &mut self.conns {
             conn.send(frame_kind::EVAL, &[])?;
         }
         for w in 0..self.conns.len() {
             loop {
-                let (k, payload) = self.conns[w].recv()?;
+                let (k, payload) = self.conns[w].recv_deadline(timeout)?;
                 match k {
                     frame_kind::STATE_DONE => break,
                     frame_kind::STATE => self.apply_state(&payload)?,
@@ -1154,6 +1476,11 @@ impl SocketTransport {
         self.conns.len()
     }
 
+    /// Next epoch to execute (> 0 after a `--resume` restore).
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
     /// Current logits over the full graph (forces a mirror sync).
     pub fn logits(&mut self) -> Result<Mat> {
         self.sync_mirror()?;
@@ -1188,7 +1515,207 @@ impl SocketTransport {
         }
         Ok(())
     }
+
+    /// Write a checkpoint when the cadence hits. Runs after the epoch
+    /// counter advanced past the finished epoch, so the stored epoch is
+    /// the next one to execute and the stored quant plan is the one in
+    /// force for it (an interval-epoch re-plan has already happened).
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        let Some(ck) = self.checkpoint.clone() else { return Ok(()) };
+        if ck.interval == 0 || self.epoch % ck.interval != 0 {
+            return Ok(());
+        }
+        self.sync_mirror()?;
+        let epoch = self.epoch;
+        let plan = self.adapt.as_ref().map(|a| a.plan_payload());
+        checkpoint::write(&ck.dir, epoch, &self.mirror, plan.as_deref(), &self.cfg, &self.spec)
+            .with_context(|| format!("writing checkpoint at epoch {epoch}"))?;
+        Ok(())
+    }
+
+    /// Overlay a validated checkpoint onto this freshly handshaken
+    /// transport: mirror state, the checkpointed quant plan (re-broadcast
+    /// so the workers adopt it), and a full chain download to every
+    /// worker.
+    fn install_resume(&mut self, ck: &Checkpoint) -> Result<()> {
+        // the mirror's tau/theta stay at their init values on purpose:
+        // evaluation (measure_record) uses nu/rho only, and each worker
+        // refreshes its own step sizes from the pristine chain — so the
+        // coordinator skips a pointless spectral-norm pass here
+        ck.install(&mut self.mirror)?;
+        if let Some(adapt) = &mut self.adapt {
+            if let Some(plan) = &ck.plan {
+                adapt.apply_plan_payload(plan).context("installing checkpointed quant plan")?;
+                for conn in &mut self.conns {
+                    conn.send(frame_kind::PLAN, plan)?;
+                }
+            }
+        }
+        self.push_state()?;
+        self.synced = true;
+        Ok(())
+    }
+
+    /// Download the full mirrored chain to every worker as STATE frames
+    /// (coordinator → worker, the reverse of the EVAL upload), closed by
+    /// STATE_DONE. Every worker gets every layer: it needs its neighbors'
+    /// boundary tensors too, and trims to its owned block on STATE_DONE.
+    fn push_state(&mut self) -> Result<()> {
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        for (l, ls) in self.mirror.iter().enumerate() {
+            let mut stage = |slot: u8, m: &Mat| {
+                let enc = quant::encode(Codec::None, m);
+                let mut payload = Vec::with_capacity(5 + enc.wire_bytes() as usize);
+                payload.extend_from_slice(&(l as u32).to_le_bytes());
+                payload.push(slot);
+                enc.write_wire(&mut payload);
+                frames.push(payload);
+            };
+            stage(0, &ls.w);
+            stage(1, &ls.b);
+            stage(2, &ls.z);
+            if l > 0 {
+                stage(3, &ls.p); // p_1 = X never changes; skip the download
+            }
+            if let Some(q) = &ls.q {
+                stage(4, q);
+            }
+            if let Some(u) = &ls.u {
+                stage(5, u);
+            }
+        }
+        for conn in &mut self.conns {
+            for f in &frames {
+                conn.send(frame_kind::STATE, f)?;
+            }
+            conn.send(frame_kind::STATE_DONE, &[])?;
+        }
+        Ok(())
+    }
+
+    /// Tear down the lost fleet and rebuild it from the last on-disk
+    /// checkpoint (or a pristine epoch-0 chain when none exists yet).
+    fn recover(&mut self) -> Result<()> {
+        self.conns.clear();
+        reap_children(&mut self.children);
+        let mut spawner = self.spawner.take().ok_or_else(|| anyhow!("no respawn recipe"))?;
+        match self.rebuild_fleet(&mut spawner) {
+            Ok(mut fresh) => {
+                fresh.spawner = Some(spawner);
+                // the replaced value drops harmlessly: conns and children
+                // were cleared above
+                *self = fresh;
+                Ok(())
+            }
+            Err(e) => {
+                self.spawner = Some(spawner);
+                Err(e)
+            }
+        }
+    }
+
+    /// Respawn + handshake + checkpoint restore for [`Self::recover`] —
+    /// factored out so `recover` reinstalls the spawner whichever way
+    /// this goes.
+    fn rebuild_fleet(
+        &mut self,
+        spawner: &mut (dyn FnMut(&str) -> Result<Child> + Send),
+    ) -> Result<SocketTransport> {
+        let resume = match &self.checkpoint {
+            Some(ck) if ck.dir.join(checkpoint::MANIFEST_FILE).exists() => {
+                let loaded = checkpoint::load(&ck.dir)
+                    .with_context(|| format!("reloading checkpoint {}", ck.dir.display()))?;
+                loaded.check_run(&self.cfg, &self.spec)?;
+                Some(loaded)
+            }
+            _ => None,
+        };
+        let start_epoch = resume.as_ref().map_or(0, |c| c.epoch);
+        let workers = self.blocks.len();
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding loopback listener")?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let mut children = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            match spawner(&addr) {
+                Ok(c) => children.push(c),
+                Err(e) => {
+                    reap_children(&mut children);
+                    return Err(e);
+                }
+            }
+        }
+        let conns = match Self::accept_workers(&listener, &mut children, workers) {
+            Ok(conns) => conns,
+            Err(e) => {
+                reap_children(&mut children);
+                return Err(e);
+            }
+        };
+        let spec = self.spec.clone();
+        let cfg = self.cfg.clone();
+        let mut fresh = Self::handshake(conns, children, &spec, self.hops, cfg, start_epoch)?;
+        fresh.checkpoint = self.checkpoint.clone();
+        fresh.measure = self.measure;
+        if let Some(ck) = &resume {
+            fresh.install_resume(ck)?;
+        }
+        Ok(fresh)
+    }
+
+    /// Recovery driver behind [`SocketTransport::run_epoch`]: rebuild the
+    /// fleet and silently re-run epochs until the interrupted one
+    /// completes, returning its record.
+    fn recover_and_rerun(&mut self, target: usize, cause: anyhow::Error) -> Result<EpochRecord> {
+        if self.spawner.is_none() {
+            return Err(cause.context(
+                "a worker failed and this coordinator cannot respawn externally started workers",
+            ));
+        }
+        let mut cause = cause;
+        for attempt in 1..=MAX_RECOVERY_ATTEMPTS {
+            eprintln!(
+                "worker failure at epoch {target} ({cause:#}); \
+                 recovery attempt {attempt}/{MAX_RECOVERY_ATTEMPTS}"
+            );
+            match self.recover().and_then(|()| self.rerun_to(target)) {
+                Ok(rec) => return Ok(rec),
+                Err(e) => cause = e,
+            }
+        }
+        Err(cause.context(format!("giving up after {MAX_RECOVERY_ATTEMPTS} recovery attempts")))
+    }
+
+    /// Re-run epochs from the recovered state up to and including
+    /// `target`. Each epoch is deterministic in chain state and config,
+    /// so the replayed records are bitwise the lost ones.
+    fn rerun_to(&mut self, target: usize) -> Result<EpochRecord> {
+        loop {
+            let rec = self.run_epoch_guarded()?;
+            if self.epoch > target {
+                return Ok(rec);
+            }
+        }
+    }
+
+    /// OS pids of the spawned worker processes (empty in connect mode) —
+    /// fault-injection hook for the integration tests.
+    pub fn worker_pids(&self) -> Vec<u32> {
+        self.children.iter().map(Child::id).collect()
+    }
+
+    /// Kill worker `idx` without reaping it (fault-injection hook: the
+    /// coordinator must notice the loss through the protocol, not here).
+    pub fn kill_worker(&mut self, idx: usize) -> Result<()> {
+        let c = self.children.get_mut(idx).ok_or_else(|| anyhow!("no spawned worker {idx}"))?;
+        c.kill().context("killing worker")?;
+        Ok(())
+    }
 }
+
+/// How many times [`SocketTransport::run_epoch`] rebuilds the fleet for a
+/// single interrupted epoch before giving up and propagating the failure.
+const MAX_RECOVERY_ATTEMPTS: usize = 3;
 
 /// Kill and reap worker children (error-path cleanup: never leave orphan
 /// processes behind a failed spawn or handshake).
@@ -1314,6 +1841,7 @@ mod tests {
             cfg: TrainConfig::new("t", 8, 4, 2),
             layer_lo: 1,
             layer_hi: 3,
+            start_epoch: 5,
         };
         let text = setup.to_json().to_string_compact();
         let back = DistSetup::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
@@ -1322,6 +1850,18 @@ mod tests {
         assert_eq!(back.threads, 3);
         assert_eq!(back.cfg.layers, 4);
         assert_eq!((back.layer_lo, back.layer_hi), (1, 3));
+        assert_eq!(back.start_epoch, 5);
+
+        // SETUP frames from before the fault-tolerance protocol rev have
+        // no start_epoch key: parse as a fresh run
+        let legacy = match crate::util::json::parse(&text).unwrap() {
+            Json::Obj(kvs) => {
+                Json::Obj(kvs.into_iter().filter(|(k, _)| k != "start_epoch").collect())
+            }
+            other => other,
+        };
+        let back = DistSetup::from_json(&legacy).unwrap();
+        assert_eq!(back.start_epoch, 0);
     }
 
     #[test]
@@ -1338,6 +1878,7 @@ mod tests {
             cfg: TrainConfig::new("disk", 8, 4, 2),
             layer_lo: 0,
             layer_hi: 2,
+            start_epoch: 0,
         };
         let text = setup.to_json().to_string_compact();
         let back = DistSetup::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
@@ -1348,5 +1889,64 @@ mod tests {
             }
             other => panic!("expected on-disk, got {other:?}"),
         }
+    }
+
+    /// A connected loopback [`Conn`] pair for liveness tests.
+    fn loopback_pair() -> (Conn, Conn) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (Conn::from_tcp(client).unwrap(), Conn::from_tcp(server).unwrap())
+    }
+
+    #[test]
+    fn recv_deadline_detects_a_silent_peer_and_pings_meanwhile() {
+        let (mut a, mut b) = loopback_pair();
+        let t0 = Instant::now();
+        let err = a.recv_deadline(Duration::from_millis(200)).unwrap_err();
+        assert!(format!("{err:#}").contains("unresponsive"), "{err:#}");
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        // the waiter probed its peer while waiting
+        let (k, p) = b.recv().unwrap();
+        assert_eq!(k, frame_kind::HEARTBEAT);
+        assert_eq!(p, vec![HEARTBEAT_PING]);
+    }
+
+    #[test]
+    fn recv_deadline_skips_heartbeats_and_answers_pings() {
+        let (mut a, mut b) = loopback_pair();
+        b.send(frame_kind::HEARTBEAT, &[HEARTBEAT_PING]).unwrap();
+        b.send(frame_kind::PHASE_DONE, &[]).unwrap();
+        let (k, _) = a.recv_deadline(Duration::from_secs(5)).unwrap();
+        assert_eq!(k, frame_kind::PHASE_DONE);
+        let (k, p) = b.recv().unwrap();
+        assert_eq!(k, frame_kind::HEARTBEAT);
+        assert_eq!(p, vec![HEARTBEAT_PONG]);
+        // the deadline is cleared on return: plain blocking reads work
+        b.send(frame_kind::EPOCH_END, &[]).unwrap();
+        let (k, _) = a.recv().unwrap();
+        assert_eq!(k, frame_kind::EPOCH_END);
+    }
+
+    #[test]
+    fn read_half_deadline_returns_heartbeats_to_the_pump() {
+        let (a, mut b) = loopback_pair();
+        let (mut ra, _wa) = a.into_halves();
+        b.send(frame_kind::HEARTBEAT, &[HEARTBEAT_PING]).unwrap();
+        let (k, p) = ra.recv_deadline(Duration::from_secs(5)).unwrap();
+        assert_eq!(k, frame_kind::HEARTBEAT);
+        assert_eq!(p, vec![HEARTBEAT_PING]);
+        // the write-free half times out without manufacturing traffic
+        let err = ra.recv_deadline(Duration::from_millis(150)).unwrap_err();
+        assert!(format!("{err:#}").contains("unresponsive"), "{err:#}");
+    }
+
+    #[test]
+    fn dial_respects_the_caller_timeout() {
+        let t0 = Instant::now();
+        let err = Conn::dial("127.0.0.1:1", Duration::from_millis(200));
+        assert!(err.is_err(), "dialing a closed port should fail");
+        assert!(t0.elapsed() < Duration::from_secs(10));
     }
 }

@@ -32,6 +32,15 @@
 //! see [`crate::coordinator::phases::TaskDep::Boundary`]). At staleness 0
 //! this realizes exactly the barrier dataflow, so the numerics and byte
 //! totals stay bitwise identical.
+//!
+//! A SETUP frame with `start_epoch > 0` marks a resumed (or recovered)
+//! run: the worker refreshes step sizes on the pristine full chain right
+//! away, then holds the chain untrimmed until the coordinator's
+//! checkpoint download (STATE frames, the reverse of the EVAL upload)
+//! lands with STATE_DONE. HEARTBEAT pings from the coordinator are
+//! answered between commands, and the pipelined boundary waits are
+//! deadline-aware (`--peer-timeout`), so a dead peer is detected instead
+//! of wedging the process.
 
 use crate::admm::state::{self, LayerState};
 use crate::admm::updates::zlast_lr;
@@ -54,7 +63,7 @@ pub fn listen(addr: &str) -> Result<()> {
 
 /// Dial the coordinator at `addr` and serve the session to completion.
 pub fn connect(addr: &str) -> Result<()> {
-    serve(Conn::dial(addr)?)
+    serve(Conn::dial(addr, transport::DEFAULT_PEER_TIMEOUT)?)
 }
 
 fn serve(mut conn: Conn) -> Result<()> {
@@ -97,6 +106,17 @@ fn serve(mut conn: Conn) -> Result<()> {
             // finished its epoch — store it for the next epoch's waits
             frame_kind::BOUNDARY => st.apply_boundary(&payload),
             frame_kind::ABORT => Err(anyhow!("coordinator aborted the session")),
+            // the coordinator probes liveness between commands; pongs
+            // answer pings this worker sent from a deadline wait
+            frame_kind::HEARTBEAT => match payload.first() {
+                Some(&transport::HEARTBEAT_PING) => {
+                    conn.send(frame_kind::HEARTBEAT, &[transport::HEARTBEAT_PONG])
+                }
+                _ => Ok(()),
+            },
+            // checkpoint download of a resumed run (SETUP start_epoch > 0)
+            frame_kind::STATE => st.apply_state_download(&payload),
+            frame_kind::STATE_DONE => st.finish_state_download(),
             frame_kind::EPOCH_END => {
                 // adaptive runs ship this epoch's boundary stats ahead of
                 // the comm snapshot; the coordinator merges them and (on
@@ -147,6 +167,11 @@ struct WorkerState {
     /// per-layer plan (replaced by coordinator PLAN frames) plus this
     /// block's boundary statistics, shipped at every EPOCH_END.
     adapt: Option<AdaptController>,
+    /// True between a `start_epoch > 0` SETUP and the STATE_DONE that
+    /// closes the coordinator's checkpoint download — the only window in
+    /// which coordinator → worker STATE frames are legal. The chain stays
+    /// untrimmed until the download lands.
+    awaiting_state: bool,
 }
 
 impl WorkerState {
@@ -159,7 +184,7 @@ impl WorkerState {
         // a worker can never train on different bytes than the coordinator
         let ds = datasets::build(&setup.spec, setup.hops, threads)
             .with_context(|| format!("rebuilding dataset {:?}", setup.spec.name()))?;
-        let layers = phases::build_chain(&ds, &setup.cfg, threads);
+        let mut layers = phases::build_chain(&ds, &setup.cfg, threads);
         let n = layers.len();
         if setup.layer_lo >= setup.layer_hi || setup.layer_hi > n {
             return Err(anyhow!(
@@ -176,6 +201,16 @@ impl WorkerState {
         } else {
             None
         };
+        let start = setup.start_epoch;
+        if start > 0 {
+            // a resumed run: the epoch-0 step-size refresh happens now, on
+            // the pristine full chain (checkpoints never store tau/theta —
+            // both are epoch-invariant functions of this chain + seed).
+            // The STATE download that follows overlays the checkpointed
+            // tensors; trimming waits for its STATE_DONE.
+            let c = &setup.cfg;
+            state::refresh_step_sizes(&mut layers, c.nu, c.rho, c.seed);
+        }
         Ok(WorkerState {
             // one compute thread per worker process: model parallelism comes
             // from the processes themselves (numerics are thread-invariant)
@@ -186,10 +221,13 @@ impl WorkerState {
             lo: setup.layer_lo,
             hi: setup.layer_hi,
             meter: CommMeter::new(),
-            epoch: 0,
-            mb_tags: [0; 3],
+            epoch: start,
+            // a mailbox tensor in an epoch-c checkpoint was produced
+            // during epoch c-1, so it carries tag c (0 on a fresh run)
+            mb_tags: [start as u64; 3],
             wps: (0..n).map(|_| None).collect(),
             adapt,
+            awaiting_state: start > 0,
         })
     }
 
@@ -226,6 +264,47 @@ impl WorkerState {
                 layer.u = None;
             }
         }
+    }
+
+    /// Install one coordinator STATE frame of a resume's checkpoint
+    /// download into the full (still untrimmed) chain.
+    fn apply_state_download(&mut self, payload: &[u8]) -> Result<()> {
+        if !self.awaiting_state {
+            return Err(anyhow!("unexpected STATE download outside a resume handshake"));
+        }
+        if payload.len() < 5 {
+            return Err(anyhow!("STATE frame of {} bytes is too short", payload.len()));
+        }
+        let layer = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+        let slot = payload[4];
+        if layer >= self.layers.len() {
+            return Err(anyhow!("STATE for unknown layer {layer}"));
+        }
+        let enc = quant::read_wire(Codec::None, &payload[5..])?;
+        let l = &mut self.layers[layer];
+        let dst = match slot {
+            0 => &mut l.w,
+            1 => &mut l.b,
+            2 => &mut l.z,
+            3 => &mut l.p,
+            4 => l.q.get_or_insert_with(|| Mat::zeros(0, 0)),
+            5 => l.u.get_or_insert_with(|| Mat::zeros(0, 0)),
+            other => return Err(anyhow!("unknown state slot {other}")),
+        };
+        quant::decode_into(&enc, dst);
+        Ok(())
+    }
+
+    /// End of the checkpoint download: the chain now matches the
+    /// coordinator's mirror, so trim to the owned block + mailboxes —
+    /// the residency a fresh run reaches after its epoch-0 refresh.
+    fn finish_state_download(&mut self) -> Result<()> {
+        if !self.awaiting_state {
+            return Err(anyhow!("STATE_DONE outside a resume handshake"));
+        }
+        self.awaiting_state = false;
+        self.trim_non_owned();
+        Ok(())
     }
 
     /// Store a neighbor tensor arriving as a VAR frame into its mailbox
@@ -305,9 +384,14 @@ impl WorkerState {
     /// Block on the coordinator connection until the mailbox for `var`
     /// holds a tensor with tag `>= min_tag`, applying every BOUNDARY
     /// frame that arrives in the meantime (other mailboxes included).
+    /// The wait is deadline-aware: it pings the coordinator (whose pump
+    /// answers) and errors after `--peer-timeout` of total silence, so a
+    /// dead coordinator or stalled neighbor cannot wedge this worker.
     fn wait_boundary(&mut self, conn: &mut Conn, var: u8, min_tag: u64) -> Result<()> {
+        let timeout = self.cfg.peer_timeout();
         while self.mb_tags[var as usize] < min_tag {
-            let (k, payload) = conn.recv().context("waiting for a BOUNDARY frame")?;
+            let (k, payload) =
+                conn.recv_deadline(timeout).context("waiting for a BOUNDARY frame")?;
             match k {
                 frame_kind::BOUNDARY => self.apply_boundary(&payload)?,
                 frame_kind::ABORT => {

@@ -9,8 +9,9 @@ use anyhow::Result;
 use pdadmm_g::backend;
 use pdadmm_g::cli::args::{Args, USAGE};
 use pdadmm_g::config::{BackendKind, QuantMode, RootConfig, ScheduleMode, TrainConfig};
+use pdadmm_g::coordinator::checkpoint::{self, CheckpointCfg};
 use pdadmm_g::coordinator::greedy::train_greedy;
-use pdadmm_g::coordinator::transport::{self, SocketTransport};
+use pdadmm_g::coordinator::transport::{self, RunOptions, SocketTransport};
 use pdadmm_g::coordinator::{serve, snapshot, worker, Trainer};
 use pdadmm_g::experiments::{self, serve_bench, ExpOptions};
 use pdadmm_g::graph::datasets;
@@ -226,6 +227,34 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
             .collect::<Result<Vec<_>, _>>()?;
     }
 
+    // Fault-tolerance knobs, validated up front like everything else. A
+    // checkpoint destination without an explicit cadence checkpoints
+    // after every epoch.
+    let peer_timeout = args.flags.get_or("peer-timeout", tc.peer_timeout_secs)?;
+    tc.peer_timeout_secs = pdadmm_g::config::check_peer_timeout(peer_timeout)?;
+    let checkpoint_dir = args.flags.get("checkpoint-dir").map(std::path::PathBuf::from);
+    tc.checkpoint_interval = match args.flags.get_parse::<usize>("checkpoint-interval")? {
+        Some(0) => return Err(anyhow::anyhow!("--checkpoint-interval must be at least 1")),
+        Some(n) => n,
+        None => usize::from(checkpoint_dir.is_some()),
+    };
+    if tc.checkpoint_interval > 0 && checkpoint_dir.is_none() {
+        return Err(anyhow::anyhow!("--checkpoint-interval requires --checkpoint-dir <dir>"));
+    }
+    let resume_dir = args.flags.get("resume").map(std::path::PathBuf::from);
+    if !tc.greedy_stages.is_empty() && (checkpoint_dir.is_some() || resume_dir.is_some()) {
+        return Err(anyhow::anyhow!(
+            "--checkpoint-dir/--resume are not supported with --greedy (the \
+             greedy protocol discards its chain after logging)"
+        ));
+    }
+    let run_opts = RunOptions {
+        resume: resume_dir.clone(),
+        checkpoint: checkpoint_dir
+            .as_ref()
+            .map(|dir| CheckpointCfg { dir: dir.clone(), interval: tc.checkpoint_interval }),
+    };
+
     // --- cross-process mode: spawned localhost workers (--distributed N)
     // or pre-started workers (--workers-at addr,addr) ---
     // `--distributed N` picks the worker-process count; a bare
@@ -246,7 +275,7 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
         if !tc.greedy_stages.is_empty() {
             return Err(anyhow::anyhow!("--greedy is not supported in distributed mode"));
         }
-        return train_distributed(cfg, &spec, tc, dist_workers, workers_at, args);
+        return train_distributed(cfg, &spec, tc, dist_workers, workers_at, run_opts, args);
     }
 
     let ds = if from_registry {
@@ -263,8 +292,14 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
     );
     let log = if tc.greedy_stages.is_empty() {
         let mut trainer = Trainer::new(backend, ds, tc);
+        if let Some(dir) = &resume_dir {
+            let ck = checkpoint::load(dir)?;
+            ck.check_run(&trainer.cfg, &spec)?;
+            trainer.restore(&ck)?;
+            println!("resuming from {} at epoch {}", dir.display(), ck.epoch);
+        }
         let mut log = pdadmm_g::metrics::TrainLog::default();
-        for e in 0..trainer.cfg.epochs {
+        for e in trainer.epoch..trainer.cfg.epochs {
             let rec = trainer.run_epoch();
             if e % 10 == 0 || e + 1 == trainer.cfg.epochs {
                 println!(
@@ -274,6 +309,7 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
                 );
             }
             log.push(rec);
+            maybe_checkpoint_inprocess(&trainer, checkpoint_dir.as_deref(), &spec)?;
         }
         log.method = if trainer.cfg.quant == QuantMode::None {
             "pdADMM-G".into()
@@ -307,6 +343,23 @@ fn cmd_train(cfg: &RootConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Epoch-boundary checkpoint for the in-process path (the socket
+/// transport has its own cadence hook).
+fn maybe_checkpoint_inprocess(
+    trainer: &Trainer,
+    dir: Option<&std::path::Path>,
+    spec: &pdadmm_g::config::DatasetSpec,
+) -> Result<()> {
+    let Some(dir) = dir else { return Ok(()) };
+    let interval = trainer.cfg.checkpoint_interval;
+    if interval == 0 || trainer.epoch % interval != 0 {
+        return Ok(());
+    }
+    let plan = trainer.adapt.as_ref().map(|a| a.plan_payload());
+    checkpoint::write(dir, trainer.epoch, &trainer.layers, plan.as_deref(), &trainer.cfg, spec)?;
+    Ok(())
+}
+
 /// Drive a full training run over the socket transport, printing the same
 /// per-epoch lines as the in-process path.
 fn train_distributed(
@@ -315,6 +368,7 @@ fn train_distributed(
     tc: TrainConfig,
     dist_workers: usize,
     workers_at: Option<Vec<String>>,
+    run_opts: RunOptions,
     args: &Args,
 ) -> Result<()> {
     let epochs = tc.epochs;
@@ -322,13 +376,14 @@ fn train_distributed(
     let method = if tc.quant == QuantMode::None { "pdADMM-G" } else { "pdADMM-G-Q" }.to_string();
     let (layers, hidden, seed) = (tc.layers, tc.hidden, tc.seed);
     let mut tr = match workers_at {
-        Some(addrs) => SocketTransport::connect(spec, cfg.hops, tc, &addrs)?,
-        None => SocketTransport::spawn(
+        Some(addrs) => SocketTransport::connect_opts(spec, cfg.hops, tc, &addrs, run_opts)?,
+        None => SocketTransport::spawn_opts(
             spec,
             cfg.hops,
             tc,
             dist_workers,
             transport::spawn_self_repro_worker,
+            run_opts,
         )?,
     };
     println!(
@@ -336,6 +391,10 @@ fn train_distributed(
         spec.name(),
         tr.workers(),
     );
+    let start = tr.epoch();
+    if start > 0 {
+        println!("resuming at epoch {start}");
+    }
     let mut log = pdadmm_g::metrics::TrainLog {
         method,
         dataset: spec.name().to_string(),
@@ -344,9 +403,9 @@ fn train_distributed(
         layers,
         hidden,
         seed,
-        records: Vec::with_capacity(epochs),
+        records: Vec::with_capacity(epochs.saturating_sub(start)),
     };
-    for e in 0..epochs {
+    for e in start..epochs {
         let rec = tr.run_epoch()?;
         if e % 10 == 0 || e + 1 == epochs {
             println!(

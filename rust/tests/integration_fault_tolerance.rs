@@ -1,0 +1,334 @@
+//! Fault-tolerance acceptance for the distributed runtime: a worker
+//! process SIGKILLed mid-run is respawned and the training trace stays
+//! **bitwise identical** to an uninterrupted run (barrier and pipelined
+//! schedules alike); a coordinator driving externally started workers
+//! reports the loss as a clean error instead of hanging; and a stalled
+//! (SIGSTOPped) peer is declared dead within the `--peer-timeout`
+//! liveness deadline, not at TCP keepalive timescales.
+//!
+//! Like `integration_schedule_parity.rs`, worker processes are *real* OS
+//! processes: the test re-executes its own binary filtered to
+//! [`worker_reentry`], which becomes a connecting worker when
+//! `PDADMM_TEST_WORKER_CONNECT` is set and a listening worker when
+//! `PDADMM_TEST_WORKER_LISTEN` is set. Every test body runs under a
+//! watchdog so a recovery bug fails fast instead of wedging CI.
+
+use pdadmm_g::backend::NativeBackend;
+use pdadmm_g::config::{
+    BackendKind, DatasetSpec, QuantMode, ScheduleMode, SyntheticSpec, TrainConfig,
+};
+use pdadmm_g::coordinator::checkpoint::CheckpointCfg;
+use pdadmm_g::coordinator::transport::{RunOptions, SocketTransport};
+use pdadmm_g::coordinator::Trainer;
+use pdadmm_g::graph::datasets;
+use pdadmm_g::metrics::EpochRecord;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const HOPS: usize = 2;
+const EPOCHS: usize = 3;
+
+fn tiny_spec() -> DatasetSpec {
+    DatasetSpec::Synthetic(SyntheticSpec {
+        name: "tiny-ft".into(),
+        nodes: 90,
+        avg_degree: 6.0,
+        classes: 3,
+        feat_dim: 8,
+        train: 45,
+        val: 20,
+        test: 25,
+        homophily_ratio: 8.0,
+        feature_signal: 1.5,
+        label_noise: 0.0,
+        seed: 13,
+    })
+}
+
+fn base_cfg(schedule: ScheduleMode) -> TrainConfig {
+    let mut tc = TrainConfig::new("tiny-ft", 10, 3, EPOCHS);
+    tc.nu = 0.01;
+    tc.rho = 1.0;
+    tc.quant = QuantMode::PQ { bits: 8 };
+    tc.seed = 11;
+    tc.backend = BackendKind::Native;
+    tc.schedule = schedule;
+    tc
+}
+
+/// Re-entry point for worker processes (see module doc). A normal test
+/// run (both env vars unset) is an instant no-op pass.
+#[test]
+fn worker_reentry() {
+    if let Ok(addr) = std::env::var("PDADMM_TEST_WORKER_CONNECT") {
+        pdadmm_g::coordinator::worker::connect(&addr).expect("worker session");
+    } else if let Ok(addr) = std::env::var("PDADMM_TEST_WORKER_LISTEN") {
+        pdadmm_g::coordinator::worker::listen(&addr).expect("worker session");
+    }
+}
+
+fn reentry_command() -> Command {
+    let exe = std::env::current_exe().expect("current exe");
+    let mut cmd = Command::new(exe);
+    cmd.args(["worker_reentry", "--exact", "--nocapture"]).stdout(Stdio::null());
+    cmd
+}
+
+/// Spawn this test binary as a worker that dials `addr`.
+fn spawn_test_worker(addr: &str) -> anyhow::Result<Child> {
+    Ok(reentry_command().env("PDADMM_TEST_WORKER_CONNECT", addr).spawn()?)
+}
+
+/// Spawn this test binary as a worker listening on `addr` (the
+/// externally-started fleet the coordinator *cannot* respawn).
+fn spawn_listen_worker(addr: &str) -> Child {
+    reentry_command().env("PDADMM_TEST_WORKER_LISTEN", addr).spawn().expect("listen worker")
+}
+
+/// A free loopback port (bind, read, release). The tiny race against
+/// another process grabbing it before the worker binds is acceptable in a
+/// test.
+fn free_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").expect("probe bind");
+    l.local_addr().expect("probe addr").to_string()
+}
+
+/// Run `body` on its own thread and fail loudly if it neither finishes
+/// nor panics within `secs` — a wedged recovery must not hang the suite.
+fn with_watchdog(secs: u64, body: impl FnOnce() + Send + 'static) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        body();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        // finished or panicked: join to propagate any panic payload
+        Ok(()) | Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => h.join().unwrap(),
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: test body exceeded {secs}s")
+        }
+    }
+}
+
+fn checkpoint_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pdadmm-ft-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn assert_records_identical(tag: &str, a: &[EpochRecord], b: &[EpochRecord]) {
+    assert_eq!(a.len(), b.len(), "{tag}: epoch count");
+    for (ra, rb) in a.iter().zip(b) {
+        let e = ra.epoch;
+        assert_eq!(ra.comm_bytes, rb.comm_bytes, "{tag}: comm bytes diverged at epoch {e}");
+        assert_eq!(
+            ra.objective.to_bits(),
+            rb.objective.to_bits(),
+            "{tag}: objective diverged at epoch {e}: {} vs {}",
+            ra.objective,
+            rb.objective
+        );
+        assert_eq!(
+            ra.residual.to_bits(),
+            rb.residual.to_bits(),
+            "{tag}: residual diverged at epoch {e}"
+        );
+        assert_eq!(ra.risk.to_bits(), rb.risk.to_bits(), "{tag}: risk diverged at epoch {e}");
+        for (name, x, y) in [
+            ("train", ra.train_acc, rb.train_acc),
+            ("val", ra.val_acc, rb.val_acc),
+            ("test", ra.test_acc, rb.test_acc),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: {name} acc diverged at epoch {e}");
+        }
+    }
+}
+
+fn assert_layers_identical(
+    tag: &str,
+    a: &[pdadmm_g::admm::state::LayerState],
+    b: &[pdadmm_g::admm::state::LayerState],
+) {
+    assert_eq!(a.len(), b.len(), "{tag}: layer count");
+    for (ls, ld) in a.iter().zip(b) {
+        let l = ls.index;
+        assert_eq!(ls.w.data, ld.w.data, "{tag}: W diverged at layer {l}");
+        assert_eq!(ls.b.data, ld.b.data, "{tag}: b diverged at layer {l}");
+        assert_eq!(ls.z.data, ld.z.data, "{tag}: z diverged at layer {l}");
+        assert_eq!(ls.p.data, ld.p.data, "{tag}: p diverged at layer {l}");
+        assert_eq!(
+            ls.q.as_ref().map(|m| &m.data),
+            ld.q.as_ref().map(|m| &m.data),
+            "{tag}: q diverged at layer {l}"
+        );
+        assert_eq!(
+            ls.u.as_ref().map(|m| &m.data),
+            ld.u.as_ref().map(|m| &m.data),
+            "{tag}: u diverged at layer {l}"
+        );
+    }
+}
+
+/// The golden trace: an uninterrupted in-process serial run.
+fn golden(cfg: &TrainConfig) -> (Vec<EpochRecord>, Trainer) {
+    let ds = datasets::build(&tiny_spec(), HOPS, 1).expect("synthetic build");
+    let mut tc = cfg.clone();
+    tc.schedule = ScheduleMode::Serial;
+    let mut t = Trainer::new(Arc::new(NativeBackend::single_thread()), ds, tc);
+    let recs = (0..EPOCHS).map(|_| t.run_epoch()).collect();
+    (recs, t)
+}
+
+/// The tentpole acceptance: SIGKILL one of two spawned workers after the
+/// first epoch, let `run_epoch`'s recovery wrapper respawn the fleet and
+/// replay from the epoch-boundary checkpoint, and require the full record
+/// trace *and* final synced layer state to be bitwise identical to the
+/// uninterrupted golden run.
+fn kill_one_worker_case(schedule: ScheduleMode, tag: &str) {
+    let cfg = base_cfg(schedule);
+    let (want_recs, want_t) = golden(&cfg);
+
+    let dir = checkpoint_dir(tag);
+    let opts = RunOptions {
+        resume: None,
+        checkpoint: Some(CheckpointCfg { dir: dir.clone(), interval: 1 }),
+    };
+    let mut tr =
+        SocketTransport::spawn_opts(&tiny_spec(), HOPS, cfg, 2, spawn_test_worker, opts)
+            .expect("spawn socket transport");
+    let pids_before = tr.worker_pids();
+    assert_eq!(pids_before.len(), 2);
+
+    let mut recs = Vec::with_capacity(EPOCHS);
+    recs.push(tr.run_epoch().expect("epoch before the fault"));
+    // SIGKILL one worker; the next epoch's dispatch discovers the loss,
+    // aborts, rebuilds the fleet and replays from the epoch-1 checkpoint
+    tr.kill_worker(0).expect("fault injection");
+    for _ in 1..EPOCHS {
+        recs.push(tr.run_epoch().expect("epoch across the fault"));
+    }
+
+    let pids_after = tr.worker_pids();
+    assert_eq!(pids_after.len(), 2, "{tag}: fleet size after recovery");
+    assert!(
+        pids_after.iter().all(|p| !pids_before.contains(p)),
+        "{tag}: recovery must respawn the fleet (pids {pids_before:?} -> {pids_after:?})"
+    );
+
+    assert_records_identical(tag, &want_recs, &recs);
+    let layers = tr.synced_layers().expect("final state sync").to_vec();
+    assert_layers_identical(tag, &want_t.layers, &layers);
+    tr.shutdown().expect("shutdown");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_one_worker_recovers_bitwise_identical_barrier() {
+    with_watchdog(240, || kill_one_worker_case(ScheduleMode::Parallel, "kill/barrier"));
+}
+
+#[test]
+fn kill_one_worker_recovers_bitwise_identical_pipelined() {
+    with_watchdog(240, || kill_one_worker_case(ScheduleMode::Pipelined, "kill/pipelined"));
+}
+
+/// Externally started workers (`--workers-at`) cannot be respawned: a
+/// worker loss must surface as a clean error naming the limitation, not a
+/// hang or a panic.
+#[test]
+fn connect_mode_worker_loss_is_a_clean_error() {
+    with_watchdog(120, || {
+        let addrs = [free_addr(), free_addr()];
+        let mut children: Vec<Child> = addrs.iter().map(|a| spawn_listen_worker(a)).collect();
+        let cfg = base_cfg(ScheduleMode::Parallel);
+        let mut tr = SocketTransport::connect(&tiny_spec(), HOPS, cfg, &addrs)
+            .expect("connect transport");
+        tr.run_epoch().expect("epoch before the fault");
+        children[0].kill().expect("fault injection");
+        let err = tr.run_epoch().expect_err("a lost worker must not succeed silently");
+        assert!(
+            format!("{err:#}").contains("cannot respawn"),
+            "error must name the connect-mode limitation: {err:#}"
+        );
+        for mut c in children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    });
+}
+
+/// Liveness: a SIGSTOPped (stalled, not disconnected) worker is declared
+/// dead within the configured `--peer-timeout`, not at TCP timescales.
+#[test]
+fn stalled_peer_detected_within_peer_timeout() {
+    with_watchdog(120, || {
+        let addrs = [free_addr(), free_addr()];
+        let mut children: Vec<Child> = addrs.iter().map(|a| spawn_listen_worker(a)).collect();
+        let mut cfg = base_cfg(ScheduleMode::Parallel);
+        cfg.peer_timeout_secs = 2.0;
+        let mut tr = SocketTransport::connect(&tiny_spec(), HOPS, cfg, &addrs)
+            .expect("connect transport");
+        tr.run_epoch().expect("epoch before the stall");
+        let stopped = children[0].id().to_string();
+        let ok = Command::new("kill")
+            .args(["-STOP", &stopped])
+            .status()
+            .expect("sending SIGSTOP")
+            .success();
+        assert!(ok, "SIGSTOP must be deliverable to worker {stopped}");
+        let t0 = Instant::now();
+        let err = tr.run_epoch().expect_err("a stalled worker must not succeed");
+        let elapsed = t0.elapsed();
+        assert!(
+            format!("{err:#}").contains("unresponsive"),
+            "the liveness deadline, not a transport error, must fire: {err:#}"
+        );
+        // 2s deadline plus generous scheduling slack — far below the
+        // minutes-scale TCP stall this guards against
+        assert!(elapsed < Duration::from_secs(30), "stall detection took {elapsed:?}");
+        let _ = Command::new("kill").args(["-CONT", &stopped]).status();
+        for mut c in children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    });
+}
+
+/// CI's fault-tolerance smoke on the cora-scale benchmark (gated like
+/// `PDADMM_DIST_SMOKE`): kill a worker mid-run under the pipelined
+/// schedule with checkpoints on and require the run to finish with finite
+/// losses and a respawned fleet. Set `PDADMM_FAULT_SMOKE=1` to run it.
+#[test]
+fn fault_tolerance_smoke() {
+    if std::env::var("PDADMM_FAULT_SMOKE").is_err() {
+        eprintln!("skipping fault-tolerance smoke (set PDADMM_FAULT_SMOKE=1)");
+        return;
+    }
+    with_watchdog(600, || {
+        let root = pdadmm_g::config::RootConfig::load_default().expect("repo config");
+        let spec = root.dataset("cora").expect("cora spec").clone();
+        let mut tc = TrainConfig::new("cora", 32, 4, 2);
+        tc.nu = 0.01;
+        tc.rho = 1.0;
+        tc.backend = BackendKind::Native;
+        tc.quant = QuantMode::PQ { bits: 4 };
+        tc.schedule = ScheduleMode::Pipelined;
+        let dir = checkpoint_dir("smoke");
+        let opts = RunOptions {
+            resume: None,
+            checkpoint: Some(CheckpointCfg { dir: dir.clone(), interval: 1 }),
+        };
+        let mut tr = SocketTransport::spawn_opts(&spec, root.hops, tc, 2, spawn_test_worker, opts)
+            .expect("spawn smoke transport");
+        let first = tr.run_epoch().expect("smoke epoch 1");
+        assert!(first.objective.is_finite());
+        tr.kill_worker(1).expect("fault injection");
+        let second = tr.run_epoch().expect("smoke epoch 2 across the fault");
+        assert!(second.objective.is_finite());
+        assert_eq!(tr.workers(), 2, "fleet size after recovery");
+        tr.shutdown().expect("smoke shutdown");
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}

@@ -98,6 +98,24 @@ fn loopback_serving_matches_trainer_logits_bitwise() {
             }
         }
     }
+
+    // disconnect churn must not leak registry entries: the reader prunes
+    // its slot when the client hangs up
+    assert!(server.open_conns() >= 1, "the live client must be registered");
+    drop(client);
+    for _ in 0..5 {
+        let c = ServeClient::dial(&server.addr().to_string()).expect("churn dial");
+        drop(c);
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while server.open_conns() != 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "connection registry failed to drain: {} entries still open",
+            server.open_conns()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
     server.stop();
 }
 
